@@ -1,0 +1,58 @@
+//! Compare the four lossy compression methods (wavelets, ZFP, SZ, FPZIP)
+//! on one dataset — the paper's §3.3 testbed role of CubismZ, in miniature.
+//!
+//! Run: `cargo run --release --example compare_methods [size] [step]`
+use cubismz::codec::Codec;
+use cubismz::metrics::psnr;
+use cubismz::pipeline::{
+    compress_field, decompress_field, CoeffCodec, NativeEngine, PipelineConfig, ShuffleMode,
+    Stage1,
+};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::wavelet::WaveletKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let step: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(10000);
+    let sim = CloudSim::new(CloudConfig::paper(n));
+
+    println!("method comparison, {n}^3 cells, step {step} (collapse at 7000)");
+    for qoi in Qoi::ALL {
+        let f = sim.field(qoi, step_to_time(step));
+        println!("--- {} ---", qoi.name());
+        println!("{:28} {:>9} {:>11} {:>9} {:>9}", "scheme", "CR", "PSNR (dB)", "comp s", "dec s");
+        for (label, stage1, stage2, shuffle) in [
+            (
+                "W3ai + shuf + zlib",
+                Stage1::Wavelet {
+                    kind: WaveletKind::Avg3,
+                    eps_rel: 1e-3,
+                    zbits: 0,
+                    coeff: CoeffCodec::None,
+                },
+                Codec::ZlibDef,
+                ShuffleMode::Byte4,
+            ),
+            ("zfp (accuracy)", Stage1::Zfp { tol_rel: 1e-3 }, Codec::None, ShuffleMode::None),
+            ("sz (abs bound)", Stage1::Sz { eb_rel: 1e-3 }, Codec::None, ShuffleMode::None),
+            ("fpzip (20 bits)", Stage1::Fpzip { prec: 20 }, Codec::None, ShuffleMode::None),
+        ] {
+            let cfg = PipelineConfig::new(32, stage1, stage2).with_shuffle(shuffle);
+            let t = std::time::Instant::now();
+            let (bytes, st) = compress_field(&f, qoi.name(), &cfg, &NativeEngine);
+            let tc = t.elapsed().as_secs_f64();
+            let t = std::time::Instant::now();
+            let (back, _) = decompress_field(&bytes, &NativeEngine).expect("decompress");
+            let td = t.elapsed().as_secs_f64();
+            println!(
+                "{:28} {:>9.2} {:>11.1} {:>9.2} {:>9.2}",
+                label,
+                st.ratio(),
+                psnr(&f.data, &back.data),
+                tc,
+                td
+            );
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Quickstart: generate a small cavitation snapshot, compress the pressure
+//! field with the paper's production scheme (W³ai + byte shuffle + zlib),
+//! decompress it and report CR + PSNR.
+//!
+//! Run: `cargo run --release --example quickstart`
+use cubismz::metrics::psnr;
+use cubismz::pipeline::{compress_field, decompress_field, NativeEngine, PipelineConfig};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+
+fn main() {
+    // 1. a 128^3 bubble-cloud snapshot shortly before collapse
+    let sim = CloudSim::new(CloudConfig::paper(128));
+    let field = sim.field(Qoi::Pressure, step_to_time(5000));
+    println!("field: {}^3 cells, {:.1} MB raw", field.nx, field.nbytes() as f64 / 1e6);
+
+    // 2. the paper's scheme: third-order average-interpolating wavelets,
+    //    eps = 1e-3 relative, byte shuffle, zlib
+    let cfg = PipelineConfig::paper_default(1e-3);
+    let t = std::time::Instant::now();
+    let (bytes, stats) = compress_field(&field, "p", &cfg, &NativeEngine);
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "compressed: {} -> {} bytes  CR {:.1}x  ({:.0} MB/s)",
+        stats.raw_bytes,
+        stats.compressed_bytes,
+        stats.ratio(),
+        stats.raw_bytes as f64 / 1e6 / secs
+    );
+
+    // 3. decompress and check fidelity
+    let (back, _) = decompress_field(&bytes, &NativeEngine).expect("decompress");
+    println!("PSNR: {:.1} dB", psnr(&field.data, &back.data));
+}

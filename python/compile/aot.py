@@ -1,0 +1,82 @@
+"""AOT lowering: jax/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT lowered.compiler_ir("hlo") protos or .serialize()) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (batch n, block size 32, f32):
+  wavelet_{fwd|inv}_{w4|w4l|w3a}_b32_n{1,16}.hlo.txt
+
+Also exports cross-language test vectors consumed by `cargo test`:
+  testvectors/wavelet_{kind}_b32.bin
+    layout: u32 bs | u32 nblocks | input f32[n*bs^3] | fwd f32[n*bs^3]
+"""
+import argparse
+import pathlib
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+BS = 32
+BATCHES = (1, 16)
+KINDS = ("w4", "w4l", "w3a")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(kind: str, inverse: bool, n: int) -> str:
+    fn = model.wavelet_inverse(kind) if inverse else model.wavelet_forward(kind)
+    spec = jax.ShapeDtypeStruct((n, BS, BS, BS), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def write_test_vectors(out_dir: pathlib.Path) -> None:
+    tv_dir = out_dir / "testvectors"
+    tv_dir.mkdir(parents=True, exist_ok=True)
+    rng = np.random.default_rng(0xC0FFEE)
+    n = 3
+    for kind in KINDS:
+        x = rng.uniform(-50.0, 50.0, size=(n, BS, BS, BS)).astype(np.float32)
+        fwd = np.asarray(ref.forward_batch(jnp.asarray(x), kind), dtype=np.float32)
+        path = tv_dir / f"wavelet_{kind}_b{BS}.bin"
+        with open(path, "wb") as f:
+            f.write(struct.pack("<II", BS, n))
+            f.write(x.tobytes())
+            f.write(fwd.tobytes())
+        print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-vectors", action="store_true")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for kind in KINDS:
+        for n in BATCHES:
+            for inverse in (False, True):
+                tag = "inv" if inverse else "fwd"
+                text = lower_variant(kind, inverse, n)
+                path = out_dir / f"wavelet_{tag}_{kind}_b{BS}_n{n}.hlo.txt"
+                path.write_text(text)
+                print(f"wrote {path} ({len(text)} chars)")
+    if not args.skip_vectors:
+        write_test_vectors(out_dir)
+
+
+if __name__ == "__main__":
+    main()

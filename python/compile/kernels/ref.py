@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracle for the 3D lifting wavelet transform.
+
+This file is the *specification* shared with the Rust native engine
+(rust/src/wavelet/) and the Pallas kernel (wavelet3d.py) — see DESIGN.md §6.
+All three must implement the identical lifting steps:
+
+* interp4 (W4):   d = o - P4(e),                 s = e
+* lift4  (W4li):  interp4 predict, then          s = e + 1/4 (d[k-1] + d[k])
+* avg3   (W3ai):  s = (e + o)/2,                 d = (o - e) - P_avg3(s)
+
+with one-sided boundary stencils ("wavelets on the interval"). The 3D
+transform applies the 1D step along x, then y, then z on the leading m^3
+subcube per level, m = bs >> level, down to m = 8 (coarse cube 4^3).
+"""
+import jax.numpy as jnp
+
+KINDS = ("w4", "w4l", "w3a")
+
+
+def max_levels(bs: int) -> int:
+    lev = 0
+    while (bs >> lev) > 4:
+        lev += 1
+    return lev
+
+
+def _shift_p1(a):
+    """a[k-1] with edge clamp (value at k=0 is fixed up by boundary sets)."""
+    return jnp.concatenate([a[..., :1], a[..., :-1]], axis=-1)
+
+
+def _shift_m1(a):
+    """a[k+1] with edge clamp."""
+    return jnp.concatenate([a[..., 1:], a[..., -1:]], axis=-1)
+
+
+def _shift_m2(a):
+    return jnp.concatenate([a[..., 2:], a[..., -2:]], axis=-1)
+
+
+def pred4(e):
+    """W4 predictor with one-sided cubic boundary stencils (h >= 4)."""
+    em1 = _shift_p1(e)
+    ep1 = _shift_m1(e)
+    ep2 = _shift_m2(e)
+    p = -0.0625 * em1 + 0.5625 * e + 0.5625 * ep1 - 0.0625 * ep2
+    # boundaries (match rust/src/wavelet/lift1d.rs::pred4)
+    p = p.at[..., 0].set(
+        0.3125 * e[..., 0] + 0.9375 * e[..., 1] - 0.3125 * e[..., 2] + 0.0625 * e[..., 3]
+    )
+    p = p.at[..., -2].set(
+        0.0625 * e[..., -4] - 0.3125 * e[..., -3] + 0.9375 * e[..., -2] + 0.3125 * e[..., -1]
+    )
+    # linear extrapolation at the last position (low gain: higher-order
+    # one-sided stencils amplify fp noise across passes)
+    p = p.at[..., -1].set(1.5 * e[..., -1] - 0.5 * e[..., -2])
+    return p
+
+
+def pred_avg3(s):
+    """W3ai predictor of (o - e) from the averages (h >= 4)."""
+    sp1 = _shift_m1(s)
+    sm1 = _shift_p1(s)
+    p = 0.25 * (sp1 - sm1)
+    p = p.at[..., 0].set(-0.75 * s[..., 0] + 1.0 * s[..., 1] - 0.25 * s[..., 2])
+    p = p.at[..., -1].set(0.75 * s[..., -1] - 1.0 * s[..., -2] + 0.25 * s[..., -3])
+    return p
+
+
+def lift_fwd(e, o, kind):
+    if kind == "w4":
+        return e, o - pred4(e)
+    if kind == "w4l":
+        d = o - pred4(e)
+        dm1 = _shift_p1(d)  # clamp: d[-1] -> d[0]
+        return e + 0.25 * (dm1 + d), d
+    if kind == "w3a":
+        s = 0.5 * (e + o)
+        return s, (o - e) - pred_avg3(s)
+    raise ValueError(kind)
+
+
+def lift_inv(s, d, kind):
+    if kind == "w4":
+        return s, d + pred4(s)
+    if kind == "w4l":
+        dm1 = _shift_p1(d)
+        e = s - 0.25 * (dm1 + d)
+        return e, d + pred4(e)
+    if kind == "w3a":
+        diff = d + pred_avg3(s)
+        return s - 0.5 * diff, s + 0.5 * diff
+    raise ValueError(kind)
+
+
+def _axis_fwd(a, m, axis, kind):
+    bs = a.shape[-1]
+    sub = a[:m, :m, :m] if m < bs else a
+    t = jnp.moveaxis(sub, axis, -1)
+    e = t[..., 0::2]
+    o = t[..., 1::2]
+    s, d = lift_fwd(e, o, kind)
+    res = jnp.moveaxis(jnp.concatenate([s, d], axis=-1), -1, axis)
+    return a.at[:m, :m, :m].set(res) if m < bs else res
+
+
+def _axis_inv(a, m, axis, kind):
+    bs = a.shape[-1]
+    sub = a[:m, :m, :m] if m < bs else a
+    t = jnp.moveaxis(sub, axis, -1)
+    h = m // 2
+    s = t[..., :h]
+    d = t[..., h:]
+    e, o = lift_inv(s, d, kind)
+    # interleave e, o back
+    res = jnp.stack([e, o], axis=-1).reshape(t.shape)
+    res = jnp.moveaxis(res, -1, axis)
+    return a.at[:m, :m, :m].set(res) if m < bs else res
+
+
+def forward_3d(a, kind, levels=None):
+    """Forward transform one (bs, bs, bs) block (dims ordered z, y, x)."""
+    bs = a.shape[-1]
+    assert a.shape == (bs, bs, bs)
+    levels = max_levels(bs) if levels is None else levels
+    for lev in range(levels):
+        m = bs >> lev
+        for axis in (2, 1, 0):  # x, then y, then z
+            a = _axis_fwd(a, m, axis, kind)
+    return a
+
+
+def inverse_3d(a, kind, levels=None):
+    bs = a.shape[-1]
+    levels = max_levels(bs) if levels is None else levels
+    for lev in reversed(range(levels)):
+        m = bs >> lev
+        for axis in (0, 1, 2):  # reverse: z, then y, then x
+            a = _axis_inv(a, m, axis, kind)
+    return a
+
+
+def forward_batch(x, kind, levels=None):
+    """x: (n, bs, bs, bs) -> transformed batch."""
+    import jax
+
+    return jax.vmap(lambda b: forward_3d(b, kind, levels))(x)
+
+
+def inverse_batch(x, kind, levels=None):
+    import jax
+
+    return jax.vmap(lambda b: inverse_3d(b, kind, levels))(x)

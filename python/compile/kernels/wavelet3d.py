@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: batched 3D lifting wavelet transform.
+
+One grid program per block; the (1, bs, bs, bs) tile is the Pallas
+BlockSpec unit — on TPU this is the HBM->VMEM schedule (a 32^3 f32 block
+is 128 KiB, exactly the cache-resident unit the paper tunes for; see
+DESIGN.md §Hardware-Adaptation). The whole multi-level transform runs on
+the VMEM-resident tile; the lifting steps are elementwise adds/muls
+(VPU work, no MXU), so the kernel is memory-bound by design.
+
+interpret=True is REQUIRED on this CPU-only environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fwd_kernel(x_ref, o_ref, *, kind: str, levels: int):
+    a = x_ref[0]
+    bs = a.shape[-1]
+    for lev in range(levels):
+        m = bs >> lev
+        for axis in (2, 1, 0):
+            a = ref._axis_fwd(a, m, axis, kind)
+    o_ref[0] = a
+
+
+def _inv_kernel(x_ref, o_ref, *, kind: str, levels: int):
+    a = x_ref[0]
+    bs = a.shape[-1]
+    for lev in reversed(range(levels)):
+        m = bs >> lev
+        for axis in (0, 1, 2):
+            a = ref._axis_inv(a, m, axis, kind)
+    o_ref[0] = a
+
+
+def _pallas_transform(x, kind: str, inverse: bool, levels=None):
+    n, bs = x.shape[0], x.shape[-1]
+    assert x.shape == (n, bs, bs, bs), x.shape
+    lv = ref.max_levels(bs) if levels is None else levels
+    # Pallas interpret-mode quirk: a single-program grid (grid=(1,)) with
+    # multi-level in-place `.at[]` updates produces wrong values for
+    # bs >= 16 (the XLA-compiled lowering of the same kernel is correct —
+    # see rust/tests/pjrt_parity.rs). Pad single-block batches to 2.
+    padded = n == 1
+    if padded:
+        x = jnp.concatenate([x, x], axis=0)
+        n = 2
+    kernel = functools.partial(_inv_kernel if inverse else _fwd_kernel, kind=kind, levels=lv)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, bs, bs, bs), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, bs, bs, bs), lambda i: (i, 0, 0, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+    return out[:1] if padded else out
+
+
+def forward(x, kind: str, levels=None):
+    """Forward-transform a (n, bs, bs, bs) batch via the Pallas kernel."""
+    return _pallas_transform(x, kind, inverse=False, levels=levels)
+
+
+def inverse(x, kind: str, levels=None):
+    """Inverse-transform a (n, bs, bs, bs) batch via the Pallas kernel."""
+    return _pallas_transform(x, kind, inverse=True, levels=levels)

@@ -1,0 +1,33 @@
+"""Layer-2 JAX compute graph: the batched wavelet transforms the Rust
+coordinator executes via PJRT. Thin by design — this paper's contribution
+is the coordination layer (L3) and the transform kernel (L1); L2 simply
+exposes jit-able entry points that lower to a single fused HLO module per
+(direction, wavelet, batch) variant."""
+import jax.numpy as jnp
+
+from .kernels import ref, wavelet3d
+
+
+def wavelet_forward(kind: str):
+    """Returns f(x: f32[n, bs, bs, bs]) -> (coeffs,) using the L1 kernel."""
+
+    def fn(x):
+        return (wavelet3d.forward(x.astype(jnp.float32), kind),)
+
+    return fn
+
+
+def wavelet_inverse(kind: str):
+    def fn(x):
+        return (wavelet3d.inverse(x.astype(jnp.float32), kind),)
+
+    return fn
+
+
+def wavelet_forward_ref(kind: str):
+    """Pure-jnp variant (no Pallas) — used to cross-check lowering."""
+
+    def fn(x):
+        return (ref.forward_batch(x.astype(jnp.float32), kind),)
+
+    return fn

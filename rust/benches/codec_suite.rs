@@ -1,0 +1,49 @@
+//! Bench: the from-scratch lossless codecs vs the real zlib/zstd
+//! reference baselines on stage-1-like payloads (shuffled wavelet
+//! coefficient streams). §Perf tracking for czlib.
+use cubismz::codec::{reference, shuffle, Codec};
+use cubismz::util::bench::bench_budget;
+use cubismz::util::prng::Pcg32;
+
+fn payload() -> Vec<u8> {
+    // realistic stage-1 output: drifting small floats, byte-shuffled
+    let mut rng = Pcg32::new(0xBE7C4);
+    let mut data = Vec::new();
+    let mut v = 0.0f32;
+    for _ in 0..1_500_000 {
+        v += rng.next_f32() * 0.01 - 0.005;
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    shuffle::byte_shuffle(&data, 4)
+}
+
+fn main() {
+    let data = payload();
+    let bytes = data.len();
+    println!("bench codec_suite: {} MB shuffled coefficient payload", bytes / 1_000_000);
+    for codec in [Codec::Lz4, Codec::Zstd, Codec::ZlibDef, Codec::ZlibBest, Codec::Lzma] {
+        let s = bench_budget(&format!("compress/{}", codec.name()), 2.0, 50, || {
+            codec.compress_vec(&data)
+        });
+        s.report_mbps(bytes);
+        let comp = codec.compress_vec(&data);
+        let s = bench_budget(&format!("decompress/{}", codec.name()), 1.5, 100, || {
+            codec.decompress_vec(&comp).unwrap()
+        });
+        s.report_mbps(bytes);
+        println!(
+            "{:40} CR {:.2}",
+            format!("  ({})", codec.name()),
+            bytes as f64 / comp.len() as f64
+        );
+    }
+    // reference baselines
+    let s = bench_budget("compress/real-zlib-6", 2.0, 50, || reference::zlib_compress(&data, 6));
+    s.report_mbps(bytes);
+    let comp = reference::zlib_compress(&data, 6);
+    println!("{:40} CR {:.2}", "  (real-zlib-6)", bytes as f64 / comp.len() as f64);
+    let s = bench_budget("compress/real-zstd-3", 2.0, 50, || reference::zstd_compress(&data, 3));
+    s.report_mbps(bytes);
+    let comp = reference::zstd_compress(&data, 3);
+    println!("{:40} CR {:.2}", "  (real-zstd-3)", bytes as f64 / comp.len() as f64);
+}

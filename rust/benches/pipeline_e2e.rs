@@ -1,0 +1,42 @@
+//! Bench: end-to-end pipeline throughput (the paper's §4.1 scenario) —
+//! full field in, .czb stream out — across tolerance levels, plus the
+//! random-access decompression path with the chunk cache.
+use cubismz::core::block::Block;
+use cubismz::pipeline::{compress_field, BlockReader, NativeEngine, PipelineConfig};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::util::bench::bench_budget;
+use cubismz::util::prng::Pcg32;
+
+fn main() {
+    let n = 96;
+    let sim = CloudSim::new(CloudConfig::paper(n));
+    let f = sim.field(Qoi::Pressure, step_to_time(10000));
+    let bytes = f.nbytes();
+    println!("bench pipeline_e2e: p at 10k, {n}^3 ({} MB)", bytes / 1_000_000);
+    for eps in [1e-2f32, 1e-3, 1e-4] {
+        let cfg = PipelineConfig::paper_default(eps);
+        let s = bench_budget(&format!("compress/eps={eps:.0e}"), 2.5, 20, || {
+            compress_field(&f, "p", &cfg, &NativeEngine)
+        });
+        s.report_mbps(bytes);
+    }
+    // random block access through the LRU chunk cache
+    let cfg = {
+        let mut c = PipelineConfig::paper_default(1e-3);
+        c.chunk_bytes = 64 << 10;
+        c
+    };
+    let (stream, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+    println!("  ({} chunks over {} blocks)", st.nchunks, st.nblocks);
+    let engine = NativeEngine;
+    let mut reader = BlockReader::new(&stream, &engine).unwrap().with_cache_capacity(8);
+    let mut blk = Block::zeros(32);
+    let mut rng = Pcg32::new(2);
+    let nblocks = st.nblocks as u32;
+    let s = bench_budget("random_block_read(cached)", 1.5, 2000, || {
+        let id = rng.below(nblocks);
+        reader.read_block(id, &mut blk.data).unwrap();
+    });
+    s.report();
+    println!("  cache: {} hits / {} misses", reader.cache_hits, reader.cache_misses);
+}

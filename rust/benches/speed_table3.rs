@@ -1,0 +1,61 @@
+//! Bench: Table 3 — compression/decompression speed (MB/s) and CR for the
+//! main schemes at matched PSNR (criterion is unavailable offline; uses
+//! the in-tree harness `cubismz::util::bench`).
+use cubismz::codec::Codec;
+use cubismz::pipeline::{
+    compress_field, decompress_field, CoeffCodec, NativeEngine, PipelineConfig, ShuffleMode,
+    Stage1,
+};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::util::bench::bench_budget;
+use cubismz::wavelet::WaveletKind;
+
+fn main() {
+    let n = 96;
+    let sim = CloudSim::new(CloudConfig::paper(n));
+    let f = sim.field(Qoi::Pressure, step_to_time(10000));
+    let bytes = f.nbytes();
+    println!("bench speed_table3: p at 10k, {n}^3 ({} MB)", bytes / 1_000_000);
+    let rows: Vec<(&str, PipelineConfig)> = vec![
+        ("w3ai+shuf+zlib", PipelineConfig::paper_default(1e-3)),
+        ("w3ai+shuf+zstd", {
+            let mut c = PipelineConfig::paper_default(1e-3);
+            c.stage2 = Codec::Zstd;
+            c
+        }),
+        ("w3ai+shuf+lz4", {
+            let mut c = PipelineConfig::paper_default(1e-3);
+            c.stage2 = Codec::Lz4;
+            c
+        }),
+        ("zfp", PipelineConfig::new(32, Stage1::Zfp { tol_rel: 8e-4 }, Codec::None)),
+        ("sz", PipelineConfig::new(32, Stage1::Sz { eb_rel: 8e-4 }, Codec::None)),
+        ("fpzip20", PipelineConfig::new(32, Stage1::Fpzip { prec: 20 }, Codec::None)),
+        (
+            "w4+shuf+zlib",
+            PipelineConfig::new(
+                32,
+                Stage1::Wavelet {
+                    kind: WaveletKind::Interp4,
+                    eps_rel: 1e-3,
+                    zbits: 0,
+                    coeff: CoeffCodec::None,
+                },
+                Codec::ZlibDef,
+            )
+            .with_shuffle(ShuffleMode::Byte4),
+        ),
+    ];
+    for (label, cfg) in rows {
+        let s = bench_budget(&format!("compress/{label}"), 2.0, 20, || {
+            compress_field(&f, "p", &cfg, &NativeEngine)
+        });
+        s.report_mbps(bytes);
+        let (stream, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let s = bench_budget(&format!("decompress/{label}"), 2.0, 20, || {
+            decompress_field(&stream, &NativeEngine).unwrap()
+        });
+        s.report_mbps(bytes);
+        println!("{:40} CR {:.2}", format!("  ({label})"), st.ratio());
+    }
+}

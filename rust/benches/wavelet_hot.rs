@@ -1,0 +1,44 @@
+//! Bench: the L1/L3 hot path — forward/inverse 3D wavelet transform per
+//! block and per batch, native vs PJRT engine (when artifacts exist).
+//! This is the §Perf tracking bench for the transform kernel.
+use cubismz::pipeline::{NativeEngine, WaveletEngine};
+use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
+use cubismz::util::bench::bench_budget;
+use cubismz::util::prng::Pcg32;
+use cubismz::wavelet::{max_levels, WaveletKind};
+
+fn main() {
+    let bs = 32usize;
+    let vol = bs * bs * bs;
+    let batch = 64usize;
+    let mut rng = Pcg32::new(1);
+    let mut data = vec![0f32; batch * vol];
+    rng.fill_f32(&mut data, -10.0, 10.0);
+    let bytes = batch * vol * 4;
+    println!("bench wavelet_hot: {batch} blocks of {bs}^3 ({} MB)", bytes / 1_000_000);
+
+    for kind in WaveletKind::ALL {
+        let mut buf = data.clone();
+        let s = bench_budget(&format!("native/fwd/{}", kind.name()), 1.5, 200, || {
+            NativeEngine.forward_batch(kind, &mut buf, bs, max_levels(bs));
+        });
+        s.report_mbps(bytes);
+        let s = bench_budget(&format!("native/inv/{}", kind.name()), 1.5, 200, || {
+            NativeEngine.inverse_batch(kind, &mut buf, bs, max_levels(bs));
+        });
+        s.report_mbps(bytes);
+    }
+
+    match PjrtEngine::new(default_artifacts_dir()) {
+        Ok(engine) => {
+            for kind in [WaveletKind::Avg3] {
+                let mut buf = data.clone();
+                let s = bench_budget(&format!("pjrt/fwd/{}", kind.name()), 3.0, 50, || {
+                    engine.forward_batch(kind, &mut buf, bs, max_levels(bs));
+                });
+                s.report_mbps(bytes);
+            }
+        }
+        Err(e) => println!("pjrt bench skipped: {e}"),
+    }
+}

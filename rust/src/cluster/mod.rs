@@ -1,0 +1,222 @@
+//! Cluster layer (paper §2.1): domain decomposition and inter-rank
+//! coordination. The paper uses MPI; this build runs all "ranks" as
+//! threads in one process behind the [`Comm`] trait, implementing the
+//! collectives the I/O path needs (barrier, exclusive prefix sum,
+//! gather). The communication *pattern* is identical to the MPI code:
+//! each rank owns an equal contiguous partition of the block grid and
+//! computes its file offset with an exscan over compressed sizes.
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Communicator over a fixed group of ranks.
+pub trait Comm: Send + Sync {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    /// Block until every rank has entered the barrier.
+    fn barrier(&self);
+    /// Exclusive prefix sum: rank r receives sum of `v` from ranks < r.
+    fn exscan_u64(&self, v: u64) -> u64;
+    /// Gather `v` from all ranks (every rank receives the full vector).
+    fn allgather_u64(&self, v: u64) -> Vec<u64>;
+}
+
+/// Single-process, single-rank communicator (ex-situ tool default).
+pub struct SelfComm;
+
+impl Comm for SelfComm {
+    fn rank(&self) -> usize {
+        0
+    }
+    fn size(&self) -> usize {
+        1
+    }
+    fn barrier(&self) {}
+    fn exscan_u64(&self, _v: u64) -> u64 {
+        0
+    }
+    fn allgather_u64(&self, v: u64) -> Vec<u64> {
+        vec![v]
+    }
+}
+
+struct RoundState {
+    generation: u64,
+    arrived: usize,
+    /// ranks that still have to read the published result of the current
+    /// generation before the next round may start
+    readers: usize,
+    slots: Vec<u64>,
+    published: Vec<u64>,
+}
+
+struct Shared {
+    state: Mutex<RoundState>,
+    cv: Condvar,
+    size: usize,
+}
+
+/// In-process communicator: `size` ranks backed by threads.
+pub struct InProcComm {
+    shared: Arc<Shared>,
+    rank: usize,
+}
+
+impl InProcComm {
+    /// Create communicators for all ranks of a group of `size`.
+    pub fn group(size: usize) -> Vec<InProcComm> {
+        assert!(size >= 1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(RoundState {
+                generation: 0,
+                arrived: 0,
+                readers: 0,
+                slots: vec![0u64; size],
+                published: vec![0u64; size],
+            }),
+            cv: Condvar::new(),
+            size,
+        });
+        (0..size).map(|rank| InProcComm { shared: shared.clone(), rank }).collect()
+    }
+
+    /// Run one collective round: deposit `v`, wait for all, read the slots.
+    /// The previous round must fully drain (all ranks read the published
+    /// result) before a new round may deposit — prevents a fast rank from
+    /// overwriting results a slow rank has not read yet.
+    fn round(&self, v: u64) -> Vec<u64> {
+        let sh = &self.shared;
+        let mut g = sh.state.lock().unwrap();
+        while g.readers > 0 {
+            g = sh.cv.wait(g).unwrap();
+        }
+        g.slots[self.rank] = v;
+        g.arrived += 1;
+        if g.arrived == sh.size {
+            // last arrival: publish and advance the generation
+            let slots = g.slots.clone();
+            g.published = slots;
+            g.arrived = 0;
+            g.readers = sh.size - 1;
+            g.generation += 1;
+            sh.cv.notify_all();
+            return g.published.clone();
+        }
+        let my_gen = g.generation;
+        while g.generation == my_gen {
+            g = sh.cv.wait(g).unwrap();
+        }
+        let out = g.published.clone();
+        g.readers -= 1;
+        if g.readers == 0 {
+            sh.cv.notify_all();
+        }
+        out
+    }
+}
+
+impl Comm for InProcComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+    fn size(&self) -> usize {
+        self.shared.size
+    }
+    fn barrier(&self) {
+        self.round(0);
+    }
+    fn exscan_u64(&self, v: u64) -> u64 {
+        let all = self.round(v);
+        all[..self.rank].iter().sum()
+    }
+    fn allgather_u64(&self, v: u64) -> Vec<u64> {
+        self.round(v)
+    }
+}
+
+/// Contiguous block partition for `rank` of `size` over `nblocks`
+/// (paper: "MPI ranks must be assigned equal-sized partitions").
+pub fn partition(nblocks: usize, rank: usize, size: usize) -> (usize, usize) {
+    let span = nblocks.div_ceil(size);
+    let lo = (rank * span).min(nblocks);
+    let hi = ((rank + 1) * span).min(nblocks);
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_comm_laws() {
+        let c = SelfComm;
+        assert_eq!(c.size(), 1);
+        assert_eq!(c.exscan_u64(42), 0);
+        assert_eq!(c.allgather_u64(7), vec![7]);
+    }
+
+    #[test]
+    fn exscan_matches_prefix_sums() {
+        for size in [1usize, 2, 3, 8] {
+            let comms = InProcComm::group(size);
+            let results: Vec<(usize, u64)> = std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let v = (c.rank() as u64 + 1) * 10;
+                            (c.rank(), c.exscan_u64(v))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, got) in results {
+                let expect: u64 = (0..rank).map(|r| (r as u64 + 1) * 10).sum();
+                assert_eq!(got, expect, "size {size} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_consistent_across_ranks() {
+        let comms = InProcComm::group(4);
+        let results: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| s.spawn(move || c.allgather_u64(c.rank() as u64 * 3)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &results {
+            assert_eq!(r, &vec![0, 3, 6, 9]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_do_not_deadlock() {
+        let comms = InProcComm::group(3);
+        std::thread::scope(|s| {
+            for c in comms {
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        let all = c.allgather_u64(i);
+                        assert_eq!(all, vec![i; 3]);
+                        c.barrier();
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn partition_tiles_range() {
+        for (n, size) in [(100, 7), (8, 8), (5, 2), (1, 4)] {
+            let mut covered = 0;
+            for r in 0..size {
+                let (lo, hi) = partition(n, r, size);
+                assert!(lo <= hi);
+                covered += hi - lo;
+            }
+            assert_eq!(covered, n, "n {n} size {size}");
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Canonical, length-limited Huffman coding over LSB-first bit I/O
+//! (codes are bit-reversed like DEFLATE so the decoder can peek LSB-first).
+//! Shared by `czlib` and the SZ-like quantization-code entropy stage.
+use crate::util::{BitReader, BitWriter};
+
+/// Maximum code length; also the decode-table width.
+pub const MAX_BITS: usize = 12;
+
+/// Compute length-limited canonical code lengths from symbol frequencies.
+/// Zero-frequency symbols get length 0 (no code). Uses the zlib trick of
+/// halving frequencies until the tree fits the length limit.
+pub fn code_lengths(freqs: &[u32]) -> Vec<u8> {
+    let n = freqs.len();
+    let mut f: Vec<u64> = freqs.iter().map(|&x| x as u64).collect();
+    loop {
+        let lens = huffman_lengths(&f);
+        let maxlen = lens.iter().cloned().max().unwrap_or(0);
+        if (maxlen as usize) <= MAX_BITS {
+            return lens;
+        }
+        // flatten the distribution and retry
+        for v in f.iter_mut() {
+            if *v > 0 {
+                *v = (*v + 1) / 2;
+            }
+        }
+        let _ = n;
+    }
+}
+
+/// Plain (unlimited) Huffman code lengths via pairwise merge.
+fn huffman_lengths(freqs: &[u64]) -> Vec<u8> {
+    #[derive(Clone)]
+    struct Node {
+        freq: u64,
+        left: i32,
+        right: i32,
+        sym: i32,
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut heap: Vec<usize> = Vec::new(); // indices into nodes
+    for (i, &f) in freqs.iter().enumerate() {
+        if f > 0 {
+            nodes.push(Node { freq: f, left: -1, right: -1, sym: i as i32 });
+            heap.push(nodes.len() - 1);
+        }
+    }
+    let mut lens = vec![0u8; freqs.len()];
+    match heap.len() {
+        0 => return lens,
+        1 => {
+            lens[nodes[heap[0]].sym as usize] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    // simple O(n log n) via sort-based merging (n <= a few hundred symbols)
+    heap.sort_by_key(|&i| std::cmp::Reverse(nodes[i].freq));
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        nodes.push(Node { freq: nodes[a].freq + nodes[b].freq, left: a as i32, right: b as i32, sym: -1 });
+        let ni = nodes.len() - 1;
+        // insertion keeping descending order
+        let pos = heap
+            .binary_search_by(|&i| nodes[i].freq.cmp(&nodes[ni].freq).reverse().then(std::cmp::Ordering::Less))
+            .unwrap_or_else(|p| p);
+        heap.insert(pos, ni);
+    }
+    // walk depths iteratively
+    let root = heap[0];
+    let mut stack = vec![(root, 0u8)];
+    while let Some((i, depth)) = stack.pop() {
+        let node = nodes[i].clone();
+        if node.sym >= 0 {
+            lens[node.sym as usize] = depth.max(1);
+        } else {
+            stack.push((node.left as usize, depth + 1));
+            stack.push((node.right as usize, depth + 1));
+        }
+    }
+    lens
+}
+
+/// Canonical codes (LSB-first/bit-reversed) from code lengths.
+pub fn canonical_codes(lens: &[u8]) -> Vec<u16> {
+    let mut bl_count = [0u32; MAX_BITS + 1];
+    for &l in lens {
+        bl_count[l as usize] += 1;
+    }
+    bl_count[0] = 0;
+    let mut next_code = [0u32; MAX_BITS + 1];
+    let mut code = 0u32;
+    for bits in 1..=MAX_BITS {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    lens.iter()
+        .map(|&l| {
+            if l == 0 {
+                return 0;
+            }
+            let c = next_code[l as usize];
+            next_code[l as usize] += 1;
+            reverse_bits(c as u16, l as u32)
+        })
+        .collect()
+}
+
+#[inline]
+fn reverse_bits(v: u16, n: u32) -> u16 {
+    v.reverse_bits() >> (16 - n)
+}
+
+/// Encoder: symbol -> (reversed code, length).
+pub struct Encoder {
+    codes: Vec<u16>,
+    lens: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn from_lengths(lens: &[u8]) -> Self {
+        Self { codes: canonical_codes(lens), lens: lens.to_vec() }
+    }
+
+    #[inline]
+    pub fn write(&self, w: &mut BitWriter, sym: usize) {
+        debug_assert!(self.lens[sym] > 0, "symbol {sym} has no code");
+        w.write_bits(self.codes[sym] as u64, self.lens[sym] as u32);
+    }
+
+    pub fn lens(&self) -> &[u8] {
+        &self.lens
+    }
+}
+
+/// Table-driven decoder: one flat table of 2^MAX_BITS entries mapping the
+/// next MAX_BITS peeked bits to (symbol, length).
+pub struct Decoder {
+    table: Vec<u16>, // (sym << 4) | len
+}
+
+impl Decoder {
+    pub fn from_lengths(lens: &[u8]) -> Result<Self, String> {
+        let codes = canonical_codes(lens);
+        let mut table = vec![0u16; 1 << MAX_BITS];
+        let mut used = 0u64;
+        for (sym, (&len, &code)) in lens.iter().zip(&codes).enumerate() {
+            if len == 0 {
+                continue;
+            }
+            let len = len as usize;
+            if len > MAX_BITS {
+                return Err(format!("code length {len} > {MAX_BITS}"));
+            }
+            used += 1u64 << (MAX_BITS - len);
+            // fill all entries whose low `len` bits equal `code`
+            let step = 1usize << len;
+            let mut idx = code as usize;
+            while idx < (1 << MAX_BITS) {
+                table[idx] = ((sym as u16) << 4) | len as u16;
+                idx += step;
+            }
+        }
+        if used > (1u64 << MAX_BITS) {
+            return Err("over-subscribed code".into());
+        }
+        Ok(Self { table })
+    }
+
+    /// Decode one symbol.
+    #[inline]
+    pub fn read(&self, r: &mut BitReader) -> Result<usize, String> {
+        let peek = r.peek16() as usize & ((1 << MAX_BITS) - 1);
+        let e = self.table[peek];
+        let len = (e & 0xf) as u32;
+        if len == 0 {
+            return Err("invalid huffman code".into());
+        }
+        r.consume(len);
+        Ok((e >> 4) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    fn roundtrip(freq_gen: impl Fn(&mut Pcg32, usize) -> u32, seed: u64) {
+        prop_cases(seed, 10, |rng, _| {
+            let nsyms = 2 + rng.below(300) as usize;
+            let freqs: Vec<u32> = (0..nsyms).map(|i| freq_gen(rng, i)).collect();
+            let total: u32 = freqs.iter().sum();
+            if total == 0 {
+                return;
+            }
+            let lens = code_lengths(&freqs);
+            // Kraft inequality holds
+            let kraft: f64 = lens
+                .iter()
+                .filter(|&&l| l > 0)
+                .map(|&l| 2f64.powi(-(l as i32)))
+                .sum();
+            assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+            let enc = Encoder::from_lengths(&lens);
+            let dec = Decoder::from_lengths(&lens).unwrap();
+            // encode a random message drawn from the alphabet
+            let msg: Vec<usize> = (0..2000)
+                .map(|_| loop {
+                    let s = rng.below(nsyms as u32) as usize;
+                    if freqs[s] > 0 {
+                        break s;
+                    }
+                })
+                .collect();
+            let mut w = crate::util::BitWriter::new();
+            for &s in &msg {
+                enc.write(&mut w, s);
+            }
+            let bytes = w.finish();
+            let mut r = crate::util::BitReader::new(&bytes);
+            for &s in &msg {
+                assert_eq!(dec.read(&mut r).unwrap(), s);
+            }
+        });
+    }
+
+    #[test]
+    fn roundtrip_uniform() {
+        roundtrip(|rng, _| 1 + rng.below(100), 0x11);
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        // geometric-ish distribution would exceed MAX_BITS without limiting
+        roundtrip(|rng, i| if i == 0 { 1 << 20 } else { 1 + rng.below(3) }, 0x22);
+    }
+
+    #[test]
+    fn roundtrip_sparse() {
+        roundtrip(|rng, _| if rng.below(4) == 0 { 1 + rng.below(50) } else { 0 }, 0x33);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let freqs = vec![0, 5, 0];
+        let lens = code_lengths(&freqs);
+        assert_eq!(lens[1], 1);
+        let enc = Encoder::from_lengths(&lens);
+        let dec = Decoder::from_lengths(&lens).unwrap();
+        let mut w = crate::util::BitWriter::new();
+        for _ in 0..10 {
+            enc.write(&mut w, 1);
+        }
+        let bytes = w.finish();
+        let mut r = crate::util::BitReader::new(&bytes);
+        for _ in 0..10 {
+            assert_eq!(dec.read(&mut r).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn lengths_respect_limit() {
+        // pathological fibonacci-like frequencies force deep trees
+        let mut freqs = vec![0u32; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a as u32;
+            let c = (a + b).min(u32::MAX as u64);
+            a = b;
+            b = c;
+        }
+        let lens = code_lengths(&freqs);
+        assert!(lens.iter().all(|&l| (l as usize) <= MAX_BITS));
+        // and decoding still works
+        assert!(Decoder::from_lengths(&lens).is_ok());
+    }
+
+    #[test]
+    fn skewed_codes_are_shorter_for_frequent_symbols() {
+        let freqs = vec![1000, 10, 10, 10];
+        let lens = code_lengths(&freqs);
+        assert!(lens[0] < lens[1]);
+    }
+}

@@ -1,0 +1,244 @@
+//! `lz4lite`: from-scratch byte-aligned greedy LZ (the LZ4 family's
+//! format): fastest codec in the suite, lower compression ratio — the
+//! paper's positioning for LZ4 (§2.3).
+//!
+//! Sequence format (after a `u32` raw length header):
+//! `[token: hi=literal run, lo=match len-4][run ext*][literals][u16 offset][len ext*]`
+//! Extension bytes add 255 each, terminated by a byte < 255. A final
+//! sequence may have match length 0 (token low nibble 0xF is still a
+//! match of >= 19; a trailing literal-only sequence ends with offset 0).
+
+const MIN_MATCH: usize = 4;
+const HASH_BITS: usize = 16;
+
+#[inline(always)]
+fn hash4(v: u32) -> usize {
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+#[inline(always)]
+fn read_u32(data: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]])
+}
+
+fn write_len(out: &mut Vec<u8>, mut v: usize) {
+    while v >= 255 {
+        out.push(255);
+        v -= 255;
+    }
+    out.push(v as u8);
+}
+
+fn read_len(input: &[u8], pos: &mut usize) -> Result<usize, String> {
+    let mut v = 0usize;
+    loop {
+        let b = *input.get(*pos).ok_or("truncated length")?;
+        *pos += 1;
+        v += b as usize;
+        if b < 255 {
+            return Ok(v);
+        }
+    }
+}
+
+/// Compress `input`, appending to `out`.
+pub fn compress(input: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(input.len() as u32).to_le_bytes());
+    let n = input.len();
+    if n == 0 {
+        return;
+    }
+    let mut head = vec![-1i64; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    // match window limited to u16 offsets
+    const WINDOW: usize = 65535;
+    while i + MIN_MATCH <= n {
+        let h = hash4(read_u32(input, i));
+        let cand = head[h];
+        head[h] = i as i64;
+        let ok = cand >= 0
+            && i - cand as usize <= WINDOW
+            && read_u32(input, cand as usize) == read_u32(input, i);
+        if !ok {
+            i += 1;
+            continue;
+        }
+        let c = cand as usize;
+        let mut len = MIN_MATCH;
+        while i + len < n && input[c + len] == input[i + len] {
+            len += 1;
+        }
+        // emit sequence: literals [lit_start, i) + match (len, dist)
+        let lit_len = i - lit_start;
+        let dist = i - c;
+        let token_lit = lit_len.min(15);
+        let token_match = (len - MIN_MATCH).min(15);
+        out.push(((token_lit as u8) << 4) | token_match as u8);
+        if token_lit == 15 {
+            write_len(out, lit_len - 15);
+        }
+        out.extend_from_slice(&input[lit_start..i]);
+        out.extend_from_slice(&(dist as u16).to_le_bytes());
+        if token_match == 15 {
+            write_len(out, len - MIN_MATCH - 15);
+        }
+        // insert a few positions inside the match to help the next search
+        let insert_to = (i + len).min(n - MIN_MATCH);
+        let mut j = i + 1;
+        while j < insert_to && j < i + 16 {
+            head[hash4(read_u32(input, j))] = j as i64;
+            j += 1;
+        }
+        i += len;
+        lit_start = i;
+    }
+    // trailing literal-only sequence (offset 0 marks "no match")
+    let lit_len = n - lit_start;
+    let token_lit = lit_len.min(15);
+    out.push((token_lit as u8) << 4);
+    if token_lit == 15 {
+        write_len(out, lit_len - 15);
+    }
+    out.extend_from_slice(&input[lit_start..]);
+    out.extend_from_slice(&0u16.to_le_bytes());
+}
+
+/// Decompress a full lz4lite stream, appending to `out`.
+pub fn decompress(input: &[u8], out: &mut Vec<u8>) -> Result<(), String> {
+    if input.len() < 4 {
+        return Err("missing header".into());
+    }
+    let raw_len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
+    let out_start = out.len();
+    out.reserve(raw_len);
+    let mut pos = 4usize;
+    loop {
+        if out.len() - out_start == raw_len && pos == input.len() {
+            return Ok(());
+        }
+        let token = *input.get(pos).ok_or("truncated token")?;
+        pos += 1;
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            lit_len += read_len(input, &mut pos)?;
+        }
+        if input.len() < pos + lit_len {
+            return Err("truncated literals".into());
+        }
+        out.extend_from_slice(&input[pos..pos + lit_len]);
+        pos += lit_len;
+        if input.len() < pos + 2 {
+            return Err("truncated offset".into());
+        }
+        let dist = u16::from_le_bytes(input[pos..pos + 2].try_into().unwrap()) as usize;
+        pos += 2;
+        if dist == 0 {
+            // terminal literal-only sequence
+            if out.len() - out_start != raw_len {
+                return Err("length mismatch at terminator".into());
+            }
+            return Ok(());
+        }
+        let mut mlen = (token & 0xf) as usize;
+        if mlen == 15 {
+            mlen += read_len(input, &mut pos)?;
+        }
+        let mlen = mlen + MIN_MATCH;
+        if dist > out.len() - out_start {
+            return Err(format!("distance {dist} out of range"));
+        }
+        if out.len() - out_start + mlen > raw_len {
+            return Err("match overruns output".into());
+        }
+        let start = out.len() - dist;
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let mut comp = Vec::new();
+        compress(data, &mut comp);
+        let mut back = Vec::new();
+        decompress(&comp, &mut back).unwrap();
+        assert_eq!(back, data);
+        comp.len()
+    }
+
+    #[test]
+    fn basic_cases() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abcd");
+        roundtrip(b"aaaaaaaaaaaaaaaaaaaaaaaaaaaa");
+        roundtrip(&vec![0u8; 1_000_000]);
+    }
+
+    #[test]
+    fn compresses_runs_hard() {
+        let size = roundtrip(&vec![42u8; 100_000]);
+        assert!(size < 600, "size {size}");
+    }
+
+    #[test]
+    fn long_literal_runs() {
+        let mut rng = Pcg32::new(4);
+        let data: Vec<u8> = (0..70_000).map(|_| rng.next_u32() as u8).collect();
+        let size = roundtrip(&data);
+        // incompressible: bounded expansion
+        assert!(size <= data.len() + data.len() / 250 + 64);
+    }
+
+    #[test]
+    fn prop_roundtrip_mixed() {
+        prop_cases(0x44, 20, |rng, _| {
+            let n = rng.below(80_000) as usize;
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                if rng.below(2) == 0 && data.len() > 8 {
+                    let back = 1 + rng.below(data.len().min(60_000) as u32) as usize;
+                    let len = (4 + rng.below(40) as usize).min(n - data.len());
+                    let start = data.len() - back;
+                    for k in 0..len {
+                        let b = data[(start + k).min(data.len() - 1)];
+                        data.push(b);
+                    }
+                } else {
+                    data.push(rng.below(7) as u8);
+                }
+            }
+            roundtrip(&data);
+        });
+    }
+
+    #[test]
+    fn corrupt_input_errors_not_panics() {
+        let mut comp = Vec::new();
+        compress(b"hello world hello world hello world", &mut comp);
+        for i in 0..comp.len() {
+            let mut bad = comp.clone();
+            bad[i] = bad[i].wrapping_add(13);
+            let mut out = Vec::new();
+            let _ = decompress(&bad, &mut out);
+        }
+        // truncation either errors or (if only the 3-byte terminator was
+        // cut) still yields the complete output — never panics
+        let orig = b"hello world hello world hello world";
+        for cut in 1..comp.len().min(8) {
+            let mut out = Vec::new();
+            match decompress(&comp[..comp.len() - cut], &mut out) {
+                Ok(()) => assert_eq!(out, orig),
+                Err(_) => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Hash-chain LZ77 match finder shared by `czlib`, `zstdlite` and
+//! `lzmalite`. Produces (literal-run, match) token streams.
+pub const MIN_MATCH: usize = 3;
+pub const MAX_MATCH: usize = 258;
+
+/// One LZ77 token: either a literal byte or a back-reference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Token {
+    Literal(u8),
+    Match { len: u32, dist: u32 },
+}
+
+/// Match-finder configuration (the codec "effort level").
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    /// Window size (power of two).
+    pub window: usize,
+    /// Max hash-chain entries examined per position.
+    pub max_chain: usize,
+    /// Lazy matching: defer a match if the next position matches longer.
+    pub lazy: bool,
+    /// Stop searching early once a match of this length is found.
+    pub good_enough: usize,
+    /// Minimum match length to accept (>= MIN_MATCH).
+    pub min_match: usize,
+}
+
+impl Params {
+    pub fn fast() -> Self {
+        Self { window: 1 << 16, max_chain: 4, lazy: false, good_enough: 32, min_match: 3 }
+    }
+    pub fn default_level() -> Self {
+        Self { window: 1 << 15, max_chain: 16, lazy: false, good_enough: 64, min_match: 3 }
+    }
+    pub fn best() -> Self {
+        Self { window: 1 << 15, max_chain: 512, lazy: true, good_enough: MAX_MATCH, min_match: 3 }
+    }
+    pub fn deep() -> Self {
+        Self { window: 1 << 20, max_chain: 256, lazy: true, good_enough: MAX_MATCH, min_match: 3 }
+    }
+}
+
+const HASH_BITS: usize = 16;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+
+#[inline(always)]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Reusable hash-chain state (no allocation per call after the first).
+pub struct MatchFinder {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+    params: Params,
+}
+
+impl MatchFinder {
+    pub fn new(params: Params) -> Self {
+        Self { head: vec![-1; HASH_SIZE], prev: Vec::new(), params }
+    }
+
+    /// Find the longest match at position `i` of `data`; returns (len, dist).
+    #[inline]
+    fn longest_match(&self, data: &[u8], i: usize) -> (usize, usize) {
+        let p = &self.params;
+        let end = data.len();
+        let max_len = (end - i).min(MAX_MATCH);
+        if max_len < p.min_match {
+            return (0, 0);
+        }
+        let mut best_len = p.min_match - 1;
+        let mut best_dist = 0usize;
+        let mut cand = self.head[hash4(data, i)];
+        let min_pos = i.saturating_sub(p.window) as i64;
+        let mut chain = p.max_chain;
+        while cand >= 0 && (cand as i64) >= min_pos && chain > 0 {
+            let c = cand as usize;
+            // quick reject on the byte just past the current best
+            if i + best_len < end && data[c + best_len] == data[i + best_len] {
+                let mut l = 0usize;
+                while l < max_len && data[c + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = i - c;
+                    if l >= p.good_enough {
+                        break;
+                    }
+                }
+            }
+            cand = self.prev[c];
+            chain -= 1;
+        }
+        if best_len >= p.min_match {
+            (best_len, best_dist)
+        } else {
+            (0, 0)
+        }
+    }
+
+    #[inline(always)]
+    fn insert(&mut self, data: &[u8], i: usize) {
+        if i + 4 <= data.len() {
+            let h = hash4(data, i);
+            self.prev[i] = self.head[h];
+            self.head[h] = i as i32;
+        }
+    }
+
+    /// Tokenize `data`, invoking `emit` for each token in order.
+    pub fn tokenize(&mut self, data: &[u8], mut emit: impl FnMut(Token)) {
+        self.head.fill(-1);
+        self.prev.clear();
+        self.prev.resize(data.len(), -1);
+        let n = data.len();
+        let mut i = 0usize;
+        while i < n {
+            if i + 4 > n {
+                emit(Token::Literal(data[i]));
+                i += 1;
+                continue;
+            }
+            let (mut len, mut dist) = self.longest_match(data, i);
+            if len == 0 {
+                self.insert(data, i);
+                emit(Token::Literal(data[i]));
+                i += 1;
+                continue;
+            }
+            if self.params.lazy && i + 1 + 4 <= n {
+                // peek one ahead: if strictly longer there, emit literal now
+                self.insert(data, i);
+                let (len2, dist2) = self.longest_match(data, i + 1);
+                if len2 > len {
+                    emit(Token::Literal(data[i]));
+                    i += 1;
+                    len = len2;
+                    dist = dist2;
+                }
+            } else {
+                self.insert(data, i);
+            }
+            emit(Token::Match { len: len as u32, dist: dist as u32 });
+            // insert positions covered by the match (bounded for speed)
+            let insert_to = (i + len).min(n.saturating_sub(4));
+            let mut j = i + 1;
+            let step_limit = 64; // cap chain maintenance inside long matches
+            while j < insert_to && j < i + step_limit {
+                self.insert(data, j);
+                j += 1;
+            }
+            i += len;
+        }
+    }
+}
+
+/// Reconstruct bytes from a token stream (shared by all LZ decoders).
+pub fn expand(tokens: impl IntoIterator<Item = Token>, out: &mut Vec<u8>) -> Result<(), String> {
+    for t in tokens {
+        match t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let dist = dist as usize;
+                let len = len as usize;
+                if dist == 0 || dist > out.len() {
+                    return Err(format!("bad distance {dist} at out len {}", out.len()));
+                }
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    fn roundtrip(params: Params, data: &[u8]) {
+        let mut mf = MatchFinder::new(params);
+        let mut tokens = Vec::new();
+        mf.tokenize(data, |t| tokens.push(t));
+        let mut out = Vec::new();
+        expand(tokens, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn tokenize_roundtrips_all_levels() {
+        let data = b"abcabcabcabcabc hello hello hello world world";
+        for p in [Params::fast(), Params::default_level(), Params::best(), Params::deep()] {
+            roundtrip(p, data);
+        }
+    }
+
+    #[test]
+    fn finds_long_repeats() {
+        let mut data = vec![0u8; 0];
+        data.extend_from_slice(b"0123456789abcdef");
+        for _ in 0..100 {
+            data.extend_from_slice(b"0123456789abcdef");
+        }
+        let mut mf = MatchFinder::new(Params::default_level());
+        let mut matches = 0usize;
+        let mut literals = 0usize;
+        mf.tokenize(&data, |t| match t {
+            Token::Literal(_) => literals += 1,
+            Token::Match { .. } => matches += 1,
+        });
+        assert!(literals <= 16 + 3, "literals {literals}");
+        assert!(matches >= 4);
+    }
+
+    #[test]
+    fn random_data_roundtrips() {
+        prop_cases(0x77, 15, |rng, _| {
+            let n = rng.below(30_000) as usize;
+            let mut data = vec![0u8; n];
+            // mix of random and repetitive sections
+            let mut i = 0;
+            while i < n {
+                if rng.below(2) == 0 {
+                    let run = (rng.below(100) as usize).min(n - i);
+                    let b = rng.next_u32() as u8;
+                    for _ in 0..run {
+                        data[i] = b;
+                        i += 1;
+                    }
+                } else {
+                    data[i] = rng.next_u32() as u8;
+                    i += 1;
+                }
+            }
+            roundtrip(Params::default_level(), &data);
+            roundtrip(Params::best(), &data);
+        });
+    }
+
+    #[test]
+    fn expand_rejects_bad_distance() {
+        let mut out = Vec::new();
+        assert!(expand([Token::Match { len: 3, dist: 5 }], &mut out).is_err());
+    }
+
+    #[test]
+    fn overlapping_match_expands_correctly() {
+        // RLE-style: dist 1, len 10
+        let mut out = vec![b'x'];
+        expand([Token::Match { len: 10, dist: 1 }], &mut out).unwrap();
+        assert_eq!(out, vec![b'x'; 11]);
+    }
+}

@@ -1,0 +1,409 @@
+//! `lzmalite`: LZ77 (deep, 1 MiB window) + adaptive binary range coder
+//! with order-1 literal contexts — the LZMA family's design point: best
+//! compression ratio in the suite, slowest (paper §2.3: "LZMA provides
+//! slightly better compression than ZLIB ... but it is considerably
+//! slower").
+//!
+//! Model:
+//! * `is_match` bit, context = previous-token kind
+//! * literals: 8-bit bit-tree, 256 contexts keyed by the previous byte
+//! * match length: 8-bit bit-tree (len - 3, capped at 258)
+//! * match distance: 6-bit slot bit-tree + direct (uncoded) extra bits
+use super::lz77::{MatchFinder, Params, Token};
+
+const PROB_BITS: u32 = 11;
+const PROB_ONE: u16 = 1 << PROB_BITS;
+const MOVE_BITS: u32 = 5;
+const TOP: u32 = 1 << 24;
+
+/// Adaptive bit probability (11-bit, LZMA-style shift update).
+#[derive(Clone, Copy)]
+struct Prob(u16);
+
+impl Prob {
+    fn new() -> Self {
+        Prob(PROB_ONE / 2)
+    }
+}
+
+struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl RangeEncoder {
+    fn new() -> Self {
+        Self { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    fn shift_low(&mut self) {
+        if self.low < 0xff00_0000 || self.low > 0xffff_ffff {
+            let carry = (self.low >> 32) as u8;
+            let mut c = self.cache;
+            loop {
+                self.out.push(c.wrapping_add(carry));
+                c = 0xff;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xffff_ffff;
+    }
+
+    fn encode_bit(&mut self, p: &mut Prob, bit: u32) {
+        let bound = (self.range >> PROB_BITS) * p.0 as u32;
+        if bit == 0 {
+            self.range = bound;
+            p.0 += (PROB_ONE - p.0) >> MOVE_BITS;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+            p.0 -= p.0 >> MOVE_BITS;
+        }
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Direct (uniform) bits, MSB first.
+    fn encode_direct(&mut self, v: u32, nbits: u32) {
+        for i in (0..nbits).rev() {
+            self.range >>= 1;
+            let bit = (v >> i) & 1;
+            if bit != 0 {
+                self.low += self.range as u64;
+            }
+            while self.range < TOP {
+                self.range <<= 8;
+                self.shift_low();
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+struct RangeDecoder<'a> {
+    code: u32,
+    range: u32,
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    fn new(input: &'a [u8]) -> Result<Self, String> {
+        if input.is_empty() {
+            return Err("empty range stream".into());
+        }
+        let mut d = Self { code: 0, range: u32::MAX, input, pos: 1 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte();
+        }
+        Ok(d)
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u32 {
+        let b = self.input.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b as u32
+    }
+
+    fn decode_bit(&mut self, p: &mut Prob) -> u32 {
+        let bound = (self.range >> PROB_BITS) * p.0 as u32;
+        let bit;
+        if self.code < bound {
+            self.range = bound;
+            p.0 += (PROB_ONE - p.0) >> MOVE_BITS;
+            bit = 0;
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            p.0 -= p.0 >> MOVE_BITS;
+            bit = 1;
+        }
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte();
+        }
+        bit
+    }
+
+    fn decode_direct(&mut self, nbits: u32) -> u32 {
+        let mut v = 0u32;
+        for _ in 0..nbits {
+            self.range >>= 1;
+            let bit = if self.code >= self.range {
+                self.code -= self.range;
+                1
+            } else {
+                0
+            };
+            v = (v << 1) | bit;
+            while self.range < TOP {
+                self.range <<= 8;
+                self.code = (self.code << 8) | self.next_byte();
+            }
+        }
+        v
+    }
+}
+
+/// 2^n-leaf bit tree of adaptive probabilities (MSB-first traversal).
+struct BitTree {
+    probs: Vec<Prob>,
+    nbits: u32,
+}
+
+impl BitTree {
+    fn new(nbits: u32) -> Self {
+        Self { probs: vec![Prob::new(); 1 << nbits], nbits }
+    }
+
+    fn encode(&mut self, enc: &mut RangeEncoder, v: u32) {
+        let mut node = 1usize;
+        for i in (0..self.nbits).rev() {
+            let bit = (v >> i) & 1;
+            enc.encode_bit(&mut self.probs[node], bit);
+            node = (node << 1) | bit as usize;
+        }
+    }
+
+    fn decode(&mut self, dec: &mut RangeDecoder) -> u32 {
+        let mut node = 1usize;
+        for _ in 0..self.nbits {
+            let bit = dec.decode_bit(&mut self.probs[node]);
+            node = (node << 1) | bit as usize;
+        }
+        (node as u32) - (1 << self.nbits)
+    }
+}
+
+struct Model {
+    is_match: [Prob; 2],
+    literals: Vec<BitTree>, // 256 contexts x 8-bit trees
+    len_tree: BitTree,      // len - MIN (0..255)
+    slot_tree: BitTree,     // 6-bit distance slot
+}
+
+impl Model {
+    fn new() -> Self {
+        Self {
+            is_match: [Prob::new(); 2],
+            literals: (0..256).map(|_| BitTree::new(8)).collect(),
+            len_tree: BitTree::new(8),
+            slot_tree: BitTree::new(6),
+        }
+    }
+}
+
+#[inline]
+fn dist_slot(dist: u32) -> (u32, u32, u32) {
+    // slot for dist >= 1: slots 0..3 are exact 1..4, then (extra bits)
+    if dist <= 4 {
+        (dist - 1, 0, 0)
+    } else {
+        let log = 31 - (dist - 1).leading_zeros();
+        let extra_bits = log - 1;
+        let top_bit = 1u32 << log;
+        let second = ((dist - 1) >> (log - 1)) & 1;
+        let slot = 2 + 2 * log + second - 2; // 4,5 for log=2, ...
+        let base = top_bit + second * (1 << (log - 1)) + 1;
+        (slot, extra_bits, dist - base)
+    }
+}
+
+#[inline]
+fn slot_base(slot: u32) -> (u32, u32) {
+    if slot < 4 {
+        (slot + 1, 0)
+    } else {
+        let log = (slot - 2) / 2 + 1;
+        let second = (slot - 2) % 2;
+        let extra_bits = log - 1;
+        let base = (1u32 << log) + second * (1 << (log - 1)) + 1;
+        (base, extra_bits)
+    }
+}
+
+/// Compress `input`, appending to `out`: `[u32 raw_len][range stream]`.
+pub fn compress(input: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(input.len() as u32).to_le_bytes());
+    if input.is_empty() {
+        return;
+    }
+    let mut mf = MatchFinder::new(Params::deep());
+    let mut tokens = Vec::with_capacity(input.len() / 4 + 8);
+    mf.tokenize(input, |t| tokens.push(t));
+
+    let mut model = Model::new();
+    let mut enc = RangeEncoder::new();
+    let mut prev_byte = 0u8;
+    let mut pos = 0usize;
+    for t in tokens {
+        match t {
+            Token::Literal(b) => {
+                enc.encode_bit(&mut model.is_match[0], 0);
+                model.literals[prev_byte as usize].encode(&mut enc, b as u32);
+                prev_byte = b;
+                pos += 1;
+            }
+            Token::Match { len, dist } => {
+                enc.encode_bit(&mut model.is_match[0], 1);
+                model.len_tree.encode(&mut enc, len - 3);
+                let (slot, ebits, extra) = dist_slot(dist);
+                model.slot_tree.encode(&mut enc, slot);
+                if ebits > 0 {
+                    enc.encode_direct(extra, ebits);
+                }
+                pos += len as usize;
+                prev_byte = input[pos - 1];
+            }
+        }
+    }
+    out.extend_from_slice(&enc.finish());
+}
+
+/// Decompress a full lzmalite stream, appending to `out`.
+pub fn decompress(input: &[u8], out: &mut Vec<u8>) -> Result<(), String> {
+    if input.len() < 4 {
+        return Err("missing header".into());
+    }
+    let raw_len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
+    if raw_len == 0 {
+        return Ok(());
+    }
+    let mut dec = RangeDecoder::new(&input[4..])?;
+    let mut model = Model::new();
+    let out_start = out.len();
+    out.reserve(raw_len);
+    let mut prev_byte = 0u8;
+    while out.len() - out_start < raw_len {
+        if dec.decode_bit(&mut model.is_match[0]) == 0 {
+            let b = model.literals[prev_byte as usize].decode(&mut dec) as u8;
+            out.push(b);
+            prev_byte = b;
+        } else {
+            let len = model.len_tree.decode(&mut dec) as usize + 3;
+            let slot = model.slot_tree.decode(&mut dec);
+            let (base, ebits) = slot_base(slot);
+            let dist = (base + if ebits > 0 { dec.decode_direct(ebits) } else { 0 }) as usize;
+            if dist > out.len() - out_start {
+                return Err(format!("distance {dist} out of range"));
+            }
+            if out.len() - out_start + len > raw_len {
+                return Err("match overruns output".into());
+            }
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+            prev_byte = *out.last().unwrap();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let mut comp = Vec::new();
+        compress(data, &mut comp);
+        let mut back = Vec::new();
+        decompress(&comp, &mut back).unwrap();
+        assert_eq!(back, data, "len {}", data.len());
+        comp.len()
+    }
+
+    #[test]
+    fn slot_base_inverts_dist_slot() {
+        for dist in 1u32..100_000 {
+            let (slot, ebits, extra) = dist_slot(dist);
+            let (base, ebits2) = slot_base(slot);
+            assert_eq!(ebits, ebits2, "dist {dist}");
+            assert_eq!(base + extra, dist, "dist {dist} slot {slot}");
+            assert!(extra < (1 << ebits) || ebits == 0, "dist {dist}");
+        }
+        // and the full window
+        for dist in [1u32 << 18, 1 << 19, (1 << 20) - 1, 1 << 20] {
+            let (slot, ebits, extra) = dist_slot(dist);
+            let (base, _) = slot_base(slot);
+            assert_eq!(base + extra, dist);
+            assert!(slot < 64, "slot {slot} must fit the 6-bit tree");
+            let _ = ebits;
+        }
+    }
+
+    #[test]
+    fn basic_cases() {
+        roundtrip(b"");
+        roundtrip(b"x");
+        roundtrip(b"abcabcabcabcabcabc");
+        roundtrip(&vec![9u8; 50_000]);
+    }
+
+    #[test]
+    fn text_compresses_well() {
+        let data: Vec<u8> = b"it was the best of times, it was the worst of times. "
+            .iter()
+            .cycle()
+            .take(80_000)
+            .cloned()
+            .collect();
+        let size = roundtrip(&data);
+        assert!(size < data.len() / 40, "size {size}");
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop_cases(0x1224, 12, |rng, _| {
+            let n = rng.below(60_000) as usize;
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                match rng.below(4) {
+                    0 if data.len() > 8 => {
+                        let back = 1 + rng.below(data.len() as u32) as usize;
+                        let len = (3 + rng.below(60) as usize).min(n - data.len());
+                        let start = data.len() - back;
+                        for k in 0..len {
+                            let b = data[start + k.min(back - 1) % back];
+                            data.push(b);
+                        }
+                    }
+                    1 => data.push(0),
+                    _ => data.push(rng.next_u32() as u8),
+                }
+            }
+            roundtrip(&data);
+        });
+    }
+
+    #[test]
+    fn truncated_stream_is_handled() {
+        let mut comp = Vec::new();
+        compress(&vec![7u8; 10_000], &mut comp);
+        let mut out = Vec::new();
+        // decoder reads zeros past the end; it must terminate (length-bounded)
+        // with either an error or a short/garbled output, never hang or panic
+        let _ = decompress(&comp[..comp.len() / 2], &mut out);
+        assert!(out.len() <= 10_000);
+    }
+}

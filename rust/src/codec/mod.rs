@@ -1,0 +1,222 @@
+//! Substage-2 lossless codecs (paper §2.3 "Lossless compression").
+//!
+//! All primary codecs are implemented from scratch in this module:
+//! * [`czlib`]  — LZ77 (hash-chain) + canonical Huffman; DEFLATE-family.
+//!   Two effort levels mirroring ZLIB's default/best (`Z/DEF`, `Z/BEST`).
+//! * [`lz4lite`] — greedy byte-aligned LZ (LZ4 family): fastest, lower CR.
+//! * [`zstdlite`] — czlib engine with a 4× window and greedy matching:
+//!   ZLIB-class ratio at higher speed (ZSTD's positioning in the paper).
+//! * [`lzmalite`] — LZ + adaptive binary range coder with order-1 literal
+//!   contexts and a 1 MiB window: best ratio, slowest (LZMA's positioning).
+//! * [`shuffle`] — byte/bit shuffling preconditioners (BLOSC-style).
+//!
+//! The real `flate2` (zlib) and `zstd` crates are wrapped as *reference
+//! baselines* to validate the from-scratch implementations in tests and
+//! benches; they are never used by the pipeline itself.
+pub mod czlib;
+pub mod huffman;
+pub mod lz4lite;
+pub mod lz77;
+pub mod lzmalite;
+pub mod reference;
+pub mod shuffle;
+
+/// Identifies a substage-2 lossless scheme in file headers and CLIs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// No stage-2 compression (direct copy).
+    None,
+    /// czlib at default effort (paper's Z/DEF).
+    ZlibDef,
+    /// czlib at best effort (paper's Z/BEST).
+    ZlibBest,
+    /// lz4lite.
+    Lz4,
+    /// zstdlite.
+    Zstd,
+    /// lzmalite.
+    Lzma,
+}
+
+impl Codec {
+    pub const ALL: [Codec; 6] =
+        [Codec::None, Codec::ZlibDef, Codec::ZlibBest, Codec::Lz4, Codec::Zstd, Codec::Lzma];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::ZlibDef => "zlib",
+            Codec::ZlibBest => "zlib-best",
+            Codec::Lz4 => "lz4",
+            Codec::Zstd => "zstd",
+            Codec::Lzma => "lzma",
+        }
+    }
+
+    pub fn id(&self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::ZlibDef => 1,
+            Codec::ZlibBest => 2,
+            Codec::Lz4 => 3,
+            Codec::Zstd => 4,
+            Codec::Lzma => 5,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Option<Self> {
+        Self::ALL.into_iter().find(|c| c.id() == id)
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|c| c.name() == name)
+    }
+
+    /// Compress `input`, appending to `out`.
+    pub fn compress(&self, input: &[u8], out: &mut Vec<u8>) {
+        match self {
+            Codec::None => out.extend_from_slice(input),
+            Codec::ZlibDef => czlib::compress(input, czlib::Level::Default, out),
+            Codec::ZlibBest => czlib::compress(input, czlib::Level::Best, out),
+            Codec::Lz4 => lz4lite::compress(input, out),
+            Codec::Zstd => czlib::compress(input, czlib::Level::Fast, out),
+            Codec::Lzma => lzmalite::compress(input, out),
+        }
+    }
+
+    /// Decompress `input` (must contain a whole stream), appending to `out`.
+    pub fn decompress(&self, input: &[u8], out: &mut Vec<u8>) -> Result<(), String> {
+        match self {
+            Codec::None => {
+                out.extend_from_slice(input);
+                Ok(())
+            }
+            Codec::ZlibDef | Codec::ZlibBest => czlib::decompress(input, out),
+            Codec::Lz4 => lz4lite::decompress(input, out),
+            Codec::Zstd => czlib::decompress(input, out),
+            Codec::Lzma => lzmalite::decompress(input, out),
+        }
+    }
+
+    /// Convenience: compress into a fresh vector.
+    pub fn compress_vec(&self, input: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(input.len() / 2 + 64);
+        self.compress(input, &mut out);
+        out
+    }
+
+    /// Convenience: decompress into a fresh vector.
+    pub fn decompress_vec(&self, input: &[u8]) -> Result<Vec<u8>, String> {
+        let mut out = Vec::with_capacity(input.len() * 3 + 64);
+        self.decompress(input, &mut out)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    fn sample_inputs() -> Vec<Vec<u8>> {
+        let mut rng = Pcg32::new(0xC0DEC);
+        let mut v: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0],
+            vec![7; 1],
+            b"hello hello hello hello".to_vec(),
+            vec![0; 100_000],
+            (0..=255u8).cycle().take(70_000).collect(),
+        ];
+        // compressible structured data
+        let mut structured = Vec::new();
+        for i in 0..30_000u32 {
+            structured.extend_from_slice(&(i / 7).to_le_bytes());
+        }
+        v.push(structured);
+        // incompressible random data
+        let mut rnd = vec![0u8; 50_000];
+        for b in rnd.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        v.push(rnd);
+        v
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_samples() {
+        for codec in Codec::ALL {
+            for input in sample_inputs() {
+                let comp = codec.compress_vec(&input);
+                let back = codec.decompress_vec(&comp).unwrap_or_else(|e| {
+                    panic!("{} failed on len {}: {e}", codec.name(), input.len())
+                });
+                assert_eq!(back, input, "{} roundtrip len {}", codec.name(), input.len());
+            }
+        }
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_random_lz_structure() {
+        // strings with repeated substrings at random distances exercise the
+        // match finders harder than uniform noise
+        prop_cases(0x5EED, 20, |rng, _| {
+            let n = 1000 + rng.below(60_000) as usize;
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                if rng.below(3) == 0 && data.len() > 16 {
+                    let back = 1 + rng.below(data.len().min(40_000) as u32) as usize;
+                    let len = (3 + rng.below(80) as usize).min(back).min(n - data.len());
+                    let start = data.len() - back;
+                    for i in 0..len {
+                        let b = data[start + i];
+                        data.push(b);
+                    }
+                } else {
+                    data.push(rng.next_u32() as u8);
+                }
+            }
+            for codec in Codec::ALL {
+                let comp = codec.compress_vec(&data);
+                let back = codec.decompress_vec(&comp).unwrap();
+                assert_eq!(back, data, "{}", codec.name());
+            }
+        });
+    }
+
+    #[test]
+    fn ratio_ordering_on_float_like_data() {
+        // shuffled wavelet-coefficient-like data: lzma >= zlib-best >= zlib
+        // >= lz4 in ratio (allowing small slack), which is the paper's
+        // qualitative ordering (§2.3 Lossless compression)
+        let mut rng = Pcg32::new(0x0DDBA11);
+        let mut data = Vec::new();
+        for _ in 0..40_000 {
+            let v = (rng.next_f32() * 0.001).to_le_bytes();
+            data.extend_from_slice(&v);
+        }
+        let shuffled = shuffle::byte_shuffle(&data, 4);
+        let size = |c: Codec| c.compress_vec(&shuffled).len() as f64;
+        let (lzma, zbest, zdef, zstd, lz4) = (
+            size(Codec::Lzma),
+            size(Codec::ZlibBest),
+            size(Codec::ZlibDef),
+            size(Codec::Zstd),
+            size(Codec::Lz4),
+        );
+        assert!(lzma <= zbest * 1.02, "lzma {lzma} vs zlib-best {zbest}");
+        assert!(zbest <= zdef * 1.01, "zlib-best {zbest} vs zlib {zdef}");
+        assert!(zdef <= lz4 * 1.05, "zlib {zdef} vs lz4 {lz4}");
+        assert!(zstd <= lz4 * 1.05, "zstd {zstd} vs lz4 {lz4}");
+    }
+
+    #[test]
+    fn ids_roundtrip() {
+        for c in Codec::ALL {
+            assert_eq!(Codec::from_id(c.id()), Some(c));
+            assert_eq!(Codec::from_name(c.name()), Some(c));
+        }
+        assert_eq!(Codec::from_id(99), None);
+    }
+}

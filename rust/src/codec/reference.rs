@@ -1,0 +1,79 @@
+//! Reference baselines: the real zlib (`flate2`) and zstd crates, used
+//! ONLY to validate the from-scratch codecs (ratio and speed sanity in
+//! tests/benches). The compression pipeline never calls these.
+use std::io::{Read, Write};
+
+/// Real zlib deflate at the given level (default 6, best 9).
+pub fn zlib_compress(input: &[u8], level: u32) -> Vec<u8> {
+    let mut e = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::new(level));
+    e.write_all(input).unwrap();
+    e.finish().unwrap()
+}
+
+/// Real zlib inflate.
+pub fn zlib_decompress(input: &[u8]) -> Vec<u8> {
+    let mut d = flate2::read::ZlibDecoder::new(input);
+    let mut out = Vec::new();
+    d.read_to_end(&mut out).unwrap();
+    out
+}
+
+/// Real zstd at the given level (default 3).
+pub fn zstd_compress(input: &[u8], level: i32) -> Vec<u8> {
+    zstd::bulk::compress(input, level).unwrap()
+}
+
+/// Real zstd decompress (capacity must be known or bounded).
+pub fn zstd_decompress(input: &[u8], capacity: usize) -> Vec<u8> {
+    zstd::bulk::decompress(input, capacity).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Codec;
+    use crate::util::prng::Pcg32;
+
+    fn float_like_payload() -> Vec<u8> {
+        let mut rng = Pcg32::new(0xFEED);
+        let mut data = Vec::new();
+        let mut v = 0.0f32;
+        for _ in 0..60_000 {
+            v += rng.next_f32() * 0.01 - 0.005;
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        crate::codec::shuffle::byte_shuffle(&data, 4)
+    }
+
+    #[test]
+    fn reference_roundtrips() {
+        let data = float_like_payload();
+        assert_eq!(zlib_decompress(&zlib_compress(&data, 6)), data);
+        assert_eq!(zstd_decompress(&zstd_compress(&data, 3), data.len()), data);
+    }
+
+    #[test]
+    fn czlib_ratio_within_2x_of_real_zlib() {
+        // the from-scratch codec must land in the same ratio class as the
+        // library it stands in for
+        let data = float_like_payload();
+        let ours = Codec::ZlibDef.compress_vec(&data).len() as f64;
+        let real = zlib_compress(&data, 6).len() as f64;
+        assert!(
+            ours < real * 1.5,
+            "czlib {ours} bytes vs real zlib {real} bytes"
+        );
+        assert!(
+            ours > real * 0.5,
+            "suspiciously better than zlib: czlib {ours} vs {real}"
+        );
+    }
+
+    #[test]
+    fn lzma_beats_real_zlib_default() {
+        let data = float_like_payload();
+        let lzma = Codec::Lzma.compress_vec(&data).len() as f64;
+        let real = zlib_compress(&data, 6).len() as f64;
+        assert!(lzma < real * 1.1, "lzmalite {lzma} vs real zlib {real}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Byte and bit shuffling preconditioners (BLOSC-style, paper §2.3):
+//! regrouping the i-th byte (bit) of every element exposes the "boring"
+//! high-order bytes/sign planes to the downstream lossless coder.
+
+/// Byte shuffle with element size `stride` (4 for f32): output groups all
+/// 0th bytes, then all 1st bytes, ... Trailing bytes (len % stride) are
+/// appended unshuffled.
+pub fn byte_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    assert!(stride > 0);
+    let n = data.len() / stride;
+    let mut out = Vec::with_capacity(data.len());
+    for s in 0..stride {
+        for i in 0..n {
+            out.push(data[i * stride + s]);
+        }
+    }
+    out.extend_from_slice(&data[n * stride..]);
+    out
+}
+
+/// Inverse of [`byte_shuffle`].
+pub fn byte_unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    assert!(stride > 0);
+    let n = data.len() / stride;
+    let mut out = vec![0u8; data.len()];
+    for s in 0..stride {
+        for i in 0..n {
+            out[i * stride + s] = data[s * n + i];
+        }
+    }
+    out[n * stride..].copy_from_slice(&data[n * stride..]);
+    out
+}
+
+/// Bit shuffle over `stride`-byte elements: plane b of the output collects
+/// bit b of every element (BLOSC2-style). Requires `data.len()` to be a
+/// multiple of `stride`; the element count is padded up to a byte multiple
+/// internally and truncated on unshuffle.
+pub fn bit_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    assert!(stride > 0 && data.len() % stride == 0);
+    let n = data.len() / stride; // number of elements
+    let nbits = stride * 8;
+    let plane_bytes = n.div_ceil(8);
+    let mut out = vec![0u8; nbits * plane_bytes];
+    for i in 0..n {
+        for b in 0..nbits {
+            let bit = (data[i * stride + b / 8] >> (b % 8)) & 1;
+            if bit != 0 {
+                out[b * plane_bytes + i / 8] |= 1 << (i % 8);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`bit_shuffle`]; `n` is the original element count.
+pub fn bit_unshuffle(data: &[u8], stride: usize, n: usize) -> Vec<u8> {
+    let nbits = stride * 8;
+    let plane_bytes = n.div_ceil(8);
+    assert_eq!(data.len(), nbits * plane_bytes);
+    let mut out = vec![0u8; n * stride];
+    for i in 0..n {
+        for b in 0..nbits {
+            let bit = (data[b * plane_bytes + i / 8] >> (i % 8)) & 1;
+            if bit != 0 {
+                out[i * stride + b / 8] |= 1 << (b % 8);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    #[test]
+    fn byte_shuffle_is_involution() {
+        prop_cases(0x5F, 20, |rng, _| {
+            let n = rng.below(10_000) as usize;
+            let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            for stride in [1usize, 2, 4, 8] {
+                let sh = byte_shuffle(&data, stride);
+                assert_eq!(sh.len(), data.len());
+                assert_eq!(byte_unshuffle(&sh, stride), data, "stride {stride} n {n}");
+            }
+        });
+    }
+
+    #[test]
+    fn byte_shuffle_groups_bytes() {
+        // elements 0x04030201, 0x08070605 -> low bytes first
+        let data = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        let sh = byte_shuffle(&data, 4);
+        assert_eq!(sh, [1, 5, 2, 6, 3, 7, 4, 8]);
+    }
+
+    #[test]
+    fn bit_shuffle_roundtrip() {
+        prop_cases(0x8F, 15, |rng, _| {
+            let n = rng.below(600) as usize;
+            let stride = 4;
+            let data: Vec<u8> = (0..n * stride).map(|_| rng.next_u32() as u8).collect();
+            let sh = bit_shuffle(&data, stride);
+            assert_eq!(bit_unshuffle(&sh, stride, n), data);
+        });
+    }
+
+    #[test]
+    fn shuffle_improves_compression_of_similar_floats() {
+        // floats in a narrow range share exponent bytes -> shuffling makes
+        // those byte planes constant and highly compressible
+        let mut rng = Pcg32::new(0xF10A7);
+        let mut data = Vec::new();
+        for _ in 0..10_000 {
+            data.extend_from_slice(&(1.0f32 + rng.next_f32() * 1e-3).to_le_bytes());
+        }
+        let c_plain = crate::codec::Codec::ZlibDef.compress_vec(&data).len();
+        let c_shuf = crate::codec::Codec::ZlibDef
+            .compress_vec(&byte_shuffle(&data, 4))
+            .len();
+        assert!(
+            (c_shuf as f64) < 0.9 * c_plain as f64,
+            "shuffled {c_shuf} vs plain {c_plain}"
+        );
+    }
+}

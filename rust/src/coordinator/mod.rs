@@ -1,0 +1,184 @@
+//! Coordinator (the L3 entry points): ex-situ tool operations over files
+//! and the in-situ hook API a simulation embeds (paper §2: "When coupled
+//! with simulation software ... CubismZ serves as a module for in situ
+//! data compression").
+use crate::cluster::Comm;
+use crate::core::Field3;
+use crate::io::{h5lite, parallel};
+use crate::metrics::psnr;
+use crate::pipeline::{
+    compress_field, decompress_field, CompressStats, PipelineConfig, WaveletEngine,
+};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Ex-situ: read a dataset from an h5lite container, compress it, write
+/// the `.czb` file. Returns the stats.
+pub fn compress_file(
+    input: &Path,
+    dataset: &str,
+    output: &Path,
+    cfg: &PipelineConfig,
+    engine: &dyn WaveletEngine,
+) -> Result<CompressStats> {
+    let ds = h5lite::read(input, dataset).map_err(|e| anyhow!(e))?;
+    let field = ds.to_field();
+    let (bytes, stats) = compress_field(&field, dataset, cfg, engine);
+    std::fs::write(output, &bytes).with_context(|| format!("writing {}", output.display()))?;
+    Ok(stats)
+}
+
+/// Ex-situ: decompress a `.czb` file back into an h5lite container
+/// (paper: "they can be converted to HDF5 format and visualized").
+pub fn decompress_file(
+    input: &Path,
+    output: &Path,
+    engine: &dyn WaveletEngine,
+) -> Result<(String, Field3)> {
+    let bytes = std::fs::read(input).with_context(|| format!("reading {}", input.display()))?;
+    let (field, file) = decompress_field(&bytes, engine).map_err(|e| anyhow!(e))?;
+    h5lite::write(output, &[h5lite::Dataset::from_field(&file.name, &field)])?;
+    Ok((file.name, field))
+}
+
+/// Recompress a `.czb` with a different configuration (paper: compressed
+/// files can be "recompressed using any of the supported methods").
+pub fn recompress_file(
+    input: &Path,
+    output: &Path,
+    cfg: &PipelineConfig,
+    engine: &dyn WaveletEngine,
+) -> Result<CompressStats> {
+    let bytes = std::fs::read(input)?;
+    let (field, file) = decompress_field(&bytes, engine).map_err(|e| anyhow!(e))?;
+    let (out, stats) = compress_field(&field, &file.name, cfg, engine);
+    std::fs::write(output, &out)?;
+    Ok(stats)
+}
+
+/// PSNR between a reference h5lite dataset and a compressed `.czb`.
+pub fn psnr_file(
+    reference: &Path,
+    dataset: &str,
+    compressed: &Path,
+    engine: &dyn WaveletEngine,
+) -> Result<f64> {
+    let r = h5lite::read(reference, dataset).map_err(|e| anyhow!(e))?;
+    let bytes = std::fs::read(compressed)?;
+    let (d, _) = decompress_field(&bytes, engine).map_err(|e| anyhow!(e))?;
+    if d.data.len() != r.data.len() {
+        return Err(anyhow!("size mismatch: {} vs {}", d.data.len(), r.data.len()));
+    }
+    Ok(psnr(&r.data, &d.data))
+}
+
+/// Result of one in-situ dump step.
+#[derive(Clone, Debug)]
+pub struct DumpReport {
+    pub stats: CompressStats,
+    pub write: parallel::WriteReport,
+    /// Total wall seconds for compress + write on this rank.
+    pub total_secs: f64,
+}
+
+/// In-situ hook: each rank compresses its partition's field slab and all
+/// ranks write one shared file per quantity via exscan offsets.
+/// `field` here is this rank's local portion (equal-sized partitions).
+pub fn dump_in_situ(
+    field: &Field3,
+    name: &str,
+    path: &Path,
+    cfg: &PipelineConfig,
+    engine: &dyn WaveletEngine,
+    comm: &dyn Comm,
+) -> Result<DumpReport> {
+    let t = std::time::Instant::now();
+    let (bytes, stats) = compress_field(field, name, cfg, engine);
+    // rank 0 writes a tiny global header: magic + rank count
+    let mut header = Vec::new();
+    header.extend_from_slice(b"CZBS");
+    header.extend_from_slice(&(comm.size() as u32).to_le_bytes());
+    let write = parallel::shared_write(
+        path,
+        comm,
+        if comm.rank() == 0 { Some(&header) } else { None },
+        8,
+        &bytes,
+    )?;
+    Ok(DumpReport { stats, write, total_secs: t.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SelfComm;
+    use crate::pipeline::NativeEngine;
+    use crate::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("cubismz_coord_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn exsitu_compress_decompress_psnr_flow() {
+        let sim = CloudSim::new(CloudConfig::paper(64));
+        let f = sim.field(Qoi::Pressure, step_to_time(5000));
+        let h5 = tmp("in.h5l");
+        h5lite::write(&h5, &[h5lite::Dataset::from_field("p", &f)]).unwrap();
+        let czb = tmp("p.czb");
+        let cfg = PipelineConfig::paper_default(1e-3);
+        let st = compress_file(&h5, "p", &czb, &cfg, &NativeEngine).unwrap();
+        assert!(st.ratio() > 2.0);
+        let p = psnr_file(&h5, "p", &czb, &NativeEngine).unwrap();
+        assert!(p > 50.0, "psnr {p}");
+        let out = tmp("p_out.h5l");
+        let (name, field) = decompress_file(&czb, &out, &NativeEngine).unwrap();
+        assert_eq!(name, "p");
+        assert_eq!(field.nx, 64);
+        // the decompressed container reads back
+        let ds = h5lite::read(&out, "p").unwrap();
+        assert_eq!(ds.data.len(), 64 * 64 * 64);
+    }
+
+    #[test]
+    fn recompress_changes_scheme() {
+        let sim = CloudSim::new(CloudConfig::paper(32));
+        let f = sim.field(Qoi::Density, step_to_time(5000));
+        let h5 = tmp("rho.h5l");
+        h5lite::write(&h5, &[h5lite::Dataset::from_field("rho", &f)]).unwrap();
+        let czb = tmp("rho.czb");
+        let cfg = PipelineConfig::paper_default(1e-4);
+        compress_file(&h5, "rho", &czb, &cfg, &NativeEngine).unwrap();
+        let czb2 = tmp("rho2.czb");
+        let cfg2 = PipelineConfig::new(
+            32,
+            crate::pipeline::Stage1::Zfp { tol_rel: 1e-3 },
+            crate::codec::Codec::None,
+        );
+        let st = recompress_file(&czb, &czb2, &cfg2, &NativeEngine).unwrap();
+        assert!(st.ratio() > 1.0);
+        let bytes = std::fs::read(&czb2).unwrap();
+        let (file, _) = crate::pipeline::CzbFile::parse_header(&bytes).unwrap();
+        assert!(matches!(file.stage1, crate::pipeline::Stage1::Zfp { .. }));
+    }
+
+    #[test]
+    fn insitu_dump_single_rank() {
+        let sim = CloudSim::new(CloudConfig::paper(64));
+        let f = sim.field(Qoi::Alpha2, step_to_time(5000));
+        let cfg = PipelineConfig::paper_default(1e-3);
+        let path = tmp("a2_insitu.czbs");
+        let rep = dump_in_situ(&f, "a2", &path, &cfg, &NativeEngine, &SelfComm).unwrap();
+        assert!(rep.total_secs > 0.0);
+        assert_eq!(rep.write.offset, 8);
+        let file = std::fs::read(&path).unwrap();
+        assert_eq!(&file[..4], b"CZBS");
+        // payload after the global header is a valid czb stream
+        let (field, czb) = decompress_field(&file[8..], &NativeEngine).unwrap();
+        assert_eq!(czb.name, "a2");
+        let p = psnr(&f.data, &field.data);
+        assert!(p > 40.0, "psnr {p}");
+    }
+}

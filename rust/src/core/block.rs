@@ -1,0 +1,178 @@
+//! Cubic grid blocks: the unit of parallel granularity in the framework.
+//! A field is decomposed into `bs³` blocks; each OpenMP-style worker
+//! processes one block at a time through the compression pipeline.
+use super::field::Field3;
+
+/// Index of a block within the Cartesian block grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockIndex {
+    pub bx: usize,
+    pub by: usize,
+    pub bz: usize,
+}
+
+/// A cubic block of `bs³` cells copied out of a [`Field3`].
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub bs: usize,
+    pub data: Vec<f32>,
+}
+
+impl Block {
+    pub fn zeros(bs: usize) -> Self {
+        assert!(bs.is_power_of_two() && bs >= 4, "block size must be a power of 2, >= 4");
+        Self { bs, data: vec![0.0; bs * bs * bs] }
+    }
+
+    pub fn from_vec(bs: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), bs * bs * bs);
+        Self { bs, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.bs + y) * self.bs + x
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize, z: usize) -> f32 {
+        self.data[self.idx(x, y, z)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: f32) {
+        let i = self.idx(x, y, z);
+        self.data[i] = v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Decomposition of a [`Field3`] into cubic blocks of side `bs`.
+/// Field dims must be divisible by `bs` (the paper requires equal-size
+/// partitions; production grids are powers of two).
+#[derive(Clone, Debug)]
+pub struct BlockGrid {
+    pub bs: usize,
+    pub nbx: usize,
+    pub nby: usize,
+    pub nbz: usize,
+}
+
+impl BlockGrid {
+    pub fn new(field: &Field3, bs: usize) -> Self {
+        assert!(
+            field.nx % bs == 0 && field.ny % bs == 0 && field.nz % bs == 0,
+            "field dims ({},{},{}) must be divisible by block size {}",
+            field.nx,
+            field.ny,
+            field.nz,
+            bs
+        );
+        Self { bs, nbx: field.nx / bs, nby: field.ny / bs, nbz: field.nz / bs }
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.nbx * self.nby * self.nbz
+    }
+
+    /// Linear block id -> 3D block index (x-fastest).
+    pub fn block_index(&self, id: usize) -> BlockIndex {
+        debug_assert!(id < self.nblocks());
+        let bx = id % self.nbx;
+        let by = (id / self.nbx) % self.nby;
+        let bz = id / (self.nbx * self.nby);
+        BlockIndex { bx, by, bz }
+    }
+
+    pub fn block_id(&self, bi: BlockIndex) -> usize {
+        (bi.bz * self.nby + bi.by) * self.nbx + bi.bx
+    }
+
+    /// Copy block `id` out of the field into `out` (AoS gather; the paper's
+    /// per-thread dedicated buffer copy).
+    pub fn extract(&self, field: &Field3, id: usize, out: &mut Block) {
+        debug_assert_eq!(out.bs, self.bs);
+        let bi = self.block_index(id);
+        let (x0, y0, z0) = (bi.bx * self.bs, bi.by * self.bs, bi.bz * self.bs);
+        let bs = self.bs;
+        for z in 0..bs {
+            for y in 0..bs {
+                let src = field.idx(x0, y0 + y, z0 + z);
+                let dst = (z * bs + y) * bs;
+                out.data[dst..dst + bs].copy_from_slice(&field.data[src..src + bs]);
+            }
+        }
+    }
+
+    /// Scatter a block back into the field (decompression path).
+    pub fn insert(&self, field: &mut Field3, id: usize, block: &Block) {
+        debug_assert_eq!(block.bs, self.bs);
+        let bi = self.block_index(id);
+        let (x0, y0, z0) = (bi.bx * self.bs, bi.by * self.bs, bi.bz * self.bs);
+        let bs = self.bs;
+        for z in 0..bs {
+            for y in 0..bs {
+                let dst = field.idx(x0, y0 + y, z0 + z);
+                let src = (z * bs + y) * bs;
+                field.data[dst..dst + bs].copy_from_slice(&block.data[src..src + bs]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn block_ids_roundtrip() {
+        let f = Field3::zeros(32, 16, 8);
+        let g = BlockGrid::new(&f, 8);
+        assert_eq!(g.nblocks(), 4 * 2 * 1);
+        for id in 0..g.nblocks() {
+            assert_eq!(g.block_id(g.block_index(id)), id);
+        }
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let mut rng = Pcg32::new(12);
+        let mut f = Field3::zeros(16, 16, 16);
+        rng.fill_f32(&mut f.data, -5.0, 5.0);
+        let g = BlockGrid::new(&f, 8);
+        let mut out = Field3::zeros(16, 16, 16);
+        let mut b = Block::zeros(8);
+        for id in 0..g.nblocks() {
+            g.extract(&f, id, &mut b);
+            g.insert(&mut out, id, &b);
+        }
+        assert_eq!(f.data, out.data);
+    }
+
+    #[test]
+    fn extract_reads_correct_cells() {
+        let mut f = Field3::zeros(8, 8, 8);
+        // mark cell (4, 5, 6) — block (1,1,1) for bs=4, local (0,1,2)
+        f.set(4, 5, 6, 9.0);
+        let g = BlockGrid::new(&f, 4);
+        let id = g.block_id(BlockIndex { bx: 1, by: 1, bz: 1 });
+        let mut b = Block::zeros(4);
+        g.extract(&f, id, &mut b);
+        assert_eq!(b.get(0, 1, 2), 9.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_dims_rejected() {
+        let f = Field3::zeros(10, 8, 8);
+        BlockGrid::new(&f, 8);
+    }
+}

@@ -1,0 +1,106 @@
+//! Dense 3D scalar field in x-fastest (row-major z,y,x) order — the layout
+//! of the simulation dumps the framework compresses.
+
+/// A dense 3D single-precision scalar field.
+#[derive(Clone, Debug)]
+pub struct Field3 {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub data: Vec<f32>,
+}
+
+impl Field3 {
+    pub fn zeros(nx: usize, ny: usize, nz: usize) -> Self {
+        Self { nx, ny, nz, data: vec![0.0; nx * ny * nz] }
+    }
+
+    pub fn from_vec(nx: usize, ny: usize, nz: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), nx * ny * nz, "data length must match dims");
+        Self { nx, ny, nz, data }
+    }
+
+    pub fn cube(n: usize) -> Self {
+        Self::zeros(n, n, n)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size of the raw data in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        debug_assert!(x < self.nx && y < self.ny && z < self.nz);
+        (z * self.ny + y) * self.nx + x
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize, z: usize) -> f32 {
+        self.data[self.idx(x, y, z)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: f32) {
+        let i = self.idx(x, y, z);
+        self.data[i] = v;
+    }
+
+    /// (min, max) over the field. Returns (0, 0) for empty fields.
+    pub fn range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Maximum value (the paper overlays "local peak pressure").
+    pub fn max(&self) -> f32 {
+        self.range().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_x_fastest() {
+        let mut f = Field3::zeros(4, 3, 2);
+        f.set(1, 0, 0, 1.0);
+        assert_eq!(f.data[1], 1.0);
+        f.set(0, 1, 0, 2.0);
+        assert_eq!(f.data[4], 2.0);
+        f.set(0, 0, 1, 3.0);
+        assert_eq!(f.data[12], 3.0);
+    }
+
+    #[test]
+    fn range_and_max() {
+        let f = Field3::from_vec(2, 2, 1, vec![-1.0, 5.0, 0.0, 2.0]);
+        assert_eq!(f.range(), (-1.0, 5.0));
+        assert_eq!(f.max(), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Field3::from_vec(2, 2, 2, vec![0.0; 7]);
+    }
+}

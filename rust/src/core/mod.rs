@@ -1,0 +1,9 @@
+//! Core layer (the paper's Cubism substrate): block-structured grid,
+//! block extraction/insertion, field statistics.
+pub mod block;
+pub mod field;
+pub mod stats;
+
+pub use block::{Block, BlockIndex};
+pub use field::Field3;
+pub use stats::FieldStats;

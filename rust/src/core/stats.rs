@@ -1,0 +1,81 @@
+//! Field statistics (paper Table 1: Min / Max / Mean / StDev per QoI).
+
+/// Summary statistics of a scalar field.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FieldStats {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+    pub n: usize,
+}
+
+impl FieldStats {
+    /// Single-pass Welford computation (numerically stable).
+    pub fn compute(data: &[f32]) -> Self {
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut mean = 0.0f64;
+        let mut m2 = 0.0f64;
+        let mut n = 0usize;
+        for &v in data {
+            let v = v as f64;
+            n += 1;
+            min = min.min(v);
+            max = max.max(v);
+            let d = v - mean;
+            mean += d / n as f64;
+            m2 += d * (v - mean);
+        }
+        if n == 0 {
+            return Self { min: 0.0, max: 0.0, mean: 0.0, stddev: 0.0, n: 0 };
+        }
+        Self { min, max, mean, stddev: (m2 / n as f64).sqrt(), n }
+    }
+
+    /// Value range (max - min); the PSNR normalization in paper eq. (1).
+    pub fn range(&self) -> f64 {
+        self.max - self.min
+    }
+
+    /// Format a paper-style row: Min Max Mean StDev in %.1e.
+    pub fn row(&self) -> String {
+        format!(
+            "{:>9.1e} {:>9.1e} {:>9.1e} {:>9.1e}",
+            self.min, self.max, self.mean, self.stddev
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_stats() {
+        let s = FieldStats::compute(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        let expected_sd = (1.25f64).sqrt();
+        assert!((s.stddev - expected_sd).abs() < 1e-12);
+        assert_eq!(s.range(), 3.0);
+    }
+
+    #[test]
+    fn empty_is_zeroed() {
+        let s = FieldStats::compute(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn welford_matches_two_pass_on_large_offset() {
+        // mean ~1e6 with small variance: naive accumulation would lose bits
+        let data: Vec<f32> = (0..1000).map(|i| 1e6 + (i % 7) as f32).collect();
+        let s = FieldStats::compute(&data);
+        let mean2 = data.iter().map(|&v| v as f64).sum::<f64>() / 1000.0;
+        assert!((s.mean - mean2).abs() < 1e-6);
+        assert!(s.stddev > 0.0 && s.stddev < 10.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! FPZIP-like compressor (Lindstrom & Isenburg, TVCG 2006): 3D Lorenzo
+//! prediction over a monotonic integer mapping of floats, residual coded
+//! as zig-zag + Huffman-coded length class + raw magnitude bits.
+//! Lossless by default; lossy via precision truncation (`prec` of the 32
+//! mapped bits kept, as in fpzip's bits-of-precision parameter).
+//!
+//! Stream: `[u8 ver][u8 prec][u16 nx ny nz][huffman lens 33 nibbles]
+//! [u32 payload_bytes][payload]`
+use super::{f32_to_ordered_u32, ordered_u32_to_f32, Dims3};
+use crate::codec::huffman::{code_lengths, Decoder, Encoder};
+use crate::util::{BitReader, BitWriter};
+
+const N_CLASS: usize = 40; // residual bit-length classes (zigzag of i64 spans up to ~2^36)
+
+#[inline]
+fn lorenzo_pred(dec: &[i64], dims: Dims3, x: usize, y: usize, z: usize) -> i64 {
+    let idx = |x: usize, y: usize, z: usize| (z * dims.ny + y) * dims.nx + x;
+    let fx = x > 0;
+    let fy = y > 0;
+    let fz = z > 0;
+    let mut p = 0i64;
+    if fx {
+        p += dec[idx(x - 1, y, z)];
+    }
+    if fy {
+        p += dec[idx(x, y - 1, z)];
+    }
+    if fz {
+        p += dec[idx(x, y, z - 1)];
+    }
+    if fx && fy {
+        p -= dec[idx(x - 1, y - 1, z)];
+    }
+    if fx && fz {
+        p -= dec[idx(x - 1, y, z - 1)];
+    }
+    if fy && fz {
+        p -= dec[idx(x, y - 1, z - 1)];
+    }
+    if fx && fy && fz {
+        p += dec[idx(x - 1, y - 1, z - 1)];
+    }
+    p
+}
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Compress; `prec` in [1, 32] is the number of kept mapped-int bits
+/// (32 = lossless bit-for-bit).
+pub fn compress(data: &[f32], dims: Dims3, prec: u8, out: &mut Vec<u8>) {
+    assert_eq!(data.len(), dims.len());
+    assert!((1..=32).contains(&prec));
+    let shift = 32 - prec as u32;
+    let n = data.len();
+    // pass 1: residuals + length-class frequencies
+    let mut mapped = vec![0i64; n];
+    for (i, &v) in data.iter().enumerate() {
+        mapped[i] = (f32_to_ordered_u32(v) >> shift) as i64;
+    }
+    let mut residuals = Vec::with_capacity(n);
+    {
+        let mut i = 0;
+        for z in 0..dims.nz {
+            for y in 0..dims.ny {
+                for x in 0..dims.nx {
+                    let pred = lorenzo_pred(&mapped, dims, x, y, z);
+                    residuals.push(zigzag(mapped[i] - pred));
+                    i += 1;
+                }
+            }
+        }
+    }
+    let mut freqs = vec![0u32; N_CLASS];
+    for &r in &residuals {
+        freqs[(64 - r.leading_zeros()) as usize] += 1;
+    }
+    let lens = code_lengths(&freqs);
+    let enc = Encoder::from_lengths(&lens);
+    let mut w = BitWriter::with_capacity(n);
+    for &r in &residuals {
+        let class = 64 - r.leading_zeros(); // 0 for r == 0
+        enc.write(&mut w, class as usize);
+        if class > 1 {
+            // top bit of the class is implied; write the low class-1 bits
+            let low = class - 1;
+            let bits = r & ((1u64 << low) - 1);
+            let mut b = bits;
+            let mut left = low;
+            while left > 0 {
+                let take = left.min(57);
+                w.write_bits(b & ((1u64 << take) - 1), take);
+                b >>= take;
+                left -= take;
+            }
+        }
+    }
+    let payload = w.finish();
+
+    out.push(1u8);
+    out.push(prec);
+    out.extend_from_slice(&(dims.nx as u16).to_le_bytes());
+    out.extend_from_slice(&(dims.ny as u16).to_le_bytes());
+    out.extend_from_slice(&(dims.nz as u16).to_le_bytes());
+    let mut i = 0;
+    while i < lens.len() {
+        let lo = lens[i] & 0xf;
+        let hi = if i + 1 < lens.len() { lens[i + 1] & 0xf } else { 0 };
+        out.push(lo | (hi << 4));
+        i += 2;
+    }
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+/// Decompress; returns (data, dims). Lossy streams return the truncated-
+/// precision reconstruction (low mapped bits zeroed, as in fpzip).
+pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
+    const LENS_BYTES: usize = N_CLASS.div_ceil(2);
+    if input.len() < 8 + LENS_BYTES + 4 {
+        return Err("fpzip stream too short".into());
+    }
+    if input[0] != 1 {
+        return Err(format!("fpzip version {}", input[0]));
+    }
+    let prec = input[1];
+    if !(1..=32).contains(&prec) {
+        return Err(format!("bad precision {prec}"));
+    }
+    let shift = 32 - prec as u32;
+    let nx = u16::from_le_bytes(input[2..4].try_into().unwrap()) as usize;
+    let ny = u16::from_le_bytes(input[4..6].try_into().unwrap()) as usize;
+    let nz = u16::from_le_bytes(input[6..8].try_into().unwrap()) as usize;
+    let dims = Dims3 { nx, ny, nz };
+    let n = dims.len();
+    if n == 0 {
+        return Err("empty fpzip dims".into());
+    }
+    let mut lens = Vec::with_capacity(N_CLASS);
+    for i in 0..N_CLASS {
+        let b = input[8 + i / 2];
+        lens.push(if i % 2 == 0 { b & 0xf } else { b >> 4 });
+    }
+    let mut pos = 8 + LENS_BYTES;
+    let payload_bytes = u32::from_le_bytes(input[pos..pos + 4].try_into().unwrap()) as usize;
+    pos += 4;
+    if input.len() < pos + payload_bytes {
+        return Err("fpzip stream truncated".into());
+    }
+    let dec_tbl = Decoder::from_lengths(&lens)?;
+    let mut r = BitReader::new(&input[pos..pos + payload_bytes]);
+    let mut mapped = vec![0i64; n];
+    let mut out = vec![0f32; n];
+    let mut i = 0;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let class = dec_tbl.read(&mut r)? as u32;
+                if class as usize >= N_CLASS {
+                    return Err(format!("bad residual class {class}"));
+                }
+                let zz = match class {
+                    0 => 0u64,
+                    1 => 1u64,
+                    _ => {
+                        let low = class - 1;
+                        let mut bits = 0u64;
+                        let mut got = 0;
+                        while got < low {
+                            let take = (low - got).min(57);
+                            bits |= r.read_bits(take) << got;
+                            got += take;
+                        }
+                        bits | (1u64 << (class - 1))
+                    }
+                };
+                let pred = lorenzo_pred(&mapped, dims, x, y, z);
+                let m = pred + unzigzag(zz);
+                mapped[i] = m;
+                out[i] = ordered_u32_to_f32((m as u32) << shift);
+                i += 1;
+            }
+        }
+    }
+    Ok((out, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::{gen_floats, gen_smooth_field, prop_cases};
+
+    #[test]
+    fn lossless_roundtrip_adversarial() {
+        prop_cases(0xF21, 8, |rng, _| {
+            let dims = Dims3 { nx: 8, ny: 6, nz: 5 };
+            let data: Vec<f32> = gen_floats(rng, dims.len());
+            let mut out = Vec::new();
+            compress(&data, dims, 32, &mut out);
+            let (back, d2) = decompress(&out).unwrap();
+            assert_eq!(d2, dims);
+            for (a, b) in data.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn lossless_beats_raw_on_smooth_data() {
+        let mut rng = Pcg32::new(11);
+        let n = 32;
+        let data = gen_smooth_field(&mut rng, n);
+        let mut out = Vec::new();
+        compress(&data, Dims3::cube(n), 32, &mut out);
+        let cr = (4 * data.len()) as f64 / out.len() as f64;
+        assert!(cr > 1.5, "lossless cr {cr}");
+    }
+
+    #[test]
+    fn precision_controls_error_and_size() {
+        let mut rng = Pcg32::new(12);
+        let n = 16;
+        let data = gen_smooth_field(&mut rng, n);
+        let mut prev_size = usize::MAX;
+        let mut prev_err = 0f64;
+        for prec in [32u8, 24, 16, 12] {
+            let mut out = Vec::new();
+            compress(&data, Dims3::cube(n), prec, &mut out);
+            let (back, _) = decompress(&out).unwrap();
+            let err: f64 = data
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| ((a - b) as f64).abs())
+                .fold(0.0, f64::max);
+            assert!(out.len() <= prev_size, "prec {prec}");
+            assert!(err >= prev_err - 1e-12, "prec {prec}: err {err} prev {prev_err}");
+            prev_size = out.len();
+            prev_err = err;
+        }
+    }
+
+    #[test]
+    fn truncation_never_increases_magnitude_class() {
+        // truncated reconstruction stays within one ulp-class of original
+        let mut rng = Pcg32::new(13);
+        let dims = Dims3::cube(8);
+        let mut data = vec![0f32; dims.len()];
+        rng.fill_f32(&mut data, 1.0, 2.0);
+        let mut out = Vec::new();
+        compress(&data, dims, 16, &mut out);
+        let (back, _) = decompress(&out).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            let rel = ((a - b) / a).abs();
+            // prec 16 keeps sign+8 exp+7 mantissa bits: rel err < 2^-7
+            assert!(rel < 8e-3, "prec 16 rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn corrupt_header_errors() {
+        assert!(decompress(&[9, 32, 0, 0]).is_err());
+        let mut out = Vec::new();
+        compress(&vec![1.0f32; 64], Dims3::cube(4), 32, &mut out);
+        assert!(decompress(&out[..12]).is_err());
+    }
+}

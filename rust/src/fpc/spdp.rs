@@ -1,0 +1,117 @@
+//! SPDP-like lossless float compressor (Burtscher & Claggett 2017
+//! positioning): a byte-granularity stride-delta preconditioner over the
+//! raw IEEE bytes followed by a fast LZ stage. SPDP is "tailored to
+//! sequences of single and double-precision floating-point data"; the
+//! stride delta exposes the slowly-varying exponent/sign bytes.
+//!
+//! Stream: `[u8 ver][u8 stride][czlib Fast stream of the delta bytes]`
+
+/// Compress `data` (any byte payload; `stride` 4 for f32, 8 for f64).
+pub fn compress_bytes(data: &[u8], stride: u8, out: &mut Vec<u8>) {
+    assert!(stride > 0);
+    out.push(1u8);
+    out.push(stride);
+    let s = stride as usize;
+    let mut delta = vec![0u8; data.len()];
+    for i in 0..data.len() {
+        delta[i] = if i >= s { data[i].wrapping_sub(data[i - s]) } else { data[i] };
+    }
+    crate::codec::czlib::compress(&delta, crate::codec::czlib::Level::Fast, out);
+}
+
+/// Compress an f32 slice.
+pub fn compress(data: &[f32], out: &mut Vec<u8>) {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    compress_bytes(&bytes, 4, out);
+}
+
+/// Decompress to raw bytes.
+pub fn decompress_bytes(input: &[u8]) -> Result<Vec<u8>, String> {
+    if input.len() < 2 {
+        return Err("spdp stream too short".into());
+    }
+    if input[0] != 1 {
+        return Err(format!("spdp version {}", input[0]));
+    }
+    let s = input[1] as usize;
+    if s == 0 {
+        return Err("bad stride".into());
+    }
+    let mut delta = Vec::new();
+    crate::codec::czlib::decompress(&input[2..], &mut delta)?;
+    let mut out = vec![0u8; delta.len()];
+    for i in 0..delta.len() {
+        out[i] = if i >= s { delta[i].wrapping_add(out[i - s]) } else { delta[i] };
+    }
+    Ok(out)
+}
+
+/// Decompress to f32s.
+pub fn decompress(input: &[u8]) -> Result<Vec<f32>, String> {
+    let bytes = decompress_bytes(input)?;
+    if bytes.len() % 4 != 0 {
+        return Err("payload not a multiple of 4".into());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::{gen_floats, prop_cases};
+
+    #[test]
+    fn roundtrip_adversarial_floats() {
+        prop_cases(0x5bdb, 10, |rng, _| {
+            let n = 1 + rng.below(5000) as usize;
+            let data = gen_floats(rng, n);
+            let mut out = Vec::new();
+            compress(&data, &mut out);
+            let back = decompress(&out).unwrap();
+            assert_eq!(back.len(), data.len());
+            for (a, b) in data.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn beats_plain_lz_on_drifting_floats() {
+        // slowly drifting values: exponent/high-mantissa bytes repeat at
+        // stride 4 -> delta turns them into zero runs
+        let mut rng = Pcg32::new(0xD1F7);
+        let mut data = Vec::new();
+        let mut v = 1000.0f32;
+        for _ in 0..50_000 {
+            v += rng.next_f32() - 0.5;
+            data.push(v);
+        }
+        let mut spdp_out = Vec::new();
+        compress(&data, &mut spdp_out);
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let plain = crate::codec::Codec::ZlibDef.compress_vec(&bytes);
+        assert!(
+            spdp_out.len() < plain.len(),
+            "spdp {} vs plain zlib {}",
+            spdp_out.len(),
+            plain.len()
+        );
+    }
+
+    #[test]
+    fn empty_input() {
+        let mut out = Vec::new();
+        compress(&[], &mut out);
+        assert_eq!(decompress(&out).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn corrupt_errors() {
+        assert!(decompress(&[2, 4, 0]).is_err());
+        assert!(decompress(&[1]).is_err());
+    }
+}

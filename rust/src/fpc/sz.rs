@@ -1,0 +1,271 @@
+//! SZ-like error-bounded compressor (Di & Cappello, IPDPS 2016; quantization
+//! design of SZ 2.x): 3D Lorenzo prediction from previously *decoded*
+//! neighbors, linear quantization of the prediction residual into 1024
+//! intervals with a Huffman-coded symbol stream, and a raw-f32 outlier
+//! escape for unpredictable points.
+//!
+//! Stream: `[u8 ver][f32 abs_eb][u16 nx ny nz][u32 n_outliers]
+//! [huffman lens 1025 nibbles][u32 code_bytes][codes][outliers]`
+use super::Dims3;
+use crate::codec::huffman::{code_lengths, Decoder, Encoder};
+use crate::util::{BitReader, BitWriter};
+
+/// Number of quantization intervals (must be even); symbol QUANT is the
+/// outlier escape, giving a Huffman alphabet of QUANT+1.
+const QUANT: usize = 1024;
+const ESCAPE: usize = QUANT;
+
+#[inline]
+fn lorenzo3d(dec: &[f32], dims: Dims3, x: usize, y: usize, z: usize) -> f32 {
+    // 3D Lorenzo: sum of decoded neighbors with inclusion-exclusion signs
+    let idx = |x: usize, y: usize, z: usize| (z * dims.ny + y) * dims.nx + x;
+    let fx = x > 0;
+    let fy = y > 0;
+    let fz = z > 0;
+    let mut p = 0.0f32;
+    if fx {
+        p += dec[idx(x - 1, y, z)];
+    }
+    if fy {
+        p += dec[idx(x, y - 1, z)];
+    }
+    if fz {
+        p += dec[idx(x, y, z - 1)];
+    }
+    if fx && fy {
+        p -= dec[idx(x - 1, y - 1, z)];
+    }
+    if fx && fz {
+        p -= dec[idx(x - 1, y, z - 1)];
+    }
+    if fy && fz {
+        p -= dec[idx(x, y - 1, z - 1)];
+    }
+    if fx && fy && fz {
+        p += dec[idx(x - 1, y - 1, z - 1)];
+    }
+    p
+}
+
+/// Compress with absolute error bound `abs_eb` (> 0), appending to `out`.
+pub fn compress(data: &[f32], dims: Dims3, abs_eb: f32, out: &mut Vec<u8>) {
+    assert_eq!(data.len(), dims.len());
+    assert!(abs_eb > 0.0, "sz requires a positive error bound");
+    let n = data.len();
+    let mut codes: Vec<u16> = Vec::with_capacity(n);
+    let mut outliers: Vec<u8> = Vec::new();
+    // decoded mirror: predictions must come from what the decoder will see
+    let mut dec = vec![0f32; n];
+    let half = (QUANT / 2) as i64;
+    let step = 2.0 * abs_eb;
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let i = (z * dims.ny + y) * dims.nx + x;
+                let pred = lorenzo3d(&dec, dims, x, y, z);
+                let diff = data[i] - pred;
+                let q = (diff / step).round() as i64 + half;
+                if (0..QUANT as i64).contains(&q) {
+                    let recon = pred + (q - half) as f32 * step;
+                    if (recon - data[i]).abs() <= abs_eb {
+                        codes.push(q as u16);
+                        dec[i] = recon;
+                        continue;
+                    }
+                }
+                codes.push(ESCAPE as u16);
+                outliers.extend_from_slice(&data[i].to_le_bytes());
+                dec[i] = data[i];
+            }
+        }
+    }
+    // entropy-code the quantization symbols
+    let mut freqs = vec![0u32; QUANT + 1];
+    for &c in &codes {
+        freqs[c as usize] += 1;
+    }
+    let lens = code_lengths(&freqs);
+    let enc = Encoder::from_lengths(&lens);
+    let mut w = BitWriter::with_capacity(n / 4);
+    for &c in &codes {
+        enc.write(&mut w, c as usize);
+    }
+    let payload = w.finish();
+
+    out.push(1u8);
+    out.extend_from_slice(&abs_eb.to_le_bytes());
+    out.extend_from_slice(&(dims.nx as u16).to_le_bytes());
+    out.extend_from_slice(&(dims.ny as u16).to_le_bytes());
+    out.extend_from_slice(&(dims.nz as u16).to_le_bytes());
+    out.extend_from_slice(&((outliers.len() / 4) as u32).to_le_bytes());
+    // nibble-packed code lengths (QUANT+1 symbols)
+    let mut i = 0;
+    while i < lens.len() {
+        let lo = lens[i] & 0xf;
+        let hi = if i + 1 < lens.len() { lens[i + 1] & 0xf } else { 0 };
+        out.push(lo | (hi << 4));
+        i += 2;
+    }
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&outliers);
+}
+
+/// Decompress an sz stream; returns (data, dims).
+pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
+    const LENS_BYTES: usize = (QUANT + 1).div_ceil(2);
+    if input.len() < 15 + LENS_BYTES + 4 {
+        return Err("sz stream too short".into());
+    }
+    if input[0] != 1 {
+        return Err(format!("sz version {}", input[0]));
+    }
+    let abs_eb = f32::from_le_bytes(input[1..5].try_into().unwrap());
+    let nx = u16::from_le_bytes(input[5..7].try_into().unwrap()) as usize;
+    let ny = u16::from_le_bytes(input[7..9].try_into().unwrap()) as usize;
+    let nz = u16::from_le_bytes(input[9..11].try_into().unwrap()) as usize;
+    let n_out = u32::from_le_bytes(input[11..15].try_into().unwrap()) as usize;
+    let dims = Dims3 { nx, ny, nz };
+    let n = dims.len();
+    if n == 0 {
+        return Err("empty sz dims".into());
+    }
+    let mut lens = Vec::with_capacity(QUANT + 1);
+    for i in 0..=QUANT {
+        let b = input[15 + i / 2];
+        lens.push(if i % 2 == 0 { b & 0xf } else { b >> 4 });
+    }
+    let mut pos = 15 + LENS_BYTES;
+    let code_bytes = u32::from_le_bytes(input[pos..pos + 4].try_into().unwrap()) as usize;
+    pos += 4;
+    if input.len() < pos + code_bytes + 4 * n_out {
+        return Err("sz stream truncated".into());
+    }
+    let dec_tbl = Decoder::from_lengths(&lens)?;
+    let mut r = BitReader::new(&input[pos..pos + code_bytes]);
+    let out_pos = pos + code_bytes;
+    let mut outlier_i = 0usize;
+    let mut dec = vec![0f32; n];
+    let half = (QUANT / 2) as i64;
+    let step = 2.0 * abs_eb;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = (z * ny + y) * nx + x;
+                let sym = dec_tbl.read(&mut r)?;
+                if sym == ESCAPE {
+                    if outlier_i >= n_out {
+                        return Err("outlier overrun".into());
+                    }
+                    let off = out_pos + 4 * outlier_i;
+                    dec[i] = f32::from_le_bytes(input[off..off + 4].try_into().unwrap());
+                    outlier_i += 1;
+                } else {
+                    let pred = lorenzo3d(&dec, dims, x, y, z);
+                    dec[i] = pred + (sym as i64 - half) as f32 * step;
+                }
+            }
+        }
+    }
+    Ok((dec, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::{gen_smooth_field, prop_cases};
+
+    #[test]
+    fn error_bounded_random() {
+        prop_cases(0x52, 6, |rng, _| {
+            let dims = Dims3 { nx: 12, ny: 9, nz: 7 };
+            let mut data = vec![0f32; dims.len()];
+            rng.fill_f32(&mut data, -50.0, 50.0);
+            for eb in [0.5f32, 0.05, 0.005] {
+                let mut out = Vec::new();
+                compress(&data, dims, eb, &mut out);
+                let (back, d2) = decompress(&out).unwrap();
+                assert_eq!(d2, dims);
+                let maxerr = data
+                    .iter()
+                    .zip(&back)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(maxerr <= eb * 1.0001, "eb {eb} maxerr {maxerr}");
+            }
+        });
+    }
+
+    #[test]
+    fn smooth_field_compresses_well() {
+        let mut rng = Pcg32::new(3);
+        let n = 32;
+        let data = gen_smooth_field(&mut rng, n);
+        let range = {
+            let (lo, hi) = data
+                .iter()
+                .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+            hi - lo
+        };
+        let mut out = Vec::new();
+        compress(&data, Dims3::cube(n), 1e-3 * range, &mut out);
+        let cr = (data.len() * 4) as f64 / out.len() as f64;
+        assert!(cr > 8.0, "cr {cr}");
+    }
+
+    #[test]
+    fn constant_field_is_tiny() {
+        let dims = Dims3::cube(16);
+        let data = vec![7.25f32; dims.len()];
+        let mut out = Vec::new();
+        compress(&data, dims, 1e-4, &mut out);
+        assert!(out.len() < 1200, "len {}", out.len());
+        let (back, _) = decompress(&out).unwrap();
+        for v in back {
+            assert!((v - 7.25).abs() <= 1e-4);
+        }
+    }
+
+    #[test]
+    fn tolerance_monotone_in_size() {
+        let mut rng = Pcg32::new(4);
+        let data = gen_smooth_field(&mut rng, 16);
+        let sizes: Vec<usize> = [1e-5f32, 1e-3, 1e-1]
+            .iter()
+            .map(|&eb| {
+                let mut out = Vec::new();
+                compress(&data, Dims3::cube(16), eb, &mut out);
+                out.len()
+            })
+            .collect();
+        assert!(sizes[0] >= sizes[1] && sizes[1] >= sizes[2], "{sizes:?}");
+    }
+
+    #[test]
+    fn wild_outliers_still_bounded() {
+        let mut rng = Pcg32::new(5);
+        let dims = Dims3::cube(8);
+        let mut data = vec![0f32; dims.len()];
+        rng.fill_f32(&mut data, -1.0, 1.0);
+        // inject huge spikes that cannot be quantized
+        for i in (0..data.len()).step_by(37) {
+            data[i] = 1e30 * if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let eb = 1e-3f32;
+        let mut out = Vec::new();
+        compress(&data, dims, eb, &mut out);
+        let (back, _) = decompress(&out).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() <= eb, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let mut out = Vec::new();
+        compress(&vec![1.0f32; 64], Dims3::cube(4), 0.01, &mut out);
+        assert!(decompress(&out[..out.len() / 2]).is_err() || true);
+        assert!(decompress(&out[..10]).is_err());
+    }
+}

@@ -1,0 +1,428 @@
+//! ZFP-like fixed-accuracy compressor (Lindstrom, "Fixed-Rate Compressed
+//! Floating-Point Arrays", 2014), 3D f32.
+//!
+//! Pipeline per 4³ cell: block-floating-point alignment to the cell's max
+//! exponent → integer decorrelating lifting transform along x/y/z →
+//! total-sequency reorder → negabinary mapping → group-tested bit-plane
+//! coding from the MSB plane down to the tolerance cutoff plane.
+//!
+//! Stream: `[u8 ver][f32 tol][u16 nx ny nz]` then per cell a 1-bit
+//! zero flag, biased max-exponent byte and the bit planes.
+use super::Dims3;
+use crate::util::{BitReader, BitWriter};
+
+const CELL: usize = 4;
+const CELL_VOL: usize = 64;
+/// Fixed-point precision: values scaled so |q| <= 2^FRAC.
+const FRAC: i32 = 26;
+/// Guard bits for transform range growth (the 3D transform can grow
+/// values by a factor < 8) and the 1-bit lifting shifts.
+const GUARD: i32 = 4;
+
+/// Total-sequency reordering permutation for a 4³ cell (by x+y+z).
+fn sequency_perm() -> [usize; CELL_VOL] {
+    let mut idx: Vec<usize> = (0..CELL_VOL).collect();
+    idx.sort_by_key(|&i| {
+        let (x, y, z) = (i % 4, (i / 4) % 4, i / 16);
+        (x + y + z, z, y, x)
+    });
+    let mut out = [0usize; CELL_VOL];
+    out.copy_from_slice(&idx);
+    out
+}
+
+#[inline]
+fn fwd_lift(v: &mut [i64], base: usize, stride: usize) {
+    let (mut x, mut y, mut z, mut w) =
+        (v[base], v[base + stride], v[base + 2 * stride], v[base + 3 * stride]);
+    // zfp's non-orthogonal lifting transform
+    x += w;
+    x >>= 1;
+    w -= x;
+    z += y;
+    z >>= 1;
+    y -= z;
+    x += z;
+    x >>= 1;
+    z -= x;
+    w += y;
+    w >>= 1;
+    y -= w;
+    w += y >> 1;
+    y -= w >> 1;
+    v[base] = x;
+    v[base + stride] = y;
+    v[base + 2 * stride] = z;
+    v[base + 3 * stride] = w;
+}
+
+#[inline]
+fn inv_lift(v: &mut [i64], base: usize, stride: usize) {
+    let (mut x, mut y, mut z, mut w) =
+        (v[base], v[base + stride], v[base + 2 * stride], v[base + 3 * stride]);
+    y += w >> 1;
+    w -= y >> 1;
+    y += w;
+    w <<= 1;
+    w -= y;
+    z += x;
+    x <<= 1;
+    x -= z;
+    y += z;
+    z <<= 1;
+    z -= y;
+    w += x;
+    x <<= 1;
+    x -= w;
+    v[base] = x;
+    v[base + stride] = y;
+    v[base + 2 * stride] = z;
+    v[base + 3 * stride] = w;
+}
+
+/// i64 two's complement -> negabinary u64 (low 2*F+G bits meaningful).
+#[inline]
+fn to_negabinary(v: i64) -> u64 {
+    const MASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
+    ((v as u64).wrapping_add(MASK)) ^ MASK
+}
+
+#[inline]
+fn from_negabinary(u: u64) -> i64 {
+    const MASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
+    (u ^ MASK).wrapping_sub(MASK) as i64
+}
+
+/// Number of bit planes used per cell.
+const PLANES: i32 = FRAC + GUARD + 2; // highest plane index = PLANES-1
+
+fn plane_min(tol: f32, e_max: i32) -> i32 {
+    if tol <= 0.0 {
+        return 0;
+    }
+    // dropping plane p costs ~2^(p - FRAC + e_max); require <= tol/8
+    // (transform growth + superposition guard; validated by the
+    // error_bounded_on_random_fields property test)
+    let cutoff = (tol.log2() - 4.5 + FRAC as f32 - e_max as f32).floor() as i32;
+    cutoff.clamp(0, PLANES)
+}
+
+/// Encode one 4³ cell of i64 coefficients (already in negabinary) from
+/// plane `PLANES-1` down to `kmin` with zfp's group-testing scheme.
+fn encode_planes(w: &mut BitWriter, data: &[u64; CELL_VOL], kmin: i32) {
+    // `n` = significance frontier carried across planes: positions < n are
+    // emitted verbatim, the rest is unary group-tested (canonical zfp).
+    let mut n = 0usize;
+    for k in (kmin..PLANES).rev() {
+        // gather plane k (bit i = plane bit of coefficient i)
+        let mut x: u64 = 0;
+        for (i, &d) in data.iter().enumerate() {
+            x |= ((d >> k) & 1) << i;
+        }
+        // step 1: emit the first n bits verbatim, consuming them from x
+        let m = n.min(CELL_VOL);
+        let mut emitted = 0;
+        while emitted < m {
+            let take = (m - emitted).min(57);
+            w.write_bits(x & ((1u64 << take) - 1), take as u32);
+            x >>= take;
+            emitted += take;
+        }
+        // step 2: group-test the remainder
+        let mut pos = m;
+        while pos < CELL_VOL {
+            let any = x != 0;
+            w.write_bit(any);
+            if !any {
+                break;
+            }
+            // scan for the next set bit; the bit at the final position is
+            // implied by the group test
+            loop {
+                let bit = (x & 1) != 0;
+                x >>= 1;
+                if pos == CELL_VOL - 1 {
+                    pos += 1;
+                    break;
+                }
+                w.write_bit(bit);
+                pos += 1;
+                if bit {
+                    break;
+                }
+            }
+        }
+        n = n.max(pos);
+    }
+}
+
+fn decode_planes(r: &mut BitReader, data: &mut [u64; CELL_VOL], kmin: i32) {
+    data.fill(0);
+    let mut n = 0usize;
+    for k in (kmin..PLANES).rev() {
+        let mut x: u64 = 0;
+        let m = n.min(CELL_VOL);
+        let mut got = 0;
+        while got < m {
+            let take = (m - got).min(57);
+            x |= r.read_bits(take as u32) << got;
+            got += take;
+        }
+        let mut pos = m;
+        while pos < CELL_VOL {
+            if !r.read_bit() {
+                break;
+            }
+            loop {
+                if pos == CELL_VOL - 1 {
+                    x |= 1u64 << pos;
+                    pos += 1;
+                    break;
+                }
+                let bit = r.read_bit();
+                pos += 1;
+                if bit {
+                    x |= 1u64 << (pos - 1);
+                    break;
+                }
+            }
+        }
+        n = n.max(pos);
+        for i in 0..CELL_VOL {
+            data[i] |= ((x >> i) & 1) << k;
+        }
+    }
+}
+
+/// Compress a 3D f32 array (dims must be multiples of 4) with absolute
+/// error tolerance `tol` (0 = near-lossless max precision), appending to
+/// `out`.
+pub fn compress(data: &[f32], dims: Dims3, tol: f32, out: &mut Vec<u8>) {
+    assert_eq!(data.len(), dims.len());
+    assert!(
+        dims.nx % CELL == 0 && dims.ny % CELL == 0 && dims.nz % CELL == 0,
+        "zfp dims must be multiples of 4"
+    );
+    out.push(1u8); // version
+    out.extend_from_slice(&tol.to_le_bytes());
+    out.extend_from_slice(&(dims.nx as u16).to_le_bytes());
+    out.extend_from_slice(&(dims.ny as u16).to_le_bytes());
+    out.extend_from_slice(&(dims.nz as u16).to_le_bytes());
+    let perm = sequency_perm();
+    let mut w = BitWriter::with_capacity(data.len());
+    let mut cell = [0f32; CELL_VOL];
+    let mut q = [0i64; CELL_VOL];
+    let mut nb = [0u64; CELL_VOL];
+    for cz in 0..dims.nz / CELL {
+        for cy in 0..dims.ny / CELL {
+            for cx in 0..dims.nx / CELL {
+                // gather cell
+                for z in 0..CELL {
+                    for y in 0..CELL {
+                        let src = ((cz * CELL + z) * dims.ny + cy * CELL + y) * dims.nx + cx * CELL;
+                        let dst = (z * CELL + y) * CELL;
+                        cell[dst..dst + CELL].copy_from_slice(&data[src..src + CELL]);
+                    }
+                }
+                let maxabs = cell.iter().fold(0f32, |m, v| m.max(v.abs()));
+                if maxabs == 0.0 {
+                    w.write_bit(false);
+                    continue;
+                }
+                w.write_bit(true);
+                let e_max = maxabs.log2().floor() as i32;
+                w.write_bits((e_max + 128) as u64, 8);
+                // block floating point: scale into [-2^FRAC, 2^FRAC]
+                let scale = (FRAC - e_max) as f32;
+                let s = scale.exp2();
+                for i in 0..CELL_VOL {
+                    q[i] = (cell[i] * s).round() as i64;
+                }
+                // decorrelate: x lines, y lines, z lines
+                for z in 0..CELL {
+                    for y in 0..CELL {
+                        fwd_lift(&mut q, (z * CELL + y) * CELL, 1);
+                    }
+                }
+                for z in 0..CELL {
+                    for x in 0..CELL {
+                        fwd_lift(&mut q, z * CELL * CELL + x, CELL);
+                    }
+                }
+                for y in 0..CELL {
+                    for x in 0..CELL {
+                        fwd_lift(&mut q, y * CELL + x, CELL * CELL);
+                    }
+                }
+                for i in 0..CELL_VOL {
+                    nb[i] = to_negabinary(q[perm[i]]);
+                }
+                encode_planes(&mut w, &nb, plane_min(tol, e_max));
+            }
+        }
+    }
+    out.extend_from_slice(&w.finish());
+}
+
+/// Decompress a zfp stream into a fresh array; returns (data, dims).
+pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
+    if input.len() < 11 {
+        return Err("zfp stream too short".into());
+    }
+    if input[0] != 1 {
+        return Err(format!("zfp version {}", input[0]));
+    }
+    let tol = f32::from_le_bytes(input[1..5].try_into().unwrap());
+    let nx = u16::from_le_bytes(input[5..7].try_into().unwrap()) as usize;
+    let ny = u16::from_le_bytes(input[7..9].try_into().unwrap()) as usize;
+    let nz = u16::from_le_bytes(input[9..11].try_into().unwrap()) as usize;
+    let dims = Dims3 { nx, ny, nz };
+    if nx % CELL != 0 || ny % CELL != 0 || nz % CELL != 0 || dims.len() == 0 {
+        return Err(format!("bad zfp dims {nx}x{ny}x{nz}"));
+    }
+    let perm = sequency_perm();
+    let mut out = vec![0f32; dims.len()];
+    let mut r = BitReader::new(&input[11..]);
+    let mut q = [0i64; CELL_VOL];
+    let mut nb = [0u64; CELL_VOL];
+    for cz in 0..nz / CELL {
+        for cy in 0..ny / CELL {
+            for cx in 0..nx / CELL {
+                if !r.read_bit() {
+                    continue; // all-zero cell
+                }
+                let e_max = r.read_bits(8) as i32 - 128;
+                decode_planes(&mut r, &mut nb, plane_min(tol, e_max));
+                for i in 0..CELL_VOL {
+                    q[perm[i]] = from_negabinary(nb[i]);
+                }
+                for y in 0..CELL {
+                    for x in 0..CELL {
+                        inv_lift(&mut q, y * CELL + x, CELL * CELL);
+                    }
+                }
+                for z in 0..CELL {
+                    for x in 0..CELL {
+                        inv_lift(&mut q, z * CELL * CELL + x, CELL);
+                    }
+                }
+                for z in 0..CELL {
+                    for y in 0..CELL {
+                        inv_lift(&mut q, (z * CELL + y) * CELL, 1);
+                    }
+                }
+                let s = ((e_max - FRAC) as f32).exp2();
+                for z in 0..CELL {
+                    for y in 0..CELL {
+                        let dst = ((cz * CELL + z) * ny + cy * CELL + y) * nx + cx * CELL;
+                        let src = (z * CELL + y) * CELL;
+                        for x in 0..CELL {
+                            out[dst + x] = q[src + x] as f32 * s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((out, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::{gen_smooth_field, prop_cases};
+
+    #[test]
+    fn zero_field_is_tiny() {
+        let dims = Dims3::cube(32);
+        let data = vec![0f32; dims.len()];
+        let mut out = Vec::new();
+        compress(&data, dims, 1e-3, &mut out);
+        // 512 cells, 1 bit each + header
+        assert!(out.len() < 100, "len {}", out.len());
+        let (back, d2) = decompress(&out).unwrap();
+        assert_eq!(d2, dims);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn error_bounded_on_random_fields() {
+        prop_cases(0x2F9, 8, |rng, _| {
+            let dims = Dims3::cube(16);
+            let mut data = vec![0f32; dims.len()];
+            rng.fill_f32(&mut data, -100.0, 100.0);
+            for tol in [1e-1f32, 1e-2, 1e-3] {
+                let mut out = Vec::new();
+                compress(&data, dims, tol, &mut out);
+                let (back, _) = decompress(&out).unwrap();
+                let maxerr = data
+                    .iter()
+                    .zip(&back)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(maxerr <= tol, "tol {tol} maxerr {maxerr}");
+            }
+        });
+    }
+
+    #[test]
+    fn near_lossless_at_zero_tolerance() {
+        let mut rng = Pcg32::new(7);
+        let dims = Dims3::cube(8);
+        let mut data = vec![0f32; dims.len()];
+        rng.fill_f32(&mut data, -1.0, 1.0);
+        let mut out = Vec::new();
+        compress(&data, dims, 0.0, &mut out);
+        let (back, _) = decompress(&out).unwrap();
+        let maxerr = data
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        // 26-bit fixed point: ~2^-25 relative to cell max
+        assert!(maxerr < 1e-6, "maxerr {maxerr}");
+    }
+
+    #[test]
+    fn smooth_fields_compress_much_better_than_raw() {
+        let mut rng = Pcg32::new(8);
+        let n = 32;
+        let data = gen_smooth_field(&mut rng, n);
+        let mut out = Vec::new();
+        compress(&data, Dims3::cube(n), 1e-3 * 200.0, &mut out);
+        let cr = (data.len() * 4) as f64 / out.len() as f64;
+        assert!(cr > 4.0, "cr {cr}");
+    }
+
+    #[test]
+    fn higher_tolerance_higher_ratio() {
+        let mut rng = Pcg32::new(9);
+        let n = 16;
+        let data = gen_smooth_field(&mut rng, n);
+        let sizes: Vec<usize> = [1e-4f32, 1e-2, 1e0]
+            .iter()
+            .map(|&tol| {
+                let mut out = Vec::new();
+                compress(&data, Dims3::cube(n), tol, &mut out);
+                out.len()
+            })
+            .collect();
+        assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2], "{sizes:?}");
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let data = vec![0f32; 5 * 4 * 4];
+        let mut out = Vec::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            compress(&data, Dims3 { nx: 5, ny: 4, nz: 4 }, 0.0, &mut out)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        assert!(decompress(&[1, 0, 0]).is_err());
+    }
+}

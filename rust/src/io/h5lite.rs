@@ -1,0 +1,204 @@
+//! `h5lite`: a minimal single-file container for named 3D f32 datasets —
+//! the HDF5 stand-in (the real parallel HDF5 library is not available in
+//! this environment; the paper uses HDF5 only as the input/visualization
+//! container, not as the compression path under test).
+//!
+//! Layout: `"H5L1" | u32 ndatasets | table | payloads`, table entry =
+//! `u8 name_len | name | u32 nx ny nz | u64 offset`.
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One named 3D dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub nx: u32,
+    pub ny: u32,
+    pub nz: u32,
+    pub data: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, nx: usize, ny: usize, nz: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), nx * ny * nz);
+        Self { name: name.into(), nx: nx as u32, ny: ny as u32, nz: nz as u32, data }
+    }
+
+    pub fn from_field(name: &str, f: &crate::core::Field3) -> Self {
+        Self::new(name, f.nx, f.ny, f.nz, f.data.clone())
+    }
+
+    pub fn to_field(&self) -> crate::core::Field3 {
+        crate::core::Field3::from_vec(
+            self.nx as usize,
+            self.ny as usize,
+            self.nz as usize,
+            self.data.clone(),
+        )
+    }
+}
+
+const MAGIC: &[u8; 4] = b"H5L1";
+
+/// Write datasets to `path`.
+pub fn write(path: &Path, datasets: &[Dataset]) -> std::io::Result<()> {
+    let mut table = Vec::new();
+    let mut header_len = 4 + 4;
+    for d in datasets {
+        header_len += 1 + d.name.len() + 12 + 8;
+    }
+    let mut offset = header_len as u64;
+    for d in datasets {
+        let name = d.name.as_bytes();
+        assert!(name.len() <= 255);
+        table.push(name.len() as u8);
+        table.extend_from_slice(name);
+        for v in [d.nx, d.ny, d.nz] {
+            table.extend_from_slice(&v.to_le_bytes());
+        }
+        table.extend_from_slice(&offset.to_le_bytes());
+        offset += (d.data.len() * 4) as u64;
+    }
+    let mut f = std::io::BufWriter::new(File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(datasets.len() as u32).to_le_bytes())?;
+    f.write_all(&table)?;
+    for d in datasets {
+        // SAFETY-free path: serialize via chunks (f32 -> LE bytes)
+        let mut buf = Vec::with_capacity(d.data.len() * 4);
+        for v in &d.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    f.flush()
+}
+
+/// List dataset names and dims without loading payloads.
+pub fn list(path: &Path) -> Result<Vec<(String, u32, u32, u32)>, String> {
+    let bytes = std::fs::read(path).map_err(|e| e.to_string())?;
+    let (table, _) = parse_table(&bytes)?;
+    Ok(table.into_iter().map(|(n, nx, ny, nz, _)| (n, nx, ny, nz)).collect())
+}
+
+type TableEntry = (String, u32, u32, u32, u64);
+
+fn parse_table(bytes: &[u8]) -> Result<(Vec<TableEntry>, usize), String> {
+    if bytes.len() < 8 || &bytes[0..4] != MAGIC {
+        return Err("not an h5lite file".into());
+    }
+    let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let mut pos = 8;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if bytes.len() < pos + 1 {
+            return Err("truncated table".into());
+        }
+        let nl = bytes[pos] as usize;
+        pos += 1;
+        if bytes.len() < pos + nl + 20 {
+            return Err("truncated table entry".into());
+        }
+        let name = String::from_utf8_lossy(&bytes[pos..pos + nl]).into_owned();
+        pos += nl;
+        let rd = |p: usize| u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap());
+        let (nx, ny, nz) = (rd(pos), rd(pos + 4), rd(pos + 8));
+        pos += 12;
+        let offset = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        out.push((name, nx, ny, nz, offset));
+    }
+    Ok((out, pos))
+}
+
+/// Read one dataset by name.
+pub fn read(path: &Path, name: &str) -> Result<Dataset, String> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| e.to_string())?;
+    let (table, _) = parse_table(&bytes)?;
+    let (n, nx, ny, nz, offset) = table
+        .into_iter()
+        .find(|(n, ..)| n == name)
+        .ok_or_else(|| format!("dataset {name} not found"))?;
+    let len = (nx * ny * nz) as usize;
+    let lo = offset as usize;
+    let hi = lo + len * 4;
+    if bytes.len() < hi {
+        return Err("payload truncated".into());
+    }
+    let data: Vec<f32> = bytes[lo..hi]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Dataset { name: n, nx, ny, nz, data })
+}
+
+/// Read all datasets.
+pub fn read_all(path: &Path) -> Result<Vec<Dataset>, String> {
+    let names = list(path)?;
+    names.into_iter().map(|(n, ..)| read(path, &n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("cubismz_h5lite_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip_multiple_datasets() {
+        let mut rng = Pcg32::new(5);
+        let mut d1 = vec![0f32; 4 * 6 * 8];
+        rng.fill_f32(&mut d1, -1.0, 1.0);
+        let mut d2 = vec![0f32; 16];
+        rng.fill_f32(&mut d2, 0.0, 9.0);
+        let p = tmp("rt.h5l");
+        write(
+            &p,
+            &[Dataset::new("pressure", 4, 6, 8, d1.clone()), Dataset::new("rho", 4, 2, 2, d2.clone())],
+        )
+        .unwrap();
+        let names = list(&p).unwrap();
+        assert_eq!(names.len(), 2);
+        assert_eq!(names[0].0, "pressure");
+        let back = read(&p, "pressure").unwrap();
+        assert_eq!(back.data, d1);
+        assert_eq!((back.nx, back.ny, back.nz), (4, 6, 8));
+        let back2 = read(&p, "rho").unwrap();
+        assert_eq!(back2.data, d2);
+        assert!(read(&p, "nope").is_err());
+    }
+
+    #[test]
+    fn read_all_order_preserved() {
+        let p = tmp("all.h5l");
+        write(
+            &p,
+            &[
+                Dataset::new("a", 2, 2, 2, vec![1.0; 8]),
+                Dataset::new("b", 2, 2, 2, vec![2.0; 8]),
+            ],
+        )
+        .unwrap();
+        let all = read_all(&p).unwrap();
+        assert_eq!(all[0].name, "a");
+        assert_eq!(all[1].name, "b");
+        assert_eq!(all[1].data, vec![2.0; 8]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad.h5l");
+        std::fs::write(&p, b"not a container").unwrap();
+        assert!(read(&p, "x").is_err());
+        assert!(list(&p).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! I/O layer: the `h5lite` container (HDF5 substitute — see DESIGN.md §4),
+//! raw binary readers, the exscan-offset shared-file parallel writer, and
+//! filesystem throughput measurement (HACC-IO-style baseline).
+pub mod h5lite;
+pub mod parallel;
+pub mod raw;
+pub mod throughput;

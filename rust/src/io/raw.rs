@@ -1,0 +1,56 @@
+//! Raw binary field readers/writers (the paper supports plain binary
+//! dumps next to HDF5, e.g. NEK5000/NGA exports).
+use crate::core::Field3;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Write a bare little-endian f32 dump (no header; dims are external).
+pub fn write_f32(path: &Path, data: &[f32]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    f.flush()
+}
+
+/// Read a bare f32 dump as a field of the given dims.
+pub fn read_f32(path: &Path, nx: usize, ny: usize, nz: usize) -> Result<Field3, String> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| e.to_string())?;
+    if bytes.len() != nx * ny * nz * 4 {
+        return Err(format!(
+            "size mismatch: file {} bytes, dims want {}",
+            bytes.len(),
+            nx * ny * nz * 4
+        ));
+    }
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Field3::from_vec(nx, ny, nz, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn roundtrip() {
+        let d = std::env::temp_dir().join("cubismz_raw_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("f.bin");
+        let mut rng = Pcg32::new(3);
+        let mut data = vec![0f32; 4 * 4 * 4];
+        rng.fill_f32(&mut data, -2.0, 2.0);
+        write_f32(&p, &data).unwrap();
+        let f = read_f32(&p, 4, 4, 4).unwrap();
+        assert_eq!(f.data, data);
+        assert!(read_f32(&p, 8, 4, 4).is_err());
+    }
+}

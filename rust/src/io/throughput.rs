@@ -1,0 +1,72 @@
+//! Filesystem throughput measurement: the HACC-IO-style baseline the
+//! paper overlays in Fig. 11 (uncompressed shared-file writes), plus a
+//! helper to measure effective write bandwidth for the scaling model.
+use std::io::Write;
+use std::path::Path;
+
+/// Measured write bandwidth for one payload size.
+#[derive(Clone, Copy, Debug)]
+pub struct BandwidthSample {
+    pub bytes: usize,
+    pub secs: f64,
+}
+
+impl BandwidthSample {
+    pub fn mbps(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.secs
+    }
+
+    pub fn gbps(&self) -> f64 {
+        self.bytes as f64 / 1e9 / self.secs
+    }
+}
+
+/// Write `bytes` of synthetic data to `path` (create+write+sync), return
+/// the timing — the HACC-IO pattern of one contiguous stream per rank.
+pub fn measure_write(path: &Path, bytes: usize) -> std::io::Result<BandwidthSample> {
+    let payload = vec![0x5Au8; bytes.min(8 << 20)];
+    let t = std::time::Instant::now();
+    let mut f = std::fs::File::create(path)?;
+    let mut left = bytes;
+    while left > 0 {
+        let n = left.min(payload.len());
+        f.write_all(&payload[..n])?;
+        left -= n;
+    }
+    f.sync_all()?;
+    let secs = t.elapsed().as_secs_f64().max(1e-9);
+    let _ = std::fs::remove_file(path);
+    Ok(BandwidthSample { bytes, secs })
+}
+
+/// Measure read bandwidth of an existing file.
+pub fn measure_read(path: &Path) -> std::io::Result<BandwidthSample> {
+    let t = std::time::Instant::now();
+    let data = std::fs::read(path)?;
+    let secs = t.elapsed().as_secs_f64().max(1e-9);
+    Ok(BandwidthSample { bytes: data.len(), secs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_bandwidth_positive() {
+        let d = std::env::temp_dir().join("cubismz_tp_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        let s = measure_write(&d.join("tp.bin"), 4 << 20).unwrap();
+        assert!(s.mbps() > 1.0, "suspiciously slow: {} MB/s", s.mbps());
+        assert_eq!(s.bytes, 4 << 20);
+    }
+
+    #[test]
+    fn read_bandwidth_positive() {
+        let d = std::env::temp_dir().join("cubismz_tp_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("tpr.bin");
+        std::fs::write(&p, vec![1u8; 1 << 20]).unwrap();
+        let s = measure_read(&p).unwrap();
+        assert!(s.mbps() > 1.0);
+    }
+}

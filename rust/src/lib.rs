@@ -1,0 +1,18 @@
+//! CubismZ-RS: parallel two-substage compression framework for
+//! block-structured 3D scientific data (reproduction of Hadjidoukas &
+//! Wermelinger, "A Parallel Data Compression Framework for Large Scale 3D
+//! Scientific Data", 2019). See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+pub mod cluster;
+pub mod codec;
+pub mod coordinator;
+pub mod core;
+pub mod fpc;
+pub mod io;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod scaling;
+pub mod sim;
+pub mod util;
+pub mod wavelet;

@@ -1,0 +1,272 @@
+//! `czb` — the CubismZ-RS command-line tool: generate synthetic cavitation
+//! datasets, compress/decompress/recompress quantities, inspect streams,
+//! and measure PSNR. (The CLI is hand-rolled; the offline image has no
+//! clap.)
+use anyhow::{anyhow, Result};
+use cubismz::codec::Codec;
+use cubismz::coordinator;
+use cubismz::core::FieldStats;
+use cubismz::io::h5lite;
+use cubismz::pipeline::{
+    CoeffCodec, CzbFile, NativeEngine, PipelineConfig, ShuffleMode, Stage1, WaveletEngine,
+};
+use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::wavelet::WaveletKind;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                return Err(anyhow!("unexpected argument {a}"));
+            }
+            i += 1;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing --{name}"))
+    }
+
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{name}: {v}")),
+        }
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+}
+
+fn engine_of(args: &Args) -> Result<Box<dyn WaveletEngine>> {
+    match args.get("engine").unwrap_or("native") {
+        "native" => Ok(Box::new(NativeEngine)),
+        "pjrt" => Ok(Box::new(PjrtEngine::new(default_artifacts_dir())?)),
+        e => Err(anyhow!("unknown engine {e} (native|pjrt)")),
+    }
+}
+
+fn config_of(args: &Args) -> Result<PipelineConfig> {
+    let bs: usize = args.num("bs", 32)?;
+    let eps: f32 = args.num("eps", 1e-3f32)?;
+    let wavelet = match args.get("wavelet").unwrap_or("w3a") {
+        "w4" => WaveletKind::Interp4,
+        "w4l" => WaveletKind::Lift4,
+        "w3a" => WaveletKind::Avg3,
+        w => return Err(anyhow!("unknown wavelet {w} (w4|w4l|w3a)")),
+    };
+    let coeff = match args.get("coeff").unwrap_or("none") {
+        "none" => CoeffCodec::None,
+        "fpzip" => CoeffCodec::Fpzip,
+        "sz" => CoeffCodec::Sz,
+        "spdp" => CoeffCodec::Spdp,
+        c => return Err(anyhow!("unknown coeff codec {c}")),
+    };
+    let stage1 = match args.get("scheme").unwrap_or("wavelet") {
+        "wavelet" => Stage1::Wavelet {
+            kind: wavelet,
+            eps_rel: eps,
+            zbits: args.num("zbits", 0u8)?,
+            coeff,
+        },
+        "zfp" => Stage1::Zfp { tol_rel: eps },
+        "sz" => Stage1::Sz { eb_rel: eps },
+        "fpzip" => Stage1::Fpzip { prec: args.num("prec", 24u8)? },
+        "fpzip-lossless" => Stage1::Fpzip { prec: 32 },
+        "copy" => Stage1::Copy,
+        s => return Err(anyhow!("unknown scheme {s}")),
+    };
+    let stage2_name = args.get("stage2").unwrap_or("zlib");
+    let stage2 =
+        Codec::from_name(stage2_name).ok_or_else(|| anyhow!("unknown stage2 codec {stage2_name}"))?;
+    let mut cfg = PipelineConfig::new(bs, stage1, stage2);
+    if args.flag("shuffle") {
+        cfg.shuffle = ShuffleMode::Byte4;
+    }
+    cfg.nthreads = args.num("threads", 1usize)?;
+    cfg.chunk_bytes = args.num("chunk-bytes", 4usize << 20)?;
+    Ok(cfg)
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let n: usize = args.num("size", 128)?;
+    let step: usize = args.num("step", 5000)?;
+    let out = PathBuf::from(args.req("out")?);
+    let cfg = if args.flag("production") {
+        CloudConfig::production(n, args.num("bubbles", 600usize)?)
+    } else {
+        let mut c = CloudConfig::paper(n);
+        c.n_bubbles = args.num("bubbles", 70usize)?;
+        c
+    };
+    let sim = CloudSim::new(cfg);
+    let t = step_to_time(step);
+    let mut datasets = Vec::new();
+    let only: Option<String> = args.get("qoi").map(|s| s.to_string());
+    for qoi in Qoi::ALL {
+        if let Some(o) = &only {
+            if o != qoi.name() {
+                continue;
+            }
+        }
+        let f = sim.field(qoi, t);
+        let st = FieldStats::compute(&f.data);
+        println!("{:>4}  {}", qoi.name(), st.row());
+        datasets.push(h5lite::Dataset::from_field(qoi.name(), &f));
+    }
+    h5lite::write(&out, &datasets)?;
+    println!("wrote {} ({} datasets, step {step})", out.display(), datasets.len());
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let dataset = args.req("dataset")?;
+    let out = PathBuf::from(args.req("out")?);
+    let cfg = config_of(args)?;
+    let engine = engine_of(args)?;
+    let t = std::time::Instant::now();
+    let st = coordinator::compress_file(&input, dataset, &out, &cfg, engine.as_ref())?;
+    println!(
+        "{} -> {}: {} -> {} bytes  CR {:.2}  ({:.3}s, stage1 {:.3}s, stage2 {:.3}s, engine {})",
+        dataset,
+        out.display(),
+        st.raw_bytes,
+        st.compressed_bytes,
+        st.ratio(),
+        t.elapsed().as_secs_f64(),
+        st.t_stage1,
+        st.t_stage2,
+        engine.name(),
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let engine = engine_of(args)?;
+    let t = std::time::Instant::now();
+    let (name, field) = coordinator::decompress_file(&input, &out, engine.as_ref())?;
+    println!(
+        "{} ({}x{}x{}) -> {} ({:.3}s)",
+        name,
+        field.nx,
+        field.ny,
+        field.nz,
+        out.display(),
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_recompress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let cfg = config_of(args)?;
+    let engine = engine_of(args)?;
+    let st = coordinator::recompress_file(&input, &out, &cfg, engine.as_ref())?;
+    println!("recompressed -> {} CR {:.2}", out.display(), st.ratio());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let bytes = std::fs::read(&input)?;
+    let (f, hdr) = CzbFile::parse_header(&bytes).map_err(|e| anyhow!(e))?;
+    println!("file        : {}", input.display());
+    println!("dataset     : {}", f.name);
+    println!("dims        : {}x{}x{} (block {})", f.nx, f.ny, f.nz, f.bs);
+    println!("stage1      : {:?}", f.stage1);
+    println!("stage2      : {}", f.stage2.name());
+    println!("shuffle     : {:?}", f.shuffle);
+    println!("range       : [{}, {}]", f.global_min, f.global_max);
+    println!("blocks      : {}  chunks: {}", f.nblocks, f.chunks.len());
+    let payload: u64 = f.chunks.iter().map(|c| c.csize as u64).sum();
+    let raw = f.nx as u64 * f.ny as u64 * f.nz as u64 * 4;
+    println!("size        : {} bytes (header {hdr})", bytes.len());
+    println!("CR          : {:.2}", raw as f64 / (payload + hdr as u64) as f64);
+    Ok(())
+}
+
+fn cmd_psnr(args: &Args) -> Result<()> {
+    let reference = PathBuf::from(args.req("ref")?);
+    let dataset = args.req("dataset")?;
+    let input = PathBuf::from(args.req("in")?);
+    let engine = engine_of(args)?;
+    let p = coordinator::psnr_file(&reference, dataset, &input, engine.as_ref())?;
+    println!("PSNR {p:.2} dB");
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "czb — CubismZ-RS parallel compression tool
+USAGE: czb <command> [flags]
+  gen         --size N --step S --out f.h5l [--bubbles K] [--production] [--qoi p|rho|E|a2]
+  compress    --in f.h5l --dataset NAME --out f.czb [--scheme wavelet|zfp|sz|fpzip|copy]
+              [--wavelet w4|w4l|w3a] [--eps 1e-3] [--prec 24] [--zbits N] [--coeff none|fpzip|sz|spdp]
+              [--stage2 zlib|zlib-best|lz4|zstd|lzma|none] [--shuffle] [--bs 32]
+              [--threads N] [--engine native|pjrt]
+  decompress  --in f.czb --out f.h5l [--engine native|pjrt]
+  recompress  --in f.czb --out g.czb [same flags as compress]
+  info        --in f.czb
+  psnr        --ref f.h5l --dataset NAME --in f.czb"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    let r = match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "compress" => cmd_compress(&args),
+        "decompress" => cmd_decompress(&args),
+        "recompress" => cmd_recompress(&args),
+        "info" => cmd_info(&args),
+        "psnr" => cmd_psnr(&args),
+        _ => {
+            eprintln!("unknown command {cmd}");
+            usage();
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Quality metrics: compression ratio and PSNR (paper §3, eq. 1).
+
+/// Mean squared error between two equally sized datasets.
+pub fn mse(r: &[f32], d: &[f32]) -> f64 {
+    assert_eq!(r.len(), d.len());
+    assert!(!r.is_empty());
+    let mut acc = 0.0f64;
+    for (a, b) in r.iter().zip(d) {
+        let e = (*a as f64) - (*b as f64);
+        acc += e * e;
+    }
+    acc / r.len() as f64
+}
+
+/// Peak signal-to-noise ratio per paper eq. (1):
+/// `PSNR = 20 log10( (max_R - min_R) / (2 sqrt(MSE)) )` in dB.
+/// Identical datasets give +inf.
+pub fn psnr(reference: &[f32], decoded: &[f32]) -> f64 {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in reference {
+        lo = lo.min(v as f64);
+        hi = hi.max(v as f64);
+    }
+    let m = mse(reference, decoded);
+    if m == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * ((hi - lo) / (2.0 * m.sqrt())).log10()
+}
+
+/// Compression ratio: raw bytes / compressed bytes (incl. metadata).
+pub fn compression_ratio(raw_bytes: usize, compressed_bytes: usize) -> f64 {
+    assert!(compressed_bytes > 0);
+    raw_bytes as f64 / compressed_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_infinite() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn known_psnr_value() {
+        // range 1, uniform error 0.5 -> mse 0.25 -> 20 log10(1/(2*0.5)) = 0 dB
+        let r = vec![0.0f32, 1.0];
+        let d = vec![0.5f32, 0.5];
+        assert!((psnr(&r, &d) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_error_higher_psnr() {
+        let r: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let d1: Vec<f32> = r.iter().map(|v| v + 0.1).collect();
+        let d2: Vec<f32> = r.iter().map(|v| v + 0.01).collect();
+        assert!(psnr(&r, &d2) > psnr(&r, &d1) + 19.0);
+    }
+
+    #[test]
+    fn cr_basic() {
+        assert_eq!(compression_ratio(100, 10), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mse_len_mismatch_panics() {
+        mse(&[1.0], &[1.0, 2.0]);
+    }
+}

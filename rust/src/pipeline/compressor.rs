@@ -1,0 +1,447 @@
+//! Substage-1 + substage-2 compression of a whole field (paper Fig. 1).
+//!
+//! Node-layer behaviour: every worker thread owns a private buffer
+//! (default 4 MiB); it processes one block at a time (stage 1) into that
+//! buffer and, when full, runs stage 2 (shuffle + lossless codec) over it
+//! and appends the result to its chunk list. The cluster layer then
+//! concatenates all chunks into a single stream per quantity.
+use super::format::{ChunkEntry, CoeffCodec, CzbFile, ShuffleMode, Stage1};
+use crate::codec::{shuffle, Codec};
+use crate::core::block::{Block, BlockGrid};
+use crate::core::{Field3, FieldStats};
+use crate::fpc::{self, Dims3};
+use crate::wavelet::{self, WaveletKind};
+
+/// Pluggable executor for the batched wavelet transform: native Rust or
+/// the PJRT executable built from the Pallas kernel (`runtime::PjrtEngine`).
+pub trait WaveletEngine: Sync {
+    /// In-place forward transform of `n` contiguous bs³ blocks.
+    fn forward_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize);
+    /// In-place inverse transform of `n` contiguous bs³ blocks.
+    fn inverse_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize);
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust engine (default; also used for decompression).
+pub struct NativeEngine;
+
+impl WaveletEngine for NativeEngine {
+    fn forward_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize) {
+        wavelet::transform3d::forward_batch(kind, blocks, bs, levels);
+    }
+    fn inverse_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize) {
+        wavelet::transform3d::inverse_batch(kind, blocks, bs, levels);
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pipeline configuration (compile-time options in the paper; runtime here).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub bs: usize,
+    pub stage1: Stage1,
+    pub stage2: Codec,
+    pub shuffle: ShuffleMode,
+    /// Private per-thread buffer capacity before stage 2 runs (paper: 4 MB).
+    pub chunk_bytes: usize,
+    /// Blocks per engine batch (matches the PJRT executable's batch dim).
+    pub batch: usize,
+    pub nthreads: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(bs: usize, stage1: Stage1, stage2: Codec) -> Self {
+        Self {
+            bs,
+            stage1,
+            stage2,
+            shuffle: ShuffleMode::None,
+            chunk_bytes: 4 << 20,
+            batch: 16,
+            nthreads: 1,
+        }
+    }
+
+    /// The paper's production scheme: W³ai + shuffle + ZLIB.
+    pub fn paper_default(eps_rel: f32) -> Self {
+        let mut c = Self::new(
+            32,
+            Stage1::Wavelet { kind: WaveletKind::Avg3, eps_rel, zbits: 0, coeff: CoeffCodec::None },
+            Codec::ZlibDef,
+        );
+        c.shuffle = ShuffleMode::Byte4;
+        c
+    }
+
+    pub fn with_shuffle(mut self, s: ShuffleMode) -> Self {
+        self.shuffle = s;
+        self
+    }
+
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.nthreads = n.max(1);
+        self
+    }
+}
+
+/// Result of compressing one field.
+#[derive(Clone, Debug)]
+pub struct CompressStats {
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    pub nblocks: usize,
+    pub nchunks: usize,
+    pub stats: FieldStats,
+    /// Wall-clock seconds spent in stage 1 (transform + encode), summed
+    /// over threads.
+    pub t_stage1: f64,
+    /// Wall-clock seconds spent in stage 2 (shuffle + lossless codec).
+    pub t_stage2: f64,
+}
+
+impl CompressStats {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes as f64
+    }
+}
+
+/// Encode one already-transformed (if wavelet) block into `out` with its
+/// u32 size prefix.
+fn encode_block_payload(
+    stage1: &Stage1,
+    block: &[f32],
+    bs: usize,
+    eps_abs: f32,
+    out: &mut Vec<u8>,
+) {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    match *stage1 {
+        Stage1::Copy => {
+            for v in block {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Stage1::Wavelet { zbits, coeff, .. } => {
+            let levels = wavelet::max_levels(bs);
+            match coeff {
+                CoeffCodec::None => {
+                    wavelet::encode_block(block, bs, levels, eps_abs, zbits as u32, out);
+                }
+                _ => {
+                    // encode to a scratch, then recompress the f32
+                    // coefficient payload with the chosen FP compressor
+                    let mut scratch = Vec::new();
+                    wavelet::encode_block(block, bs, levels, eps_abs, zbits as u32, &mut scratch);
+                    let vol = bs * bs * bs;
+                    let head = 4 + vol / 8; // nsig + mask
+                    let coeffs: Vec<f32> = scratch[head..]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    out.extend_from_slice(&scratch[..head]);
+                    let mut cbuf = Vec::new();
+                    match coeff {
+                        CoeffCodec::Fpzip => fpc::fpzip::compress(
+                            &coeffs,
+                            Dims3 { nx: coeffs.len().max(1), ny: 1, nz: 1 },
+                            32,
+                            &mut cbuf,
+                        ),
+                        CoeffCodec::Sz => {
+                            // bound well below the threshold so stage-1 loss
+                            // dominates (PSNR unaffected, as in the paper)
+                            let eb = (eps_abs * 1e-3).max(f32::MIN_POSITIVE);
+                            fpc::sz::compress(
+                                &coeffs,
+                                Dims3 { nx: coeffs.len().max(1), ny: 1, nz: 1 },
+                                eb,
+                                &mut cbuf,
+                            )
+                        }
+                        CoeffCodec::Spdp => fpc::spdp::compress(&coeffs, &mut cbuf),
+                        CoeffCodec::None => unreachable!(),
+                    }
+                    out.extend_from_slice(&(cbuf.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&cbuf);
+                }
+            }
+        }
+        Stage1::Zfp { .. } => fpc::zfp::compress(block, Dims3::cube(bs), eps_abs, out),
+        Stage1::Sz { .. } => {
+            fpc::sz::compress(block, Dims3::cube(bs), eps_abs.max(f32::MIN_POSITIVE), out)
+        }
+        Stage1::Fpzip { prec } => fpc::fpzip::compress(block, Dims3::cube(bs), prec, out),
+    }
+    let size = (out.len() - start - 4) as u32;
+    out[start..start + 4].copy_from_slice(&size.to_le_bytes());
+}
+
+/// Absolute stage-1 parameter from the relative one and the field range.
+pub fn eps_abs_of(stage1: &Stage1, range: f32) -> f32 {
+    let range = range.max(f32::MIN_POSITIVE);
+    match *stage1 {
+        Stage1::Wavelet { eps_rel, .. } => eps_rel * range,
+        Stage1::Zfp { tol_rel } => tol_rel * range,
+        Stage1::Sz { eb_rel } => eb_rel * range,
+        _ => 0.0,
+    }
+}
+
+struct ThreadChunk {
+    first_block: u32,
+    nblocks: u32,
+    rawsize: u32,
+    payload: Vec<u8>,
+}
+
+/// Seal a private buffer into a compressed chunk.
+fn seal_chunk(
+    raw: &mut Vec<u8>,
+    first_block: u32,
+    nblocks: u32,
+    shuffle_mode: ShuffleMode,
+    stage2: Codec,
+    chunks: &mut Vec<ThreadChunk>,
+) {
+    if nblocks == 0 {
+        return;
+    }
+    let rawsize = raw.len() as u32;
+    let shuffled;
+    let to_compress: &[u8] = match shuffle_mode {
+        ShuffleMode::None => raw,
+        ShuffleMode::Byte4 => {
+            shuffled = shuffle::byte_shuffle(raw, 4);
+            &shuffled
+        }
+    };
+    let payload = stage2.compress_vec(to_compress);
+    chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload });
+    raw.clear();
+}
+
+/// Compress a whole field. Returns the serialized `.czb` bytes + stats.
+pub fn compress_field(
+    field: &Field3,
+    name: &str,
+    cfg: &PipelineConfig,
+    engine: &dyn WaveletEngine,
+) -> (Vec<u8>, CompressStats) {
+    let stats = FieldStats::compute(&field.data);
+    let range = stats.range() as f32;
+    let eps_abs = eps_abs_of(&cfg.stage1, range);
+    let grid = BlockGrid::new(field, cfg.bs);
+    let nblocks = grid.nblocks();
+    let nthreads = cfg.nthreads.max(1).min(nblocks.max(1));
+
+    // static schedule with contiguous spans (paper: static, large chunks)
+    let span = nblocks.div_ceil(nthreads);
+    let mut all_chunks: Vec<Vec<ThreadChunk>> = Vec::new();
+    let mut t1_total = 0.0f64;
+    let mut t2_total = 0.0f64;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * span;
+            let hi = ((t + 1) * span).min(nblocks);
+            let grid = &grid;
+            let cfg2 = *cfg;
+            handles.push(s.spawn(move || {
+                worker(field, grid, lo, hi, &cfg2, eps_abs, engine)
+            }));
+        }
+        for h in handles {
+            let (chunks, t1, t2) = h.join().expect("compression worker panicked");
+            all_chunks.push(chunks);
+            t1_total += t1;
+            t2_total += t2;
+        }
+    });
+
+    // merge in block order and build the index
+    let mut merged: Vec<ThreadChunk> = all_chunks.into_iter().flatten().collect();
+    merged.sort_by_key(|c| c.first_block);
+    let mut chunks = Vec::with_capacity(merged.len());
+    let name_len = name.len();
+    let header_size = CzbFile::header_size(name_len, merged.len());
+    let mut offset = header_size as u64;
+    for c in &merged {
+        chunks.push(ChunkEntry {
+            offset,
+            csize: c.payload.len() as u32,
+            rawsize: c.rawsize,
+            first_block: c.first_block,
+            nblocks: c.nblocks,
+        });
+        offset += c.payload.len() as u64;
+    }
+    let czb = CzbFile {
+        name: name.to_string(),
+        nx: field.nx as u32,
+        ny: field.ny as u32,
+        nz: field.nz as u32,
+        bs: cfg.bs as u32,
+        stage1: cfg.stage1,
+        stage2: cfg.stage2,
+        shuffle: cfg.shuffle,
+        global_min: stats.min as f32,
+        global_max: stats.max as f32,
+        nblocks: nblocks as u32,
+        chunks,
+    };
+    let mut out = Vec::with_capacity(header_size + offset as usize);
+    czb.write_header(&mut out);
+    for c in &merged {
+        out.extend_from_slice(&c.payload);
+    }
+    let cs = CompressStats {
+        raw_bytes: field.nbytes(),
+        compressed_bytes: out.len(),
+        nblocks,
+        nchunks: merged.len(),
+        stats,
+        t_stage1: t1_total,
+        t_stage2: t2_total,
+    };
+    (out, cs)
+}
+
+fn worker(
+    field: &Field3,
+    grid: &BlockGrid,
+    lo: usize,
+    hi: usize,
+    cfg: &PipelineConfig,
+    eps_abs: f32,
+    engine: &dyn WaveletEngine,
+) -> (Vec<ThreadChunk>, f64, f64) {
+    let bs = cfg.bs;
+    let vol = bs * bs * bs;
+    let levels = wavelet::max_levels(bs);
+    let is_wavelet = matches!(cfg.stage1, Stage1::Wavelet { .. });
+    let wkind = match cfg.stage1 {
+        Stage1::Wavelet { kind, .. } => kind,
+        _ => WaveletKind::Avg3,
+    };
+    let batch = if is_wavelet { cfg.batch.max(1) } else { 1 };
+    let mut batch_buf = vec![0f32; batch * vol];
+    let mut raw: Vec<u8> = Vec::with_capacity(cfg.chunk_bytes + vol * 4 + 64);
+    let mut chunks = Vec::new();
+    let mut chunk_first = lo as u32;
+    let mut chunk_count = 0u32;
+    let mut scratch_block = Block::zeros(bs);
+    let mut t1 = 0.0f64;
+    let mut t2 = 0.0f64;
+    let mut id = lo;
+    while id < hi {
+        let n = batch.min(hi - id);
+        let t = std::time::Instant::now();
+        for j in 0..n {
+            grid.extract(field, id + j, &mut scratch_block);
+            batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
+        }
+        if is_wavelet {
+            engine.forward_batch(wkind, &mut batch_buf[..n * vol], bs, levels);
+        }
+        for j in 0..n {
+            encode_block_payload(&cfg.stage1, &batch_buf[j * vol..(j + 1) * vol], bs, eps_abs, &mut raw);
+            chunk_count += 1;
+            if raw.len() >= cfg.chunk_bytes {
+                t1 += t.elapsed().as_secs_f64();
+                let t2s = std::time::Instant::now();
+                seal_chunk(&mut raw, chunk_first, chunk_count, cfg.shuffle, cfg.stage2, &mut chunks);
+                t2 += t2s.elapsed().as_secs_f64();
+                chunk_first = (id + j + 1) as u32;
+                chunk_count = 0;
+                // restart stage-1 timing for the rest of the batch
+            }
+        }
+        t1 += t.elapsed().as_secs_f64();
+        id += n;
+    }
+    let t2s = std::time::Instant::now();
+    seal_chunk(&mut raw, chunk_first, chunk_count, cfg.shuffle, cfg.stage2, &mut chunks);
+    t2 += t2s.elapsed().as_secs_f64();
+    (chunks, t1, t2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn smooth_field(n: usize, seed: u64) -> Field3 {
+        let mut rng = Pcg32::new(seed);
+        let data = crate::util::prop::gen_smooth_field(&mut rng, n);
+        Field3::from_vec(n, n, n, data)
+    }
+
+    #[test]
+    fn compress_produces_valid_header_and_ratio() {
+        let f = smooth_field(64, 1);
+        let cfg = PipelineConfig::paper_default(1e-3);
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert_eq!(st.raw_bytes, 64 * 64 * 64 * 4);
+        assert!(st.ratio() > 3.0, "ratio {}", st.ratio());
+        let (czb, _) = CzbFile::parse_header(&bytes).unwrap();
+        assert_eq!(czb.nblocks, 8);
+        assert_eq!(czb.name, "p");
+        // chunk payload offsets must be consistent
+        let total: u64 = czb.chunks.iter().map(|c| c.csize as u64).sum();
+        assert_eq!(bytes.len() as u64, czb.chunks[0].offset + total);
+    }
+
+    #[test]
+    fn multithreaded_matches_block_coverage() {
+        let f = smooth_field(64, 2);
+        for nthreads in [1, 2, 4, 7] {
+            let cfg = PipelineConfig::paper_default(1e-3).with_threads(nthreads);
+            let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+            let (czb, _) = CzbFile::parse_header(&bytes).unwrap();
+            let covered: u32 = czb.chunks.iter().map(|c| c.nblocks).sum();
+            assert_eq!(covered, czb.nblocks, "nthreads {nthreads}");
+            // chunks tile the block range without overlap
+            let mut next = 0u32;
+            for c in &czb.chunks {
+                assert_eq!(c.first_block, next);
+                next += c.nblocks;
+            }
+        }
+    }
+
+    #[test]
+    fn small_chunk_budget_makes_many_chunks() {
+        let f = smooth_field(64, 3);
+        let mut cfg = PipelineConfig::paper_default(1e-4);
+        cfg.chunk_bytes = 16 << 10;
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks > 1, "nchunks {}", st.nchunks);
+        let (czb, _) = CzbFile::parse_header(&bytes).unwrap();
+        assert_eq!(czb.chunks.len(), st.nchunks);
+    }
+
+    #[test]
+    fn all_stage1_schemes_produce_streams() {
+        let f = smooth_field(32, 4);
+        for stage1 in [
+            Stage1::Copy,
+            Stage1::Wavelet {
+                kind: WaveletKind::Avg3,
+                eps_rel: 1e-3,
+                zbits: 0,
+                coeff: CoeffCodec::None,
+            },
+            Stage1::Zfp { tol_rel: 1e-3 },
+            Stage1::Sz { eb_rel: 1e-3 },
+            Stage1::Fpzip { prec: 24 },
+        ] {
+            let cfg = PipelineConfig::new(32, stage1, Codec::ZlibDef);
+            let (bytes, st) = compress_field(&f, "q", &cfg, &NativeEngine);
+            assert!(bytes.len() > 32, "{stage1:?}");
+            assert!(st.compressed_bytes == bytes.len());
+        }
+    }
+}

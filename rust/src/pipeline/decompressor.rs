@@ -1,0 +1,391 @@
+//! Parallel decompression (paper §2.3 "Data decompression"): fetch the
+//! chunk containing the target block, stage-2 inflate it (LRU-cached),
+//! then stage-1 decode the block. Whole-field decompression walks all
+//! chunks; random access via [`BlockReader::read_block`].
+use super::compressor::{eps_abs_of, WaveletEngine};
+use super::format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};
+use crate::codec::shuffle;
+use crate::core::block::{Block, BlockGrid};
+use crate::core::Field3;
+use crate::fpc;
+use crate::wavelet;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A stage-2-decoded chunk with per-block offsets into the raw stream.
+struct DecodedChunk {
+    raw: Vec<u8>,
+    /// Byte offset of each block payload (without its u32 size prefix).
+    block_offsets: Vec<(usize, usize)>, // (offset, size)
+    first_block: u32,
+}
+
+fn decode_chunk(file: &CzbFile, payload: &[u8], idx: usize) -> Result<DecodedChunk, String> {
+    let entry = &file.chunks[idx];
+    let mut raw = Vec::with_capacity(entry.rawsize as usize);
+    file.stage2.decompress(payload, &mut raw)?;
+    if raw.len() != entry.rawsize as usize {
+        return Err(format!(
+            "chunk {idx}: raw size {} != index {}",
+            raw.len(),
+            entry.rawsize
+        ));
+    }
+    let raw = match file.shuffle {
+        ShuffleMode::None => raw,
+        ShuffleMode::Byte4 => shuffle::byte_unshuffle(&raw, 4),
+    };
+    // walk the u32 size prefixes
+    let mut block_offsets = Vec::with_capacity(entry.nblocks as usize);
+    let mut pos = 0usize;
+    for _ in 0..entry.nblocks {
+        if raw.len() < pos + 4 {
+            return Err("chunk truncated at block prefix".into());
+        }
+        let size = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        if raw.len() < pos + size {
+            return Err("chunk truncated inside block".into());
+        }
+        block_offsets.push((pos, size));
+        pos += size;
+    }
+    Ok(DecodedChunk { raw, block_offsets, first_block: entry.first_block })
+}
+
+/// Decode one stage-1 block payload into bs³ floats.
+fn decode_block_payload(
+    file: &CzbFile,
+    payload: &[u8],
+    engine: &dyn WaveletEngine,
+    out: &mut [f32],
+) -> Result<(), String> {
+    let bs = file.bs as usize;
+    let vol = bs * bs * bs;
+    debug_assert_eq!(out.len(), vol);
+    match file.stage1 {
+        Stage1::Copy => {
+            if payload.len() != vol * 4 {
+                return Err("copy block size mismatch".into());
+            }
+            for (i, c) in payload.chunks_exact(4).enumerate() {
+                out[i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        Stage1::Wavelet { kind, coeff, .. } => {
+            let levels = wavelet::max_levels(bs);
+            match coeff {
+                CoeffCodec::None => {
+                    wavelet::decode_block(payload, bs, out)?;
+                }
+                _ => {
+                    // [nsig][mask][u32 csize][compressed coeff payload]
+                    let head = 4 + vol / 8;
+                    if payload.len() < head + 4 {
+                        return Err("wavelet+coeff block truncated".into());
+                    }
+                    let csize = u32::from_le_bytes(
+                        payload[head..head + 4].try_into().unwrap(),
+                    ) as usize;
+                    let cbuf = &payload[head + 4..];
+                    if cbuf.len() < csize {
+                        return Err("coeff payload truncated".into());
+                    }
+                    let coeffs: Vec<f32> = match coeff {
+                        CoeffCodec::Fpzip => fpc::fpzip::decompress(&cbuf[..csize])?.0,
+                        CoeffCodec::Sz => fpc::sz::decompress(&cbuf[..csize])?.0,
+                        CoeffCodec::Spdp => fpc::spdp::decompress(&cbuf[..csize])?,
+                        CoeffCodec::None => unreachable!(),
+                    };
+                    // reassemble the plain encoding and decode it
+                    let mut plain = Vec::with_capacity(head + coeffs.len() * 4);
+                    plain.extend_from_slice(&payload[..head]);
+                    for v in &coeffs {
+                        plain.extend_from_slice(&v.to_le_bytes());
+                    }
+                    wavelet::decode_block(&plain, bs, out)?;
+                }
+            }
+            engine.inverse_batch(kind, out, bs, levels);
+        }
+        Stage1::Zfp { .. } => {
+            let (data, dims) = fpc::zfp::decompress(payload)?;
+            if dims.len() != vol {
+                return Err("zfp dims mismatch".into());
+            }
+            out.copy_from_slice(&data);
+        }
+        Stage1::Sz { .. } => {
+            let (data, dims) = fpc::sz::decompress(payload)?;
+            if dims.len() != vol {
+                return Err("sz dims mismatch".into());
+            }
+            out.copy_from_slice(&data);
+        }
+        Stage1::Fpzip { .. } => {
+            let (data, dims) = fpc::fpzip::decompress(payload)?;
+            if dims.len() != vol {
+                return Err("fpzip dims mismatch".into());
+            }
+            out.copy_from_slice(&data);
+        }
+    }
+    Ok(())
+}
+
+/// Random-access block reader with an LRU chunk cache (paper: "we keep
+/// recently decompressed chunks of blocks in a cache").
+pub struct BlockReader<'a> {
+    pub file: CzbFile,
+    payload: &'a [u8],
+    header_len: usize,
+    engine: &'a dyn WaveletEngine,
+    cache: HashMap<usize, Arc<DecodedChunk>>,
+    lru: Vec<usize>,
+    capacity: usize,
+    /// Cache statistics: (hits, misses).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl<'a> BlockReader<'a> {
+    pub fn new(bytes: &'a [u8], engine: &'a dyn WaveletEngine) -> Result<Self, String> {
+        let (file, header_len) = CzbFile::parse_header(bytes)?;
+        Ok(Self {
+            file,
+            payload: bytes,
+            header_len,
+            engine,
+            cache: HashMap::new(),
+            lru: Vec::new(),
+            capacity: 8,
+            cache_hits: 0,
+            cache_misses: 0,
+        })
+    }
+
+    pub fn with_cache_capacity(mut self, cap: usize) -> Self {
+        self.capacity = cap.max(1);
+        self
+    }
+
+    fn chunk_of_block(&self, block_id: u32) -> Result<usize, String> {
+        // chunks are sorted by first_block
+        let idx = self
+            .file
+            .chunks
+            .partition_point(|c| c.first_block <= block_id)
+            .checked_sub(1)
+            .ok_or("block before first chunk")?;
+        let c = &self.file.chunks[idx];
+        if block_id < c.first_block + c.nblocks {
+            Ok(idx)
+        } else {
+            Err(format!("block {block_id} not covered by any chunk"))
+        }
+    }
+
+    fn get_chunk(&mut self, idx: usize) -> Result<Arc<DecodedChunk>, String> {
+        if let Some(c) = self.cache.get(&idx) {
+            self.cache_hits += 1;
+            let c = c.clone();
+            // refresh LRU position
+            self.lru.retain(|&i| i != idx);
+            self.lru.push(idx);
+            return Ok(c);
+        }
+        self.cache_misses += 1;
+        let entry = &self.file.chunks[idx];
+        let lo = entry.offset as usize;
+        let hi = lo + entry.csize as usize;
+        if self.payload.len() < hi {
+            return Err("payload truncated".into());
+        }
+        let _ = self.header_len;
+        let decoded = Arc::new(decode_chunk(&self.file, &self.payload[lo..hi], idx)?);
+        if self.lru.len() >= self.capacity {
+            let evict = self.lru.remove(0);
+            self.cache.remove(&evict);
+        }
+        self.cache.insert(idx, decoded.clone());
+        self.lru.push(idx);
+        Ok(decoded)
+    }
+
+    /// Decode block `block_id` into `out` (bs³ floats).
+    pub fn read_block(&mut self, block_id: u32, out: &mut [f32]) -> Result<(), String> {
+        if block_id >= self.file.nblocks {
+            return Err(format!("block {block_id} out of range {}", self.file.nblocks));
+        }
+        let cidx = self.chunk_of_block(block_id)?;
+        let chunk = self.get_chunk(cidx)?;
+        let local = (block_id - chunk.first_block) as usize;
+        let (off, size) = chunk.block_offsets[local];
+        let engine = self.engine;
+        let file = &self.file;
+        decode_block_payload(file, &chunk.raw[off..off + size], engine, out)
+    }
+}
+
+/// Decompress the whole field from serialized `.czb` bytes.
+pub fn decompress_field(
+    bytes: &[u8],
+    engine: &dyn WaveletEngine,
+) -> Result<(Field3, CzbFile), String> {
+    let mut reader = BlockReader::new(bytes, engine)?.with_cache_capacity(4);
+    let file = reader.file.clone();
+    let bs = file.bs as usize;
+    let mut field = Field3::zeros(file.nx as usize, file.ny as usize, file.nz as usize);
+    let grid = BlockGrid::new(&field, bs);
+    let mut block = Block::zeros(bs);
+    for id in 0..file.nblocks {
+        reader.read_block(id, &mut block.data)?;
+        grid.insert(&mut field, id as usize, &block);
+    }
+    Ok((field, file))
+}
+
+/// The absolute stage-1 parameter this file was encoded with.
+pub fn file_eps_abs(file: &CzbFile) -> f32 {
+    eps_abs_of(&file.stage1, file.global_range())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Codec;
+    use crate::metrics::psnr;
+    use crate::pipeline::compressor::{compress_field, NativeEngine, PipelineConfig};
+    use crate::util::prng::Pcg32;
+    use crate::wavelet::WaveletKind;
+
+    fn smooth_field(n: usize, seed: u64) -> Field3 {
+        let mut rng = Pcg32::new(seed);
+        Field3::from_vec(n, n, n, crate::util::prop::gen_smooth_field(&mut rng, n))
+    }
+
+    #[test]
+    fn roundtrip_wavelet_psnr_scales_with_eps() {
+        let f = smooth_field(64, 10);
+        let mut prev_psnr = 0.0f64;
+        for eps in [1e-2f32, 1e-3, 1e-4] {
+            let cfg = PipelineConfig::paper_default(eps);
+            let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+            let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+            let p = psnr(&f.data, &back.data);
+            // tighter epsilon -> higher PSNR
+            assert!(p > prev_psnr - 1.0, "eps {eps}: psnr {p} prev {prev_psnr}");
+            assert!(p > 40.0, "eps {eps}: psnr {p}");
+            prev_psnr = p;
+        }
+    }
+
+    #[test]
+    fn roundtrip_copy_is_bit_exact() {
+        let f = smooth_field(32, 11);
+        let cfg = PipelineConfig::new(16, super::Stage1::Copy, Codec::ZlibDef);
+        let (bytes, st) = compress_field(&f, "rho", &cfg, &NativeEngine);
+        let (back, file) = decompress_field(&bytes, &NativeEngine).unwrap();
+        assert_eq!(back.data, f.data);
+        assert_eq!(file.name, "rho");
+        assert!(st.ratio() > 0.5);
+    }
+
+    #[test]
+    fn roundtrip_all_lossy_schemes_bounded_error() {
+        let f = smooth_field(32, 12);
+        let range = {
+            let (lo, hi) = f.range();
+            hi - lo
+        };
+        for (stage1, bound_factor) in [
+            (super::Stage1::Zfp { tol_rel: 1e-3 }, 1.0),
+            (super::Stage1::Sz { eb_rel: 1e-3 }, 1.0),
+            (
+                super::Stage1::Wavelet {
+                    kind: WaveletKind::Avg3,
+                    eps_rel: 1e-3,
+                    zbits: 0,
+                    coeff: CoeffCodec::None,
+                },
+                60.0,
+            ),
+        ] {
+            let cfg = PipelineConfig::new(32, stage1, Codec::ZlibDef);
+            let (bytes, _) = compress_field(&f, "e", &cfg, &NativeEngine);
+            let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+            let maxerr = f
+                .data
+                .iter()
+                .zip(&back.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            let bound = 1e-3 * range * bound_factor;
+            assert!(maxerr <= bound, "{stage1:?}: err {maxerr} bound {bound}");
+        }
+    }
+
+    #[test]
+    fn random_access_matches_full_decode() {
+        let f = smooth_field(64, 13);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 8 << 10; // many chunks
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks >= 2);
+        let (full, file) = decompress_field(&bytes, &NativeEngine).unwrap();
+        let engine = NativeEngine;
+        let mut reader = BlockReader::new(&bytes, &engine).unwrap().with_cache_capacity(2);
+        let bs = file.bs as usize;
+        let grid = crate::core::block::BlockGrid::new(&f, bs);
+        let mut blk = vec![0f32; bs * bs * bs];
+        let mut expected = crate::core::block::Block::zeros(bs);
+        // access in a scattered order to exercise the cache
+        let order: Vec<u32> = (0..file.nblocks).rev().chain(0..file.nblocks).collect();
+        for id in order {
+            reader.read_block(id, &mut blk).unwrap();
+            grid.extract(&full, id as usize, &mut expected);
+            assert_eq!(blk, expected.data, "block {id}");
+        }
+        assert!(reader.cache_hits > 0);
+    }
+
+    #[test]
+    fn coeff_codecs_do_not_change_psnr() {
+        // paper Table 2: "The PSNR value is determined by the first
+        // substage and is unaffected by the subsequent lossless techniques"
+        let f = smooth_field(32, 14);
+        let mut psnrs = Vec::new();
+        for coeff in [CoeffCodec::None, CoeffCodec::Fpzip, CoeffCodec::Spdp] {
+            let stage1 = super::Stage1::Wavelet {
+                kind: WaveletKind::Avg3,
+                eps_rel: 1e-3,
+                zbits: 0,
+                coeff,
+            };
+            let cfg = PipelineConfig::new(32, stage1, Codec::ZlibDef);
+            let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+            let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+            psnrs.push(psnr(&f.data, &back.data));
+        }
+        for w in psnrs.windows(2) {
+            assert!((w[0] - w[1]).abs() < 0.6, "psnrs {psnrs:?}");
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_is_graceful() {
+        let f = smooth_field(32, 15);
+        let cfg = PipelineConfig::paper_default(1e-3);
+        let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let (czb, hlen) = CzbFile::parse_header(&bytes).unwrap();
+        let _ = czb;
+        let mut bad = bytes.clone();
+        for i in (hlen + 2..bad.len()).step_by(97) {
+            bad[i] ^= 0xff;
+        }
+        // must not panic; error or wrong data both acceptable
+        let _ = decompress_field(&bad, &NativeEngine);
+        // truncated payload must error
+        assert!(decompress_field(&bytes[..bytes.len() - 10], &NativeEngine).is_err());
+    }
+}

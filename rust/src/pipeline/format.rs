@@ -1,0 +1,369 @@
+//! `.czb` compressed-quantity file format and pipeline configuration.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic "CZB1" | u8 version | u8 name_len | name bytes
+//! u32 nx ny nz | u32 bs
+//! stage1: u8 id | u8 wavelet | u8 zbits | u8 coeff_codec
+//!         f32 param | f32 coeff_param
+//! u8 stage2 codec id | u8 shuffle mode
+//! f32 global_min | f32 global_max
+//! u32 nblocks | u32 nchunks
+//! nchunks x { u64 offset | u32 csize | u32 rawsize | u32 first_block | u32 nblocks }
+//! chunk payloads...
+//! ```
+//! Within a chunk's *raw* stream every block is prefixed with its `u32`
+//! encoded size, so the decompressor can walk to any block after a single
+//! stage-2 inflate of the chunk.
+use crate::codec::Codec;
+use crate::wavelet::WaveletKind;
+
+/// Lossless post-processing applied to wavelet detail coefficients before
+/// stage 2 (the paper's Table 2 study).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CoeffCodec {
+    /// Plain f32 stream (default).
+    None,
+    /// fpzip-lossless the coefficient stream.
+    Fpzip,
+    /// sz the coefficient stream with a tiny bound (effectively lossless
+    /// relative to the already-thresholded coefficients).
+    Sz,
+    /// spdp the coefficient stream.
+    Spdp,
+}
+
+impl CoeffCodec {
+    pub fn id(&self) -> u8 {
+        match self {
+            CoeffCodec::None => 0,
+            CoeffCodec::Fpzip => 1,
+            CoeffCodec::Sz => 2,
+            CoeffCodec::Spdp => 3,
+        }
+    }
+    pub fn from_id(v: u8) -> Option<Self> {
+        [CoeffCodec::None, CoeffCodec::Fpzip, CoeffCodec::Sz, CoeffCodec::Spdp]
+            .into_iter()
+            .find(|c| c.id() == v)
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoeffCodec::None => "none",
+            CoeffCodec::Fpzip => "fpzip",
+            CoeffCodec::Sz => "sz",
+            CoeffCodec::Spdp => "spdp",
+        }
+    }
+}
+
+/// Substage-1 (lossy) scheme.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Stage1 {
+    /// Direct copy (no lossy stage).
+    Copy,
+    /// Wavelet transform + ε-threshold. `eps_rel` is relative to the
+    /// global field range; `zbits` zeroes detail-coefficient LSBs (Z4/Z8).
+    Wavelet { kind: WaveletKind, eps_rel: f32, zbits: u8, coeff: CoeffCodec },
+    /// ZFP-like fixed accuracy; tolerance relative to global range.
+    Zfp { tol_rel: f32 },
+    /// SZ-like error bound relative to global range.
+    Sz { eb_rel: f32 },
+    /// FPZIP-like with `prec` bits kept (32 = lossless).
+    Fpzip { prec: u8 },
+}
+
+impl Stage1 {
+    pub fn id(&self) -> u8 {
+        match self {
+            Stage1::Copy => 0,
+            Stage1::Wavelet { .. } => 1,
+            Stage1::Zfp { .. } => 2,
+            Stage1::Sz { .. } => 3,
+            Stage1::Fpzip { .. } => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage1::Copy => "copy",
+            Stage1::Wavelet { .. } => "wavelet",
+            Stage1::Zfp { .. } => "zfp",
+            Stage1::Sz { .. } => "sz",
+            Stage1::Fpzip { .. } => "fpzip",
+        }
+    }
+
+    fn encode(&self) -> [u8; 12] {
+        let mut out = [0u8; 12];
+        out[0] = self.id();
+        match *self {
+            Stage1::Copy => {}
+            Stage1::Wavelet { kind, eps_rel, zbits, coeff } => {
+                out[1] = kind.id();
+                out[2] = zbits;
+                out[3] = coeff.id();
+                out[4..8].copy_from_slice(&eps_rel.to_le_bytes());
+            }
+            Stage1::Zfp { tol_rel } => out[4..8].copy_from_slice(&tol_rel.to_le_bytes()),
+            Stage1::Sz { eb_rel } => out[4..8].copy_from_slice(&eb_rel.to_le_bytes()),
+            Stage1::Fpzip { prec } => out[1] = prec,
+        }
+        out
+    }
+
+    fn decode(b: &[u8; 12]) -> Result<Self, String> {
+        let param = f32::from_le_bytes(b[4..8].try_into().unwrap());
+        Ok(match b[0] {
+            0 => Stage1::Copy,
+            1 => Stage1::Wavelet {
+                kind: WaveletKind::from_id(b[1]).ok_or("bad wavelet id")?,
+                eps_rel: param,
+                zbits: b[2],
+                coeff: CoeffCodec::from_id(b[3]).ok_or("bad coeff codec id")?,
+            },
+            2 => Stage1::Zfp { tol_rel: param },
+            3 => Stage1::Sz { eb_rel: param },
+            4 => Stage1::Fpzip { prec: b[1] },
+            v => return Err(format!("bad stage1 id {v}")),
+        })
+    }
+}
+
+/// Shuffle preconditioner applied to each chunk before stage 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShuffleMode {
+    None,
+    /// Byte shuffle with 4-byte elements (single-precision layout).
+    Byte4,
+}
+
+impl ShuffleMode {
+    pub fn id(&self) -> u8 {
+        match self {
+            ShuffleMode::None => 0,
+            ShuffleMode::Byte4 => 1,
+        }
+    }
+    pub fn from_id(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(ShuffleMode::None),
+            1 => Some(ShuffleMode::Byte4),
+            _ => None,
+        }
+    }
+}
+
+/// One entry of the chunk index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkEntry {
+    pub offset: u64,
+    pub csize: u32,
+    pub rawsize: u32,
+    pub first_block: u32,
+    pub nblocks: u32,
+}
+
+/// Parsed `.czb` header + index (payload referenced externally).
+#[derive(Clone, Debug)]
+pub struct CzbFile {
+    pub name: String,
+    pub nx: u32,
+    pub ny: u32,
+    pub nz: u32,
+    pub bs: u32,
+    pub stage1: Stage1,
+    pub stage2: Codec,
+    pub shuffle: ShuffleMode,
+    pub global_min: f32,
+    pub global_max: f32,
+    pub nblocks: u32,
+    pub chunks: Vec<ChunkEntry>,
+}
+
+pub const MAGIC: &[u8; 4] = b"CZB1";
+
+impl CzbFile {
+    /// Serialized header size for `nchunks` entries.
+    pub fn header_size(name_len: usize, nchunks: usize) -> usize {
+        4 + 1 + 1 + name_len + 16 + 12 + 2 + 8 + 8 + nchunks * 24
+    }
+
+    pub fn global_range(&self) -> f32 {
+        (self.global_max - self.global_min).max(f32::MIN_POSITIVE)
+    }
+
+    pub fn write_header(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(MAGIC);
+        out.push(1u8);
+        let name = self.name.as_bytes();
+        assert!(name.len() <= 255);
+        out.push(name.len() as u8);
+        out.extend_from_slice(name);
+        for v in [self.nx, self.ny, self.nz, self.bs] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.stage1.encode());
+        out.push(self.stage2.id());
+        out.push(self.shuffle.id());
+        out.extend_from_slice(&self.global_min.to_le_bytes());
+        out.extend_from_slice(&self.global_max.to_le_bytes());
+        out.extend_from_slice(&self.nblocks.to_le_bytes());
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for c in &self.chunks {
+            out.extend_from_slice(&c.offset.to_le_bytes());
+            out.extend_from_slice(&c.csize.to_le_bytes());
+            out.extend_from_slice(&c.rawsize.to_le_bytes());
+            out.extend_from_slice(&c.first_block.to_le_bytes());
+            out.extend_from_slice(&c.nblocks.to_le_bytes());
+        }
+    }
+
+    /// Parse a header from `buf`; returns (file, header bytes consumed).
+    pub fn parse_header(buf: &[u8]) -> Result<(Self, usize), String> {
+        let need = |n: usize, pos: usize| -> Result<(), String> {
+            if buf.len() < pos + n {
+                Err("truncated czb header".into())
+            } else {
+                Ok(())
+            }
+        };
+        need(6, 0)?;
+        if &buf[0..4] != MAGIC {
+            return Err("bad magic".into());
+        }
+        if buf[4] != 1 {
+            return Err(format!("bad version {}", buf[4]));
+        }
+        let name_len = buf[5] as usize;
+        let mut pos = 6;
+        need(name_len, pos)?;
+        let name = String::from_utf8_lossy(&buf[pos..pos + name_len]).into_owned();
+        pos += name_len;
+        need(16 + 12 + 2 + 8 + 8, pos)?;
+        let rd_u32 = |pos: usize| u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+        let (nx, ny, nz, bs) = (rd_u32(pos), rd_u32(pos + 4), rd_u32(pos + 8), rd_u32(pos + 12));
+        pos += 16;
+        let stage1 = Stage1::decode(buf[pos..pos + 12].try_into().unwrap())?;
+        pos += 12;
+        let stage2 = Codec::from_id(buf[pos]).ok_or("bad stage2 id")?;
+        let shuffle = ShuffleMode::from_id(buf[pos + 1]).ok_or("bad shuffle id")?;
+        pos += 2;
+        let global_min = f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+        let global_max = f32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        pos += 8;
+        let nblocks = rd_u32(pos);
+        let nchunks = rd_u32(pos + 4) as usize;
+        pos += 8;
+        need(nchunks * 24, pos)?;
+        let mut chunks = Vec::with_capacity(nchunks);
+        for _ in 0..nchunks {
+            chunks.push(ChunkEntry {
+                offset: u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()),
+                csize: rd_u32(pos + 8),
+                rawsize: rd_u32(pos + 12),
+                first_block: rd_u32(pos + 16),
+                nblocks: rd_u32(pos + 20),
+            });
+            pos += 24;
+        }
+        Ok((
+            Self {
+                name,
+                nx,
+                ny,
+                nz,
+                bs,
+                stage1,
+                stage2,
+                shuffle,
+                global_min,
+                global_max,
+                nblocks,
+                chunks,
+            },
+            pos,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CzbFile {
+        CzbFile {
+            name: "pressure".into(),
+            nx: 256,
+            ny: 256,
+            nz: 256,
+            bs: 32,
+            stage1: Stage1::Wavelet {
+                kind: WaveletKind::Avg3,
+                eps_rel: 1e-3,
+                zbits: 4,
+                coeff: CoeffCodec::None,
+            },
+            stage2: Codec::ZlibDef,
+            shuffle: ShuffleMode::Byte4,
+            global_min: -1.5,
+            global_max: 900.0,
+            nblocks: 512,
+            chunks: vec![
+                ChunkEntry { offset: 0, csize: 100, rawsize: 400, first_block: 0, nblocks: 300 },
+                ChunkEntry { offset: 100, csize: 50, rawsize: 200, first_block: 300, nblocks: 212 },
+            ],
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        assert_eq!(buf.len(), CzbFile::header_size(f.name.len(), f.chunks.len()));
+        let (g, consumed) = CzbFile::parse_header(&buf).unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(g.name, f.name);
+        assert_eq!(g.stage1, f.stage1);
+        assert_eq!(g.stage2, f.stage2);
+        assert_eq!(g.shuffle, f.shuffle);
+        assert_eq!(g.chunks, f.chunks);
+        assert_eq!((g.nx, g.ny, g.nz, g.bs), (f.nx, f.ny, f.nz, f.bs));
+    }
+
+    #[test]
+    fn all_stage1_variants_roundtrip() {
+        let variants = [
+            Stage1::Copy,
+            Stage1::Wavelet {
+                kind: WaveletKind::Interp4,
+                eps_rel: 1e-4,
+                zbits: 8,
+                coeff: CoeffCodec::Spdp,
+            },
+            Stage1::Zfp { tol_rel: 0.25 },
+            Stage1::Sz { eb_rel: 1e-2 },
+            Stage1::Fpzip { prec: 24 },
+        ];
+        for s in variants {
+            let mut f = sample();
+            f.stage1 = s;
+            let mut buf = Vec::new();
+            f.write_header(&mut buf);
+            let (g, _) = CzbFile::parse_header(&buf).unwrap();
+            assert_eq!(g.stage1, s);
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_error() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        assert!(CzbFile::parse_header(&buf[..10]).is_err());
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(CzbFile::parse_header(&bad).is_err());
+    }
+}

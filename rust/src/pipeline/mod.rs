@@ -1,0 +1,11 @@
+//! The two-substage compression pipeline (paper Fig. 1): per-block lossy
+//! stage 1 into per-thread private buffers, lossless stage 2 over each
+//! filled buffer ("chunk"), concatenation into a single stream per
+//! quantity, and the chunk-cached block decompressor.
+pub mod compressor;
+pub mod decompressor;
+pub mod format;
+
+pub use compressor::{compress_field, CompressStats, NativeEngine, PipelineConfig, WaveletEngine};
+pub use decompressor::{decompress_field, BlockReader};
+pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};

@@ -1,0 +1,202 @@
+//! Scaling model (DESIGN.md §4 substitution): this box has ONE core, so
+//! Figures 9–11 cannot be measured as thread sweeps. Instead we run the
+//! real code path once to calibrate per-block/per-byte costs, and replay
+//! the paper's exact scheduling policy (OpenMP static chunks; MPI exscan +
+//! shared-file write) through a discrete cost model. The *code under
+//! test* (pipeline, collectives, writer) is exercised for real elsewhere
+//! (tests + examples); only multi-core *timing* is modeled here.
+//!
+//! Model components, in the paper's terms:
+//! * per-thread work = its share of blocks x calibrated stage-1/stage-2
+//!   cost; OpenMP static scheduling => max over threads + imbalance;
+//! * a memory-contention factor (cores share DRAM bandwidth) bounded by
+//!   the machine's stream bandwidth — this is what bends Fig 9's speedup;
+//! * MPI exscan = log2(p) latency hops; file write = bytes / BW(nodes),
+//!   with BW saturating at the filesystem's effective peak (Fig 11).
+
+/// Calibrated single-core costs, measured by running the real pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Seconds of stage-1 work per block.
+    pub t1_per_block: f64,
+    /// Seconds of stage-2 work per raw (uncompressed chunk) byte.
+    pub t2_per_byte: f64,
+    /// Raw chunk bytes produced per block (stage-1 output).
+    pub stage1_bytes_per_block: f64,
+    /// Fraction of stage-1 time that is memory-bound (drives contention).
+    pub mem_bound_frac: f64,
+}
+
+/// Platform description for the model (documented constants; the paper's
+/// Piz Daint node: 12-core Xeon E5-2690v3, Sonexion 3000 FS).
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    /// Per-core DRAM bandwidth share saturates at this many cores.
+    pub mem_saturation_cores: f64,
+    /// Exscan/barrier latency per hop (seconds).
+    pub collective_hop_secs: f64,
+    /// Single-node effective write bandwidth (bytes/s).
+    pub node_write_bw: f64,
+    /// Filesystem aggregate effective peak (bytes/s) — Fig 11's ceiling.
+    pub fs_peak_bw: f64,
+}
+
+impl Platform {
+    /// Piz-Daint-like constants scaled to this testbed: the shape (where
+    /// contention and saturation bite) follows the paper's system, the
+    /// absolute bandwidth comes from a local measurement.
+    pub fn daint_like(measured_disk_bw: f64) -> Self {
+        Self {
+            mem_saturation_cores: 8.0,
+            collective_hop_secs: 5e-6,
+            node_write_bw: measured_disk_bw,
+            // effective peak = 81/1.4 GB/s on the real machine ~ 58 nodes'
+            // worth of single-node bandwidth; keep the same ratio
+            fs_peak_bw: measured_disk_bw * 58.0,
+        }
+    }
+}
+
+/// Predicted multicore compression time (Fig 9/10): `nblocks` split
+/// statically over `p` workers.
+pub fn multicore_time(cal: &Calibration, plat: &Platform, nblocks: usize, p: usize) -> f64 {
+    assert!(p >= 1);
+    let per_block_total =
+        cal.t1_per_block + cal.t2_per_byte * cal.stage1_bytes_per_block;
+    // static schedule: ceil-share imbalance
+    let share = nblocks.div_ceil(p);
+    let ideal = share as f64 * per_block_total;
+    // memory contention: the memory-bound fraction contends once more
+    // cores than the bandwidth supports are active
+    let contention = 1.0
+        + cal.mem_bound_frac * ((p as f64 - 1.0) / plat.mem_saturation_cores).max(0.0);
+    ideal * contention + (p as f64).log2().ceil() * plat.collective_hop_secs
+}
+
+/// Speedup curve over worker counts.
+pub fn speedups(cal: &Calibration, plat: &Platform, nblocks: usize, ps: &[usize]) -> Vec<(usize, f64, f64)> {
+    let t1 = multicore_time(cal, plat, nblocks, 1);
+    ps.iter()
+        .map(|&p| {
+            let t = multicore_time(cal, plat, nblocks, p);
+            (p, t, t1 / t)
+        })
+        .collect()
+}
+
+/// Weak-scaling point (Fig 11): every node compresses `raw_per_node` bytes
+/// into `comp_per_node` bytes and all nodes write one shared file.
+#[derive(Clone, Copy, Debug)]
+pub struct WeakPoint {
+    pub nodes: usize,
+    pub compress_secs: f64,
+    pub write_secs: f64,
+    pub total_secs: f64,
+    /// Equivalent I/O throughput (raw bytes moved / total time).
+    pub equiv_throughput: f64,
+}
+
+/// Aggregate filesystem bandwidth available to `nodes` writers.
+fn fs_bw(plat: &Platform, nodes: usize) -> f64 {
+    // near-linear until the effective peak, then flat (plus a mild
+    // contention tail as in measured Sonexion behaviour)
+    let linear = plat.node_write_bw * nodes as f64;
+    linear.min(plat.fs_peak_bw) / (1.0 + 0.002 * nodes as f64)
+}
+
+/// Weak scaling with compression (the paper's experiment) and without
+/// (the HACC-IO-style baseline writes `raw_per_node` uncompressed).
+pub fn weak_scaling(
+    plat: &Platform,
+    compress_secs_per_node: f64,
+    raw_per_node: f64,
+    comp_per_node: f64,
+    nodes_list: &[usize],
+) -> Vec<(WeakPoint, WeakPoint)> {
+    nodes_list
+        .iter()
+        .map(|&nodes| {
+            let bw = fs_bw(plat, nodes);
+            let collect = (nodes as f64).log2().ceil() * plat.collective_hop_secs * 3.0;
+            let write = comp_per_node * nodes as f64 / bw;
+            let total = compress_secs_per_node + write + collect;
+            let with = WeakPoint {
+                nodes,
+                compress_secs: compress_secs_per_node,
+                write_secs: write,
+                total_secs: total,
+                equiv_throughput: raw_per_node * nodes as f64 / total,
+            };
+            let raw_write = raw_per_node * nodes as f64 / bw;
+            let baseline = WeakPoint {
+                nodes,
+                compress_secs: 0.0,
+                write_secs: raw_write,
+                total_secs: raw_write + collect,
+                equiv_throughput: raw_per_node * nodes as f64 / (raw_write + collect),
+            };
+            (with, baseline)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> Calibration {
+        Calibration {
+            t1_per_block: 1e-3,
+            t2_per_byte: 5e-9,
+            stage1_bytes_per_block: 20_000.0,
+            mem_bound_frac: 0.3,
+        }
+    }
+
+    fn plat() -> Platform {
+        Platform::daint_like(500e6)
+    }
+
+    #[test]
+    fn speedup_is_monotone_but_sublinear() {
+        let s = speedups(&cal(), &plat(), 4096, &[1, 2, 4, 8, 12]);
+        assert!((s[0].2 - 1.0).abs() < 1e-9);
+        for w in s.windows(2) {
+            assert!(w[1].2 > w[0].2, "monotone: {s:?}");
+        }
+        let (p, _, sp) = s[s.len() - 1];
+        assert!(sp < p as f64, "sublinear at {p}: {sp}");
+        assert!(sp > 0.55 * p as f64, "not absurdly bad at {p}: {sp}");
+    }
+
+    #[test]
+    fn imbalance_hurts_odd_splits() {
+        // 13 blocks over 12 workers: one worker does 2 blocks
+        let t12_even = multicore_time(&cal(), &plat(), 12, 12);
+        let t13 = multicore_time(&cal(), &plat(), 13, 12);
+        assert!(t13 > 1.5 * t12_even);
+    }
+
+    #[test]
+    fn weak_scaling_time_grows_and_throughput_saturates() {
+        let pts = weak_scaling(&plat(), 2.0, 4e9, 70e6, &[1, 8, 64, 512]);
+        // total time increases with nodes (paper Fig 11 left)
+        for w in pts.windows(2) {
+            assert!(w[1].0.total_secs >= w[0].0.total_secs * 0.999);
+        }
+        // compressed writes beat the raw baseline once the FS saturates
+        let (with, base) = &pts[3];
+        assert!(with.total_secs < base.total_secs, "{with:?} vs {base:?}");
+        // equivalent throughput exceeds the physical FS bandwidth thanks to
+        // compression (the paper's 190 GB/s claim mechanism)
+        assert!(with.equiv_throughput > fs_bw(&plat(), 512));
+    }
+
+    #[test]
+    fn baseline_matches_bw_at_one_node() {
+        let pts = weak_scaling(&plat(), 2.0, 4e9, 70e6, &[1]);
+        let (_, base) = &pts[0];
+        let expect = 4e9 / fs_bw(&plat(), 1);
+        assert!((base.write_secs - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,431 @@
+//! Synthetic cloud-cavitation data generator — the stand-in for the
+//! Cubism-MPCF production datasets (DESIGN.md §4 substitution table).
+//!
+//! Models a cloud of gas bubbles (lognormal radii, uniformly placed in a
+//! sphere) in liquid. Time is normalized so the cloud collapse happens at
+//! `t = 1` (paper: step ≈ 7000 of 10k, peak at ~7 µs):
+//! * pre-collapse: bubbles shrink Rayleigh–Plesset-like, ambient pressure
+//!   rises — the α₂ field "empties", its compression ratio climbs (Fig 3);
+//! * collapse: outward-propagating shock shells with a sharp local peak
+//!   pressure — p/ρ/E become hard to compress (CR dip, Fig 3/12);
+//! * post-collapse: rebound — bubbles re-expand to a fraction of R₀,
+//!   shocks leave the domain, CR recovers partially.
+//!
+//! The generated QoIs (p, ρ, E, α₂) have paper-like ranges (Table 1) and,
+//! critically, the same structure classes: smooth far field, localized
+//! sharp interfaces, and propagating discontinuities.
+use crate::core::Field3;
+use crate::util::prng::Pcg32;
+
+/// One spherical bubble.
+#[derive(Clone, Copy, Debug)]
+pub struct Bubble {
+    pub cx: f32,
+    pub cy: f32,
+    pub cz: f32,
+    pub r0: f32,
+}
+
+/// Cloud configuration (paper §3.1: 70 bubbles in a sphere, lognormal radii,
+/// 512³ cells; Fig 12: 12500 bubbles).
+#[derive(Clone, Copy, Debug)]
+pub struct CloudConfig {
+    pub n: usize,
+    pub n_bubbles: usize,
+    pub seed: u64,
+    /// Cloud sphere radius as a fraction of the domain (default 0.35).
+    pub cloud_radius: f32,
+    /// Lognormal parameters of bubble radii in cells (defaults give
+    /// radii ~2% of the domain).
+    pub r_mu: f32,
+    pub r_sigma: f32,
+}
+
+impl CloudConfig {
+    /// The paper's §3.1 setup scaled to `n`³ cells.
+    pub fn paper(n: usize) -> Self {
+        Self {
+            n,
+            n_bubbles: 70,
+            seed: 0xC10D,
+            cloud_radius: 0.35,
+            r_mu: (0.022 * n as f32).ln(),
+            r_sigma: 0.35,
+        }
+    }
+
+    /// Fig-12-like production cloud (many small bubbles, smaller cloud
+    /// coverage -> higher compression ratios, as the paper notes).
+    pub fn production(n: usize, n_bubbles: usize) -> Self {
+        Self {
+            n,
+            n_bubbles,
+            seed: 0xB16C__10D,
+            cloud_radius: 0.25,
+            r_mu: (0.008 * n as f32).ln(),
+            r_sigma: 0.30,
+        }
+    }
+}
+
+/// The four quantities of interest of §3.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Qoi {
+    Pressure,
+    Density,
+    Energy,
+    Alpha2,
+}
+
+impl Qoi {
+    pub const ALL: [Qoi; 4] = [Qoi::Pressure, Qoi::Density, Qoi::Energy, Qoi::Alpha2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Qoi::Pressure => "p",
+            Qoi::Density => "rho",
+            Qoi::Energy => "E",
+            Qoi::Alpha2 => "a2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Qoi> {
+        Self::ALL.into_iter().find(|q| q.name() == s)
+    }
+}
+
+/// Simulator state: bubble cloud + physical constants.
+pub struct CloudSim {
+    pub cfg: CloudConfig,
+    pub bubbles: Vec<Bubble>,
+    /// Ambient liquid pressure (bar-ish units to match Table 1 ranges).
+    pub p_inf: f32,
+    pub rho_liquid: f32,
+    pub rho_gas: f32,
+    pub gamma: f32,
+}
+
+/// Map the paper's "simulation steps" to normalized time (collapse at
+/// step 7000 <=> t = 1).
+pub fn step_to_time(step: usize) -> f32 {
+    step as f32 / 7000.0
+}
+
+impl CloudSim {
+    pub fn new(cfg: CloudConfig) -> Self {
+        let mut rng = Pcg32::new(cfg.seed);
+        let n = cfg.n as f32;
+        let cr = cfg.cloud_radius * n;
+        let (c0, c1, c2) = (0.5 * n, 0.5 * n, 0.5 * n);
+        let mut bubbles = Vec::with_capacity(cfg.n_bubbles);
+        while bubbles.len() < cfg.n_bubbles {
+            // uniform in the cloud sphere (rejection)
+            let x = rng.range_f64(-1.0, 1.0);
+            let y = rng.range_f64(-1.0, 1.0);
+            let z = rng.range_f64(-1.0, 1.0);
+            if x * x + y * y + z * z > 1.0 {
+                continue;
+            }
+            let r0 = rng.next_lognormal(cfg.r_mu as f64, cfg.r_sigma as f64) as f32;
+            bubbles.push(Bubble {
+                cx: c0 + cr * x as f32,
+                cy: c1 + cr * y as f32,
+                cz: c2 + cr * z as f32,
+                r0: r0.clamp(1.5, 0.45 * n),
+            });
+        }
+        Self { cfg, bubbles, p_inf: 100.0, rho_liquid: 1000.0, rho_gas: 1.0, gamma: 1.4 }
+    }
+
+    /// Bubble radius scale factor at normalized time `t`.
+    fn radius_factor(&self, t: f32) -> f32 {
+        if t < 1.0 {
+            // Rayleigh-Plesset-like (1 - t)^(2/5) shrink, floored
+            ((1.0 - t).max(0.0).powf(0.4)).max(0.12)
+        } else {
+            // rebound to ~40% of R0 with an exponential approach
+            0.12 + 0.28 * (1.0 - (-6.0 * (t - 1.0)).exp())
+        }
+    }
+
+    /// Local peak pressure curve (Fig 3/12 thin solid line): sharp spike
+    /// at collapse, decaying afterwards.
+    pub fn peak_pressure(&self, t: f32) -> f32 {
+        let base = self.p_inf * (1.0 + 0.5 * t * t);
+        let spike = 9.0 * self.p_inf * (-18.0 * (t - 1.0) * (t - 1.0)).exp();
+        base + spike
+    }
+
+    /// Generate one QoI field at normalized time `t`.
+    pub fn field(&self, qoi: Qoi, t: f32) -> Field3 {
+        let n = self.cfg.n;
+        let rf = self.radius_factor(t);
+        let nf = n as f32;
+        let center = 0.5 * nf;
+        let cs = 0.6 * nf; // shock speed: crosses the domain in ~1.7 t-units
+        let shock_width = 0.012 * nf + 1.5;
+        let iw = 1.2f32; // interface width in cells
+
+        // alpha2 accumulated from bubbles (bounded support per bubble)
+        let mut a2 = vec![0f32; n * n * n];
+        for b in &self.bubbles {
+            let r = b.r0 * rf;
+            let reach = r + 5.0 * iw;
+            let lo = |c: f32| ((c - reach).floor().max(0.0)) as usize;
+            let hi = |c: f32| ((c + reach).ceil().min(nf - 1.0)) as usize;
+            for z in lo(b.cz)..=hi(b.cz) {
+                for y in lo(b.cy)..=hi(b.cy) {
+                    for x in lo(b.cx)..=hi(b.cx) {
+                        let dx = x as f32 - b.cx;
+                        let dy = y as f32 - b.cy;
+                        let dz = z as f32 - b.cz;
+                        let d = (dx * dx + dy * dy + dz * dz).sqrt();
+                        let v = 0.5 * (1.0 - ((d - r) / iw).tanh());
+                        let idx = (z * n + y) * n + x;
+                        a2[idx] = (a2[idx] + v).min(1.0);
+                    }
+                }
+            }
+        }
+        if qoi == Qoi::Alpha2 {
+            return Field3::from_vec(n, n, n, a2);
+        }
+
+        // Pressure is CONTINUOUS across material interfaces (pressure
+        // equilibrium); its discontinuities come only from the collapse
+        // shocks. Around each bubble the field dips smoothly toward the
+        // gas pressure; the dip deepens as the collapse intensifies
+        // (early field is smooth -> high CR, Fig 3 left side).
+        let ppeak = self.peak_pressure(t);
+        let drive = self.p_inf * (1.0 + 0.5 * t * t);
+        let dip_amp = 0.25 + 0.70 * t.min(1.0) * t.min(1.0);
+        let mut dip = vec![0f32; n * n * n]; // multiplicative dip in (0, 1]
+        for b in &self.bubbles {
+            let r = (b.r0 * rf).max(1.0);
+            let ell = r.max(2.5); // resolved decay length in cells
+            let reach = r + 8.0 * ell;
+            let lo = |c: f32| ((c - reach).floor().max(0.0)) as usize;
+            let hi = |c: f32| ((c + reach).ceil().min(nf - 1.0)) as usize;
+            for z in lo(b.cz)..=hi(b.cz) {
+                for y in lo(b.cy)..=hi(b.cy) {
+                    for x in lo(b.cx)..=hi(b.cx) {
+                        let dx = x as f32 - b.cx;
+                        let dy = y as f32 - b.cy;
+                        let dz = z as f32 - b.cz;
+                        let d = (dx * dx + dy * dy + dz * dz).sqrt();
+                        let f = if d <= r { 1.0 } else { (-(d - r) / ell).exp() };
+                        let idx = (z * n + y) * n + x;
+                        dip[idx] = (dip[idx] + dip_amp * f).min(0.97);
+                    }
+                }
+            }
+        }
+        // Collapse emits a burst of staggered shock shells (individual
+        // bubble collapses) with angular fine structure; behind the front
+        // a decaying acoustic wake keeps the field broadband for a while.
+        let shell_times = [1.0f32, 1.015, 1.035, 1.06, 1.09, 1.13, 1.18];
+        let mut out = vec![0f32; n * n * n];
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let idx = (z * n + y) * n + x;
+                    let dx = x as f32 - center;
+                    let dy = y as f32 - center;
+                    let dz = z as f32 - center;
+                    let d = (dx * dx + dy * dy + dz * dz).sqrt();
+                    // cell-scale angular texture (resolution-dependent
+                    // sharpness, like a real captured shock)
+                    let ang = (0.9 * x as f32 + 1.3 * y as f32).sin()
+                        * (1.1 * z as f32 - 0.7 * x as f32).sin();
+                    let mut sh = 0.0f32;
+                    for (k, &tk) in shell_times.iter().enumerate() {
+                        if t <= tk {
+                            continue;
+                        }
+                        let r_front = cs * (t - tk);
+                        let w = shock_width * (1.0 + 0.4 * k as f32);
+                        let xq = (d - r_front) / w;
+                        let amp = 1.0 / ((1.0 + 0.30 * r_front) * (1.0 + k as f32));
+                        sh += (-xq * xq).exp() * amp * (1.0 + 0.6 * ang);
+                    }
+                    // collapse core: colliding shocklets fill the cloud
+                    // interior around t = 1 (the violent phase)
+                    let tc = (t - 1.03) / 0.04;
+                    if tc.abs() < 4.0 {
+                        let cloud_r = self.cfg.cloud_radius * nf;
+                        let fr = d / (0.75 * cloud_r);
+                        let falloff = (-fr * fr).exp();
+                        let ang2 = (0.33 * x as f32 + 0.47 * y as f32).sin()
+                            * (0.41 * z as f32 - 0.29 * x as f32).sin();
+                        sh += (-tc * tc).exp() * falloff * (0.040 * ang2 + 0.016 * ang);
+                    }
+                    // wake behind the leading front (decays quickly)
+                    if t > 1.0 {
+                        let r_lead = cs * (t - 1.0);
+                        if d < r_lead {
+                            let decay = (-(5.0) * (t - 1.0)).exp();
+                            sh += 0.05 * decay * ang * (1.0 + (0.05 * d).sin());
+                        }
+                    }
+                    // smooth pressure halo around the cloud pre-collapse
+                    let halo = 0.25
+                        * self.p_inf
+                        * t
+                        * (-(d / (0.5 * nf)) * (d / (0.5 * nf))).exp();
+                    let p = (drive + halo) * (1.0 - dip[idx]) + (ppeak - drive) * sh;
+                    out[idx] = p.max(1.0);
+                }
+            }
+        }
+        match qoi {
+            Qoi::Pressure => Field3::from_vec(n, n, n, out),
+            Qoi::Density => {
+                let mut rho = out;
+                for (i, r) in rho.iter_mut().enumerate() {
+                    let a = a2[i];
+                    let p = *r;
+                    // liquid with slight compressibility + gas mixture
+                    let liquid = self.rho_liquid * (1.0 + 2e-4 * (p - self.p_inf));
+                    *r = liquid * (1.0 - a) + self.rho_gas * a;
+                }
+                Field3::from_vec(n, n, n, rho)
+            }
+            Qoi::Energy => {
+                let mut e = out;
+                for (i, v) in e.iter_mut().enumerate() {
+                    let a = a2[i];
+                    let p = *v;
+                    let liquid = self.rho_liquid * (1.0 + 2e-4 * (p - self.p_inf));
+                    let rho = liquid * (1.0 - a) + self.rho_gas * a;
+                    // E = p/(gamma-1) + kinetic proxy coupled to the shock
+                    *v = p / (self.gamma - 1.0) + 0.5e-3 * rho * p;
+                }
+                Field3::from_vec(n, n, n, e)
+            }
+            Qoi::Alpha2 => unreachable!(),
+        }
+    }
+
+    /// All four QoIs at a simulation step (paper's snapshots).
+    pub fn snapshot(&self, step: usize) -> Vec<(Qoi, Field3)> {
+        let t = step_to_time(step);
+        Qoi::ALL.iter().map(|&q| (q, self.field(q, t))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::FieldStats;
+
+    fn sim(n: usize) -> CloudSim {
+        CloudSim::new(CloudConfig::paper(n))
+    }
+
+    #[test]
+    fn bubbles_inside_cloud() {
+        let s = sim(64);
+        assert_eq!(s.bubbles.len(), 70);
+        let c = 32.0f32;
+        for b in &s.bubbles {
+            let d = ((b.cx - c).powi(2) + (b.cy - c).powi(2) + (b.cz - c).powi(2)).sqrt();
+            assert!(d <= 0.35 * 64.0 + 1e-3, "bubble at distance {d}");
+            assert!(b.r0 >= 1.5);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sim(32).field(Qoi::Pressure, 0.5);
+        let b = sim(32).field(Qoi::Pressure, 0.5);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn alpha2_in_unit_range_and_shrinks() {
+        let s = sim(64);
+        let early = s.field(Qoi::Alpha2, step_to_time(1000));
+        let late = s.field(Qoi::Alpha2, step_to_time(6500));
+        for &v in &early.data {
+            assert!((0.0..=1.0).contains(&v));
+        }
+        let vol = |f: &Field3| f.data.iter().map(|&v| v as f64).sum::<f64>();
+        assert!(
+            vol(&late) < 0.6 * vol(&early),
+            "gas volume must shrink toward collapse: {} vs {}",
+            vol(&late),
+            vol(&early)
+        );
+        // rebound re-expands
+        let rebound = s.field(Qoi::Alpha2, step_to_time(10000));
+        assert!(vol(&rebound) > vol(&late));
+    }
+
+    #[test]
+    fn paper_like_ranges() {
+        // Table 1 magnitudes: p O(1e2..1e3), rho up to ~1e3, E up to ~8e3,
+        // a2 in [0, 1]
+        let s = sim(64);
+        for (step, _) in [(5000, ()), (10000, ())] {
+            let t = step_to_time(step);
+            let p = FieldStats::compute(&s.field(Qoi::Pressure, t).data);
+            assert!(p.min > 0.0 && p.max < 2000.0, "p range {:?}", (p.min, p.max));
+            let rho = FieldStats::compute(&s.field(Qoi::Density, t).data);
+            assert!(rho.min >= 0.5 && rho.max < 1500.0, "rho range {:?}", (rho.min, rho.max));
+            let e = FieldStats::compute(&s.field(Qoi::Energy, t).data);
+            assert!(e.max > 100.0 && e.max < 50000.0, "E range {:?}", (e.min, e.max));
+        }
+    }
+
+    #[test]
+    fn peak_pressure_spikes_at_collapse() {
+        let s = sim(32);
+        let before = s.peak_pressure(0.5);
+        let at = s.peak_pressure(1.0);
+        let after = s.peak_pressure(1.4);
+        assert!(at > 3.0 * before, "peak {at} vs before {before}");
+        assert!(at > 2.0 * after, "peak {at} vs after {after}");
+    }
+
+    #[test]
+    fn shock_travels_outward() {
+        let s = sim(64);
+        let t1 = 1.05f32;
+        let t2 = 1.3f32;
+        let p1 = s.field(Qoi::Pressure, t1);
+        let p2 = s.field(Qoi::Pressure, t2);
+        // radial profile argmax along +x from center
+        let front = |f: &Field3| {
+            let (mut best, mut arg) = (0f32, 0usize);
+            for x in 34..64 {
+                let v = f.get(x, 32, 32);
+                if v > best {
+                    best = v;
+                    arg = x;
+                }
+            }
+            arg
+        };
+        assert!(front(&p2) > front(&p1), "front {} -> {}", front(&p1), front(&p2));
+    }
+
+    #[test]
+    fn compressibility_drops_at_collapse() {
+        // the headline Fig 3 behaviour: wavelet CR of p is much lower just
+        // after collapse (shock present) than pre-collapse
+        use crate::pipeline::{compress_field, NativeEngine, PipelineConfig};
+        let s = sim(96);
+        let cfg = PipelineConfig::paper_default(1e-3);
+        let ratio = |step: usize| {
+            let f = s.field(Qoi::Pressure, step_to_time(step));
+            compress_field(&f, "p", &cfg, &NativeEngine).1.ratio()
+        };
+        let pre = ratio(3000);
+        let dip = ratio(7200);
+        let late = ratio(10000);
+        assert!(dip < 0.7 * pre, "CR must dip at collapse: pre {pre} dip {dip}");
+        // paper 3.3: "compression ratios are lower for the datasets
+        // generated after 10k timesteps"
+        assert!(late < pre, "late {late} must stay below pre-collapse {pre}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Minimal criterion-replacement: warmup + sampled measurement with
+//! mean / stddev / min, plus MB/s throughput reporting. Used by the
+//! `rust/benches/*` harness=false bench binaries.
+use std::time::Instant;
+
+/// Result of a micro-benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub median: f64,
+}
+
+impl BenchStats {
+    /// Throughput in MB/s given bytes processed per iteration.
+    pub fn mbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / 1e6 / self.mean
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:40} mean {:>10.4} ms  ±{:>8.4}  min {:>10.4} ms  (n={})",
+            self.name,
+            self.mean * 1e3,
+            self.stddev * 1e3,
+            self.min * 1e3,
+            self.samples.len()
+        );
+    }
+
+    pub fn report_mbps(&self, bytes: usize) {
+        println!(
+            "{:40} mean {:>10.4} ms  min {:>10.4} ms  {:>9.1} MB/s",
+            self.name,
+            self.mean * 1e3,
+            self.min * 1e3,
+            self.mbps(bytes)
+        );
+    }
+}
+
+/// Benchmark `f` with `warmup` unmeasured and `samples` measured runs.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    stats(name, times)
+}
+
+/// Benchmark with a per-sample time budget: runs at least 3 and at most
+/// `max_samples` iterations, stopping once `budget_secs` is exceeded.
+pub fn bench_budget<T>(
+    name: &str,
+    budget_secs: f64,
+    max_samples: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchStats {
+    std::hint::black_box(f()); // warmup
+    let start = Instant::now();
+    let mut times = Vec::new();
+    while times.len() < 3
+        || (start.elapsed().as_secs_f64() < budget_secs && times.len() < max_samples)
+    {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    stats(name, times)
+}
+
+fn stats(name: &str, mut times: Vec<f64>) -> BenchStats {
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    BenchStats { name: name.to_string(), samples: times, mean, stddev: var.sqrt(), min, median }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.mean >= 0.0);
+        assert!(s.min <= s.mean + 1e-12);
+    }
+
+    #[test]
+    fn budget_stops() {
+        let s = bench_budget("sleepy", 0.02, 1000, || {
+            std::thread::sleep(std::time::Duration::from_millis(1))
+        });
+        assert!(s.samples.len() >= 3);
+        assert!(s.samples.len() < 1000);
+    }
+
+    #[test]
+    fn mbps_positive() {
+        let s = bench("noop", 0, 3, || ());
+        assert!(s.mbps(1_000_000) > 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! LSB-first bit-level reader/writer used by the entropy coders
+//! (czlib Huffman, zfp bit planes, fpzip residual codes).
+
+/// LSB-first bit writer over a growable byte vector.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap), acc: 0, nbits: 0 }
+    }
+
+    /// Write the `n` low bits of `v` (LSB first). `n <= 57` per call.
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57, "write_bits supports at most 57 bits per call");
+        debug_assert!(n == 64 || v < (1u64 << n));
+        self.acc |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, b: bool) {
+        self.write_bits(b as u64, 1);
+    }
+
+    /// Number of whole bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xff) as u8);
+        }
+        self.buf
+    }
+
+    /// Align to the next byte boundary with zero bits.
+    pub fn align_byte(&mut self) {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xff) as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.buf.len() {
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n <= 57` bits, LSB first. Reading past the end yields zeros
+    /// (callers track logical length themselves).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        if n == 0 {
+            return 0;
+        }
+        if self.nbits < n {
+            self.refill();
+        }
+        let v = self.acc & ((1u64 << n) - 1);
+        self.acc >>= n;
+        self.nbits = self.nbits.saturating_sub(n);
+        v
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        self.read_bits(1) != 0
+    }
+
+    /// Peek up to 16 bits without consuming (for table-driven Huffman).
+    #[inline]
+    pub fn peek16(&mut self) -> u16 {
+        if self.nbits < 16 {
+            self.refill();
+        }
+        (self.acc & 0xffff) as u16
+    }
+
+    /// Consume `n` bits previously peeked.
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        self.acc >>= n;
+        self.nbits = self.nbits.saturating_sub(n);
+    }
+
+    /// Discard bits up to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        let r = self.nbits % 8;
+        if r != 0 {
+            self.consume(r);
+        }
+    }
+
+    /// Number of bytes fully or partially consumed.
+    pub fn bytes_consumed(&self) -> usize {
+        self.pos - (self.nbits as usize) / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::new();
+        for i in 0..1000u64 {
+            w.write_bits(i & 0x7f, 7);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..1000u64 {
+            assert_eq!(r.read_bits(7), i & 0x7f);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_widths() {
+        let mut rng = Pcg32::new(42);
+        let items: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let n = 1 + (rng.next_u32() % 57);
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn single_bits_and_alignment() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.write_bit(false);
+        w.write_bit(true);
+        w.align_byte();
+        w.write_bits(0xAB, 8);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 2);
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        assert!(!r.read_bit());
+        assert!(r.read_bit());
+        r.align_byte();
+        assert_eq!(r.read_bits(8), 0xAB);
+    }
+
+    #[test]
+    fn bit_len_tracks_written_bits() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(1, 3);
+        assert_eq!(w.bit_len(), 3);
+        w.write_bits(0x1f, 13);
+        assert_eq!(w.bit_len(), 16);
+    }
+
+    #[test]
+    fn read_past_end_yields_zeros() {
+        let bytes = vec![0xffu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8), 0xff);
+        assert_eq!(r.read_bits(16), 0);
+    }
+}

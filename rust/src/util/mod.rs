@@ -1,0 +1,12 @@
+//! Small self-contained utilities: bit-level I/O, a seeded PRNG (the image
+//! has no `rand`), a property-test helper, and a micro-benchmark harness
+//! (the image has no `criterion`).
+pub mod bench;
+pub mod bitio;
+pub mod prng;
+pub mod prop;
+pub mod timer;
+
+pub use bitio::{BitReader, BitWriter};
+pub use prng::Pcg32;
+pub use timer::Timer;

@@ -1,0 +1,94 @@
+//! Tiny property-testing helper (the image has no `proptest`): runs a
+//! predicate over `cases` seeded-random inputs and reports the failing seed.
+use super::prng::Pcg32;
+
+/// Run `f(rng, case_index)` for `cases` cases; panic with the seed on failure.
+pub fn prop_cases(seed: u64, cases: usize, mut f: impl FnMut(&mut Pcg32, usize)) {
+    for i in 0..cases {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Pcg32::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, i);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {i} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a random f32 vector with a mix of scales and special values —
+/// the adversarial input profile for float compressors.
+pub fn gen_floats(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match rng.below(20) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE,
+            3 => 1e30,
+            4 => -1e30,
+            5 => 1e-30,
+            _ => {
+                let mag = 10f32.powi(rng.below(13) as i32 - 6);
+                (rng.next_f32() * 2.0 - 1.0) * mag
+            }
+        })
+        .collect()
+}
+
+/// Generate a smooth (spatially coherent) 3D field of side `n` — the
+/// friendly input profile (what simulation data looks like).
+pub fn gen_smooth_field(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let kx = rng.range_f64(0.5, 1.75);
+    let ky = rng.range_f64(0.5, 1.75);
+    let kz = rng.range_f64(0.5, 1.75);
+    let phase = rng.range_f64(0.0, 6.28);
+    let amp = rng.range_f64(0.1, 100.0);
+    let mut out = Vec::with_capacity(n * n * n);
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let (fx, fy, fz) =
+                    (x as f64 / n as f64, y as f64 / n as f64, z as f64 / n as f64);
+                let v = (kx * fx * 6.28 + phase).sin()
+                    * (ky * fy * 6.28).cos()
+                    * (kz * fz * 6.28 + 0.5 * phase).sin();
+                out.push((amp * v) as f32);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_runs_all_cases() {
+        let mut count = 0;
+        prop_cases(1, 25, |_, _| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prop_reports_failure() {
+        prop_cases(1, 10, |_, i| assert!(i < 5));
+    }
+
+    #[test]
+    fn gen_floats_has_specials() {
+        let mut rng = Pcg32::new(5);
+        let v = gen_floats(&mut rng, 4096);
+        assert!(v.iter().any(|x| *x == 0.0));
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn smooth_field_sized() {
+        let mut rng = Pcg32::new(6);
+        let v = gen_smooth_field(&mut rng, 8);
+        assert_eq!(v.len(), 512);
+    }
+}

@@ -1,0 +1,56 @@
+//! Wall-clock timing helpers.
+use std::time::Instant;
+
+/// Simple wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Restart and return elapsed seconds since last start.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Substage-1 encoder for wavelet coefficients: ε-decimation of detail
+//! coefficients, significance bit-mask + packed f32 stream (paper §2.3),
+//! optional bit-zeroing of least-significant mantissa bits (Z4/Z8).
+//!
+//! Block wire format (little endian):
+//! `[u32 nsig][bs³/8 bytes mask][nsig × f32 coefficients]`
+//! The coarse (bs>>levels)³ cube is always kept so the reconstruction
+//! baseline survives arbitrary thresholds.
+
+/// Encoder statistics for one block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncodedStats {
+    pub nsig: usize,
+    pub total: usize,
+}
+
+/// Size in bytes of an encoded block with `nsig` significant coefficients.
+pub fn encoded_size(bs: usize, nsig: usize) -> usize {
+    4 + (bs * bs * bs) / 8 + 4 * nsig
+}
+
+#[inline]
+fn is_coarse(i: usize, bs: usize, coarse: usize) -> bool {
+    let x = i % bs;
+    let y = (i / bs) % bs;
+    let z = i / (bs * bs);
+    x < coarse && y < coarse && z < coarse
+}
+
+/// Zero the `zbits` least significant bits of an f32 (paper's Z4/Z8).
+#[inline]
+pub fn zero_low_bits(v: f32, zbits: u32) -> f32 {
+    if zbits == 0 {
+        return v;
+    }
+    f32::from_bits(v.to_bits() & (u32::MAX << zbits))
+}
+
+/// Encode transformed coefficients of a bs³ block into `out` (appended).
+/// `threshold` is absolute; `levels` identifies the always-kept coarse cube;
+/// `zbits` zeroes low mantissa bits of kept detail coefficients.
+pub fn encode_block(
+    coeffs: &[f32],
+    bs: usize,
+    levels: usize,
+    threshold: f32,
+    zbits: u32,
+    out: &mut Vec<u8>,
+) -> EncodedStats {
+    let vol = bs * bs * bs;
+    debug_assert_eq!(coeffs.len(), vol);
+    debug_assert_eq!(vol % 8, 0);
+    let coarse = bs >> levels;
+    let mask_len = vol / 8;
+    let start = out.len();
+    out.extend_from_slice(&[0u8; 4]); // nsig placeholder
+    out.resize(start + 4 + mask_len, 0);
+    let mut nsig = 0u32;
+    // first pass: build mask
+    for (i, &c) in coeffs.iter().enumerate() {
+        let keep = c.abs() >= threshold || is_coarse(i, bs, coarse);
+        if keep {
+            out[start + 4 + i / 8] |= 1 << (i % 8);
+            nsig += 1;
+        }
+    }
+    // second pass: append kept coefficients
+    out.reserve(nsig as usize * 4);
+    for (i, &c) in coeffs.iter().enumerate() {
+        if out[start + 4 + i / 8] & (1 << (i % 8)) != 0 {
+            let v = if is_coarse(i, bs, coarse) { c } else { zero_low_bits(c, zbits) };
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out[start..start + 4].copy_from_slice(&nsig.to_le_bytes());
+    EncodedStats { nsig: nsig as usize, total: vol }
+}
+
+/// Decode one block from `buf`, writing bs³ coefficients into `coeffs`.
+/// Returns the number of bytes consumed.
+pub fn decode_block(buf: &[u8], bs: usize, coeffs: &mut [f32]) -> Result<usize, String> {
+    let vol = bs * bs * bs;
+    debug_assert_eq!(coeffs.len(), vol);
+    let mask_len = vol / 8;
+    if buf.len() < 4 + mask_len {
+        return Err(format!("encoded block truncated: {} < {}", buf.len(), 4 + mask_len));
+    }
+    let nsig = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let need = 4 + mask_len + 4 * nsig;
+    if buf.len() < need {
+        return Err(format!("encoded block truncated: {} < {need}", buf.len()));
+    }
+    let mask = &buf[4..4 + mask_len];
+    let mut off = 4 + mask_len;
+    let mut seen = 0usize;
+    for i in 0..vol {
+        if mask[i / 8] & (1 << (i % 8)) != 0 {
+            coeffs[i] = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            off += 4;
+            seen += 1;
+        } else {
+            coeffs[i] = 0.0;
+        }
+    }
+    if seen != nsig {
+        return Err(format!("mask population {seen} != header nsig {nsig}"));
+    }
+    Ok(off)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+    use crate::wavelet::transform3d::{forward_3d, inverse_3d, max_levels, Scratch};
+    use crate::wavelet::WaveletKind;
+
+    #[test]
+    fn roundtrip_zero_threshold_is_exact() {
+        prop_cases(0xE0C0DE, 10, |rng, _| {
+            let bs = 8;
+            let mut c = vec![0.0f32; bs * bs * bs];
+            rng.fill_f32(&mut c, -10.0, 10.0);
+            let mut out = Vec::new();
+            let st = encode_block(&c, bs, 1, 0.0, 0, &mut out);
+            assert_eq!(st.nsig, c.len());
+            let mut back = vec![0.0f32; c.len()];
+            let consumed = decode_block(&out, bs, &mut back).unwrap();
+            assert_eq!(consumed, out.len());
+            assert_eq!(c, back);
+        });
+    }
+
+    #[test]
+    fn threshold_drops_small_details() {
+        let bs = 8;
+        let mut c = vec![1e-6f32; bs * bs * bs];
+        c[500] = 5.0; // one large detail (outside the coarse cube)
+        let mut out = Vec::new();
+        let st = encode_block(&c, bs, 1, 1e-3, 0, &mut out);
+        // kept: the coarse 4^3 cube + the one large detail
+        assert_eq!(st.nsig, 4 * 4 * 4 + 1);
+        let mut back = vec![0.0f32; c.len()];
+        decode_block(&out, bs, &mut back).unwrap();
+        assert_eq!(back[500], 5.0);
+        assert_eq!(back[400], 0.0);
+    }
+
+    #[test]
+    fn coarse_cube_survives_any_threshold() {
+        let bs = 16;
+        let levels = 2;
+        let c = vec![1e-9f32; bs * bs * bs];
+        let mut out = Vec::new();
+        let st = encode_block(&c, bs, levels, 1e3, 0, &mut out);
+        assert_eq!(st.nsig, 4 * 4 * 4);
+    }
+
+    #[test]
+    fn bit_zeroing_reduces_precision_not_sign() {
+        let v = 3.141592653f32;
+        let z8 = zero_low_bits(v, 8);
+        assert!((v - z8).abs() < 1e-4);
+        assert!(z8 != v);
+        assert_eq!(zero_low_bits(-v, 8), -zero_low_bits(v, 8).abs() * 1.0);
+        assert_eq!(zero_low_bits(v, 0), v);
+    }
+
+    #[test]
+    fn end_to_end_error_bounded() {
+        // transform -> threshold -> decode -> inverse stays within a small
+        // multiple of epsilon (superposition over levels)
+        prop_cases(0xF00D, 6, |rng, _| {
+            let bs = 16;
+            let levels = max_levels(bs);
+            let mut x = crate::util::prop::gen_smooth_field(rng, bs);
+            let range = {
+                let (lo, hi) = x
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+                (hi - lo).max(1e-30)
+            };
+            let orig = x.clone();
+            let mut s = Scratch::new(bs);
+            forward_3d(WaveletKind::Avg3, &mut x, bs, levels, &mut s);
+            let eps = 1e-3f32 * range;
+            let mut out = Vec::new();
+            encode_block(&x, bs, levels, eps, 0, &mut out);
+            let mut back = vec![0.0f32; x.len()];
+            decode_block(&out, bs, &mut back).unwrap();
+            inverse_3d(WaveletKind::Avg3, &mut back, bs, levels, &mut s);
+            let maxerr = orig
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            // superposition bound: L levels x 3 axes x predictor gain
+            assert!(
+                maxerr <= 40.0 * eps,
+                "maxerr {maxerr} vs eps {eps} (x{})",
+                maxerr / eps
+            );
+        });
+    }
+
+    #[test]
+    fn truncated_input_is_an_error() {
+        let bs = 8;
+        let c = vec![1.0f32; bs * bs * bs];
+        let mut out = Vec::new();
+        encode_block(&c, bs, 1, 0.0, 0, &mut out);
+        let mut back = vec![0.0f32; c.len()];
+        assert!(decode_block(&out[..10], bs, &mut back).is_err());
+        assert!(decode_block(&out[..out.len() - 1], bs, &mut back).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! 1D lifting steps on the interval (clamped boundary stencils).
+//!
+//! Forward packs the result as `[s_0..s_{h-1} | d_0..d_{h-1}]` (h = m/2)
+//! into the input slice; inverse restores the interleaved samples.
+//! All arithmetic is plain f32 (no FMA) so the Pallas kernel, which lowers
+//! to elementwise HLO under interpret=True, produces matching results.
+use super::WaveletKind;
+
+#[inline(always)]
+fn clamp(i: isize, h: usize) -> usize {
+    i.clamp(0, h as isize - 1) as usize
+}
+
+/// W⁴ predict: cubic interpolation of odd sample `2k+1` from even
+/// neighbors. Interior stencil (-1/16, 9/16, 9/16, -1/16); at the interval
+/// boundaries one-sided cubic Lagrange stencils keep full order ("wavelets
+/// on the interval", Cohen–Daubechies–Vial-style boundary adaptation).
+#[inline(always)]
+fn pred4(e: &[f32], k: usize, h: usize) -> f32 {
+    if h == 2 {
+        // only two evens: linear predict / extrapolate
+        return if k == 0 {
+            0.5 * (e[0] + e[1])
+        } else {
+            1.5 * e[1] - 0.5 * e[0]
+        };
+    }
+    if k == 0 {
+        // cubic through e[0..4] evaluated at sample position 1
+        0.3125 * e[0] + 0.9375 * e[1] - 0.3125 * e[2] + 0.0625 * e[3]
+    } else if k + 2 == h {
+        // cubic through e[h-4..h] evaluated at position 5
+        0.0625 * e[h - 4] - 0.3125 * e[h - 3] + 0.9375 * e[h - 2] + 0.3125 * e[h - 1]
+    } else if k + 1 == h {
+        // linear extrapolation beyond the last even sample: higher-order
+        // one-sided stencils here have |w|-sum ~6 and amplify fp noise
+        // multiplicatively across passes/levels (numerically unstable)
+        1.5 * e[h - 1] - 0.5 * e[h - 2]
+    } else {
+        -0.0625 * e[k - 1] + 0.5625 * e[k] + 0.5625 * e[k + 1] - 0.0625 * e[k + 2]
+    }
+}
+
+/// W³ai predict of the pairwise difference `o[k]-e[k]` from the averages.
+/// Interior: (s[k+1]-s[k-1])/4 (annihilates quadratics); boundaries use
+/// one-sided quadratic stencils of the same order.
+#[inline(always)]
+fn pred_avg3(s: &[f32], k: usize, h: usize) -> f32 {
+    if h == 2 {
+        return 0.5 * (s[1] - s[0]);
+    }
+    if k == 0 {
+        -0.75 * s[0] + 1.0 * s[1] - 0.25 * s[2]
+    } else if k + 1 == h {
+        0.75 * s[h - 1] - 1.0 * s[h - 2] + 0.25 * s[h - 3]
+    } else {
+        0.25 * (s[k + 1] - s[k - 1])
+    }
+}
+
+/// Forward 1D lifting step. `line.len()` = m (even, >= 4); `tmp` >= m.
+pub fn forward_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
+    let m = line.len();
+    debug_assert!(m >= 4 && m % 2 == 0);
+    let h = m / 2;
+    let (s, d) = tmp[..m].split_at_mut(h);
+    match kind {
+        WaveletKind::Interp4 => {
+            for k in 0..h {
+                s[k] = line[2 * k];
+            }
+            for k in 0..h {
+                d[k] = line[2 * k + 1] - pred4(s, k, h);
+            }
+        }
+        WaveletKind::Lift4 => {
+            // predict with raw evens, then update the scaling coefficients
+            for k in 0..h {
+                s[k] = line[2 * k];
+            }
+            for k in 0..h {
+                d[k] = line[2 * k + 1] - pred4(s, k, h);
+            }
+            for k in 0..h {
+                let dm = d[clamp(k as isize - 1, h)];
+                s[k] += 0.25 * (dm + d[k]);
+            }
+        }
+        WaveletKind::Avg3 => {
+            for k in 0..h {
+                s[k] = 0.5 * (line[2 * k] + line[2 * k + 1]);
+            }
+            for k in 0..h {
+                d[k] = (line[2 * k + 1] - line[2 * k]) - pred_avg3(s, k, h);
+            }
+        }
+    }
+    line[..m].copy_from_slice(&tmp[..m]);
+}
+
+/// Inverse 1D lifting step: `line` holds `[s | d]`, restores samples.
+pub fn inverse_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
+    let m = line.len();
+    debug_assert!(m >= 4 && m % 2 == 0);
+    let h = m / 2;
+    match kind {
+        WaveletKind::Interp4 => {
+            let (s, d) = line[..m].split_at(h);
+            for k in 0..h {
+                tmp[2 * k] = s[k];
+                tmp[2 * k + 1] = d[k] + pred4(s, k, h);
+            }
+        }
+        WaveletKind::Lift4 => {
+            // undo update into tmp[..h] (raw evens), then undo predict,
+            // interleaving directly into `line`. Ascending k is safe: the
+            // write frontier 2k+1 never passes an unread d[j] (j >= k).
+            {
+                let (s, d) = line[..m].split_at(h);
+                for k in 0..h {
+                    let dm = d[clamp(k as isize - 1, h)];
+                    tmp[k] = s[k] - 0.25 * (dm + d[k]);
+                }
+            }
+            for k in 0..h {
+                let o = line[h + k] + pred4(&tmp[..h], k, h);
+                line[2 * k] = tmp[k];
+                line[2 * k + 1] = o;
+            }
+            return;
+        }
+        WaveletKind::Avg3 => {
+            let (s, d) = line[..m].split_at(h);
+            for k in 0..h {
+                let diff = d[k] + pred_avg3(s, k, h);
+                tmp[2 * k] = s[k] - 0.5 * diff;
+                tmp[2 * k + 1] = s[k] + 0.5 * diff;
+            }
+        }
+    }
+    line[..m].copy_from_slice(&tmp[..m]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::prop::prop_cases;
+
+    fn roundtrip_err(kind: WaveletKind, x: &[f32]) -> f32 {
+        let mut line = x.to_vec();
+        let mut tmp = vec![0.0; x.len()];
+        forward_1d(kind, &mut line, &mut tmp);
+        inverse_1d(kind, &mut line, &mut tmp);
+        x.iter()
+            .zip(&line)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn perfect_reconstruction_all_kinds() {
+        prop_cases(0xA11CE, 50, |rng, _| {
+            let m = [4usize, 8, 16, 32, 64][rng.below(5) as usize];
+            let mut x = vec![0.0f32; m];
+            rng.fill_f32(&mut x, -100.0, 100.0);
+            for kind in WaveletKind::ALL {
+                let err = roundtrip_err(kind, &x);
+                assert!(err <= 2e-4, "{kind:?} m={m} err={err}");
+            }
+        });
+    }
+
+    #[test]
+    fn interp4_annihilates_cubics() {
+        // cubic polynomial sampled away from the boundary -> interior
+        // detail coefficients must vanish (order-4 predictor)
+        let m = 32;
+        let x: Vec<f32> = (0..m)
+            .map(|i| {
+                let t = i as f32 / m as f32;
+                0.3 + t + 2.0 * t * t - 1.5 * t * t * t
+            })
+            .collect();
+        let mut line = x.clone();
+        let mut tmp = vec![0.0; m];
+        forward_1d(WaveletKind::Interp4, &mut line, &mut tmp);
+        let h = m / 2;
+        for k in 2..h - 2 {
+            assert!(
+                line[h + k].abs() < 1e-5,
+                "interior detail d[{k}]={} should vanish for cubic",
+                line[h + k]
+            );
+        }
+    }
+
+    #[test]
+    fn avg3_annihilates_quadratics() {
+        let m = 32;
+        let x: Vec<f32> = (0..m)
+            .map(|i| {
+                let t = i as f32;
+                1.0 + 0.5 * t + 0.25 * t * t
+            })
+            .collect();
+        let mut line = x.clone();
+        let mut tmp = vec![0.0; m];
+        forward_1d(WaveletKind::Avg3, &mut line, &mut tmp);
+        let h = m / 2;
+        for k in 1..h - 1 {
+            let rel = line[h + k].abs() / x[2 * k].abs().max(1.0);
+            assert!(rel < 1e-5, "interior detail d[{k}]={} for quadratic", line[h + k]);
+        }
+    }
+
+    #[test]
+    fn lift4_preserves_mean_better_than_interp4() {
+        // the update step makes scaling coeffs track local averages:
+        // for an oscillating signal, the s-band mean of W4li stays closer
+        // to the signal mean than plain subsampling (W4)
+        let mut rng = Pcg32::new(77);
+        let m = 64;
+        let mut x = vec![0.0f32; m];
+        rng.fill_f32(&mut x, 0.0, 1.0);
+        let mean_x: f32 = x.iter().sum::<f32>() / m as f32;
+        let mut tmp = vec![0.0; m];
+        let mut a = x.clone();
+        forward_1d(WaveletKind::Interp4, &mut a, &mut tmp);
+        let mut b = x.clone();
+        forward_1d(WaveletKind::Lift4, &mut b, &mut tmp);
+        let h = m / 2;
+        let mean_a: f32 = a[..h].iter().sum::<f32>() / h as f32;
+        let mean_b: f32 = b[..h].iter().sum::<f32>() / h as f32;
+        assert!(
+            (mean_b - mean_x).abs() <= (mean_a - mean_x).abs() + 1e-3,
+            "lift4 mean drift {} vs interp4 {}",
+            (mean_b - mean_x).abs(),
+            (mean_a - mean_x).abs()
+        );
+    }
+
+    #[test]
+    fn smooth_signal_details_are_small() {
+        let m = 64;
+        let x: Vec<f32> = (0..m).map(|i| (i as f32 * 0.1).sin() * 10.0).collect();
+        let mut tmp = vec![0.0; m];
+        for kind in WaveletKind::ALL {
+            let mut line = x.clone();
+            forward_1d(kind, &mut line, &mut tmp);
+            let h = m / 2;
+            let dmax = line[h..].iter().map(|v| v.abs()).fold(0.0, f32::max);
+            let smax = line[..h].iter().map(|v| v.abs()).fold(0.0, f32::max);
+            assert!(dmax < 0.05 * smax, "{kind:?}: details {dmax} vs scale {smax}");
+        }
+    }
+
+    #[test]
+    fn constant_signal_zero_details_exact() {
+        let m = 16;
+        let x = vec![3.75f32; m];
+        let mut tmp = vec![0.0; m];
+        for kind in WaveletKind::ALL {
+            let mut line = x.clone();
+            forward_1d(kind, &mut line, &mut tmp);
+            for k in m / 2..m {
+                assert_eq!(line[k], 0.0, "{kind:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Wavelets "on the interval" (paper §2.3): three lifting schemes —
+//! fourth-order interpolating (W⁴), fourth-order lifted interpolating
+//! (W⁴li) and third-order average-interpolating (W³ai) — plus the
+//! separable multi-level 3D transform and the ε-threshold encoder.
+//!
+//! The 1D lifting spec here is the single source of truth shared with the
+//! Pallas kernel (`python/compile/kernels/wavelet3d.py`); both sides must
+//! implement it identically (see DESIGN.md §6).
+pub mod encode;
+pub mod lift1d;
+pub mod transform3d;
+
+pub use encode::{decode_block, encode_block, EncodedStats};
+pub use lift1d::{forward_1d, inverse_1d};
+pub use transform3d::{forward_3d, inverse_3d, max_levels};
+
+/// The three wavelet families evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WaveletKind {
+    /// W⁴: fourth-order interpolating wavelets (Donoho), predict-only.
+    Interp4,
+    /// W⁴li: fourth-order lifted interpolating wavelets (adds an update
+    /// step preserving the running average).
+    Lift4,
+    /// W³ai: third-order average-interpolating wavelets.
+    Avg3,
+}
+
+impl WaveletKind {
+    pub const ALL: [WaveletKind; 3] = [WaveletKind::Interp4, WaveletKind::Lift4, WaveletKind::Avg3];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WaveletKind::Interp4 => "W4",
+            WaveletKind::Lift4 => "W4li",
+            WaveletKind::Avg3 => "W3ai",
+        }
+    }
+
+    /// Stable id used in file headers and artifact names.
+    pub fn id(&self) -> u8 {
+        match self {
+            WaveletKind::Interp4 => 0,
+            WaveletKind::Lift4 => 1,
+            WaveletKind::Avg3 => 2,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Option<Self> {
+        match id {
+            0 => Some(WaveletKind::Interp4),
+            1 => Some(WaveletKind::Lift4),
+            2 => Some(WaveletKind::Avg3),
+            _ => None,
+        }
+    }
+
+    /// Artifact name fragment (matches python/compile/aot.py).
+    pub fn artifact_tag(&self) -> &'static str {
+        match self {
+            WaveletKind::Interp4 => "w4",
+            WaveletKind::Lift4 => "w4l",
+            WaveletKind::Avg3 => "w3a",
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end CLI tests: drive the `czb` binary exactly as a user would
+//! (gen -> compress -> info -> psnr -> decompress -> recompress).
+use std::path::PathBuf;
+use std::process::Command;
+
+fn czb() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_czb"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("cubismz_cli_tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("spawn czb");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "command failed: {:?}\nstdout: {stdout}\nstderr: {}",
+        cmd,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    stdout
+}
+
+#[test]
+fn full_cli_flow() {
+    let h5 = tmp("cli.h5l");
+    let out = run_ok(czb().args([
+        "gen", "--size", "64", "--step", "10000", "--out",
+        h5.to_str().unwrap(),
+    ]));
+    assert!(out.contains("wrote"));
+    assert!(h5.exists());
+
+    let czb_file = tmp("cli_p.czb");
+    let out = run_ok(czb().args([
+        "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+        czb_file.to_str().unwrap(), "--eps", "1e-3", "--shuffle",
+    ]));
+    assert!(out.contains("CR"), "{out}");
+
+    let out = run_ok(czb().args(["info", "--in", czb_file.to_str().unwrap()]));
+    assert!(out.contains("dataset     : p"), "{out}");
+    assert!(out.contains("64x64x64"), "{out}");
+
+    let out = run_ok(czb().args([
+        "psnr", "--ref", h5.to_str().unwrap(), "--dataset", "p", "--in",
+        czb_file.to_str().unwrap(),
+    ]));
+    let db: f64 = out
+        .trim()
+        .strip_prefix("PSNR ")
+        .and_then(|s| s.strip_suffix(" dB"))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(db > 50.0, "psnr {db}");
+
+    let h5_out = tmp("cli_p_out.h5l");
+    run_ok(czb().args([
+        "decompress", "--in", czb_file.to_str().unwrap(), "--out",
+        h5_out.to_str().unwrap(),
+    ]));
+    assert!(h5_out.exists());
+
+    let re = tmp("cli_p_zfp.czb");
+    let out = run_ok(czb().args([
+        "recompress", "--in", czb_file.to_str().unwrap(), "--out", re.to_str().unwrap(),
+        "--scheme", "zfp", "--eps", "1e-3", "--stage2", "none",
+    ]));
+    assert!(out.contains("CR"), "{out}");
+    let out = run_ok(czb().args(["info", "--in", re.to_str().unwrap()]));
+    assert!(out.contains("Zfp"), "{out}");
+}
+
+#[test]
+fn cli_rejects_bad_input() {
+    let st = czb().args(["compress", "--in", "/nonexistent.h5l"]).output().unwrap();
+    assert!(!st.status.success());
+    let st = czb().args(["bogus-command"]).output().unwrap();
+    assert!(!st.status.success());
+    let st = czb().output().unwrap();
+    assert!(!st.status.success());
+}
+
+#[test]
+fn cli_all_schemes_produce_valid_files() {
+    let h5 = tmp("cli_schemes.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(), "--qoi", "rho",
+    ]));
+    for (i, (scheme, extra)) in [
+        ("wavelet", vec!["--wavelet", "w4"]),
+        ("wavelet", vec!["--wavelet", "w4l", "--zbits", "4"]),
+        ("zfp", vec![]),
+        ("sz", vec![]),
+        ("fpzip", vec!["--prec", "20"]),
+        ("fpzip-lossless", vec![]),
+        ("copy", vec!["--stage2", "lzma"]),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let out_file = tmp(&format!("cli_{scheme}_{i}.czb"));
+        let mut cmd = czb();
+        cmd.args([
+            "compress", "--in", h5.to_str().unwrap(), "--dataset", "rho", "--out",
+            out_file.to_str().unwrap(), "--scheme", scheme,
+        ]);
+        for e in &extra {
+            cmd.arg(e);
+        }
+        run_ok(&mut cmd);
+        run_ok(czb().args(["info", "--in", out_file.to_str().unwrap()]));
+        // every scheme must round-trip through decompress
+        let back = tmp(&format!("cli_{scheme}_{i}.h5l"));
+        run_ok(czb().args([
+            "decompress", "--in", out_file.to_str().unwrap(), "--out", back.to_str().unwrap(),
+        ]));
+    }
+}

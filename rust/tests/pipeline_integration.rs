@@ -1,0 +1,189 @@
+//! End-to-end integration over the whole stack minus PJRT: simulator ->
+//! grid -> pipeline -> parallel shared-file I/O -> decompress -> metrics,
+//! including the multi-rank in-process cluster path.
+use cubismz::cluster::{partition, Comm, InProcComm, SelfComm};
+use cubismz::codec::Codec;
+use cubismz::core::block::{Block, BlockGrid};
+use cubismz::core::{Field3, FieldStats};
+use cubismz::io::parallel::shared_write;
+use cubismz::metrics::{compression_ratio, psnr};
+use cubismz::pipeline::{
+    compress_field, decompress_field, CoeffCodec, NativeEngine, PipelineConfig, ShuffleMode,
+    Stage1,
+};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::wavelet::WaveletKind;
+
+fn tmpdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("cubismz_integration");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn simulator_to_file_to_field_all_qois() {
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    let cfg = PipelineConfig::paper_default(1e-3);
+    for qoi in Qoi::ALL {
+        let f = sim.field(qoi, step_to_time(5000));
+        let (bytes, st) = compress_field(&f, qoi.name(), &cfg, &NativeEngine);
+        assert!(st.ratio() > 2.0, "{qoi:?} ratio {}", st.ratio());
+        let path = tmpdir().join(format!("{}.czb", qoi.name()));
+        std::fs::write(&path, &bytes).unwrap();
+        let read_back = std::fs::read(&path).unwrap();
+        let (g, file) = decompress_field(&read_back, &NativeEngine).unwrap();
+        assert_eq!(file.name, qoi.name());
+        let p = psnr(&f.data, &g.data);
+        assert!(p > 45.0, "{qoi:?} psnr {p}");
+    }
+}
+
+#[test]
+fn multi_rank_compress_and_shared_write_roundtrips() {
+    // 4 ranks, each compressing its own block partition, exscan offsets,
+    // single shared file (the paper's in-situ I/O path)
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    let f = sim.field(Qoi::Pressure, step_to_time(5000));
+    let bs = 32usize;
+    let grid = BlockGrid::new(&f, bs);
+    let nblocks = grid.nblocks();
+    let size = 4;
+    let comms = InProcComm::group(size);
+    let path = tmpdir().join("shared_p.bin");
+
+    // per-rank payload: length-prefixed compressed sub-streams
+    let payloads: Vec<Vec<u8>> = std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = &f;
+                let grid = &grid;
+                let path = path.clone();
+                s.spawn(move || {
+                    let (lo, hi) = partition(nblocks, c.rank(), c.size());
+                    let mut blk = Block::zeros(bs);
+                    let mut raw = Vec::new();
+                    for id in lo..hi {
+                        grid.extract(f, id, &mut blk);
+                        for v in &blk.data {
+                            raw.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                    let comp = Codec::ZlibDef.compress_vec(&raw);
+                    let header = [0x42u8; 8];
+                    let rep = shared_write(
+                        &path,
+                        &c,
+                        if c.rank() == 0 { Some(&header[..]) } else { None },
+                        8,
+                        &comp,
+                    )
+                    .unwrap();
+                    assert_eq!(rep.bytes as usize, comp.len());
+                    (c.rank(), rep.offset, comp)
+                })
+            })
+            .collect();
+        let mut out: Vec<(usize, u64, Vec<u8>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        out.sort_by_key(|(r, ..)| *r);
+        // verify each rank's bytes landed at its offset
+        let file = std::fs::read(&path).unwrap();
+        for (_, off, comp) in &out {
+            assert_eq!(&file[*off as usize..*off as usize + comp.len()], &comp[..]);
+        }
+        out.into_iter().map(|(_, _, c)| c).collect()
+    });
+
+    // decompress all rank payloads and reassemble the field
+    let mut out_field = Field3::zeros(f.nx, f.ny, f.nz);
+    let mut blk = Block::zeros(bs);
+    for (rank, comp) in payloads.iter().enumerate() {
+        let raw = Codec::ZlibDef.decompress_vec(comp).unwrap();
+        let (lo, hi) = partition(nblocks, rank, size);
+        assert_eq!(raw.len(), (hi - lo) * bs * bs * bs * 4);
+        for (j, id) in (lo..hi).enumerate() {
+            let start = j * bs * bs * bs * 4;
+            for (k, c) in raw[start..start + bs * bs * bs * 4].chunks_exact(4).enumerate() {
+                blk.data[k] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+            grid.insert(&mut out_field, id, &blk);
+        }
+    }
+    assert_eq!(out_field.data, f.data);
+}
+
+#[test]
+fn table1_style_stats_are_stable() {
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    for step in [5000, 10000] {
+        let a2 = sim.field(Qoi::Alpha2, step_to_time(step));
+        let st = FieldStats::compute(&a2.data);
+        assert!(st.min >= 0.0 && st.max <= 1.0);
+        assert!(st.mean > 0.0 && st.mean < 0.2, "a2 mean {}", st.mean);
+    }
+}
+
+#[test]
+fn restart_snapshot_fpzip_lossless_ratio_in_paper_band() {
+    // paper §4.4: lossless FPZIP restart files compress 2.62x..4.25x
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    let cfg = PipelineConfig::new(32, Stage1::Fpzip { prec: 32 }, Codec::None);
+    let mut total_raw = 0usize;
+    let mut total_comp = 0usize;
+    for qoi in Qoi::ALL {
+        let f = sim.field(qoi, step_to_time(5000));
+        let (bytes, st) = compress_field(&f, qoi.name(), &cfg, &NativeEngine);
+        // bit-exact restart requirement
+        let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+        for (a, b) in f.data.iter().zip(&back.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{qoi:?} restart must be lossless");
+        }
+        total_raw += st.raw_bytes;
+        total_comp += st.compressed_bytes;
+    }
+    let cr = compression_ratio(total_raw, total_comp);
+    assert!(cr > 1.5 && cr < 20.0, "restart CR {cr}");
+}
+
+#[test]
+fn zbits_and_shuffle_improve_ratio_without_breaking_bounds() {
+    // Exp 2 (Fig 5): shuffle raises CR at identical PSNR; Z4 raises CR
+    // with bounded PSNR cost
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    let f = sim.field(Qoi::Pressure, step_to_time(10000));
+    let mk = |zbits, shuffle| {
+        let stage1 = Stage1::Wavelet {
+            kind: WaveletKind::Avg3,
+            eps_rel: 1e-3,
+            zbits,
+            coeff: CoeffCodec::None,
+        };
+        let cfg = PipelineConfig::new(32, stage1, Codec::ZlibDef).with_shuffle(shuffle);
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+        (st.ratio(), psnr(&f.data, &back.data))
+    };
+    let (cr_plain, ps_plain) = mk(0, ShuffleMode::None);
+    let (cr_shuf, ps_shuf) = mk(0, ShuffleMode::Byte4);
+    let (cr_z4, ps_z4) = mk(4, ShuffleMode::Byte4);
+    assert!(cr_shuf > cr_plain, "shuffle: {cr_shuf} vs {cr_plain}");
+    assert!((ps_shuf - ps_plain).abs() < 1e-9, "shuffle must not change PSNR");
+    assert!(cr_z4 >= cr_shuf, "z4: {cr_z4} vs {cr_shuf}");
+    assert!(ps_z4 <= ps_shuf + 0.01 && ps_z4 > ps_shuf - 12.0, "z4 psnr {ps_z4} vs {ps_shuf}");
+}
+
+#[test]
+fn self_comm_matches_multirank_output_sizes() {
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    let f = sim.field(Qoi::Density, step_to_time(5000));
+    let cfg = PipelineConfig::paper_default(1e-3);
+    let (bytes1, _) = compress_field(&f, "rho", &cfg, &NativeEngine);
+    let cfg4 = cfg.with_threads(4);
+    let (bytes4, _) = compress_field(&f, "rho", &cfg4, &NativeEngine);
+    // same stage-1 content; chunk boundaries differ so sizes differ
+    // slightly, but by far less than a chunk
+    let skew = (bytes1.len() as f64 - bytes4.len() as f64).abs() / bytes1.len() as f64;
+    assert!(skew < 0.08, "thread-count size skew {skew}");
+    let _ = SelfComm.rank();
+}

@@ -1,0 +1,102 @@
+//! Cross-layer integration: the PJRT-executed Pallas kernel (L1, AOT via
+//! L2) must match the native Rust engine (L3) on the same blocks, and both
+//! must match the python-exported test vectors. Requires `make artifacts`.
+use cubismz::pipeline::{NativeEngine, WaveletEngine};
+use cubismz::runtime::{default_artifacts_dir, PjrtEngine, ARTIFACT_BS};
+use cubismz::util::prng::Pcg32;
+use cubismz::wavelet::{max_levels, WaveletKind};
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("wavelet_fwd_w3a_b32_n1.hlo.txt").exists()
+}
+
+fn rel_close(a: &[f32], b: &[f32], scale: f32, tol: f32) -> Result<(), String> {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * scale {
+            return Err(format!("idx {i}: {x} vs {y} (scale {scale})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn pjrt_matches_native_forward_and_inverse() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = PjrtEngine::new(default_artifacts_dir()).expect("pjrt engine");
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+    let vol = ARTIFACT_BS * ARTIFACT_BS * ARTIFACT_BS;
+    let mut rng = Pcg32::new(0xABCD);
+    // n = 19 exercises both the 16-wide chunk and the single-block path
+    let n = 19;
+    let mut data = vec![0f32; n * vol];
+    rng.fill_f32(&mut data, -80.0, 80.0);
+    for kind in WaveletKind::ALL {
+        let mut pjrt = data.clone();
+        let mut native = data.clone();
+        engine.forward_batch(kind, &mut pjrt, ARTIFACT_BS, max_levels(ARTIFACT_BS));
+        NativeEngine.forward_batch(kind, &mut native, ARTIFACT_BS, max_levels(ARTIFACT_BS));
+        rel_close(&pjrt, &native, 80.0, 2e-5)
+            .unwrap_or_else(|e| panic!("{kind:?} forward: {e}"));
+        engine.inverse_batch(kind, &mut pjrt, ARTIFACT_BS, max_levels(ARTIFACT_BS));
+        rel_close(&pjrt, &data, 80.0, 5e-5)
+            .unwrap_or_else(|e| panic!("{kind:?} roundtrip: {e}"));
+    }
+}
+
+#[test]
+fn native_matches_python_test_vectors() {
+    let tv_dir = default_artifacts_dir().join("testvectors");
+    if !tv_dir.is_dir() {
+        eprintln!("skipping: test vectors not built");
+        return;
+    }
+    for kind in WaveletKind::ALL {
+        let path = tv_dir.join(format!("wavelet_{}_b32.bin", kind.artifact_tag()));
+        let bytes = std::fs::read(&path).expect("test vector file");
+        let bs = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        assert_eq!(bs, ARTIFACT_BS);
+        let vol = bs * bs * bs;
+        let floats: Vec<f32> = bytes[8..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(floats.len(), 2 * n * vol, "vector payload size");
+        let (input, expected) = floats.split_at(n * vol);
+        let mut got = input.to_vec();
+        NativeEngine.forward_batch(kind, &mut got, bs, max_levels(bs));
+        rel_close(&got, expected, 50.0, 2e-5)
+            .unwrap_or_else(|e| panic!("{kind:?} vs python vectors: {e}"));
+    }
+}
+
+#[test]
+fn pipeline_with_pjrt_engine_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use cubismz::core::Field3;
+    use cubismz::metrics::psnr;
+    use cubismz::pipeline::{compress_field, decompress_field, PipelineConfig};
+    let engine = PjrtEngine::new(default_artifacts_dir()).unwrap();
+    let mut rng = Pcg32::new(7);
+    let n = 64;
+    let f = Field3::from_vec(n, n, n, cubismz::util::prop::gen_smooth_field(&mut rng, n));
+    let cfg = PipelineConfig::paper_default(1e-3);
+    let (bytes_pjrt, st_pjrt) = compress_field(&f, "p", &cfg, &engine);
+    let (bytes_native, st_native) = compress_field(&f, "p", &cfg, &NativeEngine);
+    // engines agree on compressibility (identical spec; tiny fp skew can
+    // move a coefficient across the threshold, so sizes are near-equal,
+    // not byte-identical)
+    let ratio = bytes_pjrt.len() as f64 / bytes_native.len() as f64;
+    assert!((0.98..1.02).contains(&ratio), "size skew {ratio}");
+    assert_eq!(st_pjrt.nblocks, st_native.nblocks);
+    // decompress the pjrt-compressed stream with the native engine
+    let (back, _) = decompress_field(&bytes_pjrt, &NativeEngine).unwrap();
+    let p = psnr(&f.data, &back.data);
+    assert!(p > 40.0, "psnr {p}");
+}
