@@ -1,7 +1,9 @@
 //! Bench: the from-scratch lossless codecs vs the real zlib/zstd
 //! reference baselines on stage-1-like payloads (shuffled wavelet
 //! coefficient streams). §Perf tracking for czlib.
-use cubismz::codec::{reference, shuffle, Codec};
+#[cfg(reference_codecs)]
+use cubismz::codec::reference;
+use cubismz::codec::{shuffle, Codec};
 use cubismz::util::bench::bench_budget;
 use cubismz::util::prng::Pcg32;
 
@@ -37,13 +39,20 @@ fn main() {
             bytes as f64 / comp.len() as f64
         );
     }
-    // reference baselines
-    let s = bench_budget("compress/real-zlib-6", 2.0, 50, || reference::zlib_compress(&data, 6));
-    s.report_mbps(bytes);
-    let comp = reference::zlib_compress(&data, 6);
-    println!("{:40} CR {:.2}", "  (real-zlib-6)", bytes as f64 / comp.len() as f64);
-    let s = bench_budget("compress/real-zstd-3", 2.0, 50, || reference::zstd_compress(&data, 3));
-    s.report_mbps(bytes);
-    let comp = reference::zstd_compress(&data, 3);
-    println!("{:40} CR {:.2}", "  (real-zstd-3)", bytes as f64 / comp.len() as f64);
+    // reference baselines (need the flate2/zstd crates: --cfg reference_codecs)
+    #[cfg(reference_codecs)]
+    {
+        let s =
+            bench_budget("compress/real-zlib-6", 2.0, 50, || reference::zlib_compress(&data, 6));
+        s.report_mbps(bytes);
+        let comp = reference::zlib_compress(&data, 6);
+        println!("{:40} CR {:.2}", "  (real-zlib-6)", bytes as f64 / comp.len() as f64);
+        let s =
+            bench_budget("compress/real-zstd-3", 2.0, 50, || reference::zstd_compress(&data, 3));
+        s.report_mbps(bytes);
+        let comp = reference::zstd_compress(&data, 3);
+        println!("{:40} CR {:.2}", "  (real-zstd-3)", bytes as f64 / comp.len() as f64);
+    }
+    #[cfg(not(reference_codecs))]
+    println!("reference baselines skipped (build with --cfg reference_codecs)");
 }

@@ -1,10 +1,14 @@
 //! Bench: end-to-end pipeline throughput (the paper's §4.1 scenario) —
-//! full field in, .czb stream out — across tolerance levels, plus the
-//! random-access decompression path with the chunk cache.
+//! full field in, .czb stream out — across tolerance levels, plus
+//! whole-field decompression and the random-access path with the chunk
+//! cache. Emits `BENCH_pipeline.json` (MB/s per stage, ratio, nthreads)
+//! so the perf trajectory is machine-trackable across PRs.
 use cubismz::core::block::Block;
-use cubismz::pipeline::{compress_field, BlockReader, NativeEngine, PipelineConfig};
+use cubismz::pipeline::{
+    compress_field, decompress_field_mt, BlockReader, NativeEngine, PipelineConfig,
+};
 use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
-use cubismz::util::bench::bench_budget;
+use cubismz::util::bench::{bench_budget, write_json, Json};
 use cubismz::util::prng::Pcg32;
 
 fn main() {
@@ -12,13 +16,41 @@ fn main() {
     let sim = CloudSim::new(CloudConfig::paper(n));
     let f = sim.field(Qoi::Pressure, step_to_time(10000));
     let bytes = f.nbytes();
-    println!("bench pipeline_e2e: p at 10k, {n}^3 ({} MB)", bytes / 1_000_000);
+    let nthreads = std::env::var("PIPELINE_E2E_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1usize);
+    println!("bench pipeline_e2e: p at 10k, {n}^3 ({} MB), {nthreads} thread(s)", bytes / 1_000_000);
+    let mut rows = Vec::new();
     for eps in [1e-2f32, 1e-3, 1e-4] {
-        let cfg = PipelineConfig::paper_default(eps);
+        let cfg = PipelineConfig::paper_default(eps).with_threads(nthreads);
         let s = bench_budget(&format!("compress/eps={eps:.0e}"), 2.5, 20, || {
             compress_field(&f, "p", &cfg, &NativeEngine)
         });
         s.report_mbps(bytes);
+        let (stream, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let sd = bench_budget(&format!("decompress/eps={eps:.0e}"), 2.0, 20, || {
+            decompress_field_mt(&stream, &NativeEngine, nthreads).unwrap()
+        });
+        sd.report_mbps(bytes);
+        // per-stage throughput from the pipeline's own timers (seconds are
+        // summed over threads, so this is per-core throughput)
+        let mbps = |secs: f64| {
+            if secs > 0.0 {
+                bytes as f64 / 1e6 / secs
+            } else {
+                0.0
+            }
+        };
+        rows.push(Json::Obj(vec![
+            ("eps".into(), Json::Num(eps as f64)),
+            ("ratio".into(), Json::Num(st.ratio())),
+            ("nchunks".into(), Json::Int(st.nchunks as i64)),
+            ("compress_mbps".into(), Json::Num(bytes as f64 / 1e6 / s.mean)),
+            ("decompress_mbps".into(), Json::Num(bytes as f64 / 1e6 / sd.mean)),
+            ("stage1_mbps_per_core".into(), Json::Num(mbps(st.t_stage1))),
+            ("stage2_mbps_per_core".into(), Json::Num(mbps(st.t_stage2))),
+        ]));
     }
     // random block access through the LRU chunk cache
     let cfg = {
@@ -39,4 +71,19 @@ fn main() {
     });
     s.report();
     println!("  cache: {} hits / {} misses", reader.cache_hits, reader.cache_misses);
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("pipeline_e2e".into())),
+        ("field".into(), Json::Str(format!("p@10k/{n}^3"))),
+        ("raw_bytes".into(), Json::Int(bytes as i64)),
+        ("nthreads".into(), Json::Int(nthreads as i64)),
+        ("rows".into(), Json::Arr(rows)),
+        (
+            "random_block_read_ms".into(),
+            Json::Num(s.mean * 1e3),
+        ),
+    ]);
+    let out = "BENCH_pipeline.json";
+    write_json(out, &doc).expect("write BENCH_pipeline.json");
+    println!("wrote {out}");
 }

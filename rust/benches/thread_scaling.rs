@@ -1,0 +1,114 @@
+//! Bench: compress and whole-field decompress thread scaling on the
+//! paper-default config (W³ai + shuffle + ZLIB, bs=32) over a 256³ smooth
+//! field — the acceptance gauge for the dynamic span-queue scheduler.
+//!
+//! Asserts the scheduler's hard invariants at every thread count (the
+//! `.czb` stream is byte-identical; parallel decode matches serial
+//! bit-for-bit) and reports speedups vs 1 thread; the ≥3x-at-8-threads
+//! throughput target is checked when the host actually has ≥8 hardware
+//! threads. Emits `BENCH_thread_scaling.json`.
+//!
+//! Field side can be overridden with `THREAD_SCALING_N` (divisible by 32).
+use cubismz::core::Field3;
+use cubismz::pipeline::{compress_field, decompress_field_mt, NativeEngine, PipelineConfig};
+use cubismz::util::bench::{bench_budget, write_json, Json};
+use cubismz::util::prng::Pcg32;
+
+fn main() {
+    let n: usize = std::env::var("THREAD_SCALING_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    assert!(n % 32 == 0, "THREAD_SCALING_N must be divisible by 32");
+    let mut rng = Pcg32::new(42);
+    let f = Field3::from_vec(n, n, n, cubismz::util::prop::gen_smooth_field(&mut rng, n));
+    let bytes = f.nbytes();
+    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    println!(
+        "bench thread_scaling: {n}^3 smooth field ({} MB), {hw} hardware threads",
+        bytes / 1_000_000
+    );
+
+    // paper-default 4 MiB chunks at 256^3 and above; shrunk for smoke sizes
+    // so the scheduler still has ~16 spans to hand out (otherwise small
+    // fields collapse to one chunk and the parallel asserts are vacuous)
+    let block_raw = 32 * 32 * 32 * 4 + 4;
+    let chunk_bytes = (bytes / 16).clamp(block_raw, 4 << 20);
+    println!("  chunk_bytes = {chunk_bytes}");
+
+    let mut rows = Vec::new();
+    let mut reference_stream: Option<Vec<u8>> = None;
+    let mut reference_field: Option<Vec<f32>> = None;
+    let (mut c1, mut d1) = (0.0f64, 0.0f64); // 1-thread means
+    let (mut c8, mut d8) = (0.0f64, 0.0f64);
+    for threads in [1usize, 2, 4, 8] {
+        let mut cfg = PipelineConfig::paper_default(1e-3).with_threads(threads);
+        cfg.chunk_bytes = chunk_bytes;
+        let s = bench_budget(&format!("compress/t={threads}"), 3.0, 12, || {
+            compress_field(&f, "p", &cfg, &NativeEngine)
+        });
+        s.report_mbps(bytes);
+        let (stream, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        match &reference_stream {
+            None => reference_stream = Some(stream.clone()),
+            Some(r) => assert_eq!(
+                &stream, r,
+                "compressed stream must be byte-identical across thread counts"
+            ),
+        }
+        let sd = bench_budget(&format!("decompress/t={threads}"), 3.0, 12, || {
+            decompress_field_mt(&stream, &NativeEngine, threads).unwrap()
+        });
+        sd.report_mbps(bytes);
+        let (back, _) = decompress_field_mt(&stream, &NativeEngine, threads).unwrap();
+        let bits: Vec<f32> = back.data;
+        match &reference_field {
+            None => reference_field = Some(bits),
+            Some(r) => assert!(
+                r.iter().zip(&bits).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "parallel decode must match serial bit-for-bit (t={threads})"
+            ),
+        }
+        if threads == 1 {
+            c1 = s.mean;
+            d1 = sd.mean;
+        }
+        if threads == 8 {
+            c8 = s.mean;
+            d8 = sd.mean;
+        }
+        println!(
+            "  t={threads}: compress {:.2}x decompress {:.2}x (ratio {:.2}, {} chunks)",
+            c1 / s.mean,
+            d1 / sd.mean,
+            st.ratio(),
+            st.nchunks
+        );
+        rows.push(Json::Obj(vec![
+            ("threads".into(), Json::Int(threads as i64)),
+            ("compress_mbps".into(), Json::Num(bytes as f64 / 1e6 / s.mean)),
+            ("decompress_mbps".into(), Json::Num(bytes as f64 / 1e6 / sd.mean)),
+            ("compress_speedup".into(), Json::Num(c1 / s.mean)),
+            ("decompress_speedup".into(), Json::Num(d1 / sd.mean)),
+        ]));
+    }
+    let (cs, ds) = (c1 / c8, d1 / d8);
+    println!("scaling-check (8t vs 1t, target >= 3x): compress {cs:.2}x, decompress {ds:.2}x");
+    if hw >= 8 {
+        assert!(
+            cs >= 3.0 && ds >= 3.0,
+            "thread scaling below target on {hw}-thread host: compress {cs:.2}x, decompress {ds:.2}x"
+        );
+    } else {
+        println!("  (only {hw} hardware threads — target not enforced on this host)");
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("thread_scaling".into())),
+        ("field".into(), Json::Str(format!("smooth/{n}^3"))),
+        ("raw_bytes".into(), Json::Int(bytes as i64)),
+        ("hw_threads".into(), Json::Int(hw as i64)),
+        ("rows".into(), Json::Arr(rows)),
+    ]);
+    write_json("BENCH_thread_scaling.json", &doc).expect("write BENCH_thread_scaling.json");
+    println!("wrote BENCH_thread_scaling.json");
+}

@@ -5,7 +5,61 @@
 //! gather). The communication *pattern* is identical to the MPI code:
 //! each rank owns an equal contiguous partition of the block grid and
 //! computes its file offset with an exscan over compressed sizes.
+//!
+//! The node layer's intra-rank parallelism also lives here: a shared
+//! atomic work queue ([`SpanQueue`]) plus a scoped worker pool
+//! ([`run_workers`]) that the compression and decompression pipelines
+//! both pull from, so one scheduling mechanism serves both directions.
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared atomic work queue over an index range `0..total`: workers pull
+/// contiguous spans of `span` indices via a single `fetch_add` cursor.
+/// Spans are fixed by index arithmetic — which worker pulls a given span
+/// is dynamic (work-stealing-style load balance) but the span boundaries
+/// themselves never depend on the worker count, which is what keeps the
+/// compressed stream byte-identical across thread counts.
+pub struct SpanQueue {
+    cursor: AtomicUsize,
+    total: usize,
+    span: usize,
+}
+
+impl SpanQueue {
+    pub fn new(total: usize, span: usize) -> Self {
+        assert!(span > 0, "span must be positive");
+        Self { cursor: AtomicUsize::new(0), total, span }
+    }
+
+    /// Claim the next span; `None` once the range is exhausted.
+    pub fn next_span(&self) -> Option<Range<usize>> {
+        let lo = self.cursor.fetch_add(self.span, Ordering::Relaxed);
+        if lo >= self.total {
+            return None;
+        }
+        Some(lo..(lo + self.span).min(self.total))
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+/// Run `nthreads` scoped workers and collect their results (in worker-id
+/// order). Workers typically drain a shared [`SpanQueue`]; the pool itself
+/// is oblivious to the work shape.
+pub fn run_workers<R: Send>(nthreads: usize, worker: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 {
+        return vec![worker(0)];
+    }
+    std::thread::scope(|s| {
+        let worker = &worker;
+        let handles: Vec<_> = (0..nthreads).map(|t| s.spawn(move || worker(t))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
+    })
+}
 
 /// Communicator over a fixed group of ranks.
 pub trait Comm: Send + Sync {
@@ -205,6 +259,46 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn span_queue_tiles_range_single_threaded() {
+        let q = SpanQueue::new(10, 4);
+        assert_eq!(q.next_span(), Some(0..4));
+        assert_eq!(q.next_span(), Some(4..8));
+        assert_eq!(q.next_span(), Some(8..10));
+        assert_eq!(q.next_span(), None);
+        assert_eq!(q.next_span(), None);
+        assert_eq!(q.total(), 10);
+        // empty range yields nothing
+        assert_eq!(SpanQueue::new(0, 3).next_span(), None);
+    }
+
+    #[test]
+    fn span_queue_covers_each_index_once_under_contention() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let n = 10_000;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let q = SpanQueue::new(n, 7);
+        let pulls = run_workers(8, |_| {
+            let mut count = 0usize;
+            while let Some(span) = q.next_span() {
+                for i in span {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+                count += 1;
+            }
+            count
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(pulls.iter().sum::<usize>(), n.div_ceil(7));
+    }
+
+    #[test]
+    fn run_workers_returns_in_worker_order() {
+        let out = run_workers(4, |t| t * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        assert_eq!(run_workers(1, |t| t + 1), vec![1]);
     }
 
     #[test]

@@ -12,12 +12,15 @@
 //!
 //! The real `flate2` (zlib) and `zstd` crates are wrapped as *reference
 //! baselines* to validate the from-scratch implementations in tests and
-//! benches; they are never used by the pipeline itself.
+//! benches; they are never used by the pipeline itself, and they are only
+//! compiled under `--cfg reference_codecs` (the offline image does not
+//! ship those crates — see `rust/Cargo.toml`).
 pub mod czlib;
 pub mod huffman;
 pub mod lz4lite;
 pub mod lz77;
 pub mod lzmalite;
+#[cfg(reference_codecs)]
 pub mod reference;
 pub mod shuffle;
 

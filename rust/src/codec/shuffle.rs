@@ -2,33 +2,52 @@
 //! regrouping the i-th byte (bit) of every element exposes the "boring"
 //! high-order bytes/sign planes to the downstream lossless coder.
 
-/// Byte shuffle with element size `stride` (4 for f32): output groups all
-/// 0th bytes, then all 1st bytes, ... Trailing bytes (len % stride) are
-/// appended unshuffled.
-pub fn byte_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+/// Byte shuffle into a caller-owned buffer (cleared and resized): output
+/// groups all 0th bytes, then all 1st bytes, ... Trailing bytes
+/// (len % stride) are appended unshuffled. The pipeline hot path reuses
+/// one `out` per worker so the steady state allocates nothing.
+pub fn byte_shuffle_into(data: &[u8], stride: usize, out: &mut Vec<u8>) {
     assert!(stride > 0);
     let n = data.len() / stride;
-    let mut out = Vec::with_capacity(data.len());
+    // resize without clear: every byte below is overwritten (planes + tail),
+    // so a warm buffer skips the redundant zero-fill
+    out.resize(data.len(), 0);
     for s in 0..stride {
-        for i in 0..n {
-            out.push(data[i * stride + s]);
-        }
-    }
-    out.extend_from_slice(&data[n * stride..]);
-    out
-}
-
-/// Inverse of [`byte_shuffle`].
-pub fn byte_unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
-    assert!(stride > 0);
-    let n = data.len() / stride;
-    let mut out = vec![0u8; data.len()];
-    for s in 0..stride {
-        for i in 0..n {
-            out[i * stride + s] = data[s * n + i];
+        let plane = &mut out[s * n..(s + 1) * n];
+        for (i, b) in plane.iter_mut().enumerate() {
+            *b = data[i * stride + s];
         }
     }
     out[n * stride..].copy_from_slice(&data[n * stride..]);
+}
+
+/// Byte shuffle with element size `stride` (4 for f32), allocating.
+pub fn byte_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    byte_shuffle_into(data, stride, &mut out);
+    out
+}
+
+/// Inverse of [`byte_shuffle`] into a caller-owned buffer (cleared and
+/// resized; see [`byte_shuffle_into`] for why).
+pub fn byte_unshuffle_into(data: &[u8], stride: usize, out: &mut Vec<u8>) {
+    assert!(stride > 0);
+    let n = data.len() / stride;
+    // see byte_shuffle_into: every output byte is overwritten below
+    out.resize(data.len(), 0);
+    for s in 0..stride {
+        let plane = &data[s * n..(s + 1) * n];
+        for (i, &b) in plane.iter().enumerate() {
+            out[i * stride + s] = b;
+        }
+    }
+    out[n * stride..].copy_from_slice(&data[n * stride..]);
+}
+
+/// Inverse of [`byte_shuffle`], allocating.
+pub fn byte_unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    byte_unshuffle_into(data, stride, &mut out);
     out
 }
 
@@ -95,6 +114,25 @@ mod tests {
         let data = [1u8, 2, 3, 4, 5, 6, 7, 8];
         let sh = byte_shuffle(&data, 4);
         assert_eq!(sh, [1, 5, 2, 6, 3, 7, 4, 8]);
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers() {
+        // the per-worker buffers arrive dirty and differently sized; the
+        // into-variants must still produce exactly the allocating result
+        let mut rng = Pcg32::new(0xD1127);
+        let mut shuf_buf = vec![0xAAu8; 17];
+        let mut unshuf_buf = vec![0x55u8; 999];
+        for _ in 0..20 {
+            let n = rng.below(5_000) as usize;
+            let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            for stride in [1usize, 3, 4] {
+                byte_shuffle_into(&data, stride, &mut shuf_buf);
+                assert_eq!(shuf_buf, byte_shuffle(&data, stride));
+                byte_unshuffle_into(&shuf_buf, stride, &mut unshuf_buf);
+                assert_eq!(unshuf_buf, data, "stride {stride} n {n}");
+            }
+        }
     }
 
     #[test]

@@ -2,14 +2,15 @@
 //! and the in-situ hook API a simulation embeds (paper §2: "When coupled
 //! with simulation software ... CubismZ serves as a module for in situ
 //! data compression").
+use crate::anyhow;
 use crate::cluster::Comm;
 use crate::core::Field3;
 use crate::io::{h5lite, parallel};
 use crate::metrics::psnr;
 use crate::pipeline::{
-    compress_field, decompress_field, CompressStats, PipelineConfig, WaveletEngine,
+    compress_field, decompress_field_mt, CompressStats, PipelineConfig, WaveletEngine,
 };
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Ex-situ: read a dataset from an h5lite container, compress it, write
@@ -30,13 +31,16 @@ pub fn compress_file(
 
 /// Ex-situ: decompress a `.czb` file back into an h5lite container
 /// (paper: "they can be converted to HDF5 format and visualized").
+/// Whole-field decompression runs chunk-parallel over `nthreads` workers
+/// (paper §2.3 "parallel decompression").
 pub fn decompress_file(
     input: &Path,
     output: &Path,
     engine: &dyn WaveletEngine,
+    nthreads: usize,
 ) -> Result<(String, Field3)> {
     let bytes = std::fs::read(input).with_context(|| format!("reading {}", input.display()))?;
-    let (field, file) = decompress_field(&bytes, engine).map_err(|e| anyhow!(e))?;
+    let (field, file) = decompress_field_mt(&bytes, engine, nthreads).map_err(|e| anyhow!(e))?;
     h5lite::write(output, &[h5lite::Dataset::from_field(&file.name, &field)])?;
     Ok((file.name, field))
 }
@@ -50,7 +54,7 @@ pub fn recompress_file(
     engine: &dyn WaveletEngine,
 ) -> Result<CompressStats> {
     let bytes = std::fs::read(input)?;
-    let (field, file) = decompress_field(&bytes, engine).map_err(|e| anyhow!(e))?;
+    let (field, file) = decompress_field_mt(&bytes, engine, cfg.nthreads).map_err(|e| anyhow!(e))?;
     let (out, stats) = compress_field(&field, &file.name, cfg, engine);
     std::fs::write(output, &out)?;
     Ok(stats)
@@ -65,7 +69,7 @@ pub fn psnr_file(
 ) -> Result<f64> {
     let r = h5lite::read(reference, dataset).map_err(|e| anyhow!(e))?;
     let bytes = std::fs::read(compressed)?;
-    let (d, _) = decompress_field(&bytes, engine).map_err(|e| anyhow!(e))?;
+    let (d, _) = decompress_field_mt(&bytes, engine, 1).map_err(|e| anyhow!(e))?;
     if d.data.len() != r.data.len() {
         return Err(anyhow!("size mismatch: {} vs {}", d.data.len(), r.data.len()));
     }
@@ -134,7 +138,7 @@ mod tests {
         let p = psnr_file(&h5, "p", &czb, &NativeEngine).unwrap();
         assert!(p > 50.0, "psnr {p}");
         let out = tmp("p_out.h5l");
-        let (name, field) = decompress_file(&czb, &out, &NativeEngine).unwrap();
+        let (name, field) = decompress_file(&czb, &out, &NativeEngine, 2).unwrap();
         assert_eq!(name, "p");
         assert_eq!(field.nx, 64);
         // the decompressed container reads back
@@ -176,7 +180,7 @@ mod tests {
         let file = std::fs::read(&path).unwrap();
         assert_eq!(&file[..4], b"CZBS");
         // payload after the global header is a valid czb stream
-        let (field, czb) = decompress_field(&file[8..], &NativeEngine).unwrap();
+        let (field, czb) = decompress_field_mt(&file[8..], &NativeEngine, 2).unwrap();
         assert_eq!(czb.name, "a2");
         let p = psnr(&f.data, &field.data);
         assert!(p > 40.0, "psnr {p}");

@@ -2,8 +2,9 @@
 //! datasets, compress/decompress/recompress quantities, inspect streams,
 //! and measure PSNR. (The CLI is hand-rolled; the offline image has no
 //! clap.)
-use anyhow::{anyhow, Result};
+use cubismz::anyhow;
 use cubismz::codec::Codec;
+use cubismz::util::error::Result;
 use cubismz::coordinator;
 use cubismz::core::FieldStats;
 use cubismz::io::h5lite;
@@ -62,6 +63,15 @@ impl Args {
     }
 }
 
+/// `--threads` flag with `default` when absent; 0 means all cores. Safe to
+/// auto-thread: the compressed stream is thread-count independent.
+fn threads_of(args: &Args, default: usize) -> Result<usize> {
+    Ok(match args.num("threads", default)? {
+        0 => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        n => n,
+    })
+}
+
 fn engine_of(args: &Args) -> Result<Box<dyn WaveletEngine>> {
     match args.get("engine").unwrap_or("native") {
         "native" => Ok(Box::new(NativeEngine)),
@@ -107,7 +117,7 @@ fn config_of(args: &Args) -> Result<PipelineConfig> {
     if args.flag("shuffle") {
         cfg.shuffle = ShuffleMode::Byte4;
     }
-    cfg.nthreads = args.num("threads", 1usize)?;
+    cfg.nthreads = threads_of(args, 1)?;
     cfg.chunk_bytes = args.num("chunk-bytes", 4usize << 20)?;
     Ok(cfg)
 }
@@ -170,10 +180,11 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     let out = PathBuf::from(args.req("out")?);
     let engine = engine_of(args)?;
+    let nthreads = threads_of(args, 0)?;
     let t = std::time::Instant::now();
-    let (name, field) = coordinator::decompress_file(&input, &out, engine.as_ref())?;
+    let (name, field) = coordinator::decompress_file(&input, &out, engine.as_ref(), nthreads)?;
     println!(
-        "{} ({}x{}x{}) -> {} ({:.3}s)",
+        "{} ({}x{}x{}) -> {} ({:.3}s, {nthreads} threads)",
         name,
         field.nx,
         field.ny,
@@ -231,8 +242,8 @@ USAGE: czb <command> [flags]
   compress    --in f.h5l --dataset NAME --out f.czb [--scheme wavelet|zfp|sz|fpzip|copy]
               [--wavelet w4|w4l|w3a] [--eps 1e-3] [--prec 24] [--zbits N] [--coeff none|fpzip|sz|spdp]
               [--stage2 zlib|zlib-best|lz4|zstd|lzma|none] [--shuffle] [--bs 32]
-              [--threads N] [--engine native|pjrt]
-  decompress  --in f.czb --out f.h5l [--engine native|pjrt]
+              [--threads N (0 = all cores)] [--engine native|pjrt]
+  decompress  --in f.czb --out f.h5l [--engine native|pjrt] [--threads N (0 = all cores)]
   recompress  --in f.czb --out g.czb [same flags as compress]
   info        --in f.czb
   psnr        --ref f.h5l --dataset NAME --in f.czb"

@@ -1,11 +1,25 @@
 //! Substage-1 + substage-2 compression of a whole field (paper Fig. 1).
 //!
-//! Node-layer behaviour: every worker thread owns a private buffer
-//! (default 4 MiB); it processes one block at a time (stage 1) into that
-//! buffer and, when full, runs stage 2 (shuffle + lossless codec) over it
-//! and appends the result to its chunk list. The cluster layer then
-//! concatenates all chunks into a single stream per quantity.
+//! Node-layer behaviour: worker threads pull contiguous spans of blocks
+//! off a shared atomic work queue ([`crate::cluster::SpanQueue`]) —
+//! dynamic chunk-granular scheduling instead of one static range per
+//! thread, so a straggler can no longer serialize the tail of the field.
+//! Each span holds ~`chunk_bytes` worth of raw blocks; the worker runs
+//! stage 1 (transform + ε-encode) block by block into its private buffer
+//! and stage 2 (shuffle + lossless codec) over each filled buffer,
+//! emitting one chunk per span (plus deterministic mid-span seals if the
+//! encoded stream outgrows the budget).
+//!
+//! Two invariants the scheduler maintains:
+//! * **Determinism** — span boundaries are fixed by block-id arithmetic,
+//!   never by which worker arrived first, so the serialized `.czb` stream
+//!   is byte-identical for every thread count.
+//! * **Allocation-free steady state** — every worker owns its scratch
+//!   (batch buffer, block gather, encode scratch, shuffle buffer) and the
+//!   wavelet transform uses a thread-local line pool; the per-block loop
+//!   performs no heap allocation.
 use super::format::{ChunkEntry, CoeffCodec, CzbFile, ShuffleMode, Stage1};
+use crate::cluster::{self, SpanQueue};
 use crate::codec::{shuffle, Codec};
 use crate::core::block::{Block, BlockGrid};
 use crate::core::{Field3, FieldStats};
@@ -45,6 +59,8 @@ pub struct PipelineConfig {
     pub stage2: Codec,
     pub shuffle: ShuffleMode,
     /// Private per-thread buffer capacity before stage 2 runs (paper: 4 MB).
+    /// Also the scheduling granularity: workers pull `chunk_bytes` worth
+    /// of raw blocks per queue operation.
     pub chunk_bytes: usize,
     /// Blocks per engine batch (matches the PJRT executable's batch dim).
     pub batch: usize,
@@ -107,6 +123,18 @@ impl CompressStats {
     }
 }
 
+/// Per-worker scratch for [`encode_block_payload`], reused across blocks
+/// so the coeff-codec path allocates nothing in the steady state.
+#[derive(Default)]
+struct EncodeScratch {
+    /// plain wavelet encoding before coeff-codec recompression
+    wav: Vec<u8>,
+    /// f32 view of the detail-coefficient payload
+    coeffs: Vec<f32>,
+    /// coeff-codec compressed bytes
+    cbuf: Vec<u8>,
+}
+
 /// Encode one already-transformed (if wavelet) block into `out` with its
 /// u32 size prefix.
 fn encode_block_payload(
@@ -115,6 +143,7 @@ fn encode_block_payload(
     bs: usize,
     eps_abs: f32,
     out: &mut Vec<u8>,
+    scratch: &mut EncodeScratch,
 ) {
     let start = out.len();
     out.extend_from_slice(&[0u8; 4]);
@@ -131,41 +160,52 @@ fn encode_block_payload(
                     wavelet::encode_block(block, bs, levels, eps_abs, zbits as u32, out);
                 }
                 _ => {
-                    // encode to a scratch, then recompress the f32
-                    // coefficient payload with the chosen FP compressor
-                    let mut scratch = Vec::new();
-                    wavelet::encode_block(block, bs, levels, eps_abs, zbits as u32, &mut scratch);
+                    // encode to the reusable scratch, then recompress the
+                    // f32 coefficient payload with the chosen FP compressor
+                    scratch.wav.clear();
+                    wavelet::encode_block(
+                        block,
+                        bs,
+                        levels,
+                        eps_abs,
+                        zbits as u32,
+                        &mut scratch.wav,
+                    );
                     let vol = bs * bs * bs;
                     let head = 4 + vol / 8; // nsig + mask
-                    let coeffs: Vec<f32> = scratch[head..]
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    out.extend_from_slice(&scratch[..head]);
-                    let mut cbuf = Vec::new();
+                    scratch.coeffs.clear();
+                    scratch.coeffs.extend(
+                        scratch.wav[head..]
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+                    );
+                    out.extend_from_slice(&scratch.wav[..head]);
+                    let coeffs = &scratch.coeffs;
+                    let cbuf = &mut scratch.cbuf;
+                    cbuf.clear();
                     match coeff {
                         CoeffCodec::Fpzip => fpc::fpzip::compress(
-                            &coeffs,
+                            coeffs,
                             Dims3 { nx: coeffs.len().max(1), ny: 1, nz: 1 },
                             32,
-                            &mut cbuf,
+                            cbuf,
                         ),
                         CoeffCodec::Sz => {
                             // bound well below the threshold so stage-1 loss
                             // dominates (PSNR unaffected, as in the paper)
                             let eb = (eps_abs * 1e-3).max(f32::MIN_POSITIVE);
                             fpc::sz::compress(
-                                &coeffs,
+                                coeffs,
                                 Dims3 { nx: coeffs.len().max(1), ny: 1, nz: 1 },
                                 eb,
-                                &mut cbuf,
+                                cbuf,
                             )
                         }
-                        CoeffCodec::Spdp => fpc::spdp::compress(&coeffs, &mut cbuf),
+                        CoeffCodec::Spdp => fpc::spdp::compress(coeffs, cbuf),
                         CoeffCodec::None => unreachable!(),
                     }
                     out.extend_from_slice(&(cbuf.len() as u32).to_le_bytes());
-                    out.extend_from_slice(&cbuf);
+                    out.extend_from_slice(cbuf);
                 }
             }
         }
@@ -190,6 +230,13 @@ pub fn eps_abs_of(stage1: &Stage1, range: f32) -> f32 {
     }
 }
 
+/// Raw blocks-per-span for the scheduler: ~`chunk_bytes` of raw field data
+/// (block payload + u32 size prefix). Thread-count independent by design.
+pub(crate) fn blocks_per_span(bs: usize, chunk_bytes: usize) -> usize {
+    let block_raw = bs * bs * bs * 4 + 4;
+    (chunk_bytes / block_raw).max(1)
+}
+
 struct ThreadChunk {
     first_block: u32,
     nblocks: u32,
@@ -197,25 +244,26 @@ struct ThreadChunk {
     payload: Vec<u8>,
 }
 
-/// Seal a private buffer into a compressed chunk.
+/// Seal a private buffer into a compressed chunk. `shuf` is the worker's
+/// reusable shuffle buffer.
 fn seal_chunk(
     raw: &mut Vec<u8>,
     first_block: u32,
     nblocks: u32,
     shuffle_mode: ShuffleMode,
     stage2: Codec,
+    shuf: &mut Vec<u8>,
     chunks: &mut Vec<ThreadChunk>,
 ) {
     if nblocks == 0 {
         return;
     }
     let rawsize = raw.len() as u32;
-    let shuffled;
     let to_compress: &[u8] = match shuffle_mode {
         ShuffleMode::None => raw,
         ShuffleMode::Byte4 => {
-            shuffled = shuffle::byte_shuffle(raw, 4);
-            &shuffled
+            shuffle::byte_shuffle_into(raw, 4, shuf);
+            shuf
         }
     };
     let payload = stage2.compress_vec(to_compress);
@@ -224,6 +272,7 @@ fn seal_chunk(
 }
 
 /// Compress a whole field. Returns the serialized `.czb` bytes + stats.
+/// The output is byte-identical for every `cfg.nthreads`.
 pub fn compress_field(
     field: &Field3,
     name: &str,
@@ -235,34 +284,21 @@ pub fn compress_field(
     let eps_abs = eps_abs_of(&cfg.stage1, range);
     let grid = BlockGrid::new(field, cfg.bs);
     let nblocks = grid.nblocks();
-    let nthreads = cfg.nthreads.max(1).min(nblocks.max(1));
 
-    // static schedule with contiguous spans (paper: static, large chunks)
-    let span = nblocks.div_ceil(nthreads);
-    let mut all_chunks: Vec<Vec<ThreadChunk>> = Vec::new();
-    let mut t1_total = 0.0f64;
-    let mut t2_total = 0.0f64;
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for t in 0..nthreads {
-            let lo = t * span;
-            let hi = ((t + 1) * span).min(nblocks);
-            let grid = &grid;
-            let cfg2 = *cfg;
-            handles.push(s.spawn(move || {
-                worker(field, grid, lo, hi, &cfg2, eps_abs, engine)
-            }));
-        }
-        for h in handles {
-            let (chunks, t1, t2) = h.join().expect("compression worker panicked");
-            all_chunks.push(chunks);
-            t1_total += t1;
-            t2_total += t2;
-        }
-    });
+    // dynamic chunk-granular schedule over the shared atomic queue
+    let queue = SpanQueue::new(nblocks, blocks_per_span(cfg.bs, cfg.chunk_bytes));
+    let nthreads = cfg.nthreads.max(1).min(nblocks.max(1));
+    let results =
+        cluster::run_workers(nthreads, |_| worker(field, &grid, &queue, cfg, eps_abs, engine));
 
     // merge in block order and build the index
-    let mut merged: Vec<ThreadChunk> = all_chunks.into_iter().flatten().collect();
+    let mut merged: Vec<ThreadChunk> = Vec::new();
+    let (mut t1_total, mut t2_total) = (0.0f64, 0.0f64);
+    for (chunks, t1, t2) in results {
+        merged.extend(chunks);
+        t1_total += t1;
+        t2_total += t2;
+    }
     merged.sort_by_key(|c| c.first_block);
     let mut chunks = Vec::with_capacity(merged.len());
     let name_len = name.len();
@@ -312,8 +348,7 @@ pub fn compress_field(
 fn worker(
     field: &Field3,
     grid: &BlockGrid,
-    lo: usize,
-    hi: usize,
+    queue: &SpanQueue,
     cfg: &PipelineConfig,
     eps_abs: f32,
     engine: &dyn WaveletEngine,
@@ -327,44 +362,70 @@ fn worker(
         _ => WaveletKind::Avg3,
     };
     let batch = if is_wavelet { cfg.batch.max(1) } else { 1 };
+    // worker-owned scratch, allocated once; the per-block loop below
+    // performs no further heap allocation
     let mut batch_buf = vec![0f32; batch * vol];
     let mut raw: Vec<u8> = Vec::with_capacity(cfg.chunk_bytes + vol * 4 + 64);
-    let mut chunks = Vec::new();
-    let mut chunk_first = lo as u32;
-    let mut chunk_count = 0u32;
+    let mut shuf: Vec<u8> = Vec::new();
+    let mut scratch = EncodeScratch::default();
     let mut scratch_block = Block::zeros(bs);
+    let mut chunks = Vec::new();
     let mut t1 = 0.0f64;
     let mut t2 = 0.0f64;
-    let mut id = lo;
-    while id < hi {
-        let n = batch.min(hi - id);
-        let t = std::time::Instant::now();
-        for j in 0..n {
-            grid.extract(field, id + j, &mut scratch_block);
-            batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
-        }
-        if is_wavelet {
-            engine.forward_batch(wkind, &mut batch_buf[..n * vol], bs, levels);
-        }
-        for j in 0..n {
-            encode_block_payload(&cfg.stage1, &batch_buf[j * vol..(j + 1) * vol], bs, eps_abs, &mut raw);
-            chunk_count += 1;
-            if raw.len() >= cfg.chunk_bytes {
-                t1 += t.elapsed().as_secs_f64();
-                let t2s = std::time::Instant::now();
-                seal_chunk(&mut raw, chunk_first, chunk_count, cfg.shuffle, cfg.stage2, &mut chunks);
-                t2 += t2s.elapsed().as_secs_f64();
-                chunk_first = (id + j + 1) as u32;
-                chunk_count = 0;
-                // restart stage-1 timing for the rest of the batch
+    while let Some(span) = queue.next_span() {
+        let (lo, hi) = (span.start, span.end);
+        let mut chunk_first = lo as u32;
+        let mut chunk_count = 0u32;
+        let mut id = lo;
+        while id < hi {
+            let n = batch.min(hi - id);
+            let mut t = std::time::Instant::now();
+            for j in 0..n {
+                grid.extract(field, id + j, &mut scratch_block);
+                batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
             }
+            if is_wavelet {
+                engine.forward_batch(wkind, &mut batch_buf[..n * vol], bs, levels);
+            }
+            for j in 0..n {
+                encode_block_payload(
+                    &cfg.stage1,
+                    &batch_buf[j * vol..(j + 1) * vol],
+                    bs,
+                    eps_abs,
+                    &mut raw,
+                    &mut scratch,
+                );
+                chunk_count += 1;
+                if raw.len() >= cfg.chunk_bytes {
+                    t1 += t.elapsed().as_secs_f64();
+                    let t2s = std::time::Instant::now();
+                    seal_chunk(
+                        &mut raw,
+                        chunk_first,
+                        chunk_count,
+                        cfg.shuffle,
+                        cfg.stage2,
+                        &mut shuf,
+                        &mut chunks,
+                    );
+                    t2 += t2s.elapsed().as_secs_f64();
+                    chunk_first = (id + j + 1) as u32;
+                    chunk_count = 0;
+                    // restart the stage-1 clock: the seal already accounted
+                    // for the elapsed stage-1 time (the seed double-counted
+                    // it at batch end)
+                    t = std::time::Instant::now();
+                }
+            }
+            t1 += t.elapsed().as_secs_f64();
+            id += n;
         }
-        t1 += t.elapsed().as_secs_f64();
-        id += n;
+        // chunk boundaries never cross spans: seal the remainder
+        let t2s = std::time::Instant::now();
+        seal_chunk(&mut raw, chunk_first, chunk_count, cfg.shuffle, cfg.stage2, &mut shuf, &mut chunks);
+        t2 += t2s.elapsed().as_secs_f64();
     }
-    let t2s = std::time::Instant::now();
-    seal_chunk(&mut raw, chunk_first, chunk_count, cfg.shuffle, cfg.stage2, &mut chunks);
-    t2 += t2s.elapsed().as_secs_f64();
     (chunks, t1, t2)
 }
 
@@ -413,6 +474,21 @@ mod tests {
     }
 
     #[test]
+    fn output_is_byte_identical_across_thread_counts() {
+        // the span queue fixes chunk boundaries by block-id arithmetic, so
+        // scheduling must never leak into the stream
+        let f = smooth_field(64, 21);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 32 << 10; // several spans, so pulls interleave
+        let (base, st) = compress_field(&f, "p", &cfg.with_threads(1), &NativeEngine);
+        assert!(st.nchunks > 1, "need a multi-chunk stream for this test");
+        for nthreads in [2usize, 3, 8] {
+            let (bytes, _) = compress_field(&f, "p", &cfg.with_threads(nthreads), &NativeEngine);
+            assert_eq!(bytes, base, "nthreads {nthreads}");
+        }
+    }
+
+    #[test]
     fn small_chunk_budget_makes_many_chunks() {
         let f = smooth_field(64, 3);
         let mut cfg = PipelineConfig::paper_default(1e-4);
@@ -443,5 +519,24 @@ mod tests {
             assert!(bytes.len() > 32, "{stage1:?}");
             assert!(st.compressed_bytes == bytes.len());
         }
+    }
+
+    #[test]
+    fn stage_timers_sum_sanely() {
+        // regression for the stage-1 double-count: on a single thread the
+        // per-stage times cannot exceed the end-to-end wall time
+        let f = smooth_field(64, 5);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 16 << 10; // force mid-batch seals
+        let t = std::time::Instant::now();
+        let (_, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let wall = t.elapsed().as_secs_f64();
+        assert!(
+            st.t_stage1 + st.t_stage2 <= wall * 1.05 + 1e-3,
+            "stage1 {} + stage2 {} vs wall {}",
+            st.t_stage1,
+            st.t_stage2,
+            wall
+        );
     }
 }

@@ -1,9 +1,20 @@
 //! Parallel decompression (paper §2.3 "Data decompression"): fetch the
 //! chunk containing the target block, stage-2 inflate it (LRU-cached),
-//! then stage-1 decode the block. Whole-field decompression walks all
-//! chunks; random access via [`BlockReader::read_block`].
+//! then stage-1 decode the block.
+//!
+//! Two access paths:
+//! * **Random access** via [`BlockReader::read_block`] — LRU chunk cache
+//!   whose buffers are recycled on eviction, so a warm reader decodes
+//!   chunks without reallocating.
+//! * **Whole-field** via [`decompress_field_mt`] — chunks are pulled off
+//!   the same shared atomic work queue the compressor uses
+//!   ([`crate::cluster::SpanQueue`]); each worker inflates and decodes
+//!   its chunks into worker-owned buffers and scatters the blocks into
+//!   the output field (disjoint by construction, validated up front).
+//!   The serial [`decompress_field`] remains bit-identical to it.
 use super::compressor::{eps_abs_of, WaveletEngine};
 use super::format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};
+use crate::cluster::{self, SpanQueue};
 use crate::codec::shuffle;
 use crate::core::block::{Block, BlockGrid};
 use crate::core::Field3;
@@ -20,10 +31,28 @@ struct DecodedChunk {
     first_block: u32,
 }
 
-fn decode_chunk(file: &CzbFile, payload: &[u8], idx: usize) -> Result<DecodedChunk, String> {
+/// Stage-2 decode chunk `idx` into reusable buffers: `tmp` holds the
+/// inflated stream when unshuffling is needed, `raw` ends up with the
+/// (unshuffled) raw block stream and `offsets` with the per-block
+/// (offset, size) pairs. Allocation-free once the buffers are warm.
+fn decode_chunk_into(
+    file: &CzbFile,
+    payload: &[u8],
+    idx: usize,
+    tmp: &mut Vec<u8>,
+    raw: &mut Vec<u8>,
+    offsets: &mut Vec<(usize, usize)>,
+) -> Result<(), String> {
     let entry = &file.chunks[idx];
-    let mut raw = Vec::with_capacity(entry.rawsize as usize);
-    file.stage2.decompress(payload, &mut raw)?;
+    raw.clear();
+    match file.shuffle {
+        ShuffleMode::None => file.stage2.decompress(payload, raw)?,
+        ShuffleMode::Byte4 => {
+            tmp.clear();
+            file.stage2.decompress(payload, tmp)?;
+            shuffle::byte_unshuffle_into(tmp, 4, raw);
+        }
+    }
     if raw.len() != entry.rawsize as usize {
         return Err(format!(
             "chunk {idx}: raw size {} != index {}",
@@ -31,12 +60,8 @@ fn decode_chunk(file: &CzbFile, payload: &[u8], idx: usize) -> Result<DecodedChu
             entry.rawsize
         ));
     }
-    let raw = match file.shuffle {
-        ShuffleMode::None => raw,
-        ShuffleMode::Byte4 => shuffle::byte_unshuffle(&raw, 4),
-    };
     // walk the u32 size prefixes
-    let mut block_offsets = Vec::with_capacity(entry.nblocks as usize);
+    offsets.clear();
     let mut pos = 0usize;
     for _ in 0..entry.nblocks {
         if raw.len() < pos + 4 {
@@ -47,17 +72,19 @@ fn decode_chunk(file: &CzbFile, payload: &[u8], idx: usize) -> Result<DecodedChu
         if raw.len() < pos + size {
             return Err("chunk truncated inside block".into());
         }
-        block_offsets.push((pos, size));
+        offsets.push((pos, size));
         pos += size;
     }
-    Ok(DecodedChunk { raw, block_offsets, first_block: entry.first_block })
+    Ok(())
 }
 
-/// Decode one stage-1 block payload into bs³ floats.
+/// Decode one stage-1 block payload into bs³ floats. `plain` is reusable
+/// scratch for the coeff-codec reassembly path.
 fn decode_block_payload(
     file: &CzbFile,
     payload: &[u8],
     engine: &dyn WaveletEngine,
+    plain: &mut Vec<u8>,
     out: &mut [f32],
 ) -> Result<(), String> {
     let bs = file.bs as usize;
@@ -98,12 +125,12 @@ fn decode_block_payload(
                         CoeffCodec::None => unreachable!(),
                     };
                     // reassemble the plain encoding and decode it
-                    let mut plain = Vec::with_capacity(head + coeffs.len() * 4);
+                    plain.clear();
                     plain.extend_from_slice(&payload[..head]);
                     for v in &coeffs {
                         plain.extend_from_slice(&v.to_le_bytes());
                     }
-                    wavelet::decode_block(&plain, bs, out)?;
+                    wavelet::decode_block(plain, bs, out)?;
                 }
             }
             engine.inverse_batch(kind, out, bs, levels);
@@ -133,8 +160,56 @@ fn decode_block_payload(
     Ok(())
 }
 
+/// Build the block grid for a parsed file, rejecting (rather than
+/// panicking on) inconsistent headers.
+fn grid_for(file: &CzbFile, field: &Field3) -> Result<BlockGrid, String> {
+    let bs = file.bs as usize;
+    if bs < 4 || !bs.is_power_of_two() {
+        return Err(format!("bad block size {bs}"));
+    }
+    if field.nx % bs != 0 || field.ny % bs != 0 || field.nz % bs != 0 {
+        return Err(format!(
+            "dims {}x{}x{} not divisible by block size {bs}",
+            field.nx, field.ny, field.nz
+        ));
+    }
+    let grid = BlockGrid::new(field, bs);
+    if grid.nblocks() != file.nblocks as usize {
+        return Err(format!(
+            "header nblocks {} != grid {}",
+            file.nblocks,
+            grid.nblocks()
+        ));
+    }
+    Ok(grid)
+}
+
+/// Check that the chunk index tiles `0..nblocks` exactly — the invariant
+/// the compressor guarantees and the parallel decoder's disjoint-write
+/// safety relies on.
+fn validate_chunk_index(file: &CzbFile) -> Result<(), String> {
+    let mut next = 0u32;
+    for (i, c) in file.chunks.iter().enumerate() {
+        if c.first_block != next {
+            return Err(format!(
+                "chunk {i}: first_block {} != expected {next}",
+                c.first_block
+            ));
+        }
+        next = next
+            .checked_add(c.nblocks)
+            .ok_or_else(|| "chunk block count overflow".to_string())?;
+    }
+    if next != file.nblocks {
+        return Err(format!("chunks cover {next} of {} blocks", file.nblocks));
+    }
+    Ok(())
+}
+
 /// Random-access block reader with an LRU chunk cache (paper: "we keep
-/// recently decompressed chunks of blocks in a cache").
+/// recently decompressed chunks of blocks in a cache"). Buffers of
+/// evicted chunks are recycled into the next decode, so a warm reader
+/// allocates nothing per miss.
 pub struct BlockReader<'a> {
     pub file: CzbFile,
     payload: &'a [u8],
@@ -143,6 +218,12 @@ pub struct BlockReader<'a> {
     cache: HashMap<usize, Arc<DecodedChunk>>,
     lru: Vec<usize>,
     capacity: usize,
+    /// stage-2 inflate scratch shared by all chunk decodes on this reader
+    inflate_tmp: Vec<u8>,
+    /// buffers reclaimed from the most recently evicted chunk
+    spare: Option<(Vec<u8>, Vec<(usize, usize)>)>,
+    /// coeff-codec reassembly scratch
+    plain_tmp: Vec<u8>,
     /// Cache statistics: (hits, misses).
     pub cache_hits: usize,
     pub cache_misses: usize,
@@ -159,6 +240,9 @@ impl<'a> BlockReader<'a> {
             cache: HashMap::new(),
             lru: Vec::new(),
             capacity: 8,
+            inflate_tmp: Vec::new(),
+            spare: None,
+            plain_tmp: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
         })
@@ -195,18 +279,40 @@ impl<'a> BlockReader<'a> {
             return Ok(c);
         }
         self.cache_misses += 1;
-        let entry = &self.file.chunks[idx];
+        let entry = self.file.chunks[idx];
         let lo = entry.offset as usize;
-        let hi = lo + entry.csize as usize;
+        let hi = lo
+            .checked_add(entry.csize as usize)
+            .ok_or("chunk offset overflow")?;
         if self.payload.len() < hi {
             return Err("payload truncated".into());
         }
         let _ = self.header_len;
-        let decoded = Arc::new(decode_chunk(&self.file, &self.payload[lo..hi], idx)?);
+        // decode first (into buffers recycled from the previous eviction),
+        // so a corrupt chunk never costs a healthy cached one
+        let (mut raw, mut offsets) = self.spare.take().unwrap_or_default();
+        if let Err(e) = decode_chunk_into(
+            &self.file,
+            &self.payload[lo..hi],
+            idx,
+            &mut self.inflate_tmp,
+            &mut raw,
+            &mut offsets,
+        ) {
+            self.spare = Some((raw, offsets));
+            return Err(e);
+        }
         if self.lru.len() >= self.capacity {
             let evict = self.lru.remove(0);
-            self.cache.remove(&evict);
+            if let Some(old) = self.cache.remove(&evict) {
+                // sole owner -> recycle its buffers for the next miss
+                if let Ok(old) = Arc::try_unwrap(old) {
+                    self.spare = Some((old.raw, old.block_offsets));
+                }
+            }
         }
+        let decoded =
+            Arc::new(DecodedChunk { raw, block_offsets: offsets, first_block: entry.first_block });
         self.cache.insert(idx, decoded.clone());
         self.lru.push(idx);
         Ok(decoded)
@@ -220,14 +326,53 @@ impl<'a> BlockReader<'a> {
         let cidx = self.chunk_of_block(block_id)?;
         let chunk = self.get_chunk(cidx)?;
         let local = (block_id - chunk.first_block) as usize;
+        if local >= chunk.block_offsets.len() {
+            return Err(format!("block {block_id} missing from its chunk"));
+        }
         let (off, size) = chunk.block_offsets[local];
         let engine = self.engine;
-        let file = &self.file;
-        decode_block_payload(file, &chunk.raw[off..off + size], engine, out)
+        decode_block_payload(&self.file, &chunk.raw[off..off + size], engine, &mut self.plain_tmp, out)
     }
 }
 
-/// Decompress the whole field from serialized `.czb` bytes.
+/// Raw pointer to the output field for disjoint parallel block scatters.
+/// SAFETY: senders must guarantee each block id is written by exactly one
+/// worker ([`validate_chunk_index`] + the span queue's disjoint pulls).
+struct FieldWriter {
+    ptr: *mut f32,
+    nx: usize,
+    ny: usize,
+    len: usize,
+}
+
+unsafe impl Send for FieldWriter {}
+unsafe impl Sync for FieldWriter {}
+
+impl FieldWriter {
+    /// # Safety
+    /// `id` must be in range for `grid`, `block` must hold bs³ values, and
+    /// no other thread may write the same block concurrently.
+    unsafe fn insert_block(&self, grid: &BlockGrid, id: usize, block: &[f32]) {
+        let bs = grid.bs;
+        debug_assert_eq!(block.len(), bs * bs * bs);
+        let bi = grid.block_index(id);
+        let (x0, y0, z0) = (bi.bx * bs, bi.by * bs, bi.bz * bs);
+        for z in 0..bs {
+            for y in 0..bs {
+                let dst = ((z0 + z) * self.ny + (y0 + y)) * self.nx + x0;
+                debug_assert!(dst + bs <= self.len);
+                std::ptr::copy_nonoverlapping(
+                    block.as_ptr().add((z * bs + y) * bs),
+                    self.ptr.add(dst),
+                    bs,
+                );
+            }
+        }
+    }
+}
+
+/// Decompress the whole field from serialized `.czb` bytes (serial path;
+/// bit-identical to [`decompress_field_mt`]).
 pub fn decompress_field(
     bytes: &[u8],
     engine: &dyn WaveletEngine,
@@ -236,11 +381,85 @@ pub fn decompress_field(
     let file = reader.file.clone();
     let bs = file.bs as usize;
     let mut field = Field3::zeros(file.nx as usize, file.ny as usize, file.nz as usize);
-    let grid = BlockGrid::new(&field, bs);
+    let grid = grid_for(&file, &field)?;
     let mut block = Block::zeros(bs);
     for id in 0..file.nblocks {
         reader.read_block(id, &mut block.data)?;
         grid.insert(&mut field, id as usize, &block);
+    }
+    Ok((field, file))
+}
+
+/// Whole-field decompression parallelized across chunks over `nthreads`
+/// workers (paper §2.3 "parallel decompression"). Every worker owns its
+/// inflate/decode buffers (allocation-free steady state) and scatters
+/// finished blocks straight into the shared output field — block writes
+/// are disjoint because the chunk index tiles the block range (validated)
+/// and the queue hands each chunk to exactly one worker.
+pub fn decompress_field_mt(
+    bytes: &[u8],
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+) -> Result<(Field3, CzbFile), String> {
+    let (file, _header_len) = CzbFile::parse_header(bytes)?;
+    let nchunks = file.chunks.len();
+    let nthreads = nthreads.max(1).min(nchunks.max(1));
+    if nthreads <= 1 {
+        return decompress_field(bytes, engine);
+    }
+    validate_chunk_index(&file)?;
+    let mut field = Field3::zeros(file.nx as usize, file.ny as usize, file.nz as usize);
+    // grid_for validates bs before anything cubes it
+    let grid = grid_for(&file, &field)?;
+    let bs = file.bs as usize;
+    let vol = bs * bs * bs;
+    let writer = FieldWriter {
+        ptr: field.data.as_mut_ptr(),
+        nx: field.nx,
+        ny: field.ny,
+        len: field.data.len(),
+    };
+    let queue = SpanQueue::new(nchunks, 1);
+    let results: Vec<Result<(), String>> = cluster::run_workers(nthreads, |_| {
+        // worker-owned scratch: warm after the first chunk
+        let mut tmp: Vec<u8> = Vec::new();
+        let mut raw: Vec<u8> = Vec::new();
+        let mut offsets: Vec<(usize, usize)> = Vec::new();
+        let mut plain: Vec<u8> = Vec::new();
+        let mut block = vec![0f32; vol];
+        while let Some(span) = queue.next_span() {
+            for cidx in span {
+                let entry = file.chunks[cidx];
+                let lo = entry.offset as usize;
+                let hi = lo
+                    .checked_add(entry.csize as usize)
+                    .ok_or_else(|| "chunk offset overflow".to_string())?;
+                if bytes.len() < hi {
+                    return Err("payload truncated".to_string());
+                }
+                decode_chunk_into(&file, &bytes[lo..hi], cidx, &mut tmp, &mut raw, &mut offsets)?;
+                for (j, &(off, size)) in offsets.iter().enumerate() {
+                    decode_block_payload(
+                        &file,
+                        &raw[off..off + size],
+                        engine,
+                        &mut plain,
+                        &mut block,
+                    )?;
+                    // SAFETY: validate_chunk_index proved chunks tile
+                    // 0..nblocks disjointly and each chunk is pulled by
+                    // exactly one worker, so this block id is written
+                    // exactly once and lies inside the field buffer.
+                    unsafe {
+                        writer.insert_block(&grid, entry.first_block as usize + j, &block)
+                    };
+                }
+            }
+        }
+        Ok(())
+    });
+    for r in results {
+        r?;
     }
     Ok((field, file))
 }
@@ -339,7 +558,8 @@ mod tests {
         let grid = crate::core::block::BlockGrid::new(&f, bs);
         let mut blk = vec![0f32; bs * bs * bs];
         let mut expected = crate::core::block::Block::zeros(bs);
-        // access in a scattered order to exercise the cache
+        // access in a scattered order to exercise the cache (and its
+        // buffer recycling on eviction)
         let order: Vec<u32> = (0..file.nblocks).rev().chain(0..file.nblocks).collect();
         for id in order {
             reader.read_block(id, &mut blk).unwrap();
@@ -347,6 +567,28 @@ mod tests {
             assert_eq!(blk, expected.data, "block {id}");
         }
         assert!(reader.cache_hits > 0);
+        assert!(reader.cache_misses > 2, "eviction path must have run");
+    }
+
+    #[test]
+    fn parallel_whole_field_decode_matches_serial() {
+        let f = smooth_field(96, 31); // 27 blocks at bs=32
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 256 << 10; // 2-block spans -> 14 chunks
+        cfg.nthreads = 4;
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks >= 4, "nchunks {}", st.nchunks);
+        let (serial, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+        for nthreads in [2usize, 4, 8] {
+            let (par, file) = decompress_field_mt(&bytes, &NativeEngine, nthreads).unwrap();
+            assert_eq!(file.nblocks as usize, st.nblocks);
+            let bitwise_equal = serial
+                .data
+                .iter()
+                .zip(&par.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bitwise_equal, "nthreads {nthreads}");
+        }
     }
 
     #[test]
@@ -385,7 +627,9 @@ mod tests {
         }
         // must not panic; error or wrong data both acceptable
         let _ = decompress_field(&bad, &NativeEngine);
-        // truncated payload must error
+        let _ = decompress_field_mt(&bad, &NativeEngine, 4);
+        // truncated payload must error, in both paths
         assert!(decompress_field(&bytes[..bytes.len() - 10], &NativeEngine).is_err());
+        assert!(decompress_field_mt(&bytes[..bytes.len() - 10], &NativeEngine, 4).is_err());
     }
 }

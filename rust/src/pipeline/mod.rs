@@ -1,11 +1,31 @@
-//! The two-substage compression pipeline (paper Fig. 1): per-block lossy
-//! stage 1 into per-thread private buffers, lossless stage 2 over each
-//! filled buffer ("chunk"), concatenation into a single stream per
-//! quantity, and the chunk-cached block decompressor.
+//! The two-substage compression pipeline (paper Fig. 1), scheduled
+//! dynamically over a shared atomic work queue.
+//!
+//! **Compression** ([`compressor`]): worker threads pull contiguous spans
+//! of blocks (~`chunk_bytes` of raw data each) off a
+//! [`crate::cluster::SpanQueue`]; each span becomes one chunk — per-block
+//! lossy stage 1 into a worker-private buffer, lossless stage 2 (shuffle
+//! + codec) over the filled buffer — and the chunks are concatenated in
+//! block order into a single stream per quantity. Span boundaries are
+//! fixed by block-id arithmetic, so the `.czb` output is byte-identical
+//! for every thread count.
+//!
+//! **Decompression** ([`decompressor`]): whole-field decode pulls chunks
+//! off the same queue type and scatters blocks into the shared output
+//! field ([`decompress_field_mt`]); random access goes through the
+//! chunk-cached [`BlockReader`].
+//!
+//! **Buffer lifecycle**: every worker owns its scratch — batch transform
+//! buffer, block gather, [`compressor`]'s encode scratch, shuffle buffer,
+//! the decompressor's inflate/offset buffers — allocated once per worker
+//! and reused for every block/chunk; the wavelet transform keeps its line
+//! buffers in a thread-local pool and the [`BlockReader`] LRU recycles
+//! evicted chunk buffers. The steady-state per-block path allocates
+//! nothing on either direction.
 pub mod compressor;
 pub mod decompressor;
 pub mod format;
 
 pub use compressor::{compress_field, CompressStats, NativeEngine, PipelineConfig, WaveletEngine};
-pub use decompressor::{decompress_field, BlockReader};
+pub use decompressor::{decompress_field, decompress_field_mt, BlockReader};
 pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};

@@ -1,0 +1,69 @@
+//! Stub PJRT engine for builds without `--cfg pjrt_runtime` (the default
+//! on the offline image, which has no `xla` crate). Construction always
+//! fails — callers that probe with `.ok()`/`match` fall back to the
+//! native engine — and a directly-constructed stub behaves as the native
+//! engine so nothing can panic.
+use crate::anyhow;
+use crate::pipeline::WaveletEngine;
+use crate::util::error::Result;
+use crate::wavelet::WaveletKind;
+use std::path::Path;
+
+/// Placeholder for the xla/PJRT-backed engine (see `runtime/pjrt_xla.rs`).
+pub struct PjrtEngine;
+
+impl PjrtEngine {
+    /// Always fails in this build: the PJRT runtime is compiled out.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(anyhow!(
+            "PJRT runtime not compiled into this build (artifacts dir {}); \
+             rebuild with RUSTFLAGS=\"--cfg pjrt_runtime\" and the `xla` crate \
+             added to rust/Cargo.toml",
+            artifacts_dir.as_ref().display()
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".to_string()
+    }
+}
+
+impl WaveletEngine for PjrtEngine {
+    fn forward_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize) {
+        crate::wavelet::transform3d::forward_batch(kind, blocks, bs, levels);
+    }
+
+    fn inverse_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize) {
+        crate::wavelet::transform3d::inverse_batch(kind, blocks, bs, levels);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_reports_unavailable() {
+        let e = PjrtEngine::new("artifacts").err().expect("stub must fail");
+        assert!(e.to_string().contains("pjrt_runtime"), "{e}");
+    }
+
+    #[test]
+    fn stub_engine_matches_native() {
+        use crate::pipeline::NativeEngine;
+        use crate::util::prng::Pcg32;
+        use crate::wavelet::max_levels;
+        let bs = 8;
+        let mut rng = Pcg32::new(3);
+        let mut a = vec![0f32; bs * bs * bs];
+        rng.fill_f32(&mut a, -1.0, 1.0);
+        let mut b = a.clone();
+        PjrtEngine.forward_batch(WaveletKind::Avg3, &mut a, bs, max_levels(bs));
+        NativeEngine.forward_batch(WaveletKind::Avg3, &mut b, bs, max_levels(bs));
+        assert_eq!(a, b);
+    }
+}

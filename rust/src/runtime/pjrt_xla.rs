@@ -1,0 +1,146 @@
+//! The real PJRT CPU engine (`--cfg pjrt_runtime` builds only): loads the
+//! AOT HLO-text artifacts and executes the batched Pallas wavelet kernels
+//! through the external `xla` crate (add it to rust/Cargo.toml when
+//! enabling this cfg; the offline image deliberately omits it).
+use super::{ARTIFACT_BS, ARTIFACT_BATCHES};
+use crate::anyhow;
+use crate::pipeline::WaveletEngine;
+use crate::util::error::{Context, Result};
+use crate::wavelet::WaveletKind;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct VariantKey {
+    kind: u8,
+    inverse: bool,
+    batch: usize,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    // lazily compiled executables
+    exes: HashMap<VariantKey, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla crate wraps PJRT handles in `Rc`, making them !Send/!Sync
+// even though the underlying PJRT C API is thread-safe. We never let the
+// Rc refcounts race: ALL access to `Inner` (client, executables, literals)
+// happens under the single `Mutex` below, so at most one thread touches
+// any xla object at a time.
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+/// PJRT CPU engine executing the AOT-lowered Pallas wavelet kernels.
+pub struct PjrtEngine {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(anyhow!(
+                "artifacts directory {} missing — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!(e))?;
+        Ok(Self { dir, inner: Mutex::new(Inner { client, exes: HashMap::new() }) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().client.platform_name()
+    }
+
+    fn artifact_path(&self, key: VariantKey) -> PathBuf {
+        let kind = WaveletKind::from_id(key.kind).unwrap();
+        let dir_tag = if key.inverse { "inv" } else { "fwd" };
+        self.dir.join(format!(
+            "wavelet_{dir_tag}_{}_b{ARTIFACT_BS}_n{}.hlo.txt",
+            kind.artifact_tag(),
+            key.batch
+        ))
+    }
+
+    fn run_variant(&self, key: VariantKey, io: &mut [f32]) -> Result<()> {
+        let vol = ARTIFACT_BS * ARTIFACT_BS * ARTIFACT_BS;
+        debug_assert_eq!(io.len(), key.batch * vol);
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.exes.contains_key(&key) {
+            let path = self.artifact_path(key);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp).map_err(|e| anyhow!(e))?;
+            inner.exes.insert(key, exe);
+        }
+        let exe = inner.exes.get(&key).unwrap();
+        let b = ARTIFACT_BS as i64;
+        let x = xla::Literal::vec1(io)
+            .reshape(&[key.batch as i64, b, b, b])
+            .map_err(|e| anyhow!(e))?;
+        let result = exe.execute::<xla::Literal>(&[x]).map_err(|e| anyhow!(e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!(e))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!(e))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!(e))?;
+        if values.len() != io.len() {
+            return Err(anyhow!("pjrt output length {} != {}", values.len(), io.len()));
+        }
+        io.copy_from_slice(&values);
+        Ok(())
+    }
+
+    /// Transform a batch of contiguous 32³ blocks through the compiled
+    /// executables (16-wide chunks + single-block remainder).
+    pub fn transform(&self, kind: WaveletKind, inverse: bool, blocks: &mut [f32]) -> Result<()> {
+        let vol = ARTIFACT_BS * ARTIFACT_BS * ARTIFACT_BS;
+        if blocks.len() % vol != 0 {
+            return Err(anyhow!("batch length {} not a multiple of 32^3", blocks.len()));
+        }
+        let n = blocks.len() / vol;
+        let wide = ARTIFACT_BATCHES[0];
+        let mut i = 0usize;
+        while i < n {
+            let take = if n - i >= wide { wide } else { 1 };
+            let key = VariantKey { kind: kind.id(), inverse, batch: take };
+            self.run_variant(key, &mut blocks[i * vol..(i + take) * vol])?;
+            i += take;
+        }
+        Ok(())
+    }
+}
+
+impl WaveletEngine for PjrtEngine {
+    fn forward_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize) {
+        // artifacts are compiled for bs=32 / full levels; anything else
+        // falls back to the native engine (identical spec)
+        if bs != ARTIFACT_BS || levels != crate::wavelet::max_levels(bs) {
+            crate::wavelet::transform3d::forward_batch(kind, blocks, bs, levels);
+            return;
+        }
+        if let Err(e) = self.transform(kind, false, blocks) {
+            panic!("pjrt forward failed: {e}");
+        }
+    }
+
+    fn inverse_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize) {
+        if bs != ARTIFACT_BS || levels != crate::wavelet::max_levels(bs) {
+            crate::wavelet::transform3d::inverse_batch(kind, blocks, bs, levels);
+            return;
+        }
+        if let Err(e) = self.transform(kind, true, blocks) {
+            panic!("pjrt inverse failed: {e}");
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

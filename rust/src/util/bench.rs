@@ -1,6 +1,8 @@
 //! Minimal criterion-replacement: warmup + sampled measurement with
-//! mean / stddev / min, plus MB/s throughput reporting. Used by the
-//! `rust/benches/*` harness=false bench binaries.
+//! mean / stddev / min, plus MB/s throughput reporting and a tiny JSON
+//! value writer for the machine-readable `BENCH_*.json` artifacts the
+//! perf-tracking benches emit. Used by the `rust/benches/*` harness=false
+//! bench binaries.
 use std::time::Instant;
 
 /// Result of a micro-benchmark run.
@@ -87,6 +89,76 @@ fn stats(name: &str, mut times: Vec<f64>) -> BenchStats {
     BenchStats { name: name.to_string(), samples: times, mean, stddev: var.sqrt(), min, median }
 }
 
+/// Minimal JSON value for `BENCH_*.json` perf artifacts (the image has no
+/// serde; this covers exactly what the benches emit).
+pub enum Json {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Write a JSON value to `path` (with trailing newline).
+pub fn write_json(path: impl AsRef<std::path::Path>, v: &Json) -> std::io::Result<()> {
+    std::fs::write(path, v.render() + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +184,29 @@ mod tests {
     fn mbps_positive() {
         let s = bench("noop", 0, 3, || ());
         assert!(s.mbps(1_000_000) > 0.0);
+    }
+
+    #[test]
+    fn json_renders_valid_structures() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("a\"b\\c\n".into())),
+            ("n".into(), Json::Int(-3)),
+            ("x".into(), Json::Num(1.5)),
+            ("bad".into(), Json::Num(f64::NAN)),
+            ("arr".into(), Json::Arr(vec![Json::Int(1), Json::Int(2)])),
+        ]);
+        assert_eq!(
+            v.render(),
+            "{\"name\":\"a\\\"b\\\\c\\u000a\",\"n\":-3,\"x\":1.5,\"bad\":null,\"arr\":[1,2]}"
+        );
+    }
+
+    #[test]
+    fn json_file_roundtrips_through_python_style_parse() {
+        let d = std::env::temp_dir().join("cubismz_bench_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("bench.json");
+        write_json(&p, &Json::Arr(vec![Json::Num(2.0)])).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "[2]\n");
     }
 }

@@ -1,0 +1,122 @@
+//! Minimal error plumbing for the binaries, the coordinator and the
+//! runtime: the offline image has no `anyhow`, so this provides the small
+//! subset the codebase uses — a string-backed [`Error`], the [`anyhow!`]
+//! constructor macro and the [`Context`] extension trait. Context chains
+//! are folded into the message at construction time ("ctx: cause"), which
+//! is all the CLI error reporting needs.
+//!
+//! [`anyhow!`]: crate::anyhow
+use std::fmt;
+
+/// String-backed error; context is folded into the message eagerly.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// Debug prints the message itself so `.expect()` / `{:?}` stay readable.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(e: String) -> Self {
+        Error(e)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(e: &str) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` defaulting to [`Error`] (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach a human-readable prefix to any displayable error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+/// Drop-in for `anyhow::anyhow!`: a format string (with inline captures)
+/// or any single `Display` expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg(format!("{}", $err))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anyhow;
+
+    #[test]
+    fn macro_accepts_literals_args_and_exprs() {
+        let name = "x";
+        assert_eq!(anyhow!("missing --{name}").to_string(), "missing --x");
+        assert_eq!(anyhow!("a {} b {}", 1, 2).to_string(), "a 1 b 2");
+        let cause: String = "boom".into();
+        assert_eq!(anyhow!(cause).to_string(), "boom");
+    }
+
+    #[test]
+    fn context_prefixes_cause() {
+        let r: std::result::Result<(), String> = Err("cause".into());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx: cause");
+        let r: std::result::Result<(), String> = Err("cause".into());
+        let e = r.with_context(|| format!("f{}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "f1: cause");
+    }
+
+    #[test]
+    fn io_and_string_convert() {
+        fn f() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io"))?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("io"));
+        let e: Error = "s".into();
+        assert_eq!(format!("{e:?}"), "s");
+        assert_eq!(format!("{e:#}"), "s");
+    }
+}

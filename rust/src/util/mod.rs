@@ -1,8 +1,10 @@
 //! Small self-contained utilities: bit-level I/O, a seeded PRNG (the image
-//! has no `rand`), a property-test helper, and a micro-benchmark harness
-//! (the image has no `criterion`).
+//! has no `rand`), a property-test helper, a micro-benchmark harness
+//! (the image has no `criterion`), and a minimal error type (the image
+//! has no `anyhow`).
 pub mod bench;
 pub mod bitio;
+pub mod error;
 pub mod prng;
 pub mod prop;
 pub mod timer;

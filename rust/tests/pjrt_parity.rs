@@ -6,8 +6,21 @@ use cubismz::runtime::{default_artifacts_dir, PjrtEngine, ARTIFACT_BS};
 use cubismz::util::prng::Pcg32;
 use cubismz::wavelet::{max_levels, WaveletKind};
 
-fn artifacts_ready() -> bool {
-    default_artifacts_dir().join("wavelet_fwd_w3a_b32_n1.hlo.txt").exists()
+/// The PJRT engine, when both the artifacts exist and the build carries
+/// the real runtime (default builds ship a stub whose constructor fails —
+/// skip, don't panic).
+fn pjrt_engine() -> Option<PjrtEngine> {
+    if !default_artifacts_dir().join("wavelet_fwd_w3a_b32_n1.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    match PjrtEngine::new(default_artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping: pjrt engine unavailable: {e}");
+            None
+        }
+    }
 }
 
 fn rel_close(a: &[f32], b: &[f32], scale: f32, tol: f32) -> Result<(), String> {
@@ -21,11 +34,10 @@ fn rel_close(a: &[f32], b: &[f32], scale: f32, tol: f32) -> Result<(), String> {
 
 #[test]
 fn pjrt_matches_native_forward_and_inverse() {
-    if !artifacts_ready() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
-    let engine = PjrtEngine::new(default_artifacts_dir()).expect("pjrt engine");
+    let engine = match pjrt_engine() {
+        Some(e) => e,
+        None => return,
+    };
     assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
     let vol = ARTIFACT_BS * ARTIFACT_BS * ARTIFACT_BS;
     let mut rng = Pcg32::new(0xABCD);
@@ -75,14 +87,13 @@ fn native_matches_python_test_vectors() {
 
 #[test]
 fn pipeline_with_pjrt_engine_end_to_end() {
-    if !artifacts_ready() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
+    let engine = match pjrt_engine() {
+        Some(e) => e,
+        None => return,
+    };
     use cubismz::core::Field3;
     use cubismz::metrics::psnr;
     use cubismz::pipeline::{compress_field, decompress_field, PipelineConfig};
-    let engine = PjrtEngine::new(default_artifacts_dir()).unwrap();
     let mut rng = Pcg32::new(7);
     let n = 64;
     let f = Field3::from_vec(n, n, n, cubismz::util::prop::gen_smooth_field(&mut rng, n));
