@@ -7,8 +7,8 @@ use cubismz::codec::{shuffle, Codec};
 use cubismz::util::bench::bench_budget;
 use cubismz::util::prng::Pcg32;
 
-fn payload() -> Vec<u8> {
-    // realistic stage-1 output: drifting small floats, byte-shuffled
+fn raw_payload() -> Vec<u8> {
+    // realistic stage-1 output: drifting small floats
     let mut rng = Pcg32::new(0xBE7C4);
     let mut data = Vec::new();
     let mut v = 0.0f32;
@@ -16,11 +16,12 @@ fn payload() -> Vec<u8> {
         v += rng.next_f32() * 0.01 - 0.005;
         data.extend_from_slice(&v.to_le_bytes());
     }
-    shuffle::byte_shuffle(&data, 4)
+    data
 }
 
 fn main() {
-    let data = payload();
+    let raw = raw_payload();
+    let data = shuffle::byte_shuffle(&raw, 4);
     let bytes = data.len();
     println!("bench codec_suite: {} MB shuffled coefficient payload", bytes / 1_000_000);
     for codec in [Codec::Lz4, Codec::Zstd, Codec::ZlibDef, Codec::ZlibBest, Codec::Lzma] {
@@ -39,6 +40,28 @@ fn main() {
             bytes as f64 / comp.len() as f64
         );
     }
+    // shuffle preconditioners: ShuffleMode::Bit4 (bit planes) vs Byte4 on
+    // the same coefficient stream — CR is the decision metric, the
+    // kernels' own cost is reported alongside
+    println!("shuffle preconditioner comparison (same raw payload):");
+    let s = bench_budget("shuffle/byte4", 1.0, 50, || shuffle::byte_shuffle(&raw, 4));
+    s.report_mbps(raw.len());
+    let s = bench_budget("shuffle/bit4", 1.0, 10, || shuffle::bit_shuffle(&raw, 4));
+    s.report_mbps(raw.len());
+    let bit = shuffle::bit_shuffle(&raw, 4);
+    for codec in [Codec::Lz4, Codec::ZlibDef] {
+        let c_none = codec.compress_vec(&raw).len();
+        let c_byte = codec.compress_vec(&data).len();
+        let c_bit = codec.compress_vec(&bit).len();
+        println!(
+            "  {:10} CR none {:.2} | byte4 {:.2} | bit4 {:.2}",
+            codec.name(),
+            raw.len() as f64 / c_none as f64,
+            raw.len() as f64 / c_byte as f64,
+            raw.len() as f64 / c_bit as f64,
+        );
+    }
+
     // reference baselines (need the flate2/zstd crates: --cfg reference_codecs)
     #[cfg(reference_codecs)]
     {

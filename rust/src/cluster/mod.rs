@@ -7,9 +7,13 @@
 //! computes its file offset with an exscan over compressed sizes.
 //!
 //! The node layer's intra-rank parallelism also lives here: a shared
-//! atomic work queue ([`SpanQueue`]) plus a scoped worker pool
-//! ([`run_workers`]) that the compression and decompression pipelines
-//! both pull from, so one scheduling mechanism serves both directions.
+//! atomic work queue ([`SpanQueue`]) plus two interchangeable worker
+//! executors behind the [`Execute`] trait — the one-shot scoped pool
+//! ([`ScopedExec`], what [`run_workers`] uses) and the persistent
+//! [`WorkerPool`] owned by a long-lived `pipeline::Engine` session. The
+//! compression and decompression pipelines are executor-agnostic: they
+//! pull spans off the queue inside whatever executor drives them, so one
+//! scheduling mechanism serves both directions and both lifetimes.
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -46,19 +50,232 @@ impl SpanQueue {
     }
 }
 
-/// Run `nthreads` scoped workers and collect their results (in worker-id
-/// order). Workers typically drain a shared [`SpanQueue`]; the pool itself
-/// is oblivious to the work shape.
-pub fn run_workers<R: Send>(nthreads: usize, worker: impl Fn(usize) -> R + Sync) -> Vec<R> {
-    let nthreads = nthreads.max(1);
-    if nthreads == 1 {
+/// Worker executor: runs `job(0), job(1), ..., job(n-1)` concurrently and
+/// returns once every index has completed. Implementations may cap `n` at
+/// their own concurrency and run the job inline when `n <= 1`; callers
+/// must only rely on every index executing exactly once before the call
+/// returns. A panic inside the job propagates to the caller.
+pub trait Execute: Sync {
+    fn execute(&self, n: usize, job: &(dyn Fn(usize) + Sync));
+
+    /// Upper bound on useful concurrency (worker indices handed out).
+    /// `usize::MAX` for executors that spawn on demand.
+    fn max_workers(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// One-shot executor: spawns `n` scoped threads per call (the pre-session
+/// behaviour of [`run_workers`]). Zero setup cost, but repeated calls —
+/// e.g. one per quantity of an in-situ dump — re-pay the spawn latency
+/// that a persistent [`WorkerPool`] amortizes away.
+pub struct ScopedExec;
+
+impl Execute for ScopedExec {
+    fn execute(&self, n: usize, job: &(dyn Fn(usize) + Sync)) {
+        if n <= 1 {
+            job(0);
+            return;
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n).map(|t| s.spawn(move || job(t))).collect();
+            for h in handles {
+                h.join().expect("worker thread panicked");
+            }
+        });
+    }
+}
+
+/// Run `nthreads` workers on `exec` and collect their results in
+/// worker-id order. Workers typically drain a shared [`SpanQueue`]; the
+/// executor is oblivious to the work shape.
+pub fn run_on<R: Send>(
+    exec: &dyn Execute,
+    nthreads: usize,
+    worker: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    let n = nthreads.max(1).min(exec.max_workers().max(1));
+    if n == 1 {
         return vec![worker(0)];
     }
-    std::thread::scope(|s| {
-        let worker = &worker;
-        let handles: Vec<_> = (0..nthreads).map(|t| s.spawn(move || worker(t))).collect();
-        handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
-    })
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    exec.execute(n, &|t| {
+        *slots[t].lock().unwrap() = Some(worker(t));
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker index did not run"))
+        .collect()
+}
+
+/// Run `nthreads` scoped workers and collect their results (in worker-id
+/// order). One-shot convenience over [`ScopedExec`]; sessions that
+/// compress repeatedly should hold a [`WorkerPool`] instead.
+pub fn run_workers<R: Send>(nthreads: usize, worker: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    run_on(&ScopedExec, nthreads, worker)
+}
+
+/// A job handed to pool workers: a borrowed closure whose lifetime is
+/// erased. Soundness: `WorkerPool::execute` blocks until every worker has
+/// finished the generation, so the borrow outlives every use.
+type ErasedJob = &'static (dyn Fn(usize) + Sync);
+
+struct PoolJob {
+    job: ErasedJob,
+    participants: usize,
+}
+
+struct PoolState {
+    /// Current job, replaced each generation.
+    job: Option<PoolJob>,
+    /// Bumped once per submitted job; workers run each generation once.
+    generation: u64,
+    /// Workers that have not finished the current generation yet.
+    remaining: usize,
+    /// Set when a job panicked in some worker (re-thrown by the submitter).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes workers when a new generation (or shutdown) is posted.
+    work_cv: Condvar,
+    /// Wakes the submitter when `remaining` hits zero.
+    done_cv: Condvar,
+}
+
+/// Persistent worker pool: `threads` long-lived OS threads parked on a
+/// condvar between jobs. Each [`Execute::execute`] call posts one
+/// generation: every worker wakes, indices `< n` run the job, and the
+/// submitting thread blocks until the generation drains — which is what
+/// makes handing workers a *borrowed* closure sound. Submissions are
+/// serialized (one job at a time); dropping the pool joins the threads.
+///
+/// This replaces per-field scoped spawning for session use: an in-situ
+/// code dumping ~7 quantities per step pays thread creation once per run
+/// instead of once per quantity.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes submitters so generations never overlap.
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers (at least 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                generation: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|t| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cz-pool-{t}"))
+                    .spawn(move || worker_loop(&shared, t))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, handles, submit: Mutex::new(()) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+fn worker_loop(shared: &PoolShared, idx: usize) {
+    let mut seen_gen = 0u64;
+    loop {
+        let (job, participants) = {
+            let mut g = shared.state.lock().unwrap();
+            while !g.shutdown && g.generation == seen_gen {
+                g = shared.work_cv.wait(g).unwrap();
+            }
+            if g.shutdown {
+                return;
+            }
+            seen_gen = g.generation;
+            let j = g.job.as_ref().expect("generation posted without a job");
+            (j.job, j.participants)
+        };
+        if idx < participants {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(idx)));
+            if r.is_err() {
+                shared.state.lock().unwrap().panicked = true;
+            }
+        }
+        let mut g = shared.state.lock().unwrap();
+        g.remaining -= 1;
+        if g.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Execute for WorkerPool {
+    fn execute(&self, n: usize, job: &(dyn Fn(usize) + Sync)) {
+        let n = n.min(self.threads());
+        if n <= 1 {
+            // run inline: cheaper than a wakeup round-trip, and semantics
+            // (every index once, done on return) are unchanged
+            job(0);
+            return;
+        }
+        let guard = self.submit.lock().unwrap();
+        // SAFETY: only the lifetime is erased; this function does not
+        // return until every worker has finished the generation, so the
+        // borrow is live for every call through the pointer.
+        let erased: ErasedJob = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), ErasedJob>(job)
+        };
+        let panicked = {
+            let mut g = self.shared.state.lock().unwrap();
+            g.job = Some(PoolJob { job: erased, participants: n });
+            g.generation += 1;
+            g.remaining = self.handles.len();
+            g.panicked = false;
+            self.shared.work_cv.notify_all();
+            while g.remaining > 0 {
+                g = self.shared.done_cv.wait(g).unwrap();
+            }
+            g.job = None;
+            g.panicked
+        };
+        // release the submit lock cleanly BEFORE re-raising, or the
+        // propagated panic would poison it and brick the pool
+        drop(guard);
+        if panicked {
+            panic!("worker thread panicked");
+        }
+    }
+
+    fn max_workers(&self) -> usize {
+        self.threads()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Communicator over a fixed group of ranks.
@@ -299,6 +516,80 @@ mod tests {
         let out = run_workers(4, |t| t * 10);
         assert_eq!(out, vec![0, 10, 20, 30]);
         assert_eq!(run_workers(1, |t| t + 1), vec![1]);
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs_and_collects_results() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        // repeated generations reuse the same threads
+        for round in 0..50usize {
+            let out = run_on(&pool, 4, |t| t * 10 + round);
+            assert_eq!(out, vec![round, 10 + round, 20 + round, 30 + round]);
+        }
+        // fewer participants than pool threads
+        assert_eq!(run_on(&pool, 2, |t| t), vec![0, 1]);
+        // n == 1 runs inline
+        assert_eq!(run_on(&pool, 1, |t| t + 7), vec![7]);
+    }
+
+    #[test]
+    fn worker_pool_caps_at_pool_size() {
+        let pool = WorkerPool::new(2);
+        // requesting more workers than threads must cap, not hang
+        let out = run_on(&pool, 8, |t| t);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn worker_pool_drains_span_queue_like_scoped() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let pool = WorkerPool::new(8);
+        let n = 10_000;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let q = SpanQueue::new(n, 7);
+        run_on(&pool, 8, |_| {
+            while let Some(span) = q.next_span() {
+                for i in span {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_pool_survives_concurrent_submitters() {
+        let pool = std::sync::Arc::new(WorkerPool::new(3));
+        std::thread::scope(|s| {
+            for k in 0..4usize {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for i in 0..30usize {
+                        let out = run_on(&*pool, 3, |t| k * 1000 + i * 10 + t);
+                        assert_eq!(
+                            out,
+                            vec![k * 1000 + i * 10, k * 1000 + i * 10 + 1, k * 1000 + i * 10 + 2]
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_pool_propagates_panics() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.execute(2, &|t| {
+                if t == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic in a pool worker must reach the submitter");
+        // the pool must still be usable after a panicked generation
+        assert_eq!(run_on(&pool, 2, |t| t), vec![0, 1]);
     }
 
     #[test]

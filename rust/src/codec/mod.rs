@@ -8,7 +8,9 @@
 //!   ZLIB-class ratio at higher speed (ZSTD's positioning in the paper).
 //! * [`lzmalite`] — LZ + adaptive binary range coder with order-1 literal
 //!   contexts and a 1 MiB window: best ratio, slowest (LZMA's positioning).
-//! * [`shuffle`] — byte/bit shuffling preconditioners (BLOSC-style).
+//! * [`shuffle`] — byte/bit shuffling preconditioners (BLOSC-style),
+//!   reached from the pipeline as `ShuffleMode::Byte4` / `Bit4` chunk
+//!   preconditioners (`benches/codec_suite` reports their CR head-to-head).
 //!
 //! The real `flate2` (zlib) and `zstd` crates are wrapped as *reference
 //! baselines* to validate the from-scratch implementations in tests and

@@ -51,16 +51,22 @@ pub fn byte_unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
     out
 }
 
-/// Bit shuffle over `stride`-byte elements: plane b of the output collects
-/// bit b of every element (BLOSC2-style). Requires `data.len()` to be a
-/// multiple of `stride`; the element count is padded up to a byte multiple
-/// internally and truncated on unshuffle.
-pub fn bit_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
-    assert!(stride > 0 && data.len() % stride == 0);
-    let n = data.len() / stride; // number of elements
+/// Bit shuffle into a caller-owned buffer (cleared and resized): plane b
+/// of the output collects bit b of every `stride`-byte element
+/// (BLOSC2-style). The element count is padded up to a byte multiple, so
+/// the shuffled stream is `stride * 8 * ceil(n/8)` plane bytes; trailing
+/// bytes (`len % stride`) are appended unshuffled, mirroring
+/// [`byte_shuffle_into`]. This is the `ShuffleMode::Bit4` chunk
+/// preconditioner, so one `out` per worker keeps the hot path
+/// allocation-free.
+pub fn bit_shuffle_into(data: &[u8], stride: usize, out: &mut Vec<u8>) {
+    assert!(stride > 0);
+    let n = data.len() / stride; // number of whole elements
     let nbits = stride * 8;
     let plane_bytes = n.div_ceil(8);
-    let mut out = vec![0u8; nbits * plane_bytes];
+    // planes are built with ORs, so a warm buffer must be re-zeroed
+    out.clear();
+    out.resize(nbits * plane_bytes + (data.len() - n * stride), 0);
     for i in 0..n {
         for b in 0..nbits {
             let bit = (data[i * stride + b / 8] >> (b % 8)) & 1;
@@ -69,15 +75,36 @@ pub fn bit_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
             }
         }
     }
+    out[nbits * plane_bytes..].copy_from_slice(&data[n * stride..]);
+}
+
+/// Bit shuffle with element size `stride` (4 for f32), allocating.
+pub fn bit_shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    bit_shuffle_into(data, stride, &mut out);
     out
 }
 
-/// Inverse of [`bit_shuffle`]; `n` is the original element count.
-pub fn bit_unshuffle(data: &[u8], stride: usize, n: usize) -> Vec<u8> {
+/// Size in bytes of the [`bit_shuffle_into`] output for an input of
+/// `len` bytes (planes + unshuffled tail). The decode path uses this to
+/// validate a shuffled chunk before unshuffling.
+pub fn bit_shuffled_len(len: usize, stride: usize) -> usize {
+    let n = len / stride;
+    stride * 8 * n.div_ceil(8) + (len - n * stride)
+}
+
+/// Inverse of [`bit_shuffle_into`] into a caller-owned buffer (cleared
+/// and resized); `n` is the original element count. `data` must be
+/// exactly [`bit_shuffled_len`]`(n * stride + tail, stride)` bytes, where
+/// the tail is whatever follows the planes.
+pub fn bit_unshuffle_into(data: &[u8], stride: usize, n: usize, out: &mut Vec<u8>) {
     let nbits = stride * 8;
     let plane_bytes = n.div_ceil(8);
-    assert_eq!(data.len(), nbits * plane_bytes);
-    let mut out = vec![0u8; n * stride];
+    assert!(data.len() >= nbits * plane_bytes, "shuffled stream shorter than its planes");
+    let tail = data.len() - nbits * plane_bytes;
+    // elements are rebuilt with ORs, so a warm buffer must be re-zeroed
+    out.clear();
+    out.resize(n * stride + tail, 0);
     for i in 0..n {
         for b in 0..nbits {
             let bit = (data[b * plane_bytes + i / 8] >> (i % 8)) & 1;
@@ -86,6 +113,13 @@ pub fn bit_unshuffle(data: &[u8], stride: usize, n: usize) -> Vec<u8> {
             }
         }
     }
+    out[n * stride..].copy_from_slice(&data[nbits * plane_bytes..]);
+}
+
+/// Inverse of [`bit_shuffle`]; `n` is the original element count.
+pub fn bit_unshuffle(data: &[u8], stride: usize, n: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    bit_unshuffle_into(data, stride, n, &mut out);
     out
 }
 
@@ -144,6 +178,36 @@ mod tests {
             let sh = bit_shuffle(&data, stride);
             assert_eq!(bit_unshuffle(&sh, stride, n), data);
         });
+    }
+
+    #[test]
+    fn bit_shuffle_roundtrips_with_tails_and_dirty_buffers() {
+        // chunk streams are not a multiple of 4 bytes in general: the
+        // trailing `len % stride` bytes ride along unshuffled
+        let mut rng = Pcg32::new(0xB1751);
+        let mut shuf = vec![0x3Cu8; 11]; // dirty + wrong size
+        let mut unshuf = vec![0xC3u8; 777];
+        for _ in 0..20 {
+            let len = rng.below(4_000) as usize;
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            for stride in [1usize, 4, 8] {
+                let n = len / stride;
+                bit_shuffle_into(&data, stride, &mut shuf);
+                assert_eq!(shuf.len(), bit_shuffled_len(len, stride), "len {len} stride {stride}");
+                bit_unshuffle_into(&shuf, stride, n, &mut unshuf);
+                assert_eq!(unshuf, data, "len {len} stride {stride}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_shuffle_groups_bit_planes() {
+        // elements 0x01, 0x03 (stride 1): bit plane 0 = 0b11, plane 1 = 0b10
+        let sh = bit_shuffle(&[0x01u8, 0x03], 1);
+        assert_eq!(sh.len(), 8);
+        assert_eq!(sh[0], 0b11);
+        assert_eq!(sh[1], 0b10);
+        assert!(sh[2..].iter().all(|&b| b == 0));
     }
 
     #[test]

@@ -8,7 +8,8 @@ use crate::core::Field3;
 use crate::io::{h5lite, parallel};
 use crate::metrics::psnr;
 use crate::pipeline::{
-    compress_field, decompress_field_mt, CompressStats, PipelineConfig, WaveletEngine,
+    compress_field, decompress_field_mt, CompressParams, CompressStats, Dataset, Engine,
+    PipelineConfig, WaveletEngine,
 };
 use crate::util::error::{Context, Result};
 use std::path::Path;
@@ -74,6 +75,77 @@ pub fn psnr_file(
         return Err(anyhow!("size mismatch: {} vs {}", d.data.len(), r.data.len()));
     }
     Ok(psnr(&r.data, &d.data))
+}
+
+/// Ex-situ: compress every dataset of an h5lite container (optionally a
+/// comma-separated `only` subset) into one `.czs` archive on a single
+/// [`Engine`] session — the multi-QoI shape of the paper's CFD workflow.
+/// Returns (name, stats) per quantity in archive order.
+pub fn compress_dataset_file(
+    input: &Path,
+    only: Option<&str>,
+    output: &Path,
+    params: &CompressParams,
+    engine: &Engine,
+) -> Result<Vec<(String, CompressStats)>> {
+    let wanted: Option<Vec<&str>> = only.map(|s| s.split(',').map(str::trim).collect());
+    let names = h5lite::list(input).map_err(|e| anyhow!(e))?;
+    let mut writer = Dataset::create(output)
+        .with_context(|| format!("creating {}", output.display()))?;
+    let mut out = Vec::new();
+    for (name, ..) in names {
+        if let Some(w) = &wanted {
+            if !w.contains(&name.as_str()) {
+                continue;
+            }
+        }
+        let ds = h5lite::read(input, &name).map_err(|e| anyhow!(e))?;
+        let field = ds.to_field();
+        let stats = writer
+            .write_quantity(engine, &field, &name, params)
+            .with_context(|| format!("writing quantity {name}"))?;
+        out.push((name, stats));
+    }
+    if let Some(w) = &wanted {
+        // a typo'd subset name must fail loudly, not silently produce an
+        // archive with a quantity missing
+        let missing: Vec<&str> = w
+            .iter()
+            .filter(|n| !out.iter().any(|(name, _)| name == *n))
+            .copied()
+            .collect();
+        if !missing.is_empty() {
+            return Err(anyhow!(
+                "requested quantities not in {}: {}",
+                input.display(),
+                missing.join(",")
+            ));
+        }
+    }
+    if out.is_empty() {
+        return Err(anyhow!("no datasets matched in {}", input.display()));
+    }
+    writer.finish().with_context(|| format!("finishing {}", output.display()))?;
+    Ok(out)
+}
+
+/// Ex-situ: decompress every quantity of a `.czs` archive back into one
+/// h5lite container. Returns the quantity names.
+pub fn decompress_dataset_file(
+    input: &Path,
+    output: &Path,
+    engine: &Engine,
+) -> Result<Vec<String>> {
+    let archive = Dataset::open(input).map_err(|e| anyhow!(e))?;
+    let mut datasets = Vec::new();
+    for entry in archive.entries() {
+        let (field, _file) = archive.read_quantity(&entry.name, engine).map_err(|e| anyhow!(e))?;
+        // name by the archive entry, not the inner .czb header: sections
+        // repackaged under a new name must keep that name on the way out
+        datasets.push(h5lite::Dataset::from_field(&entry.name, &field));
+    }
+    h5lite::write(output, &datasets)?;
+    Ok(datasets.into_iter().map(|d| d.name).collect())
 }
 
 /// Result of one in-situ dump step.
@@ -166,6 +238,31 @@ mod tests {
         let bytes = std::fs::read(&czb2).unwrap();
         let (file, _) = crate::pipeline::CzbFile::parse_header(&bytes).unwrap();
         assert!(matches!(file.stage1, crate::pipeline::Stage1::Zfp { .. }));
+    }
+
+    #[test]
+    fn dataset_file_roundtrip_with_subset() {
+        let sim = CloudSim::new(CloudConfig::paper(32));
+        let h5 = tmp("step.h5l");
+        let datasets: Vec<h5lite::Dataset> = Qoi::ALL
+            .iter()
+            .map(|q| h5lite::Dataset::from_field(q.name(), &sim.field(*q, step_to_time(5000))))
+            .collect();
+        h5lite::write(&h5, &datasets).unwrap();
+        let czs = tmp("step.czs");
+        let engine = Engine::builder().threads(2).build();
+        let params = CompressParams::paper_default(1e-3);
+        let stats =
+            compress_dataset_file(&h5, Some("p,rho"), &czs, &params, &engine).unwrap();
+        let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["p", "rho"]);
+        let out = tmp("step_out.h5l");
+        let back = decompress_dataset_file(&czs, &out, &engine).unwrap();
+        assert_eq!(back, vec!["p".to_string(), "rho".to_string()]);
+        let p = h5lite::read(&out, "p").unwrap();
+        assert_eq!(p.data.len(), 32 * 32 * 32);
+        // unknown subset errors instead of writing an empty archive
+        assert!(compress_dataset_file(&h5, Some("nope"), &czs, &params, &engine).is_err());
     }
 
     #[test]

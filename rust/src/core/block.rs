@@ -95,16 +95,32 @@ impl BlockGrid {
         (bi.bz * self.nby + bi.by) * self.nbx + bi.bx
     }
 
+    /// Flattened-field addressing of block `id`: the row of bs cells at
+    /// local coordinates `(z, y)` starts at
+    /// [`BlockLayout::row_offset`]`(z, y)`. Single source of truth for
+    /// the raw-pointer scatter in the parallel decompressor and the safe
+    /// [`BlockGrid::extract`]/[`BlockGrid::insert`] copies.
+    pub fn layout(&self, id: usize) -> BlockLayout {
+        let bi = self.block_index(id);
+        let bs = self.bs;
+        let (nx, ny) = (self.nbx * bs, self.nby * bs);
+        BlockLayout {
+            base: ((bi.bz * bs) * ny + bi.by * bs) * nx + bi.bx * bs,
+            row: nx,
+            slab: nx * ny,
+        }
+    }
+
     /// Copy block `id` out of the field into `out` (AoS gather; the paper's
     /// per-thread dedicated buffer copy).
     pub fn extract(&self, field: &Field3, id: usize, out: &mut Block) {
         debug_assert_eq!(out.bs, self.bs);
-        let bi = self.block_index(id);
-        let (x0, y0, z0) = (bi.bx * self.bs, bi.by * self.bs, bi.bz * self.bs);
+        debug_assert_eq!((field.nx, field.ny), (self.nbx * self.bs, self.nby * self.bs));
+        let layout = self.layout(id);
         let bs = self.bs;
         for z in 0..bs {
             for y in 0..bs {
-                let src = field.idx(x0, y0 + y, z0 + z);
+                let src = layout.row_offset(z, y);
                 let dst = (z * bs + y) * bs;
                 out.data[dst..dst + bs].copy_from_slice(&field.data[src..src + bs]);
             }
@@ -114,16 +130,36 @@ impl BlockGrid {
     /// Scatter a block back into the field (decompression path).
     pub fn insert(&self, field: &mut Field3, id: usize, block: &Block) {
         debug_assert_eq!(block.bs, self.bs);
-        let bi = self.block_index(id);
-        let (x0, y0, z0) = (bi.bx * self.bs, bi.by * self.bs, bi.bz * self.bs);
+        debug_assert_eq!((field.nx, field.ny), (self.nbx * self.bs, self.nby * self.bs));
+        let layout = self.layout(id);
         let bs = self.bs;
         for z in 0..bs {
             for y in 0..bs {
-                let dst = field.idx(x0, y0 + y, z0 + z);
+                let dst = layout.row_offset(z, y);
                 let src = (z * bs + y) * bs;
                 field.data[dst..dst + bs].copy_from_slice(&block.data[src..src + bs]);
             }
         }
+    }
+}
+
+/// Row-addressing of one block inside the flattened field array
+/// (x-fastest layout), produced by [`BlockGrid::layout`].
+#[derive(Clone, Copy, Debug)]
+pub struct BlockLayout {
+    /// Offset of the block's first cell.
+    pub base: usize,
+    /// Stride between consecutive y-rows (the field's nx).
+    pub row: usize,
+    /// Stride between consecutive z-slabs (the field's nx * ny).
+    pub slab: usize,
+}
+
+impl BlockLayout {
+    /// Offset of the first cell of the block row at local `(z, y)`.
+    #[inline]
+    pub fn row_offset(&self, z: usize, y: usize) -> usize {
+        self.base + z * self.slab + y * self.row
     }
 }
 
@@ -174,5 +210,24 @@ mod tests {
     fn indivisible_dims_rejected() {
         let f = Field3::zeros(10, 8, 8);
         BlockGrid::new(&f, 8);
+    }
+
+    #[test]
+    fn layout_matches_field_indexing() {
+        let f = Field3::zeros(32, 16, 8);
+        let g = BlockGrid::new(&f, 4);
+        for id in [0usize, 1, 7, 8, 31, g.nblocks() - 1] {
+            let bi = g.block_index(id);
+            let l = g.layout(id);
+            for z in 0..4 {
+                for y in 0..4 {
+                    assert_eq!(
+                        l.row_offset(z, y),
+                        f.idx(bi.bx * 4, bi.by * 4 + y, bi.bz * 4 + z),
+                        "block {id} z {z} y {y}"
+                    );
+                }
+            }
+        }
     }
 }

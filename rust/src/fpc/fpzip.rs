@@ -123,6 +123,20 @@ pub fn compress(data: &[f32], dims: Dims3, prec: u8, out: &mut Vec<u8>) {
 /// Decompress; returns (data, dims). Lossy streams return the truncated-
 /// precision reconstruction (low mapped bits zeroed, as in fpzip).
 pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
+    let mut mapped = Vec::new();
+    let mut out = Vec::new();
+    let dims = decompress_into(input, &mut mapped, &mut out)?;
+    Ok((out, dims))
+}
+
+/// Decompress into caller-owned buffers (cleared and resized): `mapped`
+/// is the decoder's integer plane, `out` receives the floats. Per-block
+/// decode loops reuse both allocations. Returns the dims.
+pub fn decompress_into(
+    input: &[u8],
+    mapped: &mut Vec<i64>,
+    out: &mut Vec<f32>,
+) -> Result<Dims3, String> {
     const LENS_BYTES: usize = N_CLASS.div_ceil(2);
     if input.len() < 8 + LENS_BYTES + 4 {
         return Err("fpzip stream too short".into());
@@ -156,8 +170,12 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
     }
     let dec_tbl = Decoder::from_lengths(&lens)?;
     let mut r = BitReader::new(&input[pos..pos + payload_bytes]);
-    let mut mapped = vec![0i64; n];
-    let mut out = vec![0f32; n];
+    // the Lorenzo predictor reads not-yet-decoded neighbors as 0, so a
+    // warm (dirty) buffer must be re-zeroed
+    mapped.clear();
+    mapped.resize(n, 0);
+    out.clear();
+    out.resize(n, 0.0);
     let mut i = 0;
     for z in 0..nz {
         for y in 0..ny {
@@ -181,7 +199,7 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
                         bits | (1u64 << (class - 1))
                     }
                 };
-                let pred = lorenzo_pred(&mapped, dims, x, y, z);
+                let pred = lorenzo_pred(&mapped[..], dims, x, y, z);
                 let m = pred + unzigzag(zz);
                 mapped[i] = m;
                 out[i] = ordered_u32_to_f32((m as u32) << shift);
@@ -189,7 +207,7 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
             }
         }
     }
-    Ok((out, dims))
+    Ok(dims)
 }
 
 #[cfg(test)]
@@ -270,5 +288,24 @@ mod tests {
         let mut out = Vec::new();
         compress(&vec![1.0f32; 64], Dims3::cube(4), 32, &mut out);
         assert!(decompress(&out[..12]).is_err());
+    }
+
+    #[test]
+    fn decompress_into_reuses_dirty_buffers() {
+        let mut rng = Pcg32::new(14);
+        let dims = Dims3 { nx: 8, ny: 6, nz: 5 };
+        let data: Vec<f32> = gen_floats(&mut rng, dims.len());
+        let mut comp = Vec::new();
+        compress(&data, dims, 32, &mut comp);
+        let (reference, _) = decompress(&comp).unwrap();
+        let mut ints = vec![-7i64; 2]; // dirty + wrong size
+        let mut buf = vec![0.5f32; 4096];
+        for _ in 0..3 {
+            let d = decompress_into(&comp, &mut ints, &mut buf).unwrap();
+            assert_eq!(d, dims);
+            for (a, b) in reference.iter().zip(&buf) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

@@ -27,6 +27,14 @@ pub fn compress(data: &[f32], out: &mut Vec<u8>) {
 
 /// Decompress to raw bytes.
 pub fn decompress_bytes(input: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    decompress_bytes_into(input, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress to raw bytes in a caller-owned buffer (cleared); the
+/// stride-delta is undone in place, so no intermediate buffer is needed.
+pub fn decompress_bytes_into(input: &[u8], out: &mut Vec<u8>) -> Result<(), String> {
     if input.len() < 2 {
         return Err("spdp stream too short".into());
     }
@@ -37,25 +45,38 @@ pub fn decompress_bytes(input: &[u8]) -> Result<Vec<u8>, String> {
     if s == 0 {
         return Err("bad stride".into());
     }
-    let mut delta = Vec::new();
-    crate::codec::czlib::decompress(&input[2..], &mut delta)?;
-    let mut out = vec![0u8; delta.len()];
-    for i in 0..delta.len() {
-        out[i] = if i >= s { delta[i].wrapping_add(out[i - s]) } else { delta[i] };
+    out.clear();
+    crate::codec::czlib::decompress(&input[2..], out)?;
+    // forward prefix reconstruction: out[i - s] is already undone when
+    // out[i] is updated, so the delta buffer doubles as the output
+    for i in s..out.len() {
+        out[i] = out[i].wrapping_add(out[i - s]);
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Decompress to f32s.
 pub fn decompress(input: &[u8]) -> Result<Vec<f32>, String> {
-    let bytes = decompress_bytes(input)?;
+    let mut bytes = Vec::new();
+    let mut out = Vec::new();
+    decompress_into(input, &mut bytes, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress to f32s in caller-owned buffers (cleared): `bytes` is the
+/// raw-byte scratch, `out` receives the floats.
+pub fn decompress_into(
+    input: &[u8],
+    bytes: &mut Vec<u8>,
+    out: &mut Vec<f32>,
+) -> Result<(), String> {
+    decompress_bytes_into(input, bytes)?;
     if bytes.len() % 4 != 0 {
         return Err("payload not a multiple of 4".into());
     }
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    out.clear();
+    out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    Ok(())
 }
 
 #[cfg(test)]
@@ -113,5 +134,22 @@ mod tests {
     fn corrupt_errors() {
         assert!(decompress(&[2, 4, 0]).is_err());
         assert!(decompress(&[1]).is_err());
+    }
+
+    #[test]
+    fn decompress_into_reuses_dirty_buffers() {
+        let mut rng = Pcg32::new(0x21);
+        let data = gen_floats(&mut rng, 513);
+        let mut comp = Vec::new();
+        compress(&data, &mut comp);
+        let mut bytes = vec![0xEEu8; 5]; // dirty + wrong size
+        let mut out = vec![3.5f32; 9999];
+        for _ in 0..3 {
+            decompress_into(&comp, &mut bytes, &mut out).unwrap();
+            assert_eq!(out.len(), data.len());
+            for (a, b) in data.iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

@@ -113,6 +113,14 @@ pub fn compress(data: &[f32], dims: Dims3, abs_eb: f32, out: &mut Vec<u8>) {
 
 /// Decompress an sz stream; returns (data, dims).
 pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
+    let mut out = Vec::new();
+    let dims = decompress_into(input, &mut out)?;
+    Ok((out, dims))
+}
+
+/// Decompress into a caller-owned buffer (cleared and resized), so
+/// per-block decode loops reuse one allocation. Returns the dims.
+pub fn decompress_into(input: &[u8], out: &mut Vec<f32>) -> Result<Dims3, String> {
     const LENS_BYTES: usize = (QUANT + 1).div_ceil(2);
     if input.len() < 15 + LENS_BYTES + 4 {
         return Err("sz stream too short".into());
@@ -145,7 +153,11 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
     let mut r = BitReader::new(&input[pos..pos + code_bytes]);
     let out_pos = pos + code_bytes;
     let mut outlier_i = 0usize;
-    let mut dec = vec![0f32; n];
+    // the Lorenzo predictor reads not-yet-decoded neighbors as 0.0, so a
+    // warm (dirty) buffer must be re-zeroed
+    out.clear();
+    out.resize(n, 0.0);
+    let dec = &mut out[..];
     let half = (QUANT / 2) as i64;
     let step = 2.0 * abs_eb;
     for z in 0..nz {
@@ -161,13 +173,13 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
                     dec[i] = f32::from_le_bytes(input[off..off + 4].try_into().unwrap());
                     outlier_i += 1;
                 } else {
-                    let pred = lorenzo3d(&dec, dims, x, y, z);
+                    let pred = lorenzo3d(dec, dims, x, y, z);
                     dec[i] = pred + (sym as i64 - half) as f32 * step;
                 }
             }
         }
     }
-    Ok((dec, dims))
+    Ok(dims)
 }
 
 #[cfg(test)]
@@ -267,5 +279,22 @@ mod tests {
         compress(&vec![1.0f32; 64], Dims3::cube(4), 0.01, &mut out);
         assert!(decompress(&out[..out.len() / 2]).is_err() || true);
         assert!(decompress(&out[..10]).is_err());
+    }
+
+    #[test]
+    fn decompress_into_reuses_dirty_buffers() {
+        let mut rng = Pcg32::new(6);
+        let dims = Dims3::cube(8);
+        let mut data = vec![0f32; dims.len()];
+        rng.fill_f32(&mut data, -3.0, 3.0);
+        let mut comp = Vec::new();
+        compress(&data, dims, 1e-3, &mut comp);
+        let (reference, _) = decompress(&comp).unwrap();
+        let mut buf = vec![1.25f32; 3000]; // dirty + wrong size
+        for _ in 0..3 {
+            let d = decompress_into(&comp, &mut buf).unwrap();
+            assert_eq!(d, dims);
+            assert_eq!(buf, reference);
+        }
     }
 }

@@ -266,6 +266,14 @@ pub fn compress(data: &[f32], dims: Dims3, tol: f32, out: &mut Vec<u8>) {
 
 /// Decompress a zfp stream into a fresh array; returns (data, dims).
 pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
+    let mut out = Vec::new();
+    let dims = decompress_into(input, &mut out)?;
+    Ok((out, dims))
+}
+
+/// Decompress into a caller-owned buffer (cleared and resized), so
+/// per-block decode loops reuse one allocation. Returns the dims.
+pub fn decompress_into(input: &[u8], out: &mut Vec<f32>) -> Result<Dims3, String> {
     if input.len() < 11 {
         return Err("zfp stream too short".into());
     }
@@ -281,7 +289,10 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
         return Err(format!("bad zfp dims {nx}x{ny}x{nz}"));
     }
     let perm = sequency_perm();
-    let mut out = vec![0f32; dims.len()];
+    // all-zero cells are skipped by the coder, so the buffer must be
+    // zero-filled even when warm
+    out.clear();
+    out.resize(dims.len(), 0.0);
     let mut r = BitReader::new(&input[11..]);
     let mut q = [0i64; CELL_VOL];
     let mut nb = [0u64; CELL_VOL];
@@ -324,7 +335,7 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
             }
         }
     }
-    Ok((out, dims))
+    Ok(dims)
 }
 
 #[cfg(test)]
@@ -424,5 +435,28 @@ mod tests {
     #[test]
     fn truncated_stream_errors() {
         assert!(decompress(&[1, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn decompress_into_reuses_dirty_buffers() {
+        // the per-worker buffer arrives dirty and differently sized; the
+        // into-variant must still match the allocating result exactly,
+        // including the zero cells the coder skips
+        let mut rng = Pcg32::new(10);
+        let dims = Dims3::cube(8);
+        let mut data = vec![0f32; dims.len()];
+        rng.fill_f32(&mut data, -2.0, 2.0);
+        for v in data.iter_mut().take(64) {
+            *v = 0.0; // force an all-zero cell
+        }
+        let mut comp = Vec::new();
+        compress(&data, dims, 1e-3, &mut comp);
+        let (reference, _) = decompress(&comp).unwrap();
+        let mut buf = vec![9.9f32; 7]; // dirty + wrong size
+        for _ in 0..3 {
+            let d = decompress_into(&comp, &mut buf).unwrap();
+            assert_eq!(d, dims);
+            assert_eq!(buf, reference);
+        }
     }
 }

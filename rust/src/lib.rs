@@ -3,6 +3,8 @@
 //! Wermelinger, "A Parallel Data Compression Framework for Large Scale 3D
 //! Scientific Data", 2019). See DESIGN.md for the system inventory and
 //! EXPERIMENTS.md for paper-vs-measured results.
+pub use pipeline::{CompressParams, Dataset, DatasetWriter, Engine, EngineBuilder};
+
 pub mod cluster;
 pub mod codec;
 pub mod coordinator;

@@ -9,7 +9,8 @@ use cubismz::coordinator;
 use cubismz::core::FieldStats;
 use cubismz::io::h5lite;
 use cubismz::pipeline::{
-    CoeffCodec, CzbFile, NativeEngine, PipelineConfig, ShuffleMode, Stage1, WaveletEngine,
+    CoeffCodec, CompressParams, CzbFile, Dataset, Engine, NativeEngine, PipelineConfig,
+    ShuffleMode, Stage1, WaveletEngine,
 };
 use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
 use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
@@ -114,12 +115,25 @@ fn config_of(args: &Args) -> Result<PipelineConfig> {
     let stage2 =
         Codec::from_name(stage2_name).ok_or_else(|| anyhow!("unknown stage2 codec {stage2_name}"))?;
     let mut cfg = PipelineConfig::new(bs, stage1, stage2);
-    if args.flag("shuffle") {
-        cfg.shuffle = ShuffleMode::Byte4;
-    }
+    cfg.shuffle = match args.get("shuffle") {
+        None => ShuffleMode::None,
+        // bare `--shuffle` keeps its historical meaning: byte shuffle
+        Some("true") => ShuffleMode::Byte4,
+        Some(name) => ShuffleMode::from_name(name)
+            .ok_or_else(|| anyhow!("unknown shuffle mode {name} (none|byte4|bit4)"))?,
+    };
     cfg.nthreads = threads_of(args, 1)?;
     cfg.chunk_bytes = args.num("chunk-bytes", 4usize << 20)?;
     Ok(cfg)
+}
+
+/// Build an [`Engine`] session from the shared CLI flags.
+fn session_of(args: &Args, cfg: &PipelineConfig) -> Result<Engine> {
+    Ok(Engine::builder()
+        .threads(cfg.nthreads)
+        .chunk_bytes(cfg.chunk_bytes)
+        .wavelet_engine(engine_of(args)?)
+        .build())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -195,6 +209,53 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_compress_dataset(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let cfg = config_of(args)?;
+    let engine = session_of(args, &cfg)?;
+    let params = CompressParams::from_config(&cfg);
+    let t = std::time::Instant::now();
+    let per_q = coordinator::compress_dataset_file(&input, args.get("qoi"), &out, &params, &engine)?;
+    let (mut raw, mut comp) = (0usize, 0usize);
+    for (name, st) in &per_q {
+        println!(
+            "  {:>8}: {} -> {} bytes  CR {:.2}  ({} chunks)",
+            name, st.raw_bytes, st.compressed_bytes, st.ratio(), st.nchunks
+        );
+        raw += st.raw_bytes;
+        comp += st.compressed_bytes;
+    }
+    println!(
+        "{} quantities -> {}  CR {:.2}  ({:.3}s, {} threads)",
+        per_q.len(),
+        out.display(),
+        raw as f64 / comp.max(1) as f64,
+        t.elapsed().as_secs_f64(),
+        engine.threads(),
+    );
+    Ok(())
+}
+
+fn cmd_decompress_dataset(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let cfg = config_of(args)?;
+    let engine = session_of(args, &cfg)?;
+    let t = std::time::Instant::now();
+    let names = coordinator::decompress_dataset_file(&input, &out, &engine)?;
+    println!(
+        "{} -> {} ({} quantities: {}) ({:.3}s, {} threads)",
+        input.display(),
+        out.display(),
+        names.len(),
+        names.join(","),
+        t.elapsed().as_secs_f64(),
+        engine.threads(),
+    );
+    Ok(())
+}
+
 fn cmd_recompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     let out = PathBuf::from(args.req("out")?);
@@ -208,6 +269,34 @@ fn cmd_recompress(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     let bytes = std::fs::read(&input)?;
+    if bytes.len() >= 4 && &bytes[..4] == cubismz::pipeline::dataset::CZS_MAGIC {
+        let ds = Dataset::from_bytes(bytes).map_err(|e| anyhow!(e))?;
+        println!("file        : {} (czs dataset archive)", input.display());
+        println!("quantities  : {}", ds.entries().len());
+        let mut raw_total = 0u64;
+        let mut comp_total = 0u64;
+        for e in ds.entries() {
+            let q = ds.quantity_header(&e.name).map_err(|e| anyhow!(e))?;
+            let raw = q.nx as u64 * q.ny as u64 * q.nz as u64 * 4;
+            println!(
+                "  {:>8}: {}x{}x{} (block {})  stage1 {:?}  stage2 {}  shuffle {:?}  {} bytes  CR {:.2}",
+                e.name,
+                q.nx,
+                q.ny,
+                q.nz,
+                q.bs,
+                q.stage1,
+                q.stage2.name(),
+                q.shuffle,
+                e.len,
+                raw as f64 / e.len.max(1) as f64,
+            );
+            raw_total += raw;
+            comp_total += e.len;
+        }
+        println!("total CR    : {:.2}", raw_total as f64 / comp_total.max(1) as f64);
+        return Ok(());
+    }
     let (f, hdr) = CzbFile::parse_header(&bytes).map_err(|e| anyhow!(e))?;
     println!("file        : {}", input.display());
     println!("dataset     : {}", f.name);
@@ -241,11 +330,14 @@ USAGE: czb <command> [flags]
   gen         --size N --step S --out f.h5l [--bubbles K] [--production] [--qoi p|rho|E|a2]
   compress    --in f.h5l --dataset NAME --out f.czb [--scheme wavelet|zfp|sz|fpzip|copy]
               [--wavelet w4|w4l|w3a] [--eps 1e-3] [--prec 24] [--zbits N] [--coeff none|fpzip|sz|spdp]
-              [--stage2 zlib|zlib-best|lz4|zstd|lzma|none] [--shuffle] [--bs 32]
+              [--stage2 zlib|zlib-best|lz4|zstd|lzma|none] [--shuffle [none|byte4|bit4]] [--bs 32]
               [--threads N (0 = all cores)] [--engine native|pjrt]
   decompress  --in f.czb --out f.h5l [--engine native|pjrt] [--threads N (0 = all cores)]
   recompress  --in f.czb --out g.czb [same flags as compress]
-  info        --in f.czb
+  compress-dataset    --in f.h5l --out f.czs [--qoi p,rho] [same scheme flags as compress]
+                      (all quantities through one Engine session into one .czs archive)
+  decompress-dataset  --in f.czs --out f.h5l [--threads N] [--engine native|pjrt]
+  info        --in f.czb | f.czs
   psnr        --ref f.h5l --dataset NAME --in f.czb"
     );
     std::process::exit(2);
@@ -269,6 +361,8 @@ fn main() {
         "compress" => cmd_compress(&args),
         "decompress" => cmd_decompress(&args),
         "recompress" => cmd_recompress(&args),
+        "compress-dataset" => cmd_compress_dataset(&args),
+        "decompress-dataset" => cmd_decompress_dataset(&args),
         "info" => cmd_info(&args),
         "psnr" => cmd_psnr(&args),
         _ => {

@@ -19,11 +19,11 @@
 //!   wavelet transform uses a thread-local line pool; the per-block loop
 //!   performs no heap allocation.
 use super::format::{ChunkEntry, CoeffCodec, CzbFile, ShuffleMode, Stage1};
-use crate::cluster::{self, SpanQueue};
+use super::stage1::{codec_for, Stage1Codec, Stage1Scratch};
+use crate::cluster::{self, Execute, ScopedExec, SpanQueue};
 use crate::codec::{shuffle, Codec};
 use crate::core::block::{Block, BlockGrid};
 use crate::core::{Field3, FieldStats};
-use crate::fpc::{self, Dims3};
 use crate::wavelet::{self, WaveletKind};
 
 /// Pluggable executor for the batched wavelet transform: native Rust or
@@ -123,111 +123,29 @@ impl CompressStats {
     }
 }
 
-/// Per-worker scratch for [`encode_block_payload`], reused across blocks
-/// so the coeff-codec path allocates nothing in the steady state.
-#[derive(Default)]
-struct EncodeScratch {
-    /// plain wavelet encoding before coeff-codec recompression
-    wav: Vec<u8>,
-    /// f32 view of the detail-coefficient payload
-    coeffs: Vec<f32>,
-    /// coeff-codec compressed bytes
-    cbuf: Vec<u8>,
-}
-
 /// Encode one already-transformed (if wavelet) block into `out` with its
-/// u32 size prefix.
+/// u32 size prefix. Scheme bytes come from the registered
+/// [`Stage1Codec`]; only the prefix framing lives here.
 fn encode_block_payload(
-    stage1: &Stage1,
+    codec: &dyn Stage1Codec,
+    params: &Stage1,
     block: &[f32],
     bs: usize,
     eps_abs: f32,
     out: &mut Vec<u8>,
-    scratch: &mut EncodeScratch,
+    scratch: &mut Stage1Scratch,
 ) {
     let start = out.len();
     out.extend_from_slice(&[0u8; 4]);
-    match *stage1 {
-        Stage1::Copy => {
-            for v in block {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        Stage1::Wavelet { zbits, coeff, .. } => {
-            let levels = wavelet::max_levels(bs);
-            match coeff {
-                CoeffCodec::None => {
-                    wavelet::encode_block(block, bs, levels, eps_abs, zbits as u32, out);
-                }
-                _ => {
-                    // encode to the reusable scratch, then recompress the
-                    // f32 coefficient payload with the chosen FP compressor
-                    scratch.wav.clear();
-                    wavelet::encode_block(
-                        block,
-                        bs,
-                        levels,
-                        eps_abs,
-                        zbits as u32,
-                        &mut scratch.wav,
-                    );
-                    let vol = bs * bs * bs;
-                    let head = 4 + vol / 8; // nsig + mask
-                    scratch.coeffs.clear();
-                    scratch.coeffs.extend(
-                        scratch.wav[head..]
-                            .chunks_exact(4)
-                            .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
-                    );
-                    out.extend_from_slice(&scratch.wav[..head]);
-                    let coeffs = &scratch.coeffs;
-                    let cbuf = &mut scratch.cbuf;
-                    cbuf.clear();
-                    match coeff {
-                        CoeffCodec::Fpzip => fpc::fpzip::compress(
-                            coeffs,
-                            Dims3 { nx: coeffs.len().max(1), ny: 1, nz: 1 },
-                            32,
-                            cbuf,
-                        ),
-                        CoeffCodec::Sz => {
-                            // bound well below the threshold so stage-1 loss
-                            // dominates (PSNR unaffected, as in the paper)
-                            let eb = (eps_abs * 1e-3).max(f32::MIN_POSITIVE);
-                            fpc::sz::compress(
-                                coeffs,
-                                Dims3 { nx: coeffs.len().max(1), ny: 1, nz: 1 },
-                                eb,
-                                cbuf,
-                            )
-                        }
-                        CoeffCodec::Spdp => fpc::spdp::compress(coeffs, cbuf),
-                        CoeffCodec::None => unreachable!(),
-                    }
-                    out.extend_from_slice(&(cbuf.len() as u32).to_le_bytes());
-                    out.extend_from_slice(cbuf);
-                }
-            }
-        }
-        Stage1::Zfp { .. } => fpc::zfp::compress(block, Dims3::cube(bs), eps_abs, out),
-        Stage1::Sz { .. } => {
-            fpc::sz::compress(block, Dims3::cube(bs), eps_abs.max(f32::MIN_POSITIVE), out)
-        }
-        Stage1::Fpzip { prec } => fpc::fpzip::compress(block, Dims3::cube(bs), prec, out),
-    }
+    codec.encode_block(params, block, bs, eps_abs, out, scratch);
     let size = (out.len() - start - 4) as u32;
     out[start..start + 4].copy_from_slice(&size.to_le_bytes());
 }
 
 /// Absolute stage-1 parameter from the relative one and the field range.
-pub fn eps_abs_of(stage1: &Stage1, range: f32) -> f32 {
+pub fn eps_abs_of(params: &Stage1, range: f32) -> f32 {
     let range = range.max(f32::MIN_POSITIVE);
-    match *stage1 {
-        Stage1::Wavelet { eps_rel, .. } => eps_rel * range,
-        Stage1::Zfp { tol_rel } => tol_rel * range,
-        Stage1::Sz { eb_rel } => eb_rel * range,
-        _ => 0.0,
-    }
+    codec_for(params).eps_abs(params, range)
 }
 
 /// Raw blocks-per-span for the scheduler: ~`chunk_bytes` of raw field data
@@ -265,20 +183,35 @@ fn seal_chunk(
             shuffle::byte_shuffle_into(raw, 4, shuf);
             shuf
         }
+        ShuffleMode::Bit4 => {
+            shuffle::bit_shuffle_into(raw, 4, shuf);
+            shuf
+        }
     };
     let payload = stage2.compress_vec(to_compress);
     chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload });
     raw.clear();
 }
 
-/// Compress a whole field. Returns the serialized `.czb` bytes + stats.
-/// The output is byte-identical for every `cfg.nthreads`.
-pub fn compress_field(
+/// One compressed quantity before serialization: parsed header + chunk
+/// payloads in block order. Frontends either concatenate it into a `Vec`
+/// ([`compress_field`]) or stream it to an `io::Write`
+/// (`Engine::compress`).
+pub(crate) struct CompressedStream {
+    pub(crate) czb: CzbFile,
+    pub(crate) payloads: Vec<Vec<u8>>,
+    pub(crate) stats: CompressStats,
+}
+
+/// Compress a whole field on the given executor. The resulting stream is
+/// byte-identical for every `cfg.nthreads` and for every executor.
+pub(crate) fn compress_field_core(
+    exec: &dyn Execute,
     field: &Field3,
     name: &str,
     cfg: &PipelineConfig,
     engine: &dyn WaveletEngine,
-) -> (Vec<u8>, CompressStats) {
+) -> CompressedStream {
     let stats = FieldStats::compute(&field.data);
     let range = stats.range() as f32;
     let eps_abs = eps_abs_of(&cfg.stage1, range);
@@ -289,7 +222,7 @@ pub fn compress_field(
     let queue = SpanQueue::new(nblocks, blocks_per_span(cfg.bs, cfg.chunk_bytes));
     let nthreads = cfg.nthreads.max(1).min(nblocks.max(1));
     let results =
-        cluster::run_workers(nthreads, |_| worker(field, &grid, &queue, cfg, eps_abs, engine));
+        cluster::run_on(exec, nthreads, |_| worker(field, &grid, &queue, cfg, eps_abs, engine));
 
     // merge in block order and build the index
     let mut merged: Vec<ThreadChunk> = Vec::new();
@@ -301,8 +234,7 @@ pub fn compress_field(
     }
     merged.sort_by_key(|c| c.first_block);
     let mut chunks = Vec::with_capacity(merged.len());
-    let name_len = name.len();
-    let header_size = CzbFile::header_size(name_len, merged.len());
+    let header_size = CzbFile::header_size(name.len(), merged.len());
     let mut offset = header_size as u64;
     for c in &merged {
         chunks.push(ChunkEntry {
@@ -328,21 +260,39 @@ pub fn compress_field(
         nblocks: nblocks as u32,
         chunks,
     };
-    let mut out = Vec::with_capacity(header_size + offset as usize);
-    czb.write_header(&mut out);
-    for c in &merged {
-        out.extend_from_slice(&c.payload);
-    }
-    let cs = CompressStats {
+    let stats = CompressStats {
         raw_bytes: field.nbytes(),
-        compressed_bytes: out.len(),
+        compressed_bytes: offset as usize,
         nblocks,
         nchunks: merged.len(),
         stats,
         t_stage1: t1_total,
         t_stage2: t2_total,
     };
-    (out, cs)
+    CompressedStream { czb, payloads: merged.into_iter().map(|c| c.payload).collect(), stats }
+}
+
+/// Compress a whole field. Returns the serialized `.czb` bytes + stats.
+/// The output is byte-identical for every `cfg.nthreads`.
+///
+/// Deprecated entry point: one-shot convenience that spawns scoped
+/// workers per call. Sessions that compress repeatedly (in-situ dumps,
+/// method sweeps) should hold a [`super::Engine`], which drives the same
+/// core over a persistent worker pool and produces identical bytes.
+pub fn compress_field(
+    field: &Field3,
+    name: &str,
+    cfg: &PipelineConfig,
+    engine: &dyn WaveletEngine,
+) -> (Vec<u8>, CompressStats) {
+    let cs = compress_field_core(&ScopedExec, field, name, cfg, engine);
+    let mut out = Vec::with_capacity(cs.stats.compressed_bytes);
+    cs.czb.write_header(&mut out);
+    for p in &cs.payloads {
+        out.extend_from_slice(p);
+    }
+    debug_assert_eq!(out.len(), cs.stats.compressed_bytes);
+    (out, cs.stats)
 }
 
 fn worker(
@@ -356,18 +306,15 @@ fn worker(
     let bs = cfg.bs;
     let vol = bs * bs * bs;
     let levels = wavelet::max_levels(bs);
-    let is_wavelet = matches!(cfg.stage1, Stage1::Wavelet { .. });
-    let wkind = match cfg.stage1 {
-        Stage1::Wavelet { kind, .. } => kind,
-        _ => WaveletKind::Avg3,
-    };
-    let batch = if is_wavelet { cfg.batch.max(1) } else { 1 };
+    let codec = codec_for(&cfg.stage1);
+    let pre_transform = codec.pre_transform(&cfg.stage1);
+    let batch = if pre_transform.is_some() { cfg.batch.max(1) } else { 1 };
     // worker-owned scratch, allocated once; the per-block loop below
     // performs no further heap allocation
     let mut batch_buf = vec![0f32; batch * vol];
     let mut raw: Vec<u8> = Vec::with_capacity(cfg.chunk_bytes + vol * 4 + 64);
     let mut shuf: Vec<u8> = Vec::new();
-    let mut scratch = EncodeScratch::default();
+    let mut scratch = Stage1Scratch::default();
     let mut scratch_block = Block::zeros(bs);
     let mut chunks = Vec::new();
     let mut t1 = 0.0f64;
@@ -384,11 +331,12 @@ fn worker(
                 grid.extract(field, id + j, &mut scratch_block);
                 batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
             }
-            if is_wavelet {
-                engine.forward_batch(wkind, &mut batch_buf[..n * vol], bs, levels);
+            if let Some(kind) = pre_transform {
+                engine.forward_batch(kind, &mut batch_buf[..n * vol], bs, levels);
             }
             for j in 0..n {
                 encode_block_payload(
+                    codec,
                     &cfg.stage1,
                     &batch_buf[j * vol..(j + 1) * vol],
                     bs,

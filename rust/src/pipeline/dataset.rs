@@ -1,0 +1,355 @@
+//! `.czs` multi-quantity dataset container: one archive per simulation
+//! step, holding every compressed quantity (the paper's multi-QoI CFD
+//! workflow dumps ~7 per step).
+//!
+//! Layout (see the format overview in [`super::format`]): an 8-byte
+//! header, each quantity as a complete `.czb` section, and a trailer
+//! index written last — so a [`DatasetWriter`] streams to any
+//! `io::Write` without seeking, and [`Dataset::open`] finds every
+//! section from the fixed-size trailer tail. Sections are independent
+//! `.czb` streams: whole-quantity decode and random block access
+//! ([`Dataset::block_reader`]) never touch the other quantities.
+use super::compressor::{CompressStats, WaveletEngine};
+use super::decompressor::BlockReader;
+use super::engine::{CompressParams, Engine};
+use super::format::CzbFile;
+use crate::core::Field3;
+use std::io::Write;
+use std::path::Path;
+
+/// Archive magic ("CubismZ Step").
+pub const CZS_MAGIC: &[u8; 4] = b"CZS1";
+/// Trailer magic, the last four bytes of every archive.
+pub const CZS_TRAILER_MAGIC: &[u8; 4] = b"CZSE";
+const HEADER_LEN: usize = 8;
+const TRAILER_TAIL: usize = 12; // u32 count | u32 table_bytes | magic
+
+/// One quantity's location inside a `.czs` archive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantityEntry {
+    pub name: String,
+    /// Byte offset of the quantity's `.czb` section.
+    pub offset: u64,
+    /// Length of the section in bytes.
+    pub len: u64,
+}
+
+/// Streaming `.czs` writer: sections go out as they are compressed, the
+/// index goes out on [`DatasetWriter::finish`]. Dropping a writer
+/// without `finish` leaves a trailer-less (unreadable) archive.
+pub struct DatasetWriter<W: Write> {
+    sink: W,
+    pos: u64,
+    entries: Vec<QuantityEntry>,
+}
+
+impl<W: Write> DatasetWriter<W> {
+    /// Start an archive on any byte sink.
+    pub fn new(mut sink: W) -> std::io::Result<Self> {
+        let mut header = [0u8; HEADER_LEN];
+        header[..4].copy_from_slice(CZS_MAGIC);
+        header[4] = 1; // version
+        sink.write_all(&header)?;
+        Ok(Self { sink, pos: HEADER_LEN as u64, entries: Vec::new() })
+    }
+
+    /// Compress `field` on `engine`'s session pool and append it as the
+    /// quantity `name`.
+    pub fn write_quantity(
+        &mut self,
+        engine: &Engine,
+        field: &Field3,
+        name: &str,
+        params: &CompressParams,
+    ) -> std::io::Result<CompressStats> {
+        self.check_name(name)?;
+        let offset = self.pos;
+        let mut counter = CountingWriter { inner: &mut self.sink, written: 0 };
+        let result = engine.compress(field, name, params, &mut counter);
+        let len = counter.written;
+        match result {
+            Ok(stats) => {
+                self.push_entry(name, offset, len);
+                Ok(stats)
+            }
+            Err(e) => {
+                // the partial section stays in the sink as dead space; keep
+                // `pos` in sync with the bytes actually emitted so a caller
+                // that skips the failed quantity still records correct
+                // offsets for the rest
+                self.pos += len;
+                Err(e)
+            }
+        }
+    }
+
+    /// Append an already-serialized `.czb` stream as the quantity `name`
+    /// (e.g. repackaging existing single-quantity files).
+    pub fn write_section(&mut self, name: &str, czb: &[u8]) -> std::io::Result<()> {
+        self.check_name(name)?;
+        let offset = self.pos;
+        self.sink.write_all(czb)?;
+        self.push_entry(name, offset, czb.len() as u64);
+        Ok(())
+    }
+
+    fn check_name(&self, name: &str) -> std::io::Result<()> {
+        if name.is_empty() || name.len() > 255 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("quantity name length {} not in 1..=255", name.len()),
+            ));
+        }
+        if self.entries.iter().any(|e| e.name == name) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("duplicate quantity {name}"),
+            ));
+        }
+        Ok(())
+    }
+
+    fn push_entry(&mut self, name: &str, offset: u64, len: u64) {
+        self.pos += len;
+        self.entries.push(QuantityEntry { name: name.to_string(), offset, len });
+    }
+
+    /// Quantities written so far.
+    pub fn entries(&self) -> &[QuantityEntry] {
+        &self.entries
+    }
+
+    /// Write the trailer index and flush; returns the sink.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        let mut table = Vec::new();
+        for e in &self.entries {
+            table.push(e.name.len() as u8);
+            table.extend_from_slice(e.name.as_bytes());
+            table.extend_from_slice(&e.offset.to_le_bytes());
+            table.extend_from_slice(&e.len.to_le_bytes());
+        }
+        self.sink.write_all(&table)?;
+        self.sink.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        self.sink.write_all(&(table.len() as u32).to_le_bytes())?;
+        self.sink.write_all(CZS_TRAILER_MAGIC)?;
+        self.sink.flush()?;
+        Ok(self.sink)
+    }
+}
+
+/// Counts bytes on their way to the shared sink, so section lengths
+/// don't require a seekable writer.
+struct CountingWriter<'a, W: Write> {
+    inner: &'a mut W,
+    written: u64,
+}
+
+impl<W: Write> Write for CountingWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.written += n as u64;
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A parsed, fully-loaded `.czs` archive with random access to
+/// quantities and blocks.
+pub struct Dataset {
+    bytes: Vec<u8>,
+    entries: Vec<QuantityEntry>,
+}
+
+impl Dataset {
+    /// Start writing an archive at `path` (convenience for
+    /// [`DatasetWriter::new`] over a buffered file).
+    pub fn create(path: &Path) -> std::io::Result<DatasetWriter<std::io::BufWriter<std::fs::File>>> {
+        DatasetWriter::new(std::io::BufWriter::new(std::fs::File::create(path)?))
+    }
+
+    /// Open an archive from disk.
+    pub fn open(path: &Path) -> Result<Self, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::from_bytes(bytes)
+    }
+
+    /// Parse an in-memory archive.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self, String> {
+        if bytes.len() < HEADER_LEN + TRAILER_TAIL {
+            return Err("czs archive too short".into());
+        }
+        if &bytes[..4] != CZS_MAGIC {
+            return Err("bad czs magic".into());
+        }
+        if bytes[4] != 1 {
+            return Err(format!("bad czs version {}", bytes[4]));
+        }
+        let tail = bytes.len() - TRAILER_TAIL;
+        if &bytes[tail + 8..] != CZS_TRAILER_MAGIC {
+            return Err("missing czs trailer (archive not finished?)".into());
+        }
+        let count = u32::from_le_bytes(bytes[tail..tail + 4].try_into().unwrap()) as usize;
+        let table_bytes = u32::from_le_bytes(bytes[tail + 4..tail + 8].try_into().unwrap()) as usize;
+        let table_start = tail
+            .checked_sub(table_bytes)
+            .ok_or_else(|| "czs trailer table larger than archive".to_string())?;
+        if table_start < HEADER_LEN {
+            return Err("czs trailer table overlaps header".into());
+        }
+        let table = &bytes[table_start..tail];
+        // every entry serializes to >= 17 bytes (name_len + u64 offset +
+        // u64 len), so a count the table cannot hold is corrupt — reject
+        // it before sizing any allocation by it
+        if count > table.len() / 17 {
+            return Err(format!(
+                "czs entry count {count} impossible for a {}-byte table",
+                table.len()
+            ));
+        }
+        let mut entries = Vec::with_capacity(count);
+        let mut pos = 0usize;
+        for _ in 0..count {
+            if table.len() < pos + 1 {
+                return Err("truncated czs table entry".into());
+            }
+            let nl = table[pos] as usize;
+            pos += 1;
+            if table.len() < pos + nl + 16 {
+                return Err("truncated czs table entry".into());
+            }
+            let name = String::from_utf8_lossy(&table[pos..pos + nl]).into_owned();
+            pos += nl;
+            let offset = u64::from_le_bytes(table[pos..pos + 8].try_into().unwrap());
+            let len = u64::from_le_bytes(table[pos + 8..pos + 16].try_into().unwrap());
+            pos += 16;
+            let end = offset
+                .checked_add(len)
+                .ok_or_else(|| "czs section overflow".to_string())?;
+            if (offset as usize) < HEADER_LEN || end as usize > table_start {
+                return Err(format!("czs section {name} out of bounds"));
+            }
+            entries.push(QuantityEntry { name, offset, len });
+        }
+        if pos != table.len() {
+            return Err("czs trailer table has trailing garbage".into());
+        }
+        Ok(Self { bytes, entries })
+    }
+
+    /// Quantities in archive order.
+    pub fn entries(&self) -> &[QuantityEntry] {
+        &self.entries
+    }
+
+    /// Quantity names in archive order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// The raw `.czb` section of a quantity.
+    pub fn section(&self, name: &str) -> Option<&[u8]> {
+        let e = self.entries.iter().find(|e| e.name == name)?;
+        Some(&self.bytes[e.offset as usize..(e.offset + e.len) as usize])
+    }
+
+    /// Parse a quantity's `.czb` header without decompressing anything.
+    pub fn quantity_header(&self, name: &str) -> Result<CzbFile, String> {
+        let section = self.section(name).ok_or_else(|| format!("quantity {name} not found"))?;
+        Ok(CzbFile::parse_header(section)?.0)
+    }
+
+    /// Decompress one whole quantity on `engine`'s session pool; the
+    /// other sections are never touched.
+    pub fn read_quantity(&self, name: &str, engine: &Engine) -> Result<(Field3, CzbFile), String> {
+        let section = self.section(name).ok_or_else(|| format!("quantity {name} not found"))?;
+        engine.decompress_bytes(section)
+    }
+
+    /// Random block access into one quantity via the LRU-cached
+    /// [`BlockReader`] (paper §2.3): decodes only the chunks the caller
+    /// touches.
+    pub fn block_reader<'a>(
+        &'a self,
+        name: &str,
+        wavelet_engine: &'a dyn WaveletEngine,
+    ) -> Result<BlockReader<'a>, String> {
+        let section = self.section(name).ok_or_else(|| format!("quantity {name} not found"))?;
+        BlockReader::new(section, wavelet_engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn smooth_field(n: usize, seed: u64) -> Field3 {
+        let mut rng = Pcg32::new(seed);
+        Field3::from_vec(n, n, n, crate::util::prop::gen_smooth_field(&mut rng, n))
+    }
+
+    #[test]
+    fn in_memory_archive_roundtrips_quantities() {
+        let engine = Engine::builder().threads(2).chunk_bytes(32 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let fields: Vec<(String, Field3)> =
+            (0..3u64).map(|i| (format!("q{i}"), smooth_field(32, 100 + i))).collect();
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        for (name, f) in &fields {
+            let st = w.write_quantity(&engine, f, name, &params).unwrap();
+            assert!(st.ratio() > 1.0);
+        }
+        assert_eq!(w.entries().len(), 3);
+        let bytes = w.finish().unwrap();
+        let ds = Dataset::from_bytes(bytes).unwrap();
+        assert_eq!(ds.names(), vec!["q0", "q1", "q2"]);
+        for (name, f) in &fields {
+            // section bytes must be exactly the engine's .czb stream
+            let (direct, _) = engine.compress_vec(f, name, &params);
+            assert_eq!(ds.section(name).unwrap(), &direct[..], "{name}");
+            let (back, file) = ds.read_quantity(name, &engine).unwrap();
+            assert_eq!(&file.name, name);
+            let (expected, _) = engine.decompress_bytes(&direct).unwrap();
+            assert!(back
+                .data
+                .iter()
+                .zip(&expected.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        assert!(ds.section("nope").is_none());
+        assert!(ds.read_quantity("nope", &engine).is_err());
+    }
+
+    #[test]
+    fn writer_rejects_duplicate_and_bad_names() {
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 5);
+        let mut w = DatasetWriter::new(Vec::<u8>::new()).unwrap();
+        w.write_quantity(&engine, &f, "p", &params).unwrap();
+        assert!(w.write_quantity(&engine, &f, "p", &params).is_err());
+        assert!(w.write_section("", b"x").is_err());
+    }
+
+    #[test]
+    fn unfinished_and_corrupt_archives_error() {
+        assert!(Dataset::from_bytes(b"CZS1".to_vec()).is_err());
+        assert!(Dataset::from_bytes(b"XXXX0123456789abcdef0123".to_vec()).is_err());
+        // header-only archive (no trailer)
+        let w = DatasetWriter::new(Vec::new()).unwrap();
+        assert!(Dataset::from_bytes(w.sink).is_err());
+        // empty but finished archive parses with zero quantities
+        let bytes = DatasetWriter::new(Vec::new()).unwrap().finish().unwrap();
+        let ds = Dataset::from_bytes(bytes).unwrap();
+        assert!(ds.entries().is_empty());
+        // a crafted trailer claiming u32::MAX entries must be rejected
+        // up front, not allocated for
+        let mut crafted = DatasetWriter::new(Vec::new()).unwrap().finish().unwrap();
+        let tail = crafted.len() - 12;
+        crafted[tail..tail + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Dataset::from_bytes(crafted).unwrap_err();
+        assert!(err.contains("entry count"), "{err}");
+    }
+}

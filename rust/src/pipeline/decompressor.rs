@@ -13,14 +13,14 @@
 //!   the output field (disjoint by construction, validated up front).
 //!   The serial [`decompress_field`] remains bit-identical to it.
 use super::compressor::{eps_abs_of, WaveletEngine};
-use super::format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};
-use crate::cluster::{self, SpanQueue};
+use super::format::{CzbFile, ShuffleMode};
+use super::stage1::{codec_for, Stage1Scratch};
+use crate::cluster::{self, Execute, ScopedExec, SpanQueue};
 use crate::codec::shuffle;
 use crate::core::block::{Block, BlockGrid};
 use crate::core::Field3;
-use crate::fpc;
-use crate::wavelet;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// A stage-2-decoded chunk with per-block offsets into the raw stream.
@@ -52,6 +52,20 @@ fn decode_chunk_into(
             file.stage2.decompress(payload, tmp)?;
             shuffle::byte_unshuffle_into(tmp, 4, raw);
         }
+        ShuffleMode::Bit4 => {
+            tmp.clear();
+            file.stage2.decompress(payload, tmp)?;
+            // validate against the indexed raw size before unshuffling:
+            // the plane layout depends on the element count
+            let rawsize = entry.rawsize as usize;
+            if tmp.len() != shuffle::bit_shuffled_len(rawsize, 4) {
+                return Err(format!(
+                    "chunk {idx}: bit-shuffled size {} inconsistent with raw size {rawsize}",
+                    tmp.len()
+                ));
+            }
+            shuffle::bit_unshuffle_into(tmp, 4, rawsize / 4, raw);
+        }
     }
     if raw.len() != entry.rawsize as usize {
         return Err(format!(
@@ -78,86 +92,20 @@ fn decode_chunk_into(
     Ok(())
 }
 
-/// Decode one stage-1 block payload into bs³ floats. `plain` is reusable
-/// scratch for the coeff-codec reassembly path.
+/// Decode one stage-1 block payload into bs³ floats via the registered
+/// [`super::stage1::Stage1Codec`]; `scratch` is reused across blocks so
+/// the steady state allocates nothing (the fpc schemes decode through
+/// their `_into` variants into scratch buffers).
 fn decode_block_payload(
     file: &CzbFile,
     payload: &[u8],
     engine: &dyn WaveletEngine,
-    plain: &mut Vec<u8>,
+    scratch: &mut Stage1Scratch,
     out: &mut [f32],
 ) -> Result<(), String> {
     let bs = file.bs as usize;
-    let vol = bs * bs * bs;
-    debug_assert_eq!(out.len(), vol);
-    match file.stage1 {
-        Stage1::Copy => {
-            if payload.len() != vol * 4 {
-                return Err("copy block size mismatch".into());
-            }
-            for (i, c) in payload.chunks_exact(4).enumerate() {
-                out[i] = f32::from_le_bytes(c.try_into().unwrap());
-            }
-        }
-        Stage1::Wavelet { kind, coeff, .. } => {
-            let levels = wavelet::max_levels(bs);
-            match coeff {
-                CoeffCodec::None => {
-                    wavelet::decode_block(payload, bs, out)?;
-                }
-                _ => {
-                    // [nsig][mask][u32 csize][compressed coeff payload]
-                    let head = 4 + vol / 8;
-                    if payload.len() < head + 4 {
-                        return Err("wavelet+coeff block truncated".into());
-                    }
-                    let csize = u32::from_le_bytes(
-                        payload[head..head + 4].try_into().unwrap(),
-                    ) as usize;
-                    let cbuf = &payload[head + 4..];
-                    if cbuf.len() < csize {
-                        return Err("coeff payload truncated".into());
-                    }
-                    let coeffs: Vec<f32> = match coeff {
-                        CoeffCodec::Fpzip => fpc::fpzip::decompress(&cbuf[..csize])?.0,
-                        CoeffCodec::Sz => fpc::sz::decompress(&cbuf[..csize])?.0,
-                        CoeffCodec::Spdp => fpc::spdp::decompress(&cbuf[..csize])?,
-                        CoeffCodec::None => unreachable!(),
-                    };
-                    // reassemble the plain encoding and decode it
-                    plain.clear();
-                    plain.extend_from_slice(&payload[..head]);
-                    for v in &coeffs {
-                        plain.extend_from_slice(&v.to_le_bytes());
-                    }
-                    wavelet::decode_block(plain, bs, out)?;
-                }
-            }
-            engine.inverse_batch(kind, out, bs, levels);
-        }
-        Stage1::Zfp { .. } => {
-            let (data, dims) = fpc::zfp::decompress(payload)?;
-            if dims.len() != vol {
-                return Err("zfp dims mismatch".into());
-            }
-            out.copy_from_slice(&data);
-        }
-        Stage1::Sz { .. } => {
-            let (data, dims) = fpc::sz::decompress(payload)?;
-            if dims.len() != vol {
-                return Err("sz dims mismatch".into());
-            }
-            out.copy_from_slice(&data);
-        }
-        Stage1::Fpzip { .. } => {
-            let (data, dims) = fpc::fpzip::decompress(payload)?;
-            if dims.len() != vol {
-                return Err("fpzip dims mismatch".into());
-            }
-            out.copy_from_slice(&data);
-        }
-    }
-    Ok(())
+    debug_assert_eq!(out.len(), bs * bs * bs);
+    codec_for(&file.stage1).decode_block(&file.stage1, payload, bs, engine, scratch, out)
 }
 
 /// Build the block grid for a parsed file, rejecting (rather than
@@ -222,8 +170,8 @@ pub struct BlockReader<'a> {
     inflate_tmp: Vec<u8>,
     /// buffers reclaimed from the most recently evicted chunk
     spare: Option<(Vec<u8>, Vec<(usize, usize)>)>,
-    /// coeff-codec reassembly scratch
-    plain_tmp: Vec<u8>,
+    /// stage-1 decode scratch shared by all block decodes on this reader
+    scratch: Stage1Scratch,
     /// Cache statistics: (hits, misses).
     pub cache_hits: usize,
     pub cache_misses: usize,
@@ -242,7 +190,7 @@ impl<'a> BlockReader<'a> {
             capacity: 8,
             inflate_tmp: Vec::new(),
             spare: None,
-            plain_tmp: Vec::new(),
+            scratch: Stage1Scratch::default(),
             cache_hits: 0,
             cache_misses: 0,
         })
@@ -331,7 +279,7 @@ impl<'a> BlockReader<'a> {
         }
         let (off, size) = chunk.block_offsets[local];
         let engine = self.engine;
-        decode_block_payload(&self.file, &chunk.raw[off..off + size], engine, &mut self.plain_tmp, out)
+        decode_block_payload(&self.file, &chunk.raw[off..off + size], engine, &mut self.scratch, out)
     }
 }
 
@@ -340,8 +288,6 @@ impl<'a> BlockReader<'a> {
 /// worker ([`validate_chunk_index`] + the span queue's disjoint pulls).
 struct FieldWriter {
     ptr: *mut f32,
-    nx: usize,
-    ny: usize,
     len: usize,
 }
 
@@ -350,16 +296,18 @@ unsafe impl Sync for FieldWriter {}
 
 impl FieldWriter {
     /// # Safety
-    /// `id` must be in range for `grid`, `block` must hold bs³ values, and
-    /// no other thread may write the same block concurrently.
+    /// `id` must be in range for `grid`, `grid` must describe the field
+    /// behind `ptr`, `block` must hold bs³ values, and no other thread
+    /// may write the same block concurrently.
     unsafe fn insert_block(&self, grid: &BlockGrid, id: usize, block: &[f32]) {
         let bs = grid.bs;
         debug_assert_eq!(block.len(), bs * bs * bs);
-        let bi = grid.block_index(id);
-        let (x0, y0, z0) = (bi.bx * bs, bi.by * bs, bi.bz * bs);
+        // same addressing as the safe BlockGrid::insert — one source of
+        // truth for the field layout
+        let layout = grid.layout(id);
         for z in 0..bs {
             for y in 0..bs {
-                let dst = ((z0 + z) * self.ny + (y0 + y)) * self.nx + x0;
+                let dst = layout.row_offset(z, y);
                 debug_assert!(dst + bs <= self.len);
                 std::ptr::copy_nonoverlapping(
                     block.as_ptr().add((z * bs + y) * bs),
@@ -391,12 +339,28 @@ pub fn decompress_field(
 }
 
 /// Whole-field decompression parallelized across chunks over `nthreads`
-/// workers (paper §2.3 "parallel decompression"). Every worker owns its
-/// inflate/decode buffers (allocation-free steady state) and scatters
-/// finished blocks straight into the shared output field — block writes
-/// are disjoint because the chunk index tiles the block range (validated)
-/// and the queue hands each chunk to exactly one worker.
+/// workers (paper §2.3 "parallel decompression").
+///
+/// Deprecated entry point: one-shot convenience that spawns scoped
+/// workers per call; sessions should use `Engine::decompress`, which
+/// drives the same core over a persistent pool.
 pub fn decompress_field_mt(
+    bytes: &[u8],
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+) -> Result<(Field3, CzbFile), String> {
+    decompress_field_core(&ScopedExec, bytes, engine, nthreads)
+}
+
+/// Whole-field parallel decompression on the given executor. Every
+/// worker owns its inflate/decode buffers (allocation-free steady state)
+/// and scatters finished blocks straight into the shared output field —
+/// block writes are disjoint because the chunk index tiles the block
+/// range (validated) and the queue hands each chunk to exactly one
+/// worker. A shared abort flag stops the other workers from draining the
+/// rest of the queue once any chunk fails to decode.
+pub(crate) fn decompress_field_core(
+    exec: &dyn Execute,
     bytes: &[u8],
     engine: &dyn WaveletEngine,
     nthreads: usize,
@@ -413,50 +377,57 @@ pub fn decompress_field_mt(
     let grid = grid_for(&file, &field)?;
     let bs = file.bs as usize;
     let vol = bs * bs * bs;
-    let writer = FieldWriter {
-        ptr: field.data.as_mut_ptr(),
-        nx: field.nx,
-        ny: field.ny,
-        len: field.data.len(),
-    };
+    let writer = FieldWriter { ptr: field.data.as_mut_ptr(), len: field.data.len() };
     let queue = SpanQueue::new(nchunks, 1);
-    let results: Vec<Result<(), String>> = cluster::run_workers(nthreads, |_| {
-        // worker-owned scratch: warm after the first chunk
-        let mut tmp: Vec<u8> = Vec::new();
-        let mut raw: Vec<u8> = Vec::new();
-        let mut offsets: Vec<(usize, usize)> = Vec::new();
-        let mut plain: Vec<u8> = Vec::new();
-        let mut block = vec![0f32; vol];
-        while let Some(span) = queue.next_span() {
-            for cidx in span {
-                let entry = file.chunks[cidx];
-                let lo = entry.offset as usize;
-                let hi = lo
-                    .checked_add(entry.csize as usize)
-                    .ok_or_else(|| "chunk offset overflow".to_string())?;
-                if bytes.len() < hi {
-                    return Err("payload truncated".to_string());
+    let abort = AtomicBool::new(false);
+    let results: Vec<Result<(), String>> = cluster::run_on(exec, nthreads, |_| {
+        let r = (|| -> Result<(), String> {
+            // worker-owned scratch: warm after the first chunk
+            let mut tmp: Vec<u8> = Vec::new();
+            let mut raw: Vec<u8> = Vec::new();
+            let mut offsets: Vec<(usize, usize)> = Vec::new();
+            let mut scratch = Stage1Scratch::default();
+            let mut block = vec![0f32; vol];
+            while let Some(span) = queue.next_span() {
+                // a sibling hit a corrupt chunk: stop pulling work, its
+                // error is what the caller will see
+                if abort.load(Ordering::Relaxed) {
+                    return Ok(());
                 }
-                decode_chunk_into(&file, &bytes[lo..hi], cidx, &mut tmp, &mut raw, &mut offsets)?;
-                for (j, &(off, size)) in offsets.iter().enumerate() {
-                    decode_block_payload(
-                        &file,
-                        &raw[off..off + size],
-                        engine,
-                        &mut plain,
-                        &mut block,
-                    )?;
-                    // SAFETY: validate_chunk_index proved chunks tile
-                    // 0..nblocks disjointly and each chunk is pulled by
-                    // exactly one worker, so this block id is written
-                    // exactly once and lies inside the field buffer.
-                    unsafe {
-                        writer.insert_block(&grid, entry.first_block as usize + j, &block)
-                    };
+                for cidx in span {
+                    let entry = file.chunks[cidx];
+                    let lo = entry.offset as usize;
+                    let hi = lo
+                        .checked_add(entry.csize as usize)
+                        .ok_or_else(|| "chunk offset overflow".to_string())?;
+                    if bytes.len() < hi {
+                        return Err("payload truncated".to_string());
+                    }
+                    decode_chunk_into(&file, &bytes[lo..hi], cidx, &mut tmp, &mut raw, &mut offsets)?;
+                    for (j, &(off, size)) in offsets.iter().enumerate() {
+                        decode_block_payload(
+                            &file,
+                            &raw[off..off + size],
+                            engine,
+                            &mut scratch,
+                            &mut block,
+                        )?;
+                        // SAFETY: validate_chunk_index proved chunks tile
+                        // 0..nblocks disjointly and each chunk is pulled by
+                        // exactly one worker, so this block id is written
+                        // exactly once and lies inside the field buffer.
+                        unsafe {
+                            writer.insert_block(&grid, entry.first_block as usize + j, &block)
+                        };
+                    }
                 }
             }
+            Ok(())
+        })();
+        if r.is_err() {
+            abort.store(true, Ordering::Relaxed);
         }
-        Ok(())
+        r
     });
     for r in results {
         r?;
@@ -475,6 +446,7 @@ mod tests {
     use crate::codec::Codec;
     use crate::metrics::psnr;
     use crate::pipeline::compressor::{compress_field, NativeEngine, PipelineConfig};
+    use crate::pipeline::format::{CoeffCodec, Stage1};
     use crate::util::prng::Pcg32;
     use crate::wavelet::WaveletKind;
 
@@ -502,7 +474,7 @@ mod tests {
     #[test]
     fn roundtrip_copy_is_bit_exact() {
         let f = smooth_field(32, 11);
-        let cfg = PipelineConfig::new(16, super::Stage1::Copy, Codec::ZlibDef);
+        let cfg = PipelineConfig::new(16, Stage1::Copy, Codec::ZlibDef);
         let (bytes, st) = compress_field(&f, "rho", &cfg, &NativeEngine);
         let (back, file) = decompress_field(&bytes, &NativeEngine).unwrap();
         assert_eq!(back.data, f.data);
@@ -518,10 +490,10 @@ mod tests {
             hi - lo
         };
         for (stage1, bound_factor) in [
-            (super::Stage1::Zfp { tol_rel: 1e-3 }, 1.0),
-            (super::Stage1::Sz { eb_rel: 1e-3 }, 1.0),
+            (Stage1::Zfp { tol_rel: 1e-3 }, 1.0),
+            (Stage1::Sz { eb_rel: 1e-3 }, 1.0),
             (
-                super::Stage1::Wavelet {
+                Stage1::Wavelet {
                     kind: WaveletKind::Avg3,
                     eps_rel: 1e-3,
                     zbits: 0,
@@ -598,7 +570,7 @@ mod tests {
         let f = smooth_field(32, 14);
         let mut psnrs = Vec::new();
         for coeff in [CoeffCodec::None, CoeffCodec::Fpzip, CoeffCodec::Spdp] {
-            let stage1 = super::Stage1::Wavelet {
+            let stage1 = Stage1::Wavelet {
                 kind: WaveletKind::Avg3,
                 eps_rel: 1e-3,
                 zbits: 0,
@@ -611,6 +583,60 @@ mod tests {
         }
         for w in psnrs.windows(2) {
             assert!((w[0] - w[1]).abs() < 0.6, "psnrs {psnrs:?}");
+        }
+    }
+
+    #[test]
+    fn bit4_shuffle_roundtrips_and_changes_the_stream() {
+        // Bit4 is a lossless chunk preconditioner: the decompressed field
+        // must be bit-identical to the Byte4 archive's, while the stage-2
+        // input (and usually the stream size) differs
+        let f = smooth_field(64, 77);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 64 << 10; // several chunks
+        let (b_byte, _) = compress_field(&f, "p", &cfg.with_shuffle(ShuffleMode::Byte4), &NativeEngine);
+        let (b_bit, st) = compress_field(&f, "p", &cfg.with_shuffle(ShuffleMode::Bit4), &NativeEngine);
+        assert!(st.nchunks > 1);
+        assert_ne!(b_byte, b_bit, "shuffle mode must reach the stream");
+        let (file_bit, _) = CzbFile::parse_header(&b_bit).unwrap();
+        assert_eq!(file_bit.shuffle, ShuffleMode::Bit4);
+        let (d_byte, _) = decompress_field(&b_byte, &NativeEngine).unwrap();
+        let (d_bit, _) = decompress_field(&b_bit, &NativeEngine).unwrap();
+        assert!(d_byte
+            .data
+            .iter()
+            .zip(&d_bit.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // parallel decode handles Bit4 too
+        let (d_mt, _) = decompress_field_mt(&b_bit, &NativeEngine, 4).unwrap();
+        assert!(d_bit
+            .data
+            .iter()
+            .zip(&d_mt.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn parallel_decode_aborts_on_corrupt_chunk() {
+        let f = smooth_field(96, 41);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 128 << 10; // many chunks so the flag matters
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks >= 4);
+        let (file, _) = CzbFile::parse_header(&bytes).unwrap();
+        // truncate-corrupt the first chunk's payload so its stage-2
+        // decode (or raw-size check) fails deterministically
+        let mut bad = bytes.clone();
+        let lo = file.chunks[0].offset as usize;
+        let hi = lo + file.chunks[0].csize as usize;
+        for b in &mut bad[lo..hi] {
+            *b = 0xAB;
+        }
+        for nthreads in [2usize, 4, 8] {
+            assert!(
+                decompress_field_mt(&bad, &NativeEngine, nthreads).is_err(),
+                "nthreads {nthreads}"
+            );
         }
     }
 

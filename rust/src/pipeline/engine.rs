@@ -1,0 +1,314 @@
+//! The session-based compression API: a long-lived [`Engine`] owning a
+//! persistent worker pool.
+//!
+//! The free functions ([`super::compress_field`],
+//! [`super::decompress_field_mt`]) spawn scoped worker threads per call —
+//! fine for one-shot tool use, wasteful for the paper's in-situ scenario
+//! where a simulation dumps ~7 quantities every few thousand steps. An
+//! `Engine` is built once:
+//!
+//! ```no_run
+//! use cubismz::pipeline::{CompressParams, Engine};
+//! let engine = Engine::builder().threads(8).chunk_bytes(4 << 20).build();
+//! let params = CompressParams::paper_default(1e-3);
+//! # let field = cubismz::core::Field3::zeros(32, 32, 32);
+//! let mut sink: Vec<u8> = Vec::new();
+//! let stats = engine.compress(&field, "p", &params, &mut sink).unwrap();
+//! let (back, _file) = engine.decompress(&mut sink.as_slice()).unwrap();
+//! ```
+//!
+//! and every `compress`/`decompress` call reuses the same
+//! [`crate::cluster::WorkerPool`] workers, streaming to any
+//! `io::Write`/`io::Read` instead of returning whole `Vec`s. The
+//! `.czb` bytes an `Engine` produces are byte-identical to the free
+//! functions' output for every thread count — both drive the same
+//! span-queue core, which fixes chunk boundaries by block-id arithmetic.
+use super::compressor::{
+    compress_field_core, CompressStats, NativeEngine, PipelineConfig, WaveletEngine,
+};
+use super::decompressor::decompress_field_core;
+use super::format::{CzbFile, ShuffleMode, Stage1};
+use crate::cluster::WorkerPool;
+use crate::codec::Codec;
+use crate::core::Field3;
+use std::io::{Read, Write};
+
+/// Per-call compression parameters: what to compress *with*, as opposed
+/// to the session-level knobs (threads, chunk budget, batch size) fixed
+/// at [`Engine`] build time. Mirrors the format-affecting subset of
+/// [`PipelineConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct CompressParams {
+    pub bs: usize,
+    pub stage1: Stage1,
+    pub stage2: Codec,
+    pub shuffle: ShuffleMode,
+}
+
+impl CompressParams {
+    pub fn new(bs: usize, stage1: Stage1, stage2: Codec) -> Self {
+        Self { bs, stage1, stage2, shuffle: ShuffleMode::None }
+    }
+
+    /// The paper's production scheme: W³ai + shuffle + ZLIB.
+    pub fn paper_default(eps_rel: f32) -> Self {
+        Self::from_config(&PipelineConfig::paper_default(eps_rel))
+    }
+
+    pub fn with_shuffle(mut self, s: ShuffleMode) -> Self {
+        self.shuffle = s;
+        self
+    }
+
+    /// The format-affecting subset of a legacy [`PipelineConfig`].
+    pub fn from_config(cfg: &PipelineConfig) -> Self {
+        Self { bs: cfg.bs, stage1: cfg.stage1, stage2: cfg.stage2, shuffle: cfg.shuffle }
+    }
+}
+
+/// Builds an [`Engine`]: `Engine::builder().threads(8).build()`.
+pub struct EngineBuilder {
+    threads: usize,
+    chunk_bytes: usize,
+    batch: usize,
+    wavelet_engine: Box<dyn WaveletEngine>,
+}
+
+impl EngineBuilder {
+    fn new() -> Self {
+        Self {
+            threads: 0,
+            chunk_bytes: 4 << 20,
+            batch: 16,
+            wavelet_engine: Box::new(NativeEngine),
+        }
+    }
+
+    /// Worker threads owned by the session (0 = all hardware threads,
+    /// the default).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Private per-worker buffer capacity before stage 2 runs, and the
+    /// scheduling granularity (paper: 4 MB). Format-affecting: archives
+    /// written with different chunk budgets differ byte-wise.
+    pub fn chunk_bytes(mut self, n: usize) -> Self {
+        self.chunk_bytes = n.max(1);
+        self
+    }
+
+    /// Blocks per wavelet-transform batch (matches the PJRT executable's
+    /// batch dimension).
+    pub fn batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
+    }
+
+    /// Executor for the batched wavelet transform (native Rust by
+    /// default; `runtime::PjrtEngine` for the Pallas kernel build).
+    pub fn wavelet_engine(mut self, engine: Box<dyn WaveletEngine>) -> Self {
+        self.wavelet_engine = engine;
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        let threads = match self.threads {
+            0 => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            n => n,
+        };
+        Engine {
+            pool: WorkerPool::new(threads),
+            threads,
+            chunk_bytes: self.chunk_bytes,
+            batch: self.batch,
+            wavelet_engine: self.wavelet_engine,
+        }
+    }
+}
+
+/// A compression session: persistent worker pool + wavelet-transform
+/// executor + session-level pipeline knobs. Build once via
+/// [`Engine::builder`], then compress/decompress any number of
+/// quantities; `&Engine` is `Sync`, so one session can serve concurrent
+/// callers (submissions are serialized onto the pool).
+pub struct Engine {
+    pool: WorkerPool,
+    threads: usize,
+    chunk_bytes: usize,
+    batch: usize,
+    wavelet_engine: Box<dyn WaveletEngine>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn chunk_bytes(&self) -> usize {
+        self.chunk_bytes
+    }
+
+    /// The session's wavelet-transform executor (shared with
+    /// `BlockReader` for random access into session-produced archives).
+    pub fn wavelet_engine(&self) -> &dyn WaveletEngine {
+        self.wavelet_engine.as_ref()
+    }
+
+    /// The full pipeline configuration a [`CompressParams`] resolves to
+    /// under this session's knobs.
+    pub fn config_for(&self, params: &CompressParams) -> PipelineConfig {
+        let mut cfg = PipelineConfig::new(params.bs, params.stage1, params.stage2);
+        cfg.shuffle = params.shuffle;
+        cfg.chunk_bytes = self.chunk_bytes;
+        cfg.batch = self.batch;
+        cfg.nthreads = self.threads;
+        cfg
+    }
+
+    /// Compress `field` and stream the `.czb` bytes to `sink`. The bytes
+    /// are identical to [`super::compress_field`] with the same
+    /// format-affecting parameters, for every thread count.
+    pub fn compress(
+        &self,
+        field: &Field3,
+        name: &str,
+        params: &CompressParams,
+        sink: &mut dyn Write,
+    ) -> std::io::Result<CompressStats> {
+        let cfg = self.config_for(params);
+        let cs = compress_field_core(&self.pool, field, name, &cfg, self.wavelet_engine.as_ref());
+        let mut header = Vec::with_capacity(CzbFile::header_size(name.len(), cs.payloads.len()));
+        cs.czb.write_header(&mut header);
+        sink.write_all(&header)?;
+        for p in &cs.payloads {
+            sink.write_all(p)?;
+        }
+        Ok(cs.stats)
+    }
+
+    /// Compress into a fresh `Vec` (convenience mirror of
+    /// [`super::compress_field`]).
+    pub fn compress_vec(
+        &self,
+        field: &Field3,
+        name: &str,
+        params: &CompressParams,
+    ) -> (Vec<u8>, CompressStats) {
+        let mut out = Vec::new();
+        let stats = self
+            .compress(field, name, params, &mut out)
+            .expect("writing to a Vec cannot fail");
+        (out, stats)
+    }
+
+    /// Read a whole `.czb` stream from `src` and decompress it on the
+    /// session pool (chunk-parallel, bit-identical to the serial path).
+    pub fn decompress(&self, src: &mut dyn Read) -> Result<(Field3, CzbFile), String> {
+        let mut bytes = Vec::new();
+        src.read_to_end(&mut bytes).map_err(|e| format!("reading czb stream: {e}"))?;
+        self.decompress_bytes(&bytes)
+    }
+
+    /// Decompress an in-memory `.czb` stream on the session pool.
+    pub fn decompress_bytes(&self, bytes: &[u8]) -> Result<(Field3, CzbFile), String> {
+        decompress_field_core(&self.pool, bytes, self.wavelet_engine.as_ref(), self.threads)
+    }
+}
+
+impl Default for Engine {
+    /// A session with all hardware threads and paper-default knobs.
+    fn default() -> Self {
+        Engine::builder().build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::compressor::compress_field;
+    use crate::pipeline::decompressor::{decompress_field, decompress_field_mt};
+    use crate::util::prng::Pcg32;
+
+    fn smooth_field(n: usize, seed: u64) -> Field3 {
+        let mut rng = Pcg32::new(seed);
+        Field3::from_vec(n, n, n, crate::util::prop::gen_smooth_field(&mut rng, n))
+    }
+
+    #[test]
+    fn engine_bytes_match_legacy_for_every_thread_count() {
+        let f = smooth_field(64, 91);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 32 << 10; // several spans so pulls interleave
+        let params = CompressParams::from_config(&cfg);
+        let (reference, st) = compress_field(&f, "p", &cfg.with_threads(1), &NativeEngine);
+        assert!(st.nchunks > 1);
+        for threads in [1usize, 2, 3, 8] {
+            let engine =
+                Engine::builder().threads(threads).chunk_bytes(cfg.chunk_bytes).build();
+            let (bytes, stats) = engine.compress_vec(&f, "p", &params);
+            assert_eq!(bytes, reference, "threads {threads}");
+            assert_eq!(stats.compressed_bytes, reference.len());
+            // decompress on the same session, against the serial path
+            let (back, file) = engine.decompress_bytes(&bytes).unwrap();
+            let (serial, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+            assert_eq!(file.name, "p");
+            assert!(back
+                .data
+                .iter()
+                .zip(&serial.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn one_session_compresses_many_quantities() {
+        // the in-situ shape: one pool, repeated dumps; streams must be
+        // independent of session reuse
+        let engine = Engine::builder().threads(4).chunk_bytes(64 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        for seed in [1u64, 2, 3, 4, 5] {
+            let f = smooth_field(64, seed);
+            let (bytes, st) = engine.compress_vec(&f, "q", &params);
+            let mut cfg = engine.config_for(&params);
+            cfg.nthreads = 1;
+            let (reference, _) = compress_field(&f, "q", &cfg, &NativeEngine);
+            assert_eq!(bytes, reference, "seed {seed}");
+            assert!(st.ratio() > 1.0);
+        }
+    }
+
+    #[test]
+    fn streaming_sinks_and_sources_roundtrip() {
+        let f = smooth_field(32, 9);
+        let engine = Engine::builder().threads(2).build();
+        let params = CompressParams::paper_default(1e-3);
+        // write through the io::Write path
+        let mut sink: Vec<u8> = Vec::new();
+        let stats = engine.compress(&f, "rho", &params, &mut sink).unwrap();
+        assert_eq!(stats.compressed_bytes, sink.len());
+        // read back through the io::Read path
+        let (back, file) = engine.decompress(&mut sink.as_slice()).unwrap();
+        assert_eq!(file.name, "rho");
+        let (expected, _) = decompress_field_mt(&sink, &NativeEngine, 2).unwrap();
+        assert!(back
+            .data
+            .iter()
+            .zip(&expected.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn decompress_errors_are_strings_not_panics() {
+        let engine = Engine::builder().threads(2).build();
+        assert!(engine.decompress_bytes(b"not a czb").is_err());
+        let f = smooth_field(32, 10);
+        let (bytes, _) = engine.compress_vec(&f, "p", &CompressParams::paper_default(1e-3));
+        assert!(engine.decompress_bytes(&bytes[..bytes.len() - 5]).is_err());
+    }
+}

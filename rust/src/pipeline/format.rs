@@ -1,4 +1,6 @@
-//! `.czb` compressed-quantity file format and pipeline configuration.
+//! `.czb` compressed-quantity and `.czs` dataset-container formats.
+//!
+//! ## `.czb` — one compressed quantity
 //!
 //! Layout (little endian):
 //! ```text
@@ -15,6 +17,24 @@
 //! Within a chunk's *raw* stream every block is prefixed with its `u32`
 //! encoded size, so the decompressor can walk to any block after a single
 //! stage-2 inflate of the chunk.
+//!
+//! ## `.czs` — one simulation step, many quantities
+//!
+//! A `.czs` archive (see [`super::dataset`]) bundles the ~7 quantities a
+//! CFD step dumps into one file: an 8-byte header, the quantities as
+//! complete back-to-back `.czb` sections, and a trailer index written
+//! last so the archive streams to any `io::Write` without seeking:
+//! ```text
+//! magic "CZS1" | u8 version | 3 reserved bytes
+//! section 0: a complete .czb stream (header + chunk payloads)
+//! section 1: ...
+//! trailer: nquantities x { u8 name_len | name | u64 offset | u64 len }
+//!          u32 nquantities | u32 table_bytes | magic "CZSE"
+//! ```
+//! Readers parse the fixed 12-byte trailer tail, walk the entry table,
+//! and then treat every section as an independent `.czb` — whole-quantity
+//! decode and random block access (via `BlockReader` over the section
+//! slice) both work without touching the other quantities.
 use crate::codec::Codec;
 use crate::wavelet::WaveletKind;
 
@@ -136,21 +156,32 @@ pub enum ShuffleMode {
     None,
     /// Byte shuffle with 4-byte elements (single-precision layout).
     Byte4,
+    /// Bit shuffle with 4-byte elements (BLOSC2-style bit planes).
+    Bit4,
 }
 
 impl ShuffleMode {
+    pub const ALL: [ShuffleMode; 3] = [ShuffleMode::None, ShuffleMode::Byte4, ShuffleMode::Bit4];
+
     pub fn id(&self) -> u8 {
         match self {
             ShuffleMode::None => 0,
             ShuffleMode::Byte4 => 1,
+            ShuffleMode::Bit4 => 2,
         }
     }
     pub fn from_id(v: u8) -> Option<Self> {
-        match v {
-            0 => Some(ShuffleMode::None),
-            1 => Some(ShuffleMode::Byte4),
-            _ => None,
+        Self::ALL.into_iter().find(|m| m.id() == v)
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShuffleMode::None => "none",
+            ShuffleMode::Byte4 => "byte4",
+            ShuffleMode::Bit4 => "bit4",
         }
+    }
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.name() == name)
     }
 }
 
@@ -354,6 +385,23 @@ mod tests {
             let (g, _) = CzbFile::parse_header(&buf).unwrap();
             assert_eq!(g.stage1, s);
         }
+    }
+
+    #[test]
+    fn shuffle_mode_ids_and_names_roundtrip() {
+        for m in ShuffleMode::ALL {
+            assert_eq!(ShuffleMode::from_id(m.id()), Some(m));
+            assert_eq!(ShuffleMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(ShuffleMode::from_id(9), None);
+        assert_eq!(ShuffleMode::from_name("bitplane"), None);
+        // Bit4 headers roundtrip
+        let mut f = sample();
+        f.shuffle = ShuffleMode::Bit4;
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        let (g, _) = CzbFile::parse_header(&buf).unwrap();
+        assert_eq!(g.shuffle, ShuffleMode::Bit4);
     }
 
     #[test]

@@ -1,5 +1,30 @@
 //! The two-substage compression pipeline (paper Fig. 1), scheduled
-//! dynamically over a shared atomic work queue.
+//! dynamically over a shared atomic work queue and driven either one-shot
+//! or as a long-lived session.
+//!
+//! # Engine lifecycle
+//!
+//! The primary API is the session object [`Engine`]: build it once via
+//! [`Engine::builder`] (`threads`, `chunk_bytes`, `batch`, wavelet
+//! executor), then compress and decompress any number of quantities on
+//! its persistent worker pool. `Engine::compress` streams a `.czb`
+//! quantity to any `io::Write`; `Engine::decompress` reads one back from
+//! any `io::Read`. Per-call, format-affecting options travel in
+//! [`CompressParams`]; session-level scheduling knobs are fixed at build
+//! time. Dropping the `Engine` joins the pool. The older free functions
+//! ([`compress_field`], [`decompress_field_mt`]) remain as thin one-shot
+//! wrappers over the same core using scoped threads — byte-for-byte
+//! identical output, but they re-pay worker startup per call, which the
+//! session exists to avoid (an in-situ code dumps ~7 quantities per
+//! step).
+//!
+//! Whole simulation steps bundle into `.czs` archives ([`dataset`]):
+//! [`Dataset::create`] + `DatasetWriter::write_quantity` append one
+//! `.czb` section per quantity and a trailer index; [`Dataset::open`]
+//! gives whole-quantity decode and chunk-cached random block access
+//! without touching the other sections.
+//!
+//! # Stages
 //!
 //! **Compression** ([`compressor`]): worker threads pull contiguous spans
 //! of blocks (~`chunk_bytes` of raw data each) off a
@@ -8,24 +33,36 @@
 //! + codec) over the filled buffer — and the chunks are concatenated in
 //! block order into a single stream per quantity. Span boundaries are
 //! fixed by block-id arithmetic, so the `.czb` output is byte-identical
-//! for every thread count.
+//! for every thread count and every executor (pool or scoped).
+//!
+//! Stage-1 schemes are trait objects ([`stage1::Stage1Codec`]): the
+//! wavelet, zfp, sz, fpzip and copy paths all dispatch through one
+//! registry, so a new scheme implements the trait and registers —
+//! neither `compressor.rs` nor `decompressor.rs` changes.
 //!
 //! **Decompression** ([`decompressor`]): whole-field decode pulls chunks
 //! off the same queue type and scatters blocks into the shared output
-//! field ([`decompress_field_mt`]); random access goes through the
-//! chunk-cached [`BlockReader`].
+//! field, stopping early via a shared abort flag when any chunk fails;
+//! random access goes through the chunk-cached [`BlockReader`].
 //!
 //! **Buffer lifecycle**: every worker owns its scratch — batch transform
-//! buffer, block gather, [`compressor`]'s encode scratch, shuffle buffer,
-//! the decompressor's inflate/offset buffers — allocated once per worker
-//! and reused for every block/chunk; the wavelet transform keeps its line
-//! buffers in a thread-local pool and the [`BlockReader`] LRU recycles
-//! evicted chunk buffers. The steady-state per-block path allocates
-//! nothing on either direction.
+//! buffer, block gather, the [`stage1::Stage1Scratch`] encode/decode
+//! buffers, shuffle buffer, the decompressor's inflate/offset buffers —
+//! allocated once per worker and reused for every block/chunk; the
+//! wavelet transform keeps its line buffers in a thread-local pool, the
+//! fpc decoders fill caller-owned `_into` buffers, and the
+//! [`BlockReader`] LRU recycles evicted chunk buffers. The steady-state
+//! per-block path allocates nothing in either direction.
 pub mod compressor;
+pub mod dataset;
 pub mod decompressor;
+pub mod engine;
 pub mod format;
+pub mod stage1;
 
 pub use compressor::{compress_field, CompressStats, NativeEngine, PipelineConfig, WaveletEngine};
+pub use dataset::{Dataset, DatasetWriter, QuantityEntry};
 pub use decompressor::{decompress_field, decompress_field_mt, BlockReader};
+pub use engine::{CompressParams, Engine, EngineBuilder};
 pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};
+pub use stage1::{Stage1Codec, Stage1Scratch};

@@ -77,6 +77,79 @@ fn full_cli_flow() {
 }
 
 #[test]
+fn cli_dataset_flow() {
+    let h5 = tmp("cli_ds.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "64", "--step", "5000", "--out", h5.to_str().unwrap(),
+    ]));
+
+    // all quantities through one Engine session into one archive
+    let czs = tmp("cli_ds.czs");
+    let out = run_ok(czb().args([
+        "compress-dataset", "--in", h5.to_str().unwrap(), "--out", czs.to_str().unwrap(),
+        "--eps", "1e-3", "--shuffle", "--threads", "2",
+    ]));
+    assert!(out.contains("4 quantities"), "{out}");
+    assert!(czs.exists());
+
+    let out = run_ok(czb().args(["info", "--in", czs.to_str().unwrap()]));
+    assert!(out.contains("czs dataset archive"), "{out}");
+    assert!(out.contains("quantities  : 4"), "{out}");
+    assert!(out.contains("total CR"), "{out}");
+
+    let h5_back = tmp("cli_ds_out.h5l");
+    let out = run_ok(czb().args([
+        "decompress-dataset", "--in", czs.to_str().unwrap(), "--out",
+        h5_back.to_str().unwrap(), "--threads", "2",
+    ]));
+    assert!(out.contains("4 quantities"), "{out}");
+    assert!(h5_back.exists());
+
+    // subset selection
+    let czs_sub = tmp("cli_ds_sub.czs");
+    let out = run_ok(czb().args([
+        "compress-dataset", "--in", h5.to_str().unwrap(), "--out", czs_sub.to_str().unwrap(),
+        "--qoi", "p,rho",
+    ]));
+    assert!(out.contains("2 quantities"), "{out}");
+}
+
+#[test]
+fn cli_shuffle_modes() {
+    let h5 = tmp("cli_shuf.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(), "--qoi", "p",
+    ]));
+    for mode in ["byte4", "bit4", "none"] {
+        let f = tmp(&format!("cli_shuf_{mode}.czb"));
+        run_ok(czb().args([
+            "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+            f.to_str().unwrap(), "--shuffle", mode,
+        ]));
+        let info = run_ok(czb().args(["info", "--in", f.to_str().unwrap()]));
+        let expect = match mode {
+            "byte4" => "Byte4",
+            "bit4" => "Bit4",
+            _ => "None",
+        };
+        assert!(info.contains(expect), "mode {mode}: {info}");
+        let back = tmp(&format!("cli_shuf_{mode}.h5l"));
+        run_ok(czb().args([
+            "decompress", "--in", f.to_str().unwrap(), "--out", back.to_str().unwrap(),
+        ]));
+    }
+    // unknown mode is rejected
+    let st = czb()
+        .args([
+            "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+            tmp("x.czb").to_str().unwrap(), "--shuffle", "bitplane",
+        ])
+        .output()
+        .unwrap();
+    assert!(!st.status.success());
+}
+
+#[test]
 fn cli_rejects_bad_input() {
     let st = czb().args(["compress", "--in", "/nonexistent.h5l"]).output().unwrap();
     assert!(!st.status.success());

@@ -1,0 +1,89 @@
+//! Integration: a whole simulation step — every QoI — through one
+//! Engine session into a `.czs` archive on disk, then back: whole-
+//! quantity decode, PSNR fidelity, and random access to a single
+//! quantity/block without touching the rest of the archive.
+use cubismz::core::block::{Block, BlockGrid};
+use cubismz::metrics::psnr;
+use cubismz::pipeline::{CompressParams, Dataset, Engine, NativeEngine, ShuffleMode};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("cubismz_dataset_tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+#[test]
+fn multi_quantity_archive_roundtrips_with_random_access() {
+    let n = 64;
+    let sim = CloudSim::new(CloudConfig::paper(n));
+    let t = step_to_time(5000);
+    let engine = Engine::builder().threads(4).chunk_bytes(64 << 10).build();
+    let params = CompressParams::paper_default(1e-3);
+
+    // one session, one archive, all four QoIs
+    let path = tmp("step5000.czs");
+    let mut writer = Dataset::create(&path).unwrap();
+    for qoi in Qoi::ALL {
+        let f = sim.field(qoi, t);
+        let st = writer.write_quantity(&engine, &f, qoi.name(), &params).unwrap();
+        assert!(st.ratio() > 2.0, "{qoi:?} ratio {}", st.ratio());
+    }
+    writer.finish().unwrap();
+
+    let ds = Dataset::open(&path).unwrap();
+    let names: Vec<&str> = ds.names();
+    assert_eq!(names, Qoi::ALL.map(|q| q.name()).to_vec());
+
+    // whole-quantity decode matches the original within the eps bound
+    for qoi in Qoi::ALL {
+        let f = sim.field(qoi, t);
+        let (back, file) = ds.read_quantity(qoi.name(), &engine).unwrap();
+        assert_eq!(file.name, qoi.name());
+        assert_eq!((back.nx, back.ny, back.nz), (n, n, n));
+        let p = psnr(&f.data, &back.data);
+        assert!(p > 45.0, "{qoi:?} psnr {p}");
+    }
+
+    // random access to a single quantity/block: a BlockReader over the
+    // pressure section decodes exactly the blocks we ask for and agrees
+    // with the whole-field decode bit-for-bit
+    let (full, file) = ds.read_quantity("p", &engine).unwrap();
+    let bs = file.bs as usize;
+    let grid = BlockGrid::new(&full, bs);
+    let weng = NativeEngine;
+    let mut reader = ds.block_reader("p", &weng).unwrap();
+    let mut blk = vec![0f32; bs * bs * bs];
+    let mut expected = Block::zeros(bs);
+    for id in [0u32, 1, file.nblocks / 2, file.nblocks - 1] {
+        reader.read_block(id, &mut blk).unwrap();
+        grid.extract(&full, id as usize, &mut expected);
+        assert!(
+            blk.iter().zip(&expected.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "block {id}"
+        );
+    }
+    assert!(reader.read_block(file.nblocks, &mut blk).is_err());
+
+    // quantity headers are independent .czb headers
+    let q = ds.quantity_header("rho").unwrap();
+    assert_eq!(q.name, "rho");
+    assert_eq!(q.bs as usize, 32);
+}
+
+#[test]
+fn archive_sections_are_byte_identical_to_single_quantity_streams() {
+    // repackaging guarantee: the .czs container adds framing around
+    // byte-identical .czb sections, for every shuffle mode
+    let sim = CloudSim::new(CloudConfig::paper(32));
+    let f = sim.field(Qoi::Pressure, step_to_time(5000));
+    for shuffle in [ShuffleMode::None, ShuffleMode::Byte4, ShuffleMode::Bit4] {
+        let engine = Engine::builder().threads(2).build();
+        let params = CompressParams::paper_default(1e-3).with_shuffle(shuffle);
+        let (direct, _) = engine.compress_vec(&f, "p", &params);
+        let mut writer = cubismz::pipeline::DatasetWriter::new(Vec::<u8>::new()).unwrap();
+        writer.write_quantity(&engine, &f, "p", &params).unwrap();
+        let ds = Dataset::from_bytes(writer.finish().unwrap()).unwrap();
+        assert_eq!(ds.section("p").unwrap(), &direct[..], "{shuffle:?}");
+    }
+}

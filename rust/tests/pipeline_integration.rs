@@ -8,8 +8,8 @@ use cubismz::core::{Field3, FieldStats};
 use cubismz::io::parallel::shared_write;
 use cubismz::metrics::{compression_ratio, psnr};
 use cubismz::pipeline::{
-    compress_field, decompress_field, decompress_field_mt, CoeffCodec, NativeEngine,
-    PipelineConfig, ShuffleMode, Stage1,
+    compress_field, decompress_field, decompress_field_mt, CoeffCodec, CompressParams, Engine,
+    NativeEngine, PipelineConfig, ShuffleMode, Stage1,
 };
 use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
 use cubismz::wavelet::WaveletKind;
@@ -176,7 +176,8 @@ fn zbits_and_shuffle_improve_ratio_without_breaking_bounds() {
 #[test]
 fn thread_count_never_changes_the_stream() {
     // the dynamic span-queue schedule fixes chunk boundaries by block-id
-    // arithmetic: compressing with any thread count must produce the
+    // arithmetic: compressing with any thread count — through the legacy
+    // free function OR a persistent Engine session — must produce the
     // exact same bytes, and chunk-parallel decode must reproduce the
     // serial field bit-for-bit
     let sim = CloudSim::new(CloudConfig::paper(64));
@@ -185,10 +186,22 @@ fn thread_count_never_changes_the_stream() {
     cfg.chunk_bytes = 256 << 10; // multiple chunks even at 64^3
     let (bytes1, st) = compress_field(&f, "rho", &cfg, &NativeEngine);
     assert!(st.nchunks > 1, "need multiple chunks, got {}", st.nchunks);
-    for nthreads in [2usize, 4, 7] {
+    let params = CompressParams::from_config(&cfg);
+    for nthreads in [1usize, 2, 4, 7] {
         let cfgn = cfg.with_threads(nthreads);
         let (bytesn, _) = compress_field(&f, "rho", &cfgn, &NativeEngine);
-        assert_eq!(bytes1, bytesn, "nthreads {nthreads}");
+        assert_eq!(bytes1, bytesn, "legacy nthreads {nthreads}");
+        // session API cross-check: same stream from the worker pool
+        let engine = Engine::builder().threads(nthreads).chunk_bytes(cfg.chunk_bytes).build();
+        let (bytes_e, _) = engine.compress_vec(&f, "rho", &params);
+        assert_eq!(bytes1, bytes_e, "engine nthreads {nthreads}");
+        // and the session decodes to the serial field bit-for-bit
+        let (eng_field, _) = engine.decompress_bytes(&bytes_e).unwrap();
+        let (serial, _) = decompress_field(&bytes1, &NativeEngine).unwrap();
+        assert!(
+            serial.data.iter().zip(&eng_field.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "engine decode must match serial (nthreads {nthreads})"
+        );
     }
     let (serial, _) = decompress_field(&bytes1, &NativeEngine).unwrap();
     let (parallel, _) = decompress_field_mt(&bytes1, &NativeEngine, 4).unwrap();

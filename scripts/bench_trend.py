@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Fail-soft bench trend diff for the BENCH_*.json files the benches emit.
+
+Usage: bench_trend.py PREV_DIR CUR_DIR
+
+Compares every BENCH_*.json present in CUR_DIR against the same-named
+file in PREV_DIR (a previous CI run's artifact) and prints per-metric
+deltas. Missing files, malformed JSON, or schema drift are reported and
+skipped — the script always exits 0 so a broken trend check can never
+fail the build.
+"""
+import glob
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except Exception as e:  # fail-soft by contract
+        print(f"  ! could not read {path}: {e}")
+        return None
+
+
+def fmt_delta(old, new):
+    if not isinstance(old, (int, float)) or not isinstance(new, (int, float)):
+        return None
+    if old == 0:
+        return f"{old} -> {new}"
+    pct = 100.0 * (new - old) / abs(old)
+    return f"{old:.3g} -> {new:.3g} ({pct:+.1f}%)"
+
+
+def row_key(row):
+    """Stable identity for a row across runs (threads/eps/... if present)."""
+    for k in ("threads", "eps", "name", "field"):
+        if k in row:
+            return (k, row[k])
+    return None
+
+
+def diff_rows(old_rows, new_rows, indent="  "):
+    old_by_key = {row_key(r): r for r in old_rows if row_key(r) is not None}
+    for new in new_rows:
+        key = row_key(new)
+        old = old_by_key.get(key)
+        if old is None:
+            print(f"{indent}{key}: (new row)")
+            continue
+        parts = []
+        for k, v in new.items():
+            if k == key[0]:
+                continue
+            d = fmt_delta(old.get(k), v)
+            if d is not None:
+                parts.append(f"{k} {d}")
+        print(f"{indent}{key[0]}={key[1]}: " + ("; ".join(parts) if parts else "(no numeric fields)"))
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return
+    prev_dir, cur_dir = sys.argv[1], sys.argv[2]
+    cur_files = sorted(glob.glob(os.path.join(cur_dir, "BENCH_*.json")))
+    if not cur_files:
+        print(f"no BENCH_*.json in {cur_dir}; nothing to compare")
+        return
+    for cur_path in cur_files:
+        name = os.path.basename(cur_path)
+        print(f"== {name} ==")
+        prev_path = os.path.join(prev_dir, name)
+        if not os.path.exists(prev_path):
+            print("  (no previous run to compare against)")
+            continue
+        cur, prev = load(cur_path), load(prev_path)
+        if cur is None or prev is None:
+            continue
+        try:
+            if isinstance(cur.get("rows"), list) and isinstance(prev.get("rows"), list):
+                diff_rows(prev["rows"], cur["rows"])
+            for k, v in cur.items():
+                if k == "rows":
+                    continue
+                d = fmt_delta(prev.get(k), v)
+                if d is not None and prev.get(k) != v:
+                    print(f"  {k}: {d}")
+        except Exception as e:  # fail-soft by contract
+            print(f"  ! diff failed: {e}")
+    print("(trend diff is informational only; never fails the build)")
+
+
+if __name__ == "__main__":
+    main()
