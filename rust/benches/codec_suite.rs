@@ -1,18 +1,33 @@
 //! Bench: the from-scratch lossless codecs vs the real zlib/zstd
 //! reference baselines on stage-1-like payloads (shuffled wavelet
-//! coefficient streams). §Perf tracking for czlib.
+//! coefficient streams). §Perf tracking for the stage-2 layer.
+//!
+//! Iterates the [`cubismz::codec::stage2`] registry (no hard-coded codec
+//! list: a newly registered codec shows up here automatically) and emits
+//! `BENCH_stage2.json` — per-codec compress/decompress MB/s + CR, the
+//! shuffle preconditioner comparison, and the framed single-chunk
+//! decompression thread-scaling rows (zlib-best path) that
+//! `scripts/bench_trend.py` diffs across CI runs.
+//!
+//! `CODEC_SUITE_FAST=1` shrinks the payload and budgets for CI smoke use.
 #[cfg(reference_codecs)]
 use cubismz::codec::reference;
-use cubismz::codec::{shuffle, Codec};
-use cubismz::util::bench::bench_budget;
+use cubismz::codec::{shuffle, stage2, Codec};
+use cubismz::core::Field3;
+use cubismz::pipeline::{compress_field, decompress_field_mt, NativeEngine, PipelineConfig};
+use cubismz::util::bench::{bench_budget, write_json, Json};
 use cubismz::util::prng::Pcg32;
 
-fn raw_payload() -> Vec<u8> {
+fn fast_mode() -> bool {
+    std::env::var("CODEC_SUITE_FAST").is_ok()
+}
+
+fn raw_payload(n_floats: usize) -> Vec<u8> {
     // realistic stage-1 output: drifting small floats
     let mut rng = Pcg32::new(0xBE7C4);
     let mut data = Vec::new();
     let mut v = 0.0f32;
-    for _ in 0..1_500_000 {
+    for _ in 0..n_floats {
         v += rng.next_f32() * 0.01 - 0.005;
         data.extend_from_slice(&v.to_le_bytes());
     }
@@ -20,35 +35,70 @@ fn raw_payload() -> Vec<u8> {
 }
 
 fn main() {
-    let raw = raw_payload();
+    let fast = fast_mode();
+    let (n_floats, budget, max_samples) =
+        if fast { (400_000, 0.4, 10) } else { (1_500_000, 2.0, 50) };
+    let raw = raw_payload(n_floats);
     let data = shuffle::byte_shuffle(&raw, 4);
     let bytes = data.len();
-    println!("bench codec_suite: {} MB shuffled coefficient payload", bytes / 1_000_000);
-    for codec in [Codec::Lz4, Codec::Zstd, Codec::ZlibDef, Codec::ZlibBest, Codec::Lzma] {
-        let s = bench_budget(&format!("compress/{}", codec.name()), 2.0, 50, || {
-            codec.compress_vec(&data)
+    println!(
+        "bench codec_suite: {} MB shuffled coefficient payload ({} registered codecs{})",
+        bytes / 1_000_000,
+        stage2::REGISTRY.len(),
+        if fast { ", fast mode" } else { "" }
+    );
+    let mut codec_rows = Vec::new();
+    for codec in stage2::REGISTRY {
+        if codec.id() == 0 {
+            continue; // direct copy: throughput is memcpy, CR is 1
+        }
+        let s = bench_budget(&format!("compress/{}", codec.name()), budget, max_samples, || {
+            let mut out = Vec::new();
+            codec.compress_into(&data, &mut out);
+            out
         });
         s.report_mbps(bytes);
-        let comp = codec.compress_vec(&data);
-        let s = bench_budget(&format!("decompress/{}", codec.name()), 1.5, 100, || {
-            codec.decompress_vec(&comp).unwrap()
-        });
-        s.report_mbps(bytes);
-        println!(
-            "{:40} CR {:.2}",
-            format!("  ({})", codec.name()),
-            bytes as f64 / comp.len() as f64
+        let mut comp = Vec::new();
+        codec.compress_into(&data, &mut comp);
+        let sd = bench_budget(
+            &format!("decompress/{}", codec.name()),
+            budget * 0.75,
+            max_samples * 2,
+            || {
+                let mut out = Vec::new();
+                codec.decompress_into(&comp, data.len(), &mut out).unwrap();
+                out
+            },
         );
+        sd.report_mbps(bytes);
+        let cr = bytes as f64 / comp.len() as f64;
+        println!("{:40} CR {:.2}", format!("  ({})", codec.name()), cr);
+        codec_rows.push(Json::Obj(vec![
+            ("name".into(), Json::Str(codec.name().into())),
+            ("effort".into(), Json::Str(format!("{:?}", codec.effort()))),
+            ("compress_mbps".into(), Json::Num(s.mbps(bytes))),
+            ("decompress_mbps".into(), Json::Num(sd.mbps(bytes))),
+            ("ratio".into(), Json::Num(cr)),
+        ]));
     }
+
     // shuffle preconditioners: ShuffleMode::Bit4 (bit planes) vs Byte4 on
     // the same coefficient stream — CR is the decision metric, the
-    // kernels' own cost is reported alongside
+    // kernels' own cost is reported alongside (the bit kernel is the
+    // word-parallel 8x8 transpose)
     println!("shuffle preconditioner comparison (same raw payload):");
-    let s = bench_budget("shuffle/byte4", 1.0, 50, || shuffle::byte_shuffle(&raw, 4));
+    let s = bench_budget("shuffle/byte4", budget * 0.5, 50, || shuffle::byte_shuffle(&raw, 4));
     s.report_mbps(raw.len());
-    let s = bench_budget("shuffle/bit4", 1.0, 10, || shuffle::bit_shuffle(&raw, 4));
+    let byte4_mbps = s.mbps(raw.len());
+    let s = bench_budget("shuffle/bit4", budget * 0.5, 50, || shuffle::bit_shuffle(&raw, 4));
     s.report_mbps(raw.len());
+    let bit4_mbps = s.mbps(raw.len());
     let bit = shuffle::bit_shuffle(&raw, 4);
+    let mut shuffle_rows = vec![Json::Obj(vec![
+        ("name".into(), Json::Str("kernels".into())),
+        ("byte4_mbps".into(), Json::Num(byte4_mbps)),
+        ("bit4_mbps".into(), Json::Num(bit4_mbps)),
+    ])];
     for codec in [Codec::Lz4, Codec::ZlibDef] {
         let c_none = codec.compress_vec(&raw).len();
         let c_byte = codec.compress_vec(&data).len();
@@ -60,7 +110,57 @@ fn main() {
             raw.len() as f64 / c_byte as f64,
             raw.len() as f64 / c_bit as f64,
         );
+        shuffle_rows.push(Json::Obj(vec![
+            ("name".into(), Json::Str(codec.name().into())),
+            ("cr_none".into(), Json::Num(raw.len() as f64 / c_none as f64)),
+            ("cr_byte4".into(), Json::Num(raw.len() as f64 / c_byte as f64)),
+            ("cr_bit4".into(), Json::Num(raw.len() as f64 / c_bit as f64)),
+        ]));
     }
+
+    // framed intra-chunk parallelism: a single-chunk zlib-best archive
+    // must decompress faster with more threads (the frames fan out)
+    let n = if fast { 64 } else { 128 };
+    let mut rng = Pcg32::new(77);
+    let f = Field3::from_vec(n, n, n, cubismz::util::prop::gen_smooth_field(&mut rng, n));
+    let mut cfg = PipelineConfig::paper_default(1e-4);
+    cfg.stage2 = Codec::ZlibBest;
+    cfg.chunk_bytes = 1 << 30; // one chunk
+    cfg.frame_bytes = 64 << 10; // many frames inside it
+    cfg.nthreads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let (stream, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+    assert_eq!(st.nchunks, 1, "scaling bench needs a single-chunk archive");
+    println!(
+        "single-chunk stage-2 scaling: {n}^3 field, zlib-best, {} compressed bytes",
+        stream.len()
+    );
+    let mut scaling_rows = Vec::new();
+    let mut d1 = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let sd = bench_budget(&format!("single-chunk decompress/t={threads}"), budget, 20, || {
+            decompress_field_mt(&stream, &NativeEngine, threads).unwrap()
+        });
+        sd.report_mbps(f.nbytes());
+        if threads == 1 {
+            d1 = sd.mean;
+        }
+        println!("  t={threads}: {:.2}x vs 1 thread", d1 / sd.mean);
+        scaling_rows.push(Json::Obj(vec![
+            ("threads".into(), Json::Int(threads as i64)),
+            ("decompress_mbps".into(), Json::Num(sd.mbps(f.nbytes()))),
+            ("speedup".into(), Json::Num(d1 / sd.mean)),
+        ]));
+    }
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("stage2".into())),
+        ("payload_bytes".into(), Json::Int(bytes as i64)),
+        ("codecs".into(), Json::Arr(codec_rows)),
+        ("shuffle".into(), Json::Arr(shuffle_rows)),
+        ("single_chunk_scaling".into(), Json::Arr(scaling_rows)),
+    ]);
+    write_json("BENCH_stage2.json", &doc).expect("write BENCH_stage2.json");
+    println!("wrote BENCH_stage2.json");
 
     // reference baselines (need the flate2/zstd crates: --cfg reference_codecs)
     #[cfg(reference_codecs)]

@@ -8,7 +8,13 @@
 //! throughput target is checked when the host actually has ≥8 hardware
 //! threads. Emits `BENCH_thread_scaling.json`.
 //!
+//! Also measures *single-chunk* stage-2 decompression (zlib-best path):
+//! a one-chunk archive decodes through the framed intra-chunk wide path,
+//! so its sub-frames fan out across threads — the speedup rows land in
+//! this bench's JSON and, via `codec_suite`, in `BENCH_stage2.json`.
+//!
 //! Field side can be overridden with `THREAD_SCALING_N` (divisible by 32).
+use cubismz::codec::Codec;
 use cubismz::core::Field3;
 use cubismz::pipeline::{compress_field, decompress_field_mt, NativeEngine, PipelineConfig};
 use cubismz::util::bench::{bench_budget, write_json, Json};
@@ -102,12 +108,68 @@ fn main() {
     } else {
         println!("  (only {hw} hardware threads — target not enforced on this host)");
     }
+    // single-chunk stage-2 decompression (zlib-best): the framed wide
+    // path must scale a one-chunk archive across threads, bit-exactly
+    let sc_n = n.min(128);
+    let mut rng = Pcg32::new(77);
+    let sf = Field3::from_vec(sc_n, sc_n, sc_n, cubismz::util::prop::gen_smooth_field(&mut rng, sc_n));
+    let mut scfg = PipelineConfig::paper_default(1e-4).with_threads(hw);
+    scfg.stage2 = Codec::ZlibBest;
+    scfg.chunk_bytes = 1 << 30; // a single chunk
+    scfg.frame_bytes = 64 << 10; // many sub-frames inside it
+    let (sc_stream, sc_st) = compress_field(&sf, "p", &scfg, &NativeEngine);
+    assert_eq!(sc_st.nchunks, 1, "single-chunk section needs one chunk");
+    println!(
+        "single-chunk stage-2 decompress ({sc_n}^3, zlib-best, {} compressed bytes, {}-byte frames):",
+        sc_stream.len(),
+        scfg.frame_bytes
+    );
+    let mut sc_rows = Vec::new();
+    let mut sc_d1 = 0.0f64;
+    let mut sc_d8 = 0.0f64;
+    let mut sc_reference: Option<Vec<f32>> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let sd = bench_budget(&format!("single-chunk decompress/t={threads}"), 2.0, 12, || {
+            decompress_field_mt(&sc_stream, &NativeEngine, threads).unwrap()
+        });
+        sd.report_mbps(sf.nbytes());
+        let (back, _) = decompress_field_mt(&sc_stream, &NativeEngine, threads).unwrap();
+        match &sc_reference {
+            None => sc_reference = Some(back.data),
+            Some(r) => assert!(
+                r.iter().zip(&back.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "single-chunk wide decode must stay bit-exact (t={threads})"
+            ),
+        }
+        if threads == 1 {
+            sc_d1 = sd.mean;
+        }
+        if threads == 8 {
+            sc_d8 = sd.mean;
+        }
+        println!("  t={threads}: {:.2}x vs 1 thread", sc_d1 / sd.mean);
+        sc_rows.push(Json::Obj(vec![
+            ("threads".into(), Json::Int(threads as i64)),
+            ("decompress_mbps".into(), Json::Num(sd.mbps(sf.nbytes()))),
+            ("speedup".into(), Json::Num(sc_d1 / sd.mean)),
+        ]));
+    }
+    if hw >= 8 {
+        let sp = sc_d1 / sc_d8;
+        println!("single-chunk scaling-check (8t vs 1t, target >= 1.5x): {sp:.2}x");
+        assert!(
+            sp >= 1.5,
+            "framed single-chunk decompression must speed up with threads: {sp:.2}x"
+        );
+    }
+
     let doc = Json::Obj(vec![
         ("bench".into(), Json::Str("thread_scaling".into())),
         ("field".into(), Json::Str(format!("smooth/{n}^3"))),
         ("raw_bytes".into(), Json::Int(bytes as i64)),
         ("hw_threads".into(), Json::Int(hw as i64)),
         ("rows".into(), Json::Arr(rows)),
+        ("single_chunk_stage2".into(), Json::Arr(sc_rows)),
     ]);
     write_json("BENCH_thread_scaling.json", &doc).expect("write BENCH_thread_scaling.json");
     println!("wrote BENCH_thread_scaling.json");

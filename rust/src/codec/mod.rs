@@ -1,16 +1,36 @@
-//! Substage-2 lossless codecs (paper §2.3 "Lossless compression").
+//! Substage-2 lossless layer (paper §2.3 "Lossless compression"),
+//! organized around the [`stage2::Stage2Codec`] trait + registry.
 //!
-//! All primary codecs are implemented from scratch in this module:
+//! # Architecture
+//!
+//! * [`stage2`] — the dispatch layer. Every back-end implements
+//!   [`stage2::Stage2Codec`] (`compress_into` / limit-checked
+//!   `decompress_into`, `name`/`id`/`aliases`/`effort`) and registers in
+//!   [`stage2::REGISTRY`]; the pipeline resolves a `&'static dyn
+//!   Stage2Codec` once per file and never matches on a codec enum. The
+//!   module also owns the *framed* chunk container (`compress_framed` /
+//!   `decompress_framed`): fixed-arithmetic sub-frames that let one
+//!   chunk's stage-2 work fan out across the worker pool while the
+//!   serialized bytes stay thread-count independent.
+//! * [`Codec`] — the thin wire identifier those registrations map to.
+//!   It survives only because `.czb` headers serialize a codec id; its
+//!   convenience methods delegate straight to the registry.
+//!
+//! # Back-ends (all implemented from scratch)
+//!
 //! * [`czlib`]  — LZ77 (hash-chain) + canonical Huffman; DEFLATE-family.
 //!   Two effort levels mirroring ZLIB's default/best (`Z/DEF`, `Z/BEST`).
 //! * [`lz4lite`] — greedy byte-aligned LZ (LZ4 family): fastest, lower CR.
-//! * [`zstdlite`] — czlib engine with a 4× window and greedy matching:
-//!   ZLIB-class ratio at higher speed (ZSTD's positioning in the paper).
+//! * [`zstdlite` profile] — the czlib engine with a 4× window and greedy
+//!   matching: ZLIB-class ratio at higher speed (ZSTD's positioning in
+//!   the paper); registered as `zstd`.
 //! * [`lzmalite`] — LZ + adaptive binary range coder with order-1 literal
 //!   contexts and a 1 MiB window: best ratio, slowest (LZMA's positioning).
 //! * [`shuffle`] — byte/bit shuffling preconditioners (BLOSC-style),
 //!   reached from the pipeline as `ShuffleMode::Byte4` / `Bit4` chunk
-//!   preconditioners (`benches/codec_suite` reports their CR head-to-head).
+//!   preconditioners. The bit kernel uses a word-parallel 8×8 bit-matrix
+//!   transpose (`benches/codec_suite` reports CR and kernel throughput
+//!   head-to-head).
 //!
 //! The real `flate2` (zlib) and `zstd` crates are wrapped as *reference
 //! baselines* to validate the from-scratch implementations in tests and
@@ -25,8 +45,13 @@ pub mod lzmalite;
 #[cfg(reference_codecs)]
 pub mod reference;
 pub mod shuffle;
+pub mod stage2;
+
+pub use stage2::{Effort, Stage2Codec};
 
 /// Identifies a substage-2 lossless scheme in file headers and CLIs.
+/// Dispatch lives behind [`Codec::codec`] → the [`stage2`] registry; this
+/// enum is only the serialized wire id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Codec {
     /// No stage-2 compression (direct copy).
@@ -47,17 +72,6 @@ impl Codec {
     pub const ALL: [Codec; 6] =
         [Codec::None, Codec::ZlibDef, Codec::ZlibBest, Codec::Lz4, Codec::Zstd, Codec::Lzma];
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            Codec::None => "none",
-            Codec::ZlibDef => "zlib",
-            Codec::ZlibBest => "zlib-best",
-            Codec::Lz4 => "lz4",
-            Codec::Zstd => "zstd",
-            Codec::Lzma => "lzma",
-        }
-    }
-
     pub fn id(&self) -> u8 {
         match self {
             Codec::None => 0,
@@ -69,38 +83,36 @@ impl Codec {
         }
     }
 
+    /// The registered back-end serving this wire id.
+    pub fn codec(&self) -> &'static dyn Stage2Codec {
+        stage2::by_id(self.id()).expect("every Codec variant has a registered Stage2Codec")
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.codec().name()
+    }
+
     pub fn from_id(id: u8) -> Option<Self> {
         Self::ALL.into_iter().find(|c| c.id() == id)
     }
 
+    /// Resolve a CLI spelling through the registry: canonical names,
+    /// aliases (`zlib-def`, `z/best`, ...), case-insensitive — every name
+    /// `czb info` prints round-trips back into `czb compress --stage2`.
     pub fn from_name(name: &str) -> Option<Self> {
-        Self::ALL.into_iter().find(|c| c.name() == name)
+        stage2::by_name(name).and_then(|c| Self::from_id(c.id()))
     }
 
-    /// Compress `input`, appending to `out`.
+    /// Compress `input`, appending to `out` (registry convenience).
     pub fn compress(&self, input: &[u8], out: &mut Vec<u8>) {
-        match self {
-            Codec::None => out.extend_from_slice(input),
-            Codec::ZlibDef => czlib::compress(input, czlib::Level::Default, out),
-            Codec::ZlibBest => czlib::compress(input, czlib::Level::Best, out),
-            Codec::Lz4 => lz4lite::compress(input, out),
-            Codec::Zstd => czlib::compress(input, czlib::Level::Fast, out),
-            Codec::Lzma => lzmalite::compress(input, out),
-        }
+        self.codec().compress_into(input, out);
     }
 
-    /// Decompress `input` (must contain a whole stream), appending to `out`.
+    /// Decompress `input` (must contain a whole stream), appending to
+    /// `out`. Unbounded-limit convenience: pipeline paths that know the
+    /// expected size call the registry with an exact limit instead.
     pub fn decompress(&self, input: &[u8], out: &mut Vec<u8>) -> Result<(), String> {
-        match self {
-            Codec::None => {
-                out.extend_from_slice(input);
-                Ok(())
-            }
-            Codec::ZlibDef | Codec::ZlibBest => czlib::decompress(input, out),
-            Codec::Lz4 => lz4lite::decompress(input, out),
-            Codec::Zstd => czlib::decompress(input, out),
-            Codec::Lzma => lzmalite::decompress(input, out),
-        }
+        self.codec().decompress_into(input, usize::MAX, out)
     }
 
     /// Convenience: compress into a fresh vector.
@@ -223,5 +235,27 @@ mod tests {
             assert_eq!(Codec::from_name(c.name()), Some(c));
         }
         assert_eq!(Codec::from_id(99), None);
+    }
+
+    #[test]
+    fn info_printed_names_round_trip_with_aliases() {
+        // the fix for the CLI round-trip: every spelling `--help` or
+        // `info` ever shows must parse back, in any case
+        for (spelling, want) in [
+            ("zlib", Codec::ZlibDef),
+            ("zlib-def", Codec::ZlibDef),
+            ("ZLIB-DEF", Codec::ZlibDef),
+            ("z/def", Codec::ZlibDef),
+            ("zlib-best", Codec::ZlibBest),
+            ("Z/BEST", Codec::ZlibBest),
+            ("LZ4", Codec::Lz4),
+            ("Zstd", Codec::Zstd),
+            ("lzma", Codec::Lzma),
+            ("none", Codec::None),
+            ("NONE", Codec::None),
+        ] {
+            assert_eq!(Codec::from_name(spelling), Some(want), "{spelling}");
+        }
+        assert_eq!(Codec::from_name("deflate64"), None);
     }
 }

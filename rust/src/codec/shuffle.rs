@@ -51,6 +51,21 @@ pub fn byte_unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
     out
 }
 
+/// 8×8 bit-matrix transpose (Hacker's Delight delta swaps): byte `r` of
+/// the input is row `r`, bit `c` within a byte is column `c`; the result
+/// has bit `(8r + c)` equal to input bit `(8c + r)`. An involution — the
+/// same kernel serves shuffle and unshuffle.
+#[inline]
+fn transpose8(mut x: u64) -> u64 {
+    let t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    x ^= t ^ (t << 7);
+    let t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    x ^= t ^ (t << 14);
+    let t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
 /// Bit shuffle into a caller-owned buffer (cleared and resized): plane b
 /// of the output collects bit b of every `stride`-byte element
 /// (BLOSC2-style). The element count is padded up to a byte multiple, so
@@ -59,15 +74,39 @@ pub fn byte_unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
 /// [`byte_shuffle_into`]. This is the `ShuffleMode::Bit4` chunk
 /// preconditioner, so one `out` per worker keeps the hot path
 /// allocation-free.
+///
+/// Word-parallel kernel: each group of 8 elements × 1 byte position is an
+/// 8×8 bit matrix gathered into a `u64`, transposed with [`transpose8`],
+/// and scattered as one byte per bit plane — ~an order of magnitude fewer
+/// operations than the bit-at-a-time loop it replaced (the `~30x slower
+/// than byte_shuffle` ROADMAP item). The `< 8` element remainder falls
+/// back to the naive per-bit loop.
 pub fn bit_shuffle_into(data: &[u8], stride: usize, out: &mut Vec<u8>) {
     assert!(stride > 0);
     let n = data.len() / stride; // number of whole elements
     let nbits = stride * 8;
     let plane_bytes = n.div_ceil(8);
-    // planes are built with ORs, so a warm buffer must be re-zeroed
+    // the remainder plane bytes are built with ORs, so a warm buffer must
+    // be re-zeroed (the word loop overwrites its group bytes fully)
     out.clear();
     out.resize(nbits * plane_bytes + (data.len() - n * stride), 0);
-    for i in 0..n {
+    let groups = n / 8;
+    for g in 0..groups {
+        let i0 = g * 8;
+        for p in 0..stride {
+            // rows = elements i0..i0+8, columns = bits of their byte p
+            let mut x = 0u64;
+            for k in 0..8 {
+                x |= (data[(i0 + k) * stride + p] as u64) << (8 * k);
+            }
+            let y = transpose8(x);
+            // byte j of y = plane (8p + j)'s bits for these 8 elements
+            for j in 0..8 {
+                out[(p * 8 + j) * plane_bytes + g] = (y >> (8 * j)) as u8;
+            }
+        }
+    }
+    for i in groups * 8..n {
         for b in 0..nbits {
             let bit = (data[i * stride + b / 8] >> (b % 8)) & 1;
             if bit != 0 {
@@ -96,16 +135,35 @@ pub fn bit_shuffled_len(len: usize, stride: usize) -> usize {
 /// Inverse of [`bit_shuffle_into`] into a caller-owned buffer (cleared
 /// and resized); `n` is the original element count. `data` must be
 /// exactly [`bit_shuffled_len`]`(n * stride + tail, stride)` bytes, where
-/// the tail is whatever follows the planes.
+/// the tail is whatever follows the planes. Word-parallel like the
+/// forward kernel: [`transpose8`] is an involution, so the same 8×8
+/// transpose maps plane bytes back to element bytes.
 pub fn bit_unshuffle_into(data: &[u8], stride: usize, n: usize, out: &mut Vec<u8>) {
     let nbits = stride * 8;
     let plane_bytes = n.div_ceil(8);
     assert!(data.len() >= nbits * plane_bytes, "shuffled stream shorter than its planes");
     let tail = data.len() - nbits * plane_bytes;
-    // elements are rebuilt with ORs, so a warm buffer must be re-zeroed
+    // remainder elements are rebuilt with ORs, so a warm buffer must be
+    // re-zeroed (the word loop overwrites its group bytes fully)
     out.clear();
     out.resize(n * stride + tail, 0);
-    for i in 0..n {
+    let groups = n / 8;
+    for g in 0..groups {
+        let i0 = g * 8;
+        for p in 0..stride {
+            // rows = planes 8p..8p+8, columns = elements i0..i0+8
+            let mut x = 0u64;
+            for j in 0..8 {
+                x |= (data[(p * 8 + j) * plane_bytes + g] as u64) << (8 * j);
+            }
+            let y = transpose8(x);
+            // byte k of y = byte p of element i0+k
+            for k in 0..8 {
+                out[(i0 + k) * stride + p] = (y >> (8 * k)) as u8;
+            }
+        }
+    }
+    for i in groups * 8..n {
         for b in 0..nbits {
             let bit = (data[b * plane_bytes + i / 8] >> (i % 8)) & 1;
             if bit != 0 {
@@ -128,6 +186,87 @@ mod tests {
     use super::*;
     use crate::util::prng::Pcg32;
     use crate::util::prop::prop_cases;
+
+    /// The original bit-at-a-time kernel, kept as the equivalence oracle
+    /// for the word-parallel transpose.
+    fn bit_shuffle_naive(data: &[u8], stride: usize) -> Vec<u8> {
+        let n = data.len() / stride;
+        let nbits = stride * 8;
+        let plane_bytes = n.div_ceil(8);
+        let mut out = vec![0u8; nbits * plane_bytes + (data.len() - n * stride)];
+        for i in 0..n {
+            for b in 0..nbits {
+                let bit = (data[i * stride + b / 8] >> (b % 8)) & 1;
+                if bit != 0 {
+                    out[b * plane_bytes + i / 8] |= 1 << (i % 8);
+                }
+            }
+        }
+        out[nbits * plane_bytes..].copy_from_slice(&data[n * stride..]);
+        out
+    }
+
+    /// Bit-at-a-time inverse, the oracle for the word-parallel unshuffle.
+    fn bit_unshuffle_naive(data: &[u8], stride: usize, n: usize) -> Vec<u8> {
+        let nbits = stride * 8;
+        let plane_bytes = n.div_ceil(8);
+        let tail = data.len() - nbits * plane_bytes;
+        let mut out = vec![0u8; n * stride + tail];
+        for i in 0..n {
+            for b in 0..nbits {
+                let bit = (data[b * plane_bytes + i / 8] >> (i % 8)) & 1;
+                if bit != 0 {
+                    out[i * stride + b / 8] |= 1 << (b % 8);
+                }
+            }
+        }
+        out[n * stride..].copy_from_slice(&data[nbits * plane_bytes..]);
+        out
+    }
+
+    #[test]
+    fn transpose8_is_a_bit_matrix_transpose() {
+        // spot vectors: identity diagonal, single bits, and the involution
+        // property on random words
+        assert_eq!(transpose8(0), 0);
+        assert_eq!(transpose8(u64::MAX), u64::MAX);
+        for r in 0..8u64 {
+            for c in 0..8u64 {
+                let x = 1u64 << (8 * r + c);
+                assert_eq!(transpose8(x), 1u64 << (8 * c + r), "bit ({r},{c})");
+            }
+        }
+        let mut rng = Pcg32::new(0x78A95);
+        for _ in 0..200 {
+            let x = ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64;
+            assert_eq!(transpose8(transpose8(x)), x);
+        }
+    }
+
+    #[test]
+    fn word_parallel_bit_kernels_match_naive() {
+        // the satellite's equivalence test: every stride, element-count
+        // remainder (n % 8) and tail shape must produce exactly the naive
+        // kernel's bytes in both directions
+        let mut rng = Pcg32::new(0xB17B17);
+        let mut shuf = Vec::new();
+        let mut unshuf = Vec::new();
+        for stride in [1usize, 2, 4, 8] {
+            for extra in 0..10usize {
+                let n = (rng.below(700) as usize) + extra; // element count
+                let tail = rng.below(stride as u32) as usize;
+                let len = n * stride + tail;
+                let data: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+                let expect = bit_shuffle_naive(&data, stride);
+                bit_shuffle_into(&data, stride, &mut shuf);
+                assert_eq!(shuf, expect, "shuffle stride {stride} n {n} tail {tail}");
+                let back_expect = bit_unshuffle_naive(&shuf, stride, n);
+                bit_unshuffle_into(&shuf, stride, n, &mut unshuf);
+                assert_eq!(unshuf, back_expect, "unshuffle stride {stride} n {n} tail {tail}");
+                assert_eq!(unshuf, data, "roundtrip stride {stride} n {n} tail {tail}");
+            }
+        }
+    }
 
     #[test]
     fn byte_shuffle_is_involution() {

@@ -1,0 +1,621 @@
+//! The substage-2 lossless codec registry and the framed chunk container.
+//!
+//! # Registry
+//!
+//! Every lossless back-end sits behind the [`Stage2Codec`] trait — the
+//! stage-2 mirror of `pipeline::stage1::Stage1Codec`. The pipeline holds
+//! a `&'static dyn Stage2Codec` resolved once per file via [`by_id`] and
+//! never matches on the [`super::Codec`] enum again; the enum survives
+//! purely as the wire identifier the `.czb` header serializes.
+//! Registering a new back-end means implementing the trait, appending it
+//! to [`REGISTRY`], and adding a `Codec` variant for its wire id —
+//! `compressor.rs`/`decompressor.rs` stay untouched.
+//!
+//! [`by_name`] resolves CLI spellings: canonical names, per-codec aliases
+//! (e.g. the paper's `z/def`), all case-insensitively, so every name the
+//! tool ever prints round-trips back into `--stage2`.
+//!
+//! # Framed container
+//!
+//! A chunk's stage-2 payload is split into fixed-raw-size *sub-frames*,
+//! each an independent compressed stream (the paper's "independent
+//! deflate blocks", §2.3, generalized to all registered codecs):
+//!
+//! ```text
+//! u32 nframes | nframes x u32 frame_csize | compressed frames back-to-back
+//! ```
+//!
+//! Frame boundaries are pure arithmetic on the uncompressed length
+//! ([`frame_spans`]): frame `i` covers bytes `i*frame_raw ..
+//! min((i+1)*frame_raw, len)`. Nothing about the split depends on the
+//! worker count, which keeps the serialized archive byte-identical across
+//! thread counts while letting one chunk's frames compress and decompress
+//! concurrently on the worker pool. The decoder knows every frame's exact
+//! raw length up front, so fuzzed frame tables are rejected before any
+//! allocation is sized by them and decoded frames are length-checked.
+use super::{czlib, lz4lite, lzmalite};
+use std::ops::Range;
+
+/// Rough speed/ratio class of a registered codec (the paper's qualitative
+/// ordering: LZ4 fastest, LZMA best ratio).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    /// Throughput-first (lz4lite, zstdlite, direct copy).
+    Fast,
+    /// The production middle ground (czlib at default effort).
+    Balanced,
+    /// Ratio-first (czlib best effort, lzmalite).
+    Best,
+}
+
+/// One substage-2 lossless back-end behind a uniform interface.
+/// Implementations are stateless statics; per-call buffers are always
+/// caller-owned so the pipeline hot paths stay allocation-free.
+pub trait Stage2Codec: Sync {
+    /// Wire id serialized in `.czb` headers (matches [`super::Codec::id`]).
+    fn id(&self) -> u8;
+    /// Canonical name (matches [`super::Codec::name`]).
+    fn name(&self) -> &'static str;
+    /// Alternative CLI spellings accepted by [`by_name`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// Speed/ratio class, for CLI listings and tuning heuristics.
+    fn effort(&self) -> Effort;
+
+    /// Compress `input` as one self-contained stream, appending to `out`.
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>);
+
+    /// Decompress one whole stream, appending to `out`. `limit` is the
+    /// caller's upper bound on the decoded size: implementations must
+    /// error — before reserving memory — on streams that claim more, so
+    /// a fuzzed length prefix can never drive an allocation.
+    fn decompress_into(&self, input: &[u8], limit: usize, out: &mut Vec<u8>)
+        -> Result<(), String>;
+}
+
+/// The u32 raw-length prefix all from-scratch streams carry, validated
+/// against the caller's `limit` before anything is reserved.
+fn claimed_len(input: &[u8], limit: usize) -> Result<usize, String> {
+    if input.len() < 4 {
+        return Err("missing stream header".into());
+    }
+    let claimed = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
+    if claimed > limit {
+        return Err(format!("stream claims {claimed} bytes, limit {limit}"));
+    }
+    Ok(claimed)
+}
+
+/// Direct copy (no stage-2 compression).
+pub struct NoneCodec;
+
+impl Stage2Codec for NoneCodec {
+    fn id(&self) -> u8 {
+        0
+    }
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["copy", "raw"]
+    }
+    fn effort(&self) -> Effort {
+        Effort::Fast
+    }
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>) {
+        out.extend_from_slice(input);
+    }
+    fn decompress_into(
+        &self,
+        input: &[u8],
+        limit: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        if input.len() > limit {
+            return Err(format!("stream of {} bytes exceeds limit {limit}", input.len()));
+        }
+        out.extend_from_slice(input);
+        Ok(())
+    }
+}
+
+/// czlib at default effort (the paper's Z/DEF).
+pub struct ZlibDefCodec;
+
+impl Stage2Codec for ZlibDefCodec {
+    fn id(&self) -> u8 {
+        1
+    }
+    fn name(&self) -> &'static str {
+        "zlib"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["zlib-def", "z/def", "zdef"]
+    }
+    fn effort(&self) -> Effort {
+        Effort::Balanced
+    }
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>) {
+        czlib::compress(input, czlib::Level::Default, out);
+    }
+    fn decompress_into(
+        &self,
+        input: &[u8],
+        limit: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        claimed_len(input, limit)?;
+        czlib::decompress(input, out)
+    }
+}
+
+/// czlib at best effort (the paper's Z/BEST).
+pub struct ZlibBestCodec;
+
+impl Stage2Codec for ZlibBestCodec {
+    fn id(&self) -> u8 {
+        2
+    }
+    fn name(&self) -> &'static str {
+        "zlib-best"
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["zlib-best", "z/best", "zbest"]
+    }
+    fn effort(&self) -> Effort {
+        Effort::Best
+    }
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>) {
+        czlib::compress(input, czlib::Level::Best, out);
+    }
+    fn decompress_into(
+        &self,
+        input: &[u8],
+        limit: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        claimed_len(input, limit)?;
+        czlib::decompress(input, out)
+    }
+}
+
+/// lz4lite: fastest, lower ratio.
+pub struct Lz4Codec;
+
+impl Stage2Codec for Lz4Codec {
+    fn id(&self) -> u8 {
+        3
+    }
+    fn name(&self) -> &'static str {
+        "lz4"
+    }
+    fn effort(&self) -> Effort {
+        Effort::Fast
+    }
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>) {
+        lz4lite::compress(input, out);
+    }
+    fn decompress_into(
+        &self,
+        input: &[u8],
+        limit: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        claimed_len(input, limit)?;
+        lz4lite::decompress(input, out)
+    }
+}
+
+/// zstdlite: the czlib engine in its fast wide-window profile (ZSTD's
+/// positioning in the paper — zlib-class ratio at higher speed).
+pub struct ZstdCodec;
+
+impl Stage2Codec for ZstdCodec {
+    fn id(&self) -> u8 {
+        4
+    }
+    fn name(&self) -> &'static str {
+        "zstd"
+    }
+    fn effort(&self) -> Effort {
+        Effort::Fast
+    }
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>) {
+        czlib::compress(input, czlib::Level::Fast, out);
+    }
+    fn decompress_into(
+        &self,
+        input: &[u8],
+        limit: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        claimed_len(input, limit)?;
+        czlib::decompress(input, out)
+    }
+}
+
+/// lzmalite: best ratio, slowest.
+pub struct LzmaCodec;
+
+impl Stage2Codec for LzmaCodec {
+    fn id(&self) -> u8 {
+        5
+    }
+    fn name(&self) -> &'static str {
+        "lzma"
+    }
+    fn effort(&self) -> Effort {
+        Effort::Best
+    }
+    fn compress_into(&self, input: &[u8], out: &mut Vec<u8>) {
+        lzmalite::compress(input, out);
+    }
+    fn decompress_into(
+        &self,
+        input: &[u8],
+        limit: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        claimed_len(input, limit)?;
+        lzmalite::decompress(input, out)
+    }
+}
+
+/// All registered substage-2 codecs, one per [`super::Codec`] wire id.
+pub static REGISTRY: [&'static dyn Stage2Codec; 6] =
+    [&NoneCodec, &ZlibDefCodec, &ZlibBestCodec, &Lz4Codec, &ZstdCodec, &LzmaCodec];
+
+/// Look a codec up by its wire id.
+pub fn by_id(id: u8) -> Option<&'static dyn Stage2Codec> {
+    REGISTRY.iter().copied().find(|c| c.id() == id)
+}
+
+/// Look a codec up by canonical name or alias, case-insensitively.
+pub fn by_name(name: &str) -> Option<&'static dyn Stage2Codec> {
+    REGISTRY.iter().copied().find(|c| {
+        c.name().eq_ignore_ascii_case(name)
+            || c.aliases().iter().any(|a| a.eq_ignore_ascii_case(name))
+    })
+}
+
+/// Number of sub-frames a `raw_len`-byte stream splits into (at least 1,
+/// so even an empty chunk has a well-formed table).
+pub fn frame_count(raw_len: usize, frame_raw: usize) -> usize {
+    debug_assert!(frame_raw > 0);
+    raw_len.div_ceil(frame_raw).max(1)
+}
+
+/// The fixed, worker-count-independent raw byte range of frame `i`.
+pub fn frame_span(raw_len: usize, frame_raw: usize, i: usize) -> Range<usize> {
+    let lo = (i * frame_raw).min(raw_len);
+    lo..(lo + frame_raw).min(raw_len)
+}
+
+/// Compress `input` as a framed container (frame table + independently
+/// compressed sub-frames), appending to `out`. Deterministic: the split
+/// depends only on `input.len()` and `frame_raw`. Streams each frame
+/// straight into `out` and back-patches the table — byte-identical to
+/// [`assemble_framed`] over individually compressed frames (tested), so
+/// parallel sealers can compress frames into separate buffers and
+/// assemble without re-encoding the layout.
+pub fn compress_framed(
+    codec: &dyn Stage2Codec,
+    input: &[u8],
+    frame_raw: usize,
+    out: &mut Vec<u8>,
+) {
+    let n = frame_count(input.len(), frame_raw);
+    out.reserve(4 + 4 * n + input.len() / 2 + 64);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    let table = out.len();
+    out.resize(table + 4 * n, 0);
+    for i in 0..n {
+        let span = frame_span(input.len(), frame_raw, i);
+        let start = out.len();
+        codec.compress_into(&input[span], out);
+        let csize = (out.len() - start) as u32;
+        out[table + 4 * i..table + 4 * (i + 1)].copy_from_slice(&csize.to_le_bytes());
+    }
+}
+
+/// Assemble the framed-container wire layout from already-compressed
+/// frame payloads (in frame order). This is the writer the parallel
+/// sealer uses after fanning frame compression out across workers; its
+/// bytes are identical to [`compress_framed`]'s for the same frames.
+pub fn assemble_framed(frames: &[Vec<u8>], out: &mut Vec<u8>) {
+    let total: usize = frames.iter().map(|f| f.len()).sum();
+    out.reserve(4 + 4 * frames.len() + total);
+    out.extend_from_slice(&(frames.len() as u32).to_le_bytes());
+    for f in frames {
+        out.extend_from_slice(&(f.len() as u32).to_le_bytes());
+    }
+    for f in frames {
+        out.extend_from_slice(f);
+    }
+}
+
+/// One parsed sub-frame: where its compressed bytes sit in the chunk
+/// payload and which raw bytes it decodes to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FrameEntry {
+    /// Byte range of the compressed frame inside the chunk payload.
+    pub payload: Range<usize>,
+    /// Byte range of the decoded frame inside the uncompressed stream.
+    pub raw: Range<usize>,
+}
+
+/// Parse and fully validate a framed chunk payload's frame table against
+/// the raw length the chunk index promises. Every inconsistency — frame
+/// count mismatch, table larger than the payload, sizes that do not sum
+/// to the payload — is an error before any frame is touched, so a fuzzed
+/// table can neither panic nor size an allocation.
+pub fn parse_frame_table(
+    payload: &[u8],
+    raw_len: usize,
+    frame_raw: usize,
+) -> Result<Vec<FrameEntry>, String> {
+    if frame_raw == 0 {
+        return Err("frame_raw must be positive for framed payloads".into());
+    }
+    if payload.len() < 4 {
+        return Err("framed payload shorter than its frame count".into());
+    }
+    let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let expect = frame_count(raw_len, frame_raw);
+    if n != expect {
+        return Err(format!(
+            "frame table claims {n} frames, raw length {raw_len} at {frame_raw}-byte frames needs {expect}"
+        ));
+    }
+    let table_end = 4usize
+        .checked_add(4 * n)
+        .filter(|&e| e <= payload.len())
+        .ok_or_else(|| "frame table overruns payload".to_string())?;
+    let mut frames = Vec::with_capacity(n);
+    let mut pos = table_end;
+    for i in 0..n {
+        let csize =
+            u32::from_le_bytes(payload[4 + 4 * i..8 + 4 * i].try_into().unwrap()) as usize;
+        let end = pos
+            .checked_add(csize)
+            .filter(|&e| e <= payload.len())
+            .ok_or_else(|| format!("frame {i} overruns payload"))?;
+        frames.push(FrameEntry { payload: pos..end, raw: frame_span(raw_len, frame_raw, i) });
+        pos = end;
+    }
+    if pos != payload.len() {
+        return Err(format!(
+            "framed payload has {} trailing bytes after the last frame",
+            payload.len() - pos
+        ));
+    }
+    Ok(frames)
+}
+
+/// Decompress a framed payload (inverse of [`compress_framed`]),
+/// appending exactly `raw_len` bytes to `out`. Each decoded frame is
+/// length-checked against its fixed span.
+pub fn decompress_framed(
+    codec: &dyn Stage2Codec,
+    payload: &[u8],
+    raw_len: usize,
+    frame_raw: usize,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    let frames = parse_frame_table(payload, raw_len, frame_raw)?;
+    out.reserve(raw_len);
+    for (i, f) in frames.iter().enumerate() {
+        let want = f.raw.len();
+        let before = out.len();
+        codec.decompress_into(&payload[f.payload.clone()], want, out)?;
+        if out.len() - before != want {
+            return Err(format!(
+                "frame {i} decoded to {} bytes, expected {want}",
+                out.len() - before
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Codec;
+    use crate::util::prng::Pcg32;
+
+    fn sample_data(rng: &mut Pcg32, n: usize) -> Vec<u8> {
+        // mix of runs and noise so every codec has matches to find
+        let mut v = Vec::with_capacity(n);
+        while v.len() < n {
+            if rng.below(2) == 0 {
+                let b = rng.next_u32() as u8;
+                for _ in 0..(1 + rng.below(40)) {
+                    v.push(b);
+                }
+            } else {
+                v.push(rng.next_u32() as u8);
+            }
+        }
+        v.truncate(n);
+        v
+    }
+
+    #[test]
+    fn registry_matches_codec_enum() {
+        assert_eq!(REGISTRY.len(), Codec::ALL.len());
+        for c in Codec::ALL {
+            let s = by_id(c.id()).expect("every Codec variant registered");
+            assert_eq!(s.name(), c.name());
+            assert_eq!(by_name(c.name()).unwrap().id(), c.id());
+        }
+        assert!(by_id(99).is_none());
+        assert!(by_name("brotli").is_none());
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        for (alias, want) in [
+            ("zlib-def", 1u8),
+            ("ZLIB-DEF", 1),
+            ("z/def", 1),
+            ("Zlib", 1),
+            ("z/best", 2),
+            ("ZLIB-BEST", 2),
+            ("LZ4", 3),
+            ("copy", 0),
+            ("Lzma", 5),
+        ] {
+            let c = by_name(alias).unwrap_or_else(|| panic!("alias {alias} must resolve"));
+            assert_eq!(c.id(), want, "{alias}");
+        }
+    }
+
+    #[test]
+    fn registry_roundtrips_all_codecs() {
+        let mut rng = Pcg32::new(0x57A6E2);
+        for n in [0usize, 1, 1000, 70_000] {
+            let data = sample_data(&mut rng, n);
+            for codec in REGISTRY {
+                let mut comp = Vec::new();
+                codec.compress_into(&data, &mut comp);
+                let mut back = Vec::new();
+                codec
+                    .decompress_into(&comp, data.len(), &mut back)
+                    .unwrap_or_else(|e| panic!("{} len {n}: {e}", codec.name()));
+                assert_eq!(back, data, "{} len {n}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn framed_roundtrips_at_every_boundary_shape() {
+        let mut rng = Pcg32::new(0xF2A3E5);
+        // exact multiple, tail, below one frame, empty
+        for (n, frame_raw) in
+            [(0usize, 64usize), (1, 64), (64, 64), (128, 64), (100, 64), (65, 64), (5000, 512)]
+        {
+            let data = sample_data(&mut rng, n);
+            for codec in REGISTRY {
+                let mut comp = Vec::new();
+                compress_framed(codec, &data, frame_raw, &mut comp);
+                // table is self-consistent
+                let frames = parse_frame_table(&comp, n, frame_raw).unwrap();
+                assert_eq!(frames.len(), frame_count(n, frame_raw));
+                let mut back = Vec::new();
+                decompress_framed(codec, &comp, n, frame_raw, &mut back)
+                    .unwrap_or_else(|e| panic!("{} n {n} fr {frame_raw}: {e}", codec.name()));
+                assert_eq!(back, data, "{} n {n} fr {frame_raw}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_framed_matches_compress_framed() {
+        // the two container writers must never drift: streaming+patch and
+        // assemble-from-parts produce the same bytes
+        let mut rng = Pcg32::new(0xA55E);
+        for (n, frame_raw) in [(0usize, 64usize), (64, 64), (100, 64), (5000, 512)] {
+            let data = sample_data(&mut rng, n);
+            for codec in REGISTRY {
+                let mut streamed = Vec::new();
+                compress_framed(codec, &data, frame_raw, &mut streamed);
+                let frames: Vec<Vec<u8>> = (0..frame_count(n, frame_raw))
+                    .map(|i| {
+                        let mut f = Vec::new();
+                        codec.compress_into(&data[frame_span(n, frame_raw, i)], &mut f);
+                        f
+                    })
+                    .collect();
+                let mut assembled = Vec::new();
+                assemble_framed(&frames, &mut assembled);
+                assert_eq!(assembled, streamed, "{} n {n} fr {frame_raw}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn frame_spans_tile_the_stream() {
+        for (len, fr) in [(0usize, 8usize), (7, 8), (8, 8), (9, 8), (1000, 128)] {
+            let n = frame_count(len, fr);
+            let mut covered = 0usize;
+            for i in 0..n {
+                let s = frame_span(len, fr, i);
+                assert_eq!(s.start, covered);
+                covered = s.end;
+            }
+            assert_eq!(covered, len, "len {len} fr {fr}");
+        }
+    }
+
+    #[test]
+    fn fuzzed_frame_tables_error_not_panic() {
+        let mut rng = Pcg32::new(0xBAD7AB);
+        let data = sample_data(&mut rng, 4000);
+        for codec in REGISTRY {
+            let mut comp = Vec::new();
+            compress_framed(codec, &data, 512, &mut comp);
+            // wrong frame count
+            let mut bad = comp.clone();
+            bad[0] ^= 0xFF;
+            assert!(
+                decompress_framed(codec, &bad, data.len(), 512, &mut Vec::new()).is_err(),
+                "{}: corrupt frame count must error",
+                codec.name()
+            );
+            // frame size pointing past the payload
+            let mut bad = comp.clone();
+            bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(
+                decompress_framed(codec, &bad, data.len(), 512, &mut Vec::new()).is_err(),
+                "{}: overlong frame size must error",
+                codec.name()
+            );
+            // truncated mid-frame
+            for cut in [comp.len() / 2, comp.len() - 1, 5, 3, 0] {
+                assert!(
+                    decompress_framed(codec, &comp[..cut], data.len(), 512, &mut Vec::new())
+                        .is_err(),
+                    "{}: truncation at {cut} must error",
+                    codec.name()
+                );
+            }
+            // random garbage bytes must never panic (error or garbage-free
+            // success are both acceptable outcomes for the None codec)
+            for _ in 0..50 {
+                let n = rng.below(200) as usize;
+                let garbage: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+                let _ = decompress_framed(codec, &garbage, data.len(), 512, &mut Vec::new());
+            }
+        }
+    }
+
+    #[test]
+    fn huge_claimed_length_is_rejected_before_allocating() {
+        // a 4-byte prefix claiming 4 GiB must be refused by the limit
+        // check, not reserved for
+        let mut crafted = u32::MAX.to_le_bytes().to_vec();
+        crafted.extend_from_slice(&[0u8; 64]);
+        for codec in REGISTRY {
+            if codec.id() == 0 {
+                continue; // copy codec has no length prefix
+            }
+            let err = codec
+                .decompress_into(&crafted, 1 << 20, &mut Vec::new())
+                .expect_err("oversized claim must error");
+            assert!(err.contains("limit"), "{}: {err}", codec.name());
+        }
+        // the copy codec enforces the limit on its actual length
+        let big = vec![0u8; 2048];
+        assert!(NoneCodec.decompress_into(&big, 100, &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn effort_classes_cover_the_paper_ordering() {
+        assert_eq!(by_name("lz4").unwrap().effort(), Effort::Fast);
+        assert_eq!(by_name("zlib").unwrap().effort(), Effort::Balanced);
+        assert_eq!(by_name("lzma").unwrap().effort(), Effort::Best);
+        assert_eq!(by_name("zlib-best").unwrap().effort(), Effort::Best);
+    }
+}

@@ -112,6 +112,8 @@ fn config_of(args: &Args) -> Result<PipelineConfig> {
         s => return Err(anyhow!("unknown scheme {s}")),
     };
     let stage2_name = args.get("stage2").unwrap_or("zlib");
+    // alias-aware, case-insensitive lookup through the stage-2 registry:
+    // every name `czb info` or `czb codecs` prints parses back here
     let stage2 =
         Codec::from_name(stage2_name).ok_or_else(|| anyhow!("unknown stage2 codec {stage2_name}"))?;
     let mut cfg = PipelineConfig::new(bs, stage1, stage2);
@@ -124,6 +126,12 @@ fn config_of(args: &Args) -> Result<PipelineConfig> {
     };
     cfg.nthreads = threads_of(args, 1)?;
     cfg.chunk_bytes = args.num("chunk-bytes", 4usize << 20)?;
+    // one policy everywhere (CLI, EngineBuilder, PipelineConfig): 0 means
+    // "use the default frame budget", never 1-byte frames
+    cfg.frame_bytes = args.num("frame-bytes", cubismz::pipeline::DEFAULT_FRAME_BYTES)?;
+    if cfg.frame_bytes == 0 {
+        cfg.frame_bytes = cubismz::pipeline::DEFAULT_FRAME_BYTES;
+    }
     Ok(cfg)
 }
 
@@ -132,6 +140,7 @@ fn session_of(args: &Args, cfg: &PipelineConfig) -> Result<Engine> {
     Ok(Engine::builder()
         .threads(cfg.nthreads)
         .chunk_bytes(cfg.chunk_bytes)
+        .frame_bytes(cfg.frame_bytes)
         .wavelet_engine(engine_of(args)?)
         .build())
 }
@@ -304,12 +313,32 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("stage1      : {:?}", f.stage1);
     println!("stage2      : {}", f.stage2.name());
     println!("shuffle     : {:?}", f.shuffle);
+    if f.frame_raw > 0 {
+        println!("format      : v{} (framed, {} raw bytes/frame)", f.version, f.frame_raw);
+    } else {
+        println!("format      : v{} (legacy unframed)", f.version);
+    }
     println!("range       : [{}, {}]", f.global_min, f.global_max);
     println!("blocks      : {}  chunks: {}", f.nblocks, f.chunks.len());
     let payload: u64 = f.chunks.iter().map(|c| c.csize as u64).sum();
     let raw = f.nx as u64 * f.ny as u64 * f.nz as u64 * 4;
     println!("size        : {} bytes (header {hdr})", bytes.len());
     println!("CR          : {:.2}", raw as f64 / (payload + hdr as u64) as f64);
+    Ok(())
+}
+
+fn cmd_codecs() -> Result<()> {
+    println!("registered stage-2 codecs (--stage2 accepts any name or alias, case-insensitive):");
+    for c in cubismz::codec::stage2::REGISTRY {
+        let aliases = c.aliases().join(", ");
+        println!(
+            "  {:>9}  id {}  effort {:<8}  aliases: {}",
+            c.name(),
+            c.id(),
+            format!("{:?}", c.effort()),
+            if aliases.is_empty() { "-".to_string() } else { aliases },
+        );
+    }
     Ok(())
 }
 
@@ -330,13 +359,15 @@ USAGE: czb <command> [flags]
   gen         --size N --step S --out f.h5l [--bubbles K] [--production] [--qoi p|rho|E|a2]
   compress    --in f.h5l --dataset NAME --out f.czb [--scheme wavelet|zfp|sz|fpzip|copy]
               [--wavelet w4|w4l|w3a] [--eps 1e-3] [--prec 24] [--zbits N] [--coeff none|fpzip|sz|spdp]
-              [--stage2 zlib|zlib-best|lz4|zstd|lzma|none] [--shuffle [none|byte4|bit4]] [--bs 32]
+              [--stage2 zlib|zlib-def|zlib-best|lz4|zstd|lzma|none (case-insensitive, see codecs)]
+              [--shuffle [none|byte4|bit4]] [--bs 32] [--chunk-bytes N] [--frame-bytes N (0 = default 256Ki)]
               [--threads N (0 = all cores)] [--engine native|pjrt]
   decompress  --in f.czb --out f.h5l [--engine native|pjrt] [--threads N (0 = all cores)]
   recompress  --in f.czb --out g.czb [same flags as compress]
   compress-dataset    --in f.h5l --out f.czs [--qoi p,rho] [same scheme flags as compress]
                       (all quantities through one Engine session into one .czs archive)
   decompress-dataset  --in f.czs --out f.h5l [--threads N] [--engine native|pjrt]
+  codecs      (list the registered stage-2 codecs, ids, efforts and aliases)
   info        --in f.czb | f.czs
   psnr        --ref f.h5l --dataset NAME --in f.czb"
     );
@@ -363,6 +394,7 @@ fn main() {
         "recompress" => cmd_recompress(&args),
         "compress-dataset" => cmd_compress_dataset(&args),
         "decompress-dataset" => cmd_decompress_dataset(&args),
+        "codecs" => cmd_codecs(),
         "info" => cmd_info(&args),
         "psnr" => cmd_psnr(&args),
         _ => {

@@ -1,0 +1,283 @@
+//! Sharded concurrent chunk cache for random-access decompression.
+//!
+//! The paper keeps "recently decompressed chunks of blocks in a cache";
+//! the original implementation was one LRU private to each
+//! `BlockReader`, which serialized nothing (single reader) but also
+//! shared nothing: a visualization front-end fanning out readers over
+//! the quantities of a `.czs` archive paid one full cache per handle and
+//! could never reuse a sibling's decode.
+//!
+//! [`ChunkCache`] replaces it with a fixed array of shards, each a small
+//! mutex-guarded LRU map. Keys are `(stream, chunk index)` where a
+//! *stream* ([`StreamId`]) identifies one compressed quantity — readers
+//! over the same quantity share entries, readers over different
+//! quantities coexist without key collisions. The shard is picked by a
+//! Fibonacci hash of the key, so concurrent readers contend only when
+//! they touch chunks that land on the same shard, not on one global
+//! lock. Decoding happens *outside* any shard lock: a miss decodes into
+//! reader-owned buffers first and only then inserts, so a slow inflate
+//! never blocks other shards' hits (two racing readers may decode the
+//! same chunk once each; both results are identical and the cache keeps
+//! the last insert).
+//!
+//! Evicted chunks whose `Arc` has no other holders hand their buffers
+//! back to the evicting reader for recycling, preserving the
+//! allocation-free steady state of the warm random-access path.
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A stage-2-decoded chunk with per-block offsets into its raw stream.
+pub(crate) struct DecodedChunk {
+    pub(crate) raw: Vec<u8>,
+    /// Byte offset and size of each block payload (without its u32 size
+    /// prefix).
+    pub(crate) block_offsets: Vec<(usize, usize)>,
+    pub(crate) first_block: u32,
+}
+
+/// Identifies one compressed quantity (`.czb` stream) inside a shared
+/// [`ChunkCache`]. Obtained from [`ChunkCache::register_stream`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamId(u64);
+
+struct CacheEntry {
+    chunk: Arc<DecodedChunk>,
+    last_used: u64,
+}
+
+struct Shard {
+    entries: HashMap<(u64, u32), CacheEntry>,
+    /// Monotonic per-shard clock driving LRU eviction.
+    tick: u64,
+}
+
+/// Sharded concurrent chunk cache shared across [`super::BlockReader`]
+/// handles (and across the quantities of a `.czs`
+/// [`super::dataset::Dataset`]).
+pub struct ChunkCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Maximum entries per shard before LRU eviction.
+    per_shard: usize,
+    next_stream: AtomicU64,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+const MAX_SHARDS: usize = 8;
+/// Entries a shard keeps before LRU eviction, at minimum. Small caches
+/// stay single-shard so they keep exact LRU behavior instead of
+/// degrading to 1-entry direct-mapped slots that thrash on hot chunks.
+const MIN_PER_SHARD: usize = 4;
+
+impl ChunkCache {
+    /// A cache holding about `capacity` decoded chunks in total, spread
+    /// over up to 8 shards of at least [`MIN_PER_SHARD`] entries each
+    /// (caches below `2 * MIN_PER_SHARD` are a single exact LRU).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let nshards = (capacity / MIN_PER_SHARD).clamp(1, MAX_SHARDS);
+        let per_shard = capacity.div_ceil(nshards);
+        Self {
+            shards: (0..nshards)
+                .map(|_| Mutex::new(Shard { entries: HashMap::new(), tick: 0 }))
+                .collect(),
+            per_shard,
+            next_stream: AtomicU64::new(0),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Allocate a fresh stream identity; every distinct compressed
+    /// quantity sharing this cache needs its own.
+    pub fn register_stream(&self) -> StreamId {
+        StreamId(self.next_stream.fetch_add(1, Ordering::Relaxed))
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total decoded chunks resident right now (sums shard sizes; racy
+    /// by nature, intended for stats and tests).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits across all streams since creation.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses across all streams since creation.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn shard_of(&self, stream: u64, chunk: u32) -> usize {
+        // Fibonacci hash over the combined key; high bits are the best
+        // mixed, so index from them
+        let key = stream ^ ((chunk as u64) << 32) ^ (chunk as u64);
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) % self.shards.len()
+    }
+
+    /// Look a decoded chunk up, refreshing its LRU position.
+    pub(crate) fn get(&self, stream: StreamId, chunk: u32) -> Option<Arc<DecodedChunk>> {
+        let mut shard = self.shards[self.shard_of(stream.0, chunk)].lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.entries.get_mut(&(stream.0, chunk)) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.chunk.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly decoded chunk, evicting the shard's
+    /// least-recently-used entry if the shard is full. When the evicted
+    /// `Arc` has no other holders its buffers are returned for recycling.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn insert(
+        &self,
+        stream: StreamId,
+        chunk: u32,
+        decoded: Arc<DecodedChunk>,
+    ) -> Option<(Vec<u8>, Vec<(usize, usize)>)> {
+        let key = (stream.0, chunk);
+        let mut shard = self.shards[self.shard_of(stream.0, chunk)].lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        shard.entries.insert(key, CacheEntry { chunk: decoded, last_used: tick });
+        if shard.entries.len() <= self.per_shard {
+            return None;
+        }
+        let victim = shard
+            .entries
+            .iter()
+            .filter(|(k, _)| **k != key)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k)?;
+        let evicted = shard.entries.remove(&victim)?;
+        match Arc::try_unwrap(evicted.chunk) {
+            Ok(c) => Some((c.raw, c.block_offsets)),
+            Err(_) => None, // another reader still holds it; it frees later
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(first_block: u32, nbytes: usize) -> Arc<DecodedChunk> {
+        Arc::new(DecodedChunk {
+            raw: vec![first_block as u8; nbytes],
+            block_offsets: vec![(0, nbytes)],
+            first_block,
+        })
+    }
+
+    #[test]
+    fn get_insert_roundtrip_and_stats() {
+        let cache = ChunkCache::new(8);
+        let s = cache.register_stream();
+        assert!(cache.get(s, 0).is_none());
+        assert_eq!(cache.misses(), 1);
+        cache.insert(s, 0, chunk(0, 16));
+        let got = cache.get(s, 0).expect("inserted chunk must hit");
+        assert_eq!(got.first_block, 0);
+        assert_eq!(got.raw.len(), 16);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn streams_do_not_collide() {
+        let cache = ChunkCache::new(16);
+        let a = cache.register_stream();
+        let b = cache.register_stream();
+        assert_ne!(a, b);
+        cache.insert(a, 7, chunk(1, 8));
+        cache.insert(b, 7, chunk(2, 8));
+        assert_eq!(cache.get(a, 7).unwrap().first_block, 1);
+        assert_eq!(cache.get(b, 7).unwrap().first_block, 2);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_recycles_sole_owner_buffers() {
+        // capacity 1 -> single shard with one slot
+        let cache = ChunkCache::new(1);
+        assert_eq!(cache.shards(), 1);
+        let s = cache.register_stream();
+        assert!(cache.insert(s, 0, chunk(0, 32)).is_none());
+        // inserting a second chunk evicts the first and recycles it
+        let recycled = cache.insert(s, 1, chunk(1, 8)).expect("sole-owner eviction recycles");
+        assert_eq!(recycled.0.len(), 32);
+        assert!(cache.get(s, 0).is_none());
+        assert!(cache.get(s, 1).is_some());
+        // a chunk still held elsewhere is evicted but not recycled
+        let held = chunk(2, 4);
+        cache.insert(s, 2, held.clone());
+        assert!(cache.insert(s, 3, chunk(3, 4)).is_none(), "held Arc must not recycle");
+        assert_eq!(held.first_block, 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_entry_on_a_shard() {
+        // capacity 3 -> a single shard holding 3 entries: the
+        // least-recently-USED key goes, not the least-recently-inserted
+        let cache = ChunkCache::new(3);
+        assert_eq!(cache.shards(), 1, "small caches must stay exact-LRU single-shard");
+        let s = cache.register_stream();
+        cache.insert(s, 0, chunk(0, 4));
+        cache.insert(s, 1, chunk(1, 4));
+        cache.insert(s, 2, chunk(2, 4));
+        assert!(cache.get(s, 0).is_some()); // refresh 0: now 1 is stalest
+        cache.insert(s, 3, chunk(3, 4)); // evicts 1
+        assert!(cache.get(s, 1).is_none(), "stalest entry must be the victim");
+        assert!(cache.get(s, 0).is_some());
+        assert!(cache.get(s, 2).is_some());
+        assert!(cache.get(s, 3).is_some(), "the just-inserted key must never be the victim");
+    }
+
+    #[test]
+    fn concurrent_readers_share_a_cache_without_corruption() {
+        let cache = Arc::new(ChunkCache::new(16));
+        let streams: Vec<StreamId> = (0..4).map(|_| cache.register_stream()).collect();
+        std::thread::scope(|sc| {
+            for (t, s) in streams.iter().enumerate() {
+                let cache = cache.clone();
+                let s = *s;
+                sc.spawn(move || {
+                    for round in 0..200u32 {
+                        let c = round % 8;
+                        match cache.get(s, c) {
+                            Some(got) => {
+                                // entries must always carry their own
+                                // stream's payload
+                                assert_eq!(got.first_block, c * 10 + t as u32);
+                            }
+                            None => {
+                                cache.insert(s, c, chunk(c * 10 + t as u32, 4));
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert!(cache.hits() > 0);
+        assert!(cache.len() <= 16 + cache.shards());
+    }
+}

@@ -18,9 +18,21 @@
 //!   (batch buffer, block gather, encode scratch, shuffle buffer) and the
 //!   wavelet transform uses a thread-local line pool; the per-block loop
 //!   performs no heap allocation.
-use super::format::{ChunkEntry, CoeffCodec, CzbFile, ShuffleMode, Stage1};
+//!
+//! Stage 2 dispatches through the [`crate::codec::stage2`] registry and
+//! seals every chunk as a *framed* container (fixed-arithmetic sub-frames,
+//! `format.rs` v3). When the field yields fewer spans than workers — the
+//! single-chunk / small-field regime where span parallelism starves — the
+//! *wide path* ([`compress_wide`]) keeps the same byte-exact output while
+//! fanning the inside of each span out across the pool: stage 1 encodes
+//! block ranges in parallel, and each sealed chunk's sub-frames compress
+//! in parallel.
+use super::format::{ChunkEntry, CoeffCodec, CzbFile, ShuffleMode, Stage1, FORMAT_VERSION};
 use super::stage1::{codec_for, Stage1Codec, Stage1Scratch};
 use crate::cluster::{self, Execute, ScopedExec, SpanQueue};
+use crate::codec::stage2::{
+    self, assemble_framed, compress_framed, frame_count, frame_span, Stage2Codec,
+};
 use crate::codec::{shuffle, Codec};
 use crate::core::block::{Block, BlockGrid};
 use crate::core::{Field3, FieldStats};
@@ -62,10 +74,21 @@ pub struct PipelineConfig {
     /// Also the scheduling granularity: workers pull `chunk_bytes` worth
     /// of raw blocks per queue operation.
     pub chunk_bytes: usize,
+    /// Raw bytes per stage-2 sub-frame of a sealed chunk (`format.rs` v3
+    /// framed container). Format-affecting: archives written with
+    /// different frame budgets differ byte-wise. Smaller frames expose
+    /// more intra-chunk parallelism at a slight ratio cost; `0` falls
+    /// back to [`DEFAULT_FRAME_BYTES`] (a zero budget would degenerate
+    /// to one frame per byte).
+    pub frame_bytes: usize,
     /// Blocks per engine batch (matches the PJRT executable's batch dim).
     pub batch: usize,
     pub nthreads: usize,
 }
+
+/// Default raw bytes per stage-2 sub-frame: 16 frames per paper-default
+/// 4 MiB chunk.
+pub const DEFAULT_FRAME_BYTES: usize = 256 << 10;
 
 impl PipelineConfig {
     pub fn new(bs: usize, stage1: Stage1, stage2: Codec) -> Self {
@@ -75,6 +98,7 @@ impl PipelineConfig {
             stage2,
             shuffle: ShuffleMode::None,
             chunk_bytes: 4 << 20,
+            frame_bytes: DEFAULT_FRAME_BYTES,
             batch: 16,
             nthreads: 1,
         }
@@ -155,6 +179,17 @@ pub(crate) fn blocks_per_span(bs: usize, chunk_bytes: usize) -> usize {
     (chunk_bytes / block_raw).max(1)
 }
 
+/// The frame granularity actually used for sealing AND recorded in the
+/// header — `0` falls back to the default (never 1-byte frames), and the
+/// value is clamped into the header field's u32 range so the recorded
+/// number always agrees with the split the frames were cut at.
+fn frame_raw_of(cfg: &PipelineConfig) -> usize {
+    if cfg.frame_bytes == 0 {
+        return DEFAULT_FRAME_BYTES;
+    }
+    cfg.frame_bytes.clamp(1, u32::MAX as usize)
+}
+
 struct ThreadChunk {
     first_block: u32,
     nblocks: u32,
@@ -162,22 +197,14 @@ struct ThreadChunk {
     payload: Vec<u8>,
 }
 
-/// Seal a private buffer into a compressed chunk. `shuf` is the worker's
-/// reusable shuffle buffer.
-fn seal_chunk(
-    raw: &mut Vec<u8>,
-    first_block: u32,
-    nblocks: u32,
+/// Apply the chunk preconditioner, returning the stage-2 input (either
+/// `raw` untouched or the worker's reusable `shuf` buffer).
+fn preconditioned<'a>(
+    raw: &'a [u8],
     shuffle_mode: ShuffleMode,
-    stage2: Codec,
-    shuf: &mut Vec<u8>,
-    chunks: &mut Vec<ThreadChunk>,
-) {
-    if nblocks == 0 {
-        return;
-    }
-    let rawsize = raw.len() as u32;
-    let to_compress: &[u8] = match shuffle_mode {
+    shuf: &'a mut Vec<u8>,
+) -> &'a [u8] {
+    match shuffle_mode {
         ShuffleMode::None => raw,
         ShuffleMode::Byte4 => {
             shuffle::byte_shuffle_into(raw, 4, shuf);
@@ -187,8 +214,29 @@ fn seal_chunk(
             shuffle::bit_shuffle_into(raw, 4, shuf);
             shuf
         }
-    };
-    let payload = stage2.compress_vec(to_compress);
+    }
+}
+
+/// Seal a private buffer into a compressed chunk: shuffle, then compress
+/// as a framed container ([`compress_framed`]) through the registered
+/// stage-2 codec. `shuf` is the worker's reusable shuffle buffer.
+fn seal_chunk(
+    raw: &mut Vec<u8>,
+    first_block: u32,
+    nblocks: u32,
+    shuffle_mode: ShuffleMode,
+    stage2: &dyn Stage2Codec,
+    frame_raw: usize,
+    shuf: &mut Vec<u8>,
+    chunks: &mut Vec<ThreadChunk>,
+) {
+    if nblocks == 0 {
+        return;
+    }
+    let rawsize = raw.len() as u32;
+    let to_compress = preconditioned(raw, shuffle_mode, shuf);
+    let mut payload = Vec::new();
+    compress_framed(stage2, to_compress, frame_raw, &mut payload);
     chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload });
     raw.clear();
 }
@@ -204,7 +252,9 @@ pub(crate) struct CompressedStream {
 }
 
 /// Compress a whole field on the given executor. The resulting stream is
-/// byte-identical for every `cfg.nthreads` and for every executor.
+/// byte-identical for every `cfg.nthreads` and for every executor: the
+/// span-parallel and wide paths produce the same chunk boundaries, the
+/// same frame boundaries, and therefore the same bytes.
 pub(crate) fn compress_field_core(
     exec: &dyn Execute,
     field: &Field3,
@@ -217,21 +267,28 @@ pub(crate) fn compress_field_core(
     let eps_abs = eps_abs_of(&cfg.stage1, range);
     let grid = BlockGrid::new(field, cfg.bs);
     let nblocks = grid.nblocks();
-
-    // dynamic chunk-granular schedule over the shared atomic queue
-    let queue = SpanQueue::new(nblocks, blocks_per_span(cfg.bs, cfg.chunk_bytes));
+    let span = blocks_per_span(cfg.bs, cfg.chunk_bytes);
+    let nspans = nblocks.div_ceil(span.max(1)).max(1);
     let nthreads = cfg.nthreads.max(1).min(nblocks.max(1));
-    let results =
-        cluster::run_on(exec, nthreads, |_| worker(field, &grid, &queue, cfg, eps_abs, engine));
 
-    // merge in block order and build the index
-    let mut merged: Vec<ThreadChunk> = Vec::new();
-    let (mut t1_total, mut t2_total) = (0.0f64, 0.0f64);
-    for (chunks, t1, t2) in results {
-        merged.extend(chunks);
-        t1_total += t1;
-        t2_total += t2;
-    }
+    let (mut merged, t1_total, t2_total) = if nthreads > 1 && nspans < nthreads {
+        // fewer spans than workers: span-granular scheduling would leave
+        // most of the pool idle, so fan out *inside* each span instead
+        compress_wide(exec, field, &grid, cfg, eps_abs, engine, nthreads)
+    } else {
+        // dynamic chunk-granular schedule over the shared atomic queue
+        let queue = SpanQueue::new(nblocks, span);
+        let results =
+            cluster::run_on(exec, nthreads, |_| worker(field, &grid, &queue, cfg, eps_abs, engine));
+        let mut merged: Vec<ThreadChunk> = Vec::new();
+        let (mut t1_total, mut t2_total) = (0.0f64, 0.0f64);
+        for (chunks, t1, t2) in results {
+            merged.extend(chunks);
+            t1_total += t1;
+            t2_total += t2;
+        }
+        (merged, t1_total, t2_total)
+    };
     merged.sort_by_key(|c| c.first_block);
     let mut chunks = Vec::with_capacity(merged.len());
     let header_size = CzbFile::header_size(name.len(), merged.len());
@@ -255,6 +312,8 @@ pub(crate) fn compress_field_core(
         stage1: cfg.stage1,
         stage2: cfg.stage2,
         shuffle: cfg.shuffle,
+        version: FORMAT_VERSION,
+        frame_raw: frame_raw_of(cfg) as u32,
         global_min: stats.min as f32,
         global_max: stats.max as f32,
         nblocks: nblocks as u32,
@@ -307,6 +366,8 @@ fn worker(
     let vol = bs * bs * bs;
     let levels = wavelet::max_levels(bs);
     let codec = codec_for(&cfg.stage1);
+    let stage2 = stage2::by_id(cfg.stage2.id()).expect("stage-2 codec registered");
+    let frame_raw = frame_raw_of(cfg);
     let pre_transform = codec.pre_transform(&cfg.stage1);
     let batch = if pre_transform.is_some() { cfg.batch.max(1) } else { 1 };
     // worker-owned scratch, allocated once; the per-block loop below
@@ -353,7 +414,8 @@ fn worker(
                         chunk_first,
                         chunk_count,
                         cfg.shuffle,
-                        cfg.stage2,
+                        stage2,
+                        frame_raw,
                         &mut shuf,
                         &mut chunks,
                     );
@@ -371,10 +433,201 @@ fn worker(
         }
         // chunk boundaries never cross spans: seal the remainder
         let t2s = std::time::Instant::now();
-        seal_chunk(&mut raw, chunk_first, chunk_count, cfg.shuffle, cfg.stage2, &mut shuf, &mut chunks);
+        seal_chunk(
+            &mut raw,
+            chunk_first,
+            chunk_count,
+            cfg.shuffle,
+            stage2,
+            frame_raw,
+            &mut shuf,
+            &mut chunks,
+        );
         t2 += t2s.elapsed().as_secs_f64();
     }
     (chunks, t1, t2)
+}
+
+/// Intra-span parallel compression for the small-field regime
+/// (`nspans < nthreads`): each span's blocks stage-1 encode in parallel
+/// sub-ranges, the sealed chunks replicate the span worker's exact
+/// boundary walk, and every chunk's sub-frames stage-2 compress in
+/// parallel. Byte-identical to [`worker`] by construction — block
+/// payloads, chunk boundaries, and frame boundaries are all fixed by
+/// arithmetic, only the schedule differs.
+fn compress_wide(
+    exec: &dyn Execute,
+    field: &Field3,
+    grid: &BlockGrid,
+    cfg: &PipelineConfig,
+    eps_abs: f32,
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+) -> (Vec<ThreadChunk>, f64, f64) {
+    let bs = cfg.bs;
+    let vol = bs * bs * bs;
+    let levels = wavelet::max_levels(bs);
+    let codec = codec_for(&cfg.stage1);
+    let stage2 = stage2::by_id(cfg.stage2.id()).expect("stage-2 codec registered");
+    let frame_raw = frame_raw_of(cfg);
+    let pre_transform = codec.pre_transform(&cfg.stage1);
+    let batch = if pre_transform.is_some() { cfg.batch.max(1) } else { 1 };
+    let nblocks = grid.nblocks();
+    let span = blocks_per_span(bs, cfg.chunk_bytes);
+    let mut chunks: Vec<ThreadChunk> = Vec::new();
+    let (mut t1, mut t2) = (0.0f64, 0.0f64);
+    let mut shuf: Vec<u8> = Vec::new();
+    let mut lo = 0usize;
+    while lo < nblocks {
+        let hi = (lo + span).min(nblocks);
+        let t = std::time::Instant::now();
+        // stage 1: encode the span's blocks in parallel sub-ranges; the
+        // per-block bytes are position-independent, so merging the parts
+        // in block order reproduces the serial stream exactly
+        let queue = SpanQueue::new(hi - lo, batch);
+        let m = nthreads.min(hi - lo).max(1);
+        let parts: Vec<Vec<(usize, Vec<u8>, Vec<u32>)>> = cluster::run_on(exec, m, |_| {
+            let mut batch_buf = vec![0f32; batch * vol];
+            let mut scratch = Stage1Scratch::default();
+            let mut scratch_block = Block::zeros(bs);
+            let mut mine = Vec::new();
+            while let Some(sub) = queue.next_span() {
+                let (slo, shi) = (lo + sub.start, lo + sub.end);
+                let mut bytes = Vec::new();
+                let mut sizes = Vec::with_capacity(shi - slo);
+                let mut id = slo;
+                while id < shi {
+                    let n = batch.min(shi - id);
+                    for j in 0..n {
+                        grid.extract(field, id + j, &mut scratch_block);
+                        batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
+                    }
+                    if let Some(kind) = pre_transform {
+                        engine.forward_batch(kind, &mut batch_buf[..n * vol], bs, levels);
+                    }
+                    for j in 0..n {
+                        let before = bytes.len();
+                        encode_block_payload(
+                            codec,
+                            &cfg.stage1,
+                            &batch_buf[j * vol..(j + 1) * vol],
+                            bs,
+                            eps_abs,
+                            &mut bytes,
+                            &mut scratch,
+                        );
+                        sizes.push((bytes.len() - before) as u32);
+                    }
+                    id += n;
+                }
+                mine.push((slo, bytes, sizes));
+            }
+            mine
+        });
+        let mut parts: Vec<(usize, Vec<u8>, Vec<u32>)> = parts.into_iter().flatten().collect();
+        parts.sort_by_key(|p| p.0);
+        let mut raw: Vec<u8> = Vec::new();
+        let mut sizes: Vec<u32> = Vec::with_capacity(hi - lo);
+        for (_, bytes, s) in &parts {
+            raw.extend_from_slice(bytes);
+            sizes.extend_from_slice(s);
+        }
+        t1 += t.elapsed().as_secs_f64();
+
+        // seal walk: replicate the span worker's boundary rule exactly —
+        // seal when the bytes since the last seal reach chunk_bytes
+        let t2s = std::time::Instant::now();
+        let mut chunk_first = lo;
+        let mut chunk_count = 0u32;
+        let mut start_byte = 0usize;
+        let mut cum = 0usize;
+        for (j, &sz) in sizes.iter().enumerate() {
+            cum += sz as usize;
+            chunk_count += 1;
+            if cum - start_byte >= cfg.chunk_bytes {
+                seal_chunk_wide(
+                    exec,
+                    &raw[start_byte..cum],
+                    chunk_first as u32,
+                    chunk_count,
+                    cfg.shuffle,
+                    stage2,
+                    frame_raw,
+                    nthreads,
+                    &mut shuf,
+                    &mut chunks,
+                );
+                start_byte = cum;
+                chunk_first = lo + j + 1;
+                chunk_count = 0;
+            }
+        }
+        seal_chunk_wide(
+            exec,
+            &raw[start_byte..cum],
+            chunk_first as u32,
+            chunk_count,
+            cfg.shuffle,
+            stage2,
+            frame_raw,
+            nthreads,
+            &mut shuf,
+            &mut chunks,
+        );
+        t2 += t2s.elapsed().as_secs_f64();
+        lo = hi;
+    }
+    (chunks, t1, t2)
+}
+
+/// Seal one chunk with its sub-frames compressed in parallel on the
+/// executor. Produces exactly [`seal_chunk`]'s bytes: the frame split is
+/// the same arithmetic, only the frames' compression is concurrent.
+fn seal_chunk_wide(
+    exec: &dyn Execute,
+    raw: &[u8],
+    first_block: u32,
+    nblocks: u32,
+    shuffle_mode: ShuffleMode,
+    stage2: &dyn Stage2Codec,
+    frame_raw: usize,
+    nthreads: usize,
+    shuf: &mut Vec<u8>,
+    chunks: &mut Vec<ThreadChunk>,
+) {
+    if nblocks == 0 {
+        return;
+    }
+    let rawsize = raw.len() as u32;
+    let to_compress = preconditioned(raw, shuffle_mode, shuf);
+    let n = frame_count(to_compress.len(), frame_raw);
+    let mut payload = Vec::new();
+    if n <= 1 || nthreads <= 1 {
+        compress_framed(stage2, to_compress, frame_raw, &mut payload);
+    } else {
+        let queue = SpanQueue::new(n, 1);
+        let parts: Vec<Vec<(usize, Vec<u8>)>> =
+            cluster::run_on(exec, nthreads.min(n), |_| {
+                let mut mine = Vec::new();
+                while let Some(fr) = queue.next_span() {
+                    for i in fr {
+                        let span = frame_span(to_compress.len(), frame_raw, i);
+                        let mut bytes = Vec::new();
+                        stage2.compress_into(&to_compress[span], &mut bytes);
+                        mine.push((i, bytes));
+                    }
+                }
+                mine
+            });
+        let mut frames: Vec<(usize, Vec<u8>)> = parts.into_iter().flatten().collect();
+        frames.sort_by_key(|f| f.0);
+        debug_assert_eq!(frames.len(), n);
+        let frames: Vec<Vec<u8>> = frames.into_iter().map(|(_, bytes)| bytes).collect();
+        // same wire layout as the serial compress_framed path, via the
+        // single shared container writer
+        assemble_framed(&frames, &mut payload);
+    }
+    chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload });
 }
 
 #[cfg(test)]
@@ -467,6 +720,78 @@ mod tests {
             assert!(bytes.len() > 32, "{stage1:?}");
             assert!(st.compressed_bytes == bytes.len());
         }
+    }
+
+    #[test]
+    fn wide_path_is_byte_identical_to_serial() {
+        // nspans < nthreads routes through compress_wide: parallel
+        // stage-1 block ranges + parallel sub-frame compression must
+        // reproduce the serial worker's bytes exactly
+        let f = smooth_field(64, 33);
+        for (chunk_bytes, stage2) in
+            [(4usize << 20, Codec::ZlibDef), (256 << 10, Codec::Lz4), (4 << 20, Codec::None)]
+        {
+            let mut cfg = PipelineConfig::paper_default(1e-3);
+            cfg.chunk_bytes = chunk_bytes;
+            cfg.stage2 = stage2;
+            cfg.frame_bytes = 8 << 10; // many frames per chunk
+            let (base, st) = compress_field(&f, "p", &cfg.with_threads(1), &NativeEngine);
+            for nthreads in [2usize, 4, 8, 16] {
+                let (bytes, stn) =
+                    compress_field(&f, "p", &cfg.with_threads(nthreads), &NativeEngine);
+                assert_eq!(bytes, base, "{stage2:?} chunk {chunk_bytes} t {nthreads}");
+                assert_eq!(stn.nchunks, st.nchunks);
+                assert_eq!(stn.compressed_bytes, st.compressed_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_path_replicates_mid_span_seals() {
+        // incompressible data + tiny epsilon makes the encoded stream
+        // outgrow the raw budget (wavelet adds a mask header), so a span
+        // seals mid-walk; the wide path must reproduce those boundaries
+        // bit-for-bit. bs=8: encoded noise block ~2120B vs 2052B raw, so
+        // a 32-block span seals after 31 blocks.
+        let n = 32usize;
+        let mut rng = Pcg32::new(0x900D);
+        let noise: Vec<f32> = (0..n * n * n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let f = Field3::from_vec(n, n, n, noise);
+        let stage1 = Stage1::Wavelet {
+            kind: WaveletKind::Avg3,
+            eps_rel: 1e-7,
+            zbits: 0,
+            coeff: CoeffCodec::None,
+        };
+        let mut cfg = PipelineConfig::new(8, stage1, Codec::ZlibDef).with_shuffle(ShuffleMode::Byte4);
+        cfg.chunk_bytes = 32 * (8 * 8 * 8 * 4 + 4); // exactly 32 raw blocks per span
+        let (base, st) = compress_field(&f, "p", &cfg.with_threads(1), &NativeEngine);
+        // 64 blocks -> 2 spans; mid-span seals make more chunks than spans
+        assert!(st.nchunks > 2, "expected mid-span seals, got {} chunks", st.nchunks);
+        for nthreads in [8usize, 16] {
+            let (bytes, _) = compress_field(&f, "p", &cfg.with_threads(nthreads), &NativeEngine);
+            assert_eq!(bytes, base, "nthreads {nthreads}");
+        }
+    }
+
+    #[test]
+    fn frame_budget_is_format_affecting_and_deterministic() {
+        let f = smooth_field(64, 34);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.frame_bytes = 32 << 10;
+        let (a1, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let (a2, _) = compress_field(&f, "p", &cfg.with_threads(8), &NativeEngine);
+        assert_eq!(a1, a2, "same frame budget must be thread-count independent");
+        cfg.frame_bytes = 4 << 10;
+        let (b, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert_ne!(a1, b, "the frame budget is part of the format");
+        let (file, _) = CzbFile::parse_header(&b).unwrap();
+        assert_eq!(file.frame_raw, 4 << 10);
+        // 0 means "default", never 1-byte frames
+        cfg.frame_bytes = 0;
+        let (z, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let (file, _) = CzbFile::parse_header(&z).unwrap();
+        assert_eq!(file.frame_raw as usize, DEFAULT_FRAME_BYTES);
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! section from the fixed-size trailer tail. Sections are independent
 //! `.czb` streams: whole-quantity decode and random block access
 //! ([`Dataset::block_reader`]) never touch the other quantities.
+//!
+//! Random access shares one sharded [`ChunkCache`] across every reader
+//! the archive hands out: each quantity gets a [`StreamId`] at parse
+//! time, so two readers over the same quantity reuse each other's
+//! decoded chunks while readers over different quantities never collide
+//! — and none of them serialize on a single cache lock.
+use super::chunk_cache::{ChunkCache, StreamId};
 use super::compressor::{CompressStats, WaveletEngine};
 use super::decompressor::BlockReader;
 use super::engine::{CompressParams, Engine};
@@ -16,6 +23,12 @@ use super::format::CzbFile;
 use crate::core::Field3;
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
+
+/// Decoded chunks the archive-wide shared cache holds across all
+/// quantities (a visualization session touches a few hot chunks per
+/// quantity at a time).
+const DATASET_CACHE_CHUNKS: usize = 32;
 
 /// Archive magic ("CubismZ Step").
 pub const CZS_MAGIC: &[u8; 4] = b"CZS1";
@@ -160,6 +173,10 @@ impl<W: Write> Write for CountingWriter<'_, W> {
 pub struct Dataset {
     bytes: Vec<u8>,
     entries: Vec<QuantityEntry>,
+    /// Shared across every [`BlockReader`] this archive hands out.
+    cache: Arc<ChunkCache>,
+    /// One stream identity per quantity, same order as `entries`.
+    streams: Vec<StreamId>,
 }
 
 impl Dataset {
@@ -235,7 +252,9 @@ impl Dataset {
         if pos != table.len() {
             return Err("czs trailer table has trailing garbage".into());
         }
-        Ok(Self { bytes, entries })
+        let cache = Arc::new(ChunkCache::new(DATASET_CACHE_CHUNKS));
+        let streams = entries.iter().map(|_| cache.register_stream()).collect();
+        Ok(Self { bytes, entries, cache, streams })
     }
 
     /// Quantities in archive order.
@@ -248,10 +267,17 @@ impl Dataset {
         self.entries.iter().map(|e| e.name.as_str()).collect()
     }
 
+    /// The raw `.czb` section bytes of the entry at `idx` (single home of
+    /// the offset arithmetic).
+    fn section_at(&self, idx: usize) -> &[u8] {
+        let e = &self.entries[idx];
+        &self.bytes[e.offset as usize..(e.offset + e.len) as usize]
+    }
+
     /// The raw `.czb` section of a quantity.
     pub fn section(&self, name: &str) -> Option<&[u8]> {
-        let e = self.entries.iter().find(|e| e.name == name)?;
-        Some(&self.bytes[e.offset as usize..(e.offset + e.len) as usize])
+        let idx = self.entries.iter().position(|e| e.name == name)?;
+        Some(self.section_at(idx))
     }
 
     /// Parse a quantity's `.czb` header without decompressing anything.
@@ -267,16 +293,30 @@ impl Dataset {
         engine.decompress_bytes(section)
     }
 
-    /// Random block access into one quantity via the LRU-cached
+    /// Random block access into one quantity via a chunk-cached
     /// [`BlockReader`] (paper §2.3): decodes only the chunks the caller
-    /// touches.
+    /// touches. Every reader the archive hands out shares the
+    /// archive-wide sharded [`ChunkCache`] — fan out one reader per
+    /// thread and they reuse each other's decodes without serializing on
+    /// a single lock.
     pub fn block_reader<'a>(
         &'a self,
         name: &str,
         wavelet_engine: &'a dyn WaveletEngine,
     ) -> Result<BlockReader<'a>, String> {
-        let section = self.section(name).ok_or_else(|| format!("quantity {name} not found"))?;
-        BlockReader::new(section, wavelet_engine)
+        let idx = self
+            .entries
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| format!("quantity {name} not found"))?;
+        Ok(BlockReader::new(self.section_at(idx), wavelet_engine)?
+            .with_shared_cache(self.cache.clone(), self.streams[idx]))
+    }
+
+    /// The archive-wide chunk cache shared by all
+    /// [`Dataset::block_reader`] handles.
+    pub fn chunk_cache(&self) -> &Arc<ChunkCache> {
+        &self.cache
     }
 }
 
@@ -320,6 +360,55 @@ mod tests {
         }
         assert!(ds.section("nope").is_none());
         assert!(ds.read_quantity("nope", &engine).is_err());
+    }
+
+    #[test]
+    fn parallel_readers_share_the_archive_cache() {
+        // the fan-out visualization shape: one reader per quantity, all
+        // decoding concurrently against the shared sharded cache; every
+        // block must match the whole-quantity decode
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let fields: Vec<(String, Field3)> =
+            (0..4u64).map(|i| (format!("q{i}"), smooth_field(64, 300 + i))).collect();
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        for (name, f) in &fields {
+            w.write_quantity(&engine, f, name, &params).unwrap();
+        }
+        let ds = Dataset::from_bytes(w.finish().unwrap()).unwrap();
+        let wav = crate::pipeline::NativeEngine;
+        std::thread::scope(|s| {
+            for (name, f) in &fields {
+                let ds = &ds;
+                let wav = &wav;
+                let engine = &engine;
+                s.spawn(move || {
+                    let (full, file) = ds.read_quantity(name, engine).unwrap();
+                    let bs = file.bs as usize;
+                    let grid = crate::core::block::BlockGrid::new(f, bs);
+                    let mut reader = ds.block_reader(name, wav).unwrap();
+                    let mut blk = vec![0f32; bs * bs * bs];
+                    let mut expected = crate::core::block::Block::zeros(bs);
+                    // two passes so the shared cache serves hits under
+                    // concurrent access from the sibling quantities
+                    for id in (0..file.nblocks).chain(0..file.nblocks) {
+                        reader.read_block(id, &mut blk).unwrap();
+                        grid.extract(&full, id as usize, &mut expected);
+                        assert_eq!(blk, expected.data, "{name} block {id}");
+                    }
+                });
+            }
+        });
+        assert!(ds.chunk_cache().hits() > 0, "second passes must hit the shared cache");
+        // a second reader over the same quantity reuses the first's work
+        let mut r = ds.block_reader("q0", &wav).unwrap();
+        let bs = r.file.bs as usize;
+        let mut blk = vec![0f32; bs * bs * bs];
+        r.read_block(0, &mut blk).unwrap();
+        assert!(
+            r.cache_hits == 1 || r.cache_misses == 1,
+            "block 0 either still cached or re-decoded after eviction"
+        );
     }
 
     #[test]

@@ -1,34 +1,120 @@
 //! Parallel decompression (paper §2.3 "Data decompression"): fetch the
-//! chunk containing the target block, stage-2 inflate it (LRU-cached),
-//! then stage-1 decode the block.
+//! chunk containing the target block, stage-2 inflate it (cached), then
+//! stage-1 decode the block.
 //!
-//! Two access paths:
-//! * **Random access** via [`BlockReader::read_block`] — LRU chunk cache
-//!   whose buffers are recycled on eviction, so a warm reader decodes
-//!   chunks without reallocating.
+//! Three access paths:
+//! * **Random access** via [`BlockReader::read_block`] — decoded chunks
+//!   live in a sharded concurrent [`ChunkCache`]
+//!   ([`super::chunk_cache`]). A reader owns a small private cache by
+//!   default; [`BlockReader::with_shared_cache`] attaches it to a cache
+//!   shared across handles (what `.czs` datasets do), so visualization
+//!   readers fanning out over quantities neither serialize on one lock
+//!   nor re-decode what a sibling already inflated. Evicted sole-owner
+//!   buffers are recycled, keeping the warm path allocation-free.
 //! * **Whole-field** via [`decompress_field_mt`] — chunks are pulled off
 //!   the same shared atomic work queue the compressor uses
 //!   ([`crate::cluster::SpanQueue`]); each worker inflates and decodes
 //!   its chunks into worker-owned buffers and scatters the blocks into
 //!   the output field (disjoint by construction, validated up front).
 //!   The serial [`decompress_field`] remains bit-identical to it.
+//! * **Wide whole-field** — when the archive has fewer chunks than
+//!   workers (single-chunk files, visualization extracts) *and* its
+//!   chunks actually split into sub-frames (format v3), chunk-granular
+//!   scheduling starves; the wide path instead fans out *inside* each
+//!   chunk: the sub-frames inflate concurrently into disjoint slices,
+//!   then the blocks stage-1 decode concurrently. Bit identical to the
+//!   serial path, and the reason a one-chunk archive now scales with
+//!   threads at all. Unframed few-chunk archives keep the chunk-granular
+//!   path (their stage-2 streams cannot split), single-chunk ones still
+//!   go wide for the parallel block decode.
+//!
+//! Stage 2 dispatches through the [`crate::codec::stage2`] registry;
+//! every inflate passes the exact expected size as the decode limit, so
+//! corrupt streams can neither overrun nor size an allocation.
+use super::chunk_cache::{ChunkCache, DecodedChunk, StreamId};
 use super::compressor::{eps_abs_of, WaveletEngine};
-use super::format::{CzbFile, ShuffleMode};
+use super::format::{ChunkEntry, CzbFile, ShuffleMode};
 use super::stage1::{codec_for, Stage1Scratch};
 use crate::cluster::{self, Execute, ScopedExec, SpanQueue};
 use crate::codec::shuffle;
+use crate::codec::stage2::{self, decompress_framed, parse_frame_table, Stage2Codec};
 use crate::core::block::{Block, BlockGrid};
 use crate::core::Field3;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-/// A stage-2-decoded chunk with per-block offsets into the raw stream.
-struct DecodedChunk {
-    raw: Vec<u8>,
-    /// Byte offset of each block payload (without its u32 size prefix).
-    block_offsets: Vec<(usize, usize)>, // (offset, size)
-    first_block: u32,
+/// Resolve the registered stage-2 codec of a parsed file.
+fn stage2_of(file: &CzbFile) -> &'static dyn Stage2Codec {
+    stage2::by_id(file.stage2.id()).expect("parsed headers only carry registered codec ids")
+}
+
+/// Stage-2 inflate a chunk payload into `out` (serial): framed (v3) or
+/// legacy monolithic (v≤2), always length-checked against the expected
+/// uncompressed size.
+fn inflate_payload(
+    file: &CzbFile,
+    codec: &dyn Stage2Codec,
+    payload: &[u8],
+    expect: usize,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    if file.frame_raw > 0 {
+        decompress_framed(codec, payload, expect, file.frame_raw as usize, out)
+    } else {
+        let before = out.len();
+        codec.decompress_into(payload, expect, out)?;
+        if out.len() - before != expect {
+            return Err(format!(
+                "chunk decoded to {} bytes, expected {expect}",
+                out.len() - before
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Walk the u32 size prefixes of a chunk's raw block stream into
+/// per-block (offset, size) pairs.
+fn walk_block_prefixes(
+    raw: &[u8],
+    nblocks: u32,
+    offsets: &mut Vec<(usize, usize)>,
+) -> Result<(), String> {
+    offsets.clear();
+    let mut pos = 0usize;
+    for _ in 0..nblocks {
+        if raw.len() < pos + 4 {
+            return Err("chunk truncated at block prefix".into());
+        }
+        let size = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        if raw.len() < pos + size {
+            return Err("chunk truncated inside block".into());
+        }
+        offsets.push((pos, size));
+        pos += size;
+    }
+    Ok(())
+}
+
+/// Reject a chunk-index `rawsize` no legitimate encoder could have
+/// produced, *before* it sizes any buffer: every stage-1 block payload is
+/// at most a small constant factor of the block's raw samples (the
+/// wavelet scheme adds a mask header, coefficient codecs can expand a
+/// little), so 16 bytes per sample plus slack per block is a generous
+/// ceiling. Without this, a crafted index entry (rawsize = u32::MAX on a
+/// tiny payload) would drive a multi-GiB reserve even though every
+/// stage-2 stream is limit-checked.
+fn check_rawsize(file: &CzbFile, entry: &ChunkEntry, idx: usize) -> Result<(), String> {
+    let vol = (file.bs as u128).pow(3);
+    let bound = (entry.nblocks as u128) * (16 * vol + 1024);
+    if (entry.rawsize as u128) > bound {
+        return Err(format!(
+            "chunk {idx}: rawsize {} exceeds plausible bound {bound} for {} blocks of {}^3",
+            entry.rawsize, entry.nblocks, file.bs
+        ));
+    }
+    Ok(())
 }
 
 /// Stage-2 decode chunk `idx` into reusable buffers: `tmp` holds the
@@ -37,6 +123,7 @@ struct DecodedChunk {
 /// (offset, size) pairs. Allocation-free once the buffers are warm.
 fn decode_chunk_into(
     file: &CzbFile,
+    codec: &dyn Stage2Codec,
     payload: &[u8],
     idx: usize,
     tmp: &mut Vec<u8>,
@@ -44,19 +131,24 @@ fn decode_chunk_into(
     offsets: &mut Vec<(usize, usize)>,
 ) -> Result<(), String> {
     let entry = &file.chunks[idx];
+    check_rawsize(file, entry, idx)?;
+    let expect = file.chunk_stage2_len(entry);
     raw.clear();
     match file.shuffle {
-        ShuffleMode::None => file.stage2.decompress(payload, raw)?,
+        ShuffleMode::None => inflate_payload(file, codec, payload, expect, raw)
+            .map_err(|e| format!("chunk {idx}: {e}"))?,
         ShuffleMode::Byte4 => {
             tmp.clear();
-            file.stage2.decompress(payload, tmp)?;
+            inflate_payload(file, codec, payload, expect, tmp)
+                .map_err(|e| format!("chunk {idx}: {e}"))?;
             shuffle::byte_unshuffle_into(tmp, 4, raw);
         }
         ShuffleMode::Bit4 => {
             tmp.clear();
-            file.stage2.decompress(payload, tmp)?;
-            // validate against the indexed raw size before unshuffling:
-            // the plane layout depends on the element count
+            inflate_payload(file, codec, payload, expect, tmp)
+                .map_err(|e| format!("chunk {idx}: {e}"))?;
+            // the plane layout depends on the element count, which the
+            // exact-length inflate above already pinned to the index
             let rawsize = entry.rawsize as usize;
             if tmp.len() != shuffle::bit_shuffled_len(rawsize, 4) {
                 return Err(format!(
@@ -74,22 +166,7 @@ fn decode_chunk_into(
             entry.rawsize
         ));
     }
-    // walk the u32 size prefixes
-    offsets.clear();
-    let mut pos = 0usize;
-    for _ in 0..entry.nblocks {
-        if raw.len() < pos + 4 {
-            return Err("chunk truncated at block prefix".into());
-        }
-        let size = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
-        pos += 4;
-        if raw.len() < pos + size {
-            return Err("chunk truncated inside block".into());
-        }
-        offsets.push((pos, size));
-        pos += size;
-    }
-    Ok(())
+    walk_block_prefixes(raw, entry.nblocks, offsets)
 }
 
 /// Decode one stage-1 block payload into bs³ floats via the registered
@@ -154,40 +231,55 @@ fn validate_chunk_index(file: &CzbFile) -> Result<(), String> {
     Ok(())
 }
 
-/// Random-access block reader with an LRU chunk cache (paper: "we keep
-/// recently decompressed chunks of blocks in a cache"). Buffers of
-/// evicted chunks are recycled into the next decode, so a warm reader
-/// allocates nothing per miss.
+/// Bounds-checked slice of one chunk's compressed payload.
+fn chunk_payload<'a>(bytes: &'a [u8], entry: &ChunkEntry) -> Result<&'a [u8], String> {
+    let lo = entry.offset as usize;
+    let hi = lo
+        .checked_add(entry.csize as usize)
+        .ok_or_else(|| "chunk offset overflow".to_string())?;
+    if bytes.len() < hi {
+        return Err("payload truncated".into());
+    }
+    Ok(&bytes[lo..hi])
+}
+
+/// Random-access block reader over a sharded concurrent chunk cache
+/// (paper: "we keep recently decompressed chunks of blocks in a cache").
+/// Private cache by default; attach to a shared one with
+/// [`BlockReader::with_shared_cache`]. Buffers of evicted sole-owner
+/// chunks are recycled into the next decode, so a warm reader allocates
+/// nothing per miss.
 pub struct BlockReader<'a> {
     pub file: CzbFile,
     payload: &'a [u8],
-    header_len: usize,
     engine: &'a dyn WaveletEngine,
-    cache: HashMap<usize, Arc<DecodedChunk>>,
-    lru: Vec<usize>,
-    capacity: usize,
+    stage2: &'static dyn Stage2Codec,
+    cache: Arc<ChunkCache>,
+    stream: StreamId,
     /// stage-2 inflate scratch shared by all chunk decodes on this reader
     inflate_tmp: Vec<u8>,
     /// buffers reclaimed from the most recently evicted chunk
     spare: Option<(Vec<u8>, Vec<(usize, usize)>)>,
     /// stage-1 decode scratch shared by all block decodes on this reader
     scratch: Stage1Scratch,
-    /// Cache statistics: (hits, misses).
+    /// Per-reader cache statistics (the shared cache keeps global ones).
     pub cache_hits: usize,
     pub cache_misses: usize,
 }
 
 impl<'a> BlockReader<'a> {
     pub fn new(bytes: &'a [u8], engine: &'a dyn WaveletEngine) -> Result<Self, String> {
-        let (file, header_len) = CzbFile::parse_header(bytes)?;
+        let (file, _header_len) = CzbFile::parse_header(bytes)?;
+        let stage2 = stage2_of(&file);
+        let cache = Arc::new(ChunkCache::new(8));
+        let stream = cache.register_stream();
         Ok(Self {
             file,
             payload: bytes,
-            header_len,
             engine,
-            cache: HashMap::new(),
-            lru: Vec::new(),
-            capacity: 8,
+            stage2,
+            cache,
+            stream,
             inflate_tmp: Vec::new(),
             spare: None,
             scratch: Stage1Scratch::default(),
@@ -196,9 +288,28 @@ impl<'a> BlockReader<'a> {
         })
     }
 
+    /// Replace the private cache with a fresh one of roughly `cap`
+    /// decoded chunks.
     pub fn with_cache_capacity(mut self, cap: usize) -> Self {
-        self.capacity = cap.max(1);
+        self.cache = Arc::new(ChunkCache::new(cap));
+        self.stream = self.cache.register_stream();
         self
+    }
+
+    /// Attach this reader to a cache shared with other readers. `stream`
+    /// identifies the compressed quantity: readers over the *same* bytes
+    /// should pass the same id (their decodes become interchangeable),
+    /// distinct quantities need distinct ids
+    /// ([`ChunkCache::register_stream`]).
+    pub fn with_shared_cache(mut self, cache: Arc<ChunkCache>, stream: StreamId) -> Self {
+        self.cache = cache;
+        self.stream = stream;
+        self
+    }
+
+    /// The cache this reader resolves chunks through.
+    pub fn cache(&self) -> &Arc<ChunkCache> {
+        &self.cache
     }
 
     fn chunk_of_block(&self, block_id: u32) -> Result<usize, String> {
@@ -218,30 +329,20 @@ impl<'a> BlockReader<'a> {
     }
 
     fn get_chunk(&mut self, idx: usize) -> Result<Arc<DecodedChunk>, String> {
-        if let Some(c) = self.cache.get(&idx) {
+        if let Some(c) = self.cache.get(self.stream, idx as u32) {
             self.cache_hits += 1;
-            let c = c.clone();
-            // refresh LRU position
-            self.lru.retain(|&i| i != idx);
-            self.lru.push(idx);
             return Ok(c);
         }
         self.cache_misses += 1;
         let entry = self.file.chunks[idx];
-        let lo = entry.offset as usize;
-        let hi = lo
-            .checked_add(entry.csize as usize)
-            .ok_or("chunk offset overflow")?;
-        if self.payload.len() < hi {
-            return Err("payload truncated".into());
-        }
-        let _ = self.header_len;
+        let payload = chunk_payload(self.payload, &entry)?;
         // decode first (into buffers recycled from the previous eviction),
         // so a corrupt chunk never costs a healthy cached one
         let (mut raw, mut offsets) = self.spare.take().unwrap_or_default();
         if let Err(e) = decode_chunk_into(
             &self.file,
-            &self.payload[lo..hi],
+            self.stage2,
+            payload,
             idx,
             &mut self.inflate_tmp,
             &mut raw,
@@ -250,19 +351,11 @@ impl<'a> BlockReader<'a> {
             self.spare = Some((raw, offsets));
             return Err(e);
         }
-        if self.lru.len() >= self.capacity {
-            let evict = self.lru.remove(0);
-            if let Some(old) = self.cache.remove(&evict) {
-                // sole owner -> recycle its buffers for the next miss
-                if let Ok(old) = Arc::try_unwrap(old) {
-                    self.spare = Some((old.raw, old.block_offsets));
-                }
-            }
-        }
         let decoded =
             Arc::new(DecodedChunk { raw, block_offsets: offsets, first_block: entry.first_block });
-        self.cache.insert(idx, decoded.clone());
-        self.lru.push(idx);
+        if let Some(bufs) = self.cache.insert(self.stream, idx as u32, decoded.clone()) {
+            self.spare = Some(bufs);
+        }
         Ok(decoded)
     }
 
@@ -319,6 +412,28 @@ impl FieldWriter {
     }
 }
 
+/// Raw pointer to a byte buffer for disjoint parallel frame scatters.
+/// SAFETY: frame raw spans tile the buffer without overlap
+/// ([`stage2::frame_span`] arithmetic) and each frame is decoded by
+/// exactly one worker.
+struct SliceWriter {
+    ptr: *mut u8,
+    len: usize,
+}
+
+unsafe impl Send for SliceWriter {}
+unsafe impl Sync for SliceWriter {}
+
+impl SliceWriter {
+    /// # Safety
+    /// `offset + bytes.len()` must lie within the buffer and no other
+    /// thread may write an overlapping range concurrently.
+    unsafe fn write_at(&self, offset: usize, bytes: &[u8]) {
+        debug_assert!(offset + bytes.len() <= self.len);
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.ptr.add(offset), bytes.len());
+    }
+}
+
 /// Decompress the whole field from serialized `.czb` bytes (serial path;
 /// bit-identical to [`decompress_field_mt`]).
 pub fn decompress_field(
@@ -338,8 +453,10 @@ pub fn decompress_field(
     Ok((field, file))
 }
 
-/// Whole-field decompression parallelized across chunks over `nthreads`
-/// workers (paper §2.3 "parallel decompression").
+/// Whole-field decompression parallelized over `nthreads` workers (paper
+/// §2.3 "parallel decompression") — across chunks when the archive has
+/// enough of them, across one chunk's sub-frames and blocks when it does
+/// not.
 ///
 /// Deprecated entry point: one-shot convenience that spawns scoped
 /// workers per call; sessions should use `Engine::decompress`, which
@@ -352,13 +469,9 @@ pub fn decompress_field_mt(
     decompress_field_core(&ScopedExec, bytes, engine, nthreads)
 }
 
-/// Whole-field parallel decompression on the given executor. Every
-/// worker owns its inflate/decode buffers (allocation-free steady state)
-/// and scatters finished blocks straight into the shared output field —
-/// block writes are disjoint because the chunk index tiles the block
-/// range (validated) and the queue hands each chunk to exactly one
-/// worker. A shared abort flag stops the other workers from draining the
-/// rest of the queue once any chunk fails to decode.
+/// Whole-field parallel decompression on the given executor. Picks the
+/// chunk-parallel path when chunks outnumber workers, the intra-chunk
+/// wide path otherwise; both are bit-identical to [`decompress_field`].
 pub(crate) fn decompress_field_core(
     exec: &dyn Execute,
     bytes: &[u8],
@@ -367,72 +480,274 @@ pub(crate) fn decompress_field_core(
 ) -> Result<(Field3, CzbFile), String> {
     let (file, _header_len) = CzbFile::parse_header(bytes)?;
     let nchunks = file.chunks.len();
-    let nthreads = nthreads.max(1).min(nchunks.max(1));
-    if nthreads <= 1 {
+    let nthreads = nthreads.max(1);
+    if nthreads <= 1 || nchunks == 0 {
         return decompress_field(bytes, engine);
     }
     validate_chunk_index(&file)?;
     let mut field = Field3::zeros(file.nx as usize, file.ny as usize, file.nz as usize);
     // grid_for validates bs before anything cubes it
     let grid = grid_for(&file, &field)?;
+    // Does any chunk actually split into several sub-frames? Unframed
+    // legacy archives (and v3 files whose frames are chunk-sized) gain
+    // no stage-2 parallelism from the wide path, so starved-but-multiple
+    // chunks are still better decoded chunk-granular.
+    let multi_frame = file.frame_raw > 0
+        && file
+            .chunks
+            .iter()
+            .any(|e| file.chunk_stage2_len(e) > file.frame_raw as usize);
+    if nchunks >= nthreads || !(multi_frame || nchunks == 1) {
+        decompress_chunks_parallel(exec, bytes, &file, &grid, engine, nthreads, &mut field)?;
+    } else {
+        decompress_chunks_wide(exec, bytes, &file, &grid, engine, nthreads, &mut field)?;
+    }
+    Ok((field, file))
+}
+
+/// Chunk-granular parallel decode: every worker owns its inflate/decode
+/// buffers (allocation-free steady state) and scatters finished blocks
+/// straight into the shared output field — block writes are disjoint
+/// because the chunk index tiles the block range (validated) and the
+/// queue hands each chunk to exactly one worker. A shared abort flag
+/// stops the other workers from draining the rest of the queue once any
+/// chunk fails to decode.
+fn decompress_chunks_parallel(
+    exec: &dyn Execute,
+    bytes: &[u8],
+    file: &CzbFile,
+    grid: &BlockGrid,
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+    field: &mut Field3,
+) -> Result<(), String> {
+    let stage2 = stage2_of(file);
     let bs = file.bs as usize;
     let vol = bs * bs * bs;
+    let nchunks = file.chunks.len();
     let writer = FieldWriter { ptr: field.data.as_mut_ptr(), len: field.data.len() };
     let queue = SpanQueue::new(nchunks, 1);
     let abort = AtomicBool::new(false);
-    let results: Vec<Result<(), String>> = cluster::run_on(exec, nthreads, |_| {
-        let r = (|| -> Result<(), String> {
-            // worker-owned scratch: warm after the first chunk
-            let mut tmp: Vec<u8> = Vec::new();
-            let mut raw: Vec<u8> = Vec::new();
-            let mut offsets: Vec<(usize, usize)> = Vec::new();
-            let mut scratch = Stage1Scratch::default();
-            let mut block = vec![0f32; vol];
-            while let Some(span) = queue.next_span() {
-                // a sibling hit a corrupt chunk: stop pulling work, its
-                // error is what the caller will see
-                if abort.load(Ordering::Relaxed) {
-                    return Ok(());
-                }
-                for cidx in span {
-                    let entry = file.chunks[cidx];
-                    let lo = entry.offset as usize;
-                    let hi = lo
-                        .checked_add(entry.csize as usize)
-                        .ok_or_else(|| "chunk offset overflow".to_string())?;
-                    if bytes.len() < hi {
-                        return Err("payload truncated".to_string());
+    let results: Vec<Result<(), String>> =
+        cluster::run_on(exec, nthreads.min(nchunks), |_| {
+            let r = (|| -> Result<(), String> {
+                // worker-owned scratch: warm after the first chunk
+                let mut tmp: Vec<u8> = Vec::new();
+                let mut raw: Vec<u8> = Vec::new();
+                let mut offsets: Vec<(usize, usize)> = Vec::new();
+                let mut scratch = Stage1Scratch::default();
+                let mut block = vec![0f32; vol];
+                while let Some(span) = queue.next_span() {
+                    // a sibling hit a corrupt chunk: stop pulling work, its
+                    // error is what the caller will see
+                    if abort.load(Ordering::Relaxed) {
+                        return Ok(());
                     }
-                    decode_chunk_into(&file, &bytes[lo..hi], cidx, &mut tmp, &mut raw, &mut offsets)?;
-                    for (j, &(off, size)) in offsets.iter().enumerate() {
-                        decode_block_payload(
-                            &file,
-                            &raw[off..off + size],
-                            engine,
-                            &mut scratch,
-                            &mut block,
+                    for cidx in span {
+                        let entry = file.chunks[cidx];
+                        let payload = chunk_payload(bytes, &entry)?;
+                        decode_chunk_into(
+                            file,
+                            stage2,
+                            payload,
+                            cidx,
+                            &mut tmp,
+                            &mut raw,
+                            &mut offsets,
                         )?;
-                        // SAFETY: validate_chunk_index proved chunks tile
-                        // 0..nblocks disjointly and each chunk is pulled by
-                        // exactly one worker, so this block id is written
-                        // exactly once and lies inside the field buffer.
-                        unsafe {
-                            writer.insert_block(&grid, entry.first_block as usize + j, &block)
-                        };
+                        for (j, &(off, size)) in offsets.iter().enumerate() {
+                            decode_block_payload(
+                                file,
+                                &raw[off..off + size],
+                                engine,
+                                &mut scratch,
+                                &mut block,
+                            )?;
+                            // SAFETY: validate_chunk_index proved chunks tile
+                            // 0..nblocks disjointly and each chunk is pulled by
+                            // exactly one worker, so this block id is written
+                            // exactly once and lies inside the field buffer.
+                            unsafe {
+                                writer.insert_block(grid, entry.first_block as usize + j, &block)
+                            };
+                        }
                     }
                 }
+                Ok(())
+            })();
+            if r.is_err() {
+                abort.store(true, Ordering::Relaxed);
             }
-            Ok(())
-        })();
-        if r.is_err() {
-            abort.store(true, Ordering::Relaxed);
-        }
-        r
-    });
+            r
+        });
     for r in results {
         r?;
     }
-    Ok((field, file))
+    Ok(())
+}
+
+/// Intra-chunk parallel decode for archives with fewer chunks than
+/// workers: per chunk (sequentially), inflate the stage-2 sub-frames
+/// concurrently into disjoint slices of the shuffled stream, unshuffle,
+/// then stage-1 decode the chunk's blocks concurrently into the field.
+/// Unframed legacy chunks (v≤2) inflate serially but still get parallel
+/// block decode.
+fn decompress_chunks_wide(
+    exec: &dyn Execute,
+    bytes: &[u8],
+    file: &CzbFile,
+    grid: &BlockGrid,
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+    field: &mut Field3,
+) -> Result<(), String> {
+    let stage2 = stage2_of(file);
+    let bs = file.bs as usize;
+    let vol = bs * bs * bs;
+    let writer = FieldWriter { ptr: field.data.as_mut_ptr(), len: field.data.len() };
+    let mut tmp: Vec<u8> = Vec::new();
+    let mut raw: Vec<u8> = Vec::new();
+    let mut offsets: Vec<(usize, usize)> = Vec::new();
+    for (cidx, entry) in file.chunks.iter().enumerate() {
+        let payload = chunk_payload(bytes, entry)?;
+        check_rawsize(file, entry, cidx)?;
+        let expect = file.chunk_stage2_len(entry);
+        let frames = if file.frame_raw > 0 {
+            parse_frame_table(payload, expect, file.frame_raw as usize)
+                .map_err(|e| format!("chunk {cidx}: {e}"))?
+        } else {
+            Vec::new()
+        };
+        if frames.len() > 1 {
+            // parallel stage-2: each frame decodes into its fixed,
+            // disjoint slice of the shuffled stream
+            let dst = match file.shuffle {
+                ShuffleMode::None => &mut raw,
+                _ => &mut tmp,
+            };
+            dst.clear();
+            dst.resize(expect, 0);
+            let slices = SliceWriter { ptr: dst.as_mut_ptr(), len: dst.len() };
+            let queue = SpanQueue::new(frames.len(), 1);
+            let frames = &frames;
+            let abort = AtomicBool::new(false);
+            let results: Vec<Result<(), String>> =
+                cluster::run_on(exec, nthreads.min(frames.len()), |_| {
+                    let r = (|| -> Result<(), String> {
+                        let mut buf: Vec<u8> = Vec::new();
+                        while let Some(span) = queue.next_span() {
+                            // a sibling hit a corrupt frame: stop draining
+                            if abort.load(Ordering::Relaxed) {
+                                return Ok(());
+                            }
+                            for fi in span {
+                                let f = &frames[fi];
+                                buf.clear();
+                                stage2
+                                    .decompress_into(
+                                        &payload[f.payload.clone()],
+                                        f.raw.len(),
+                                        &mut buf,
+                                    )
+                                    .map_err(|e| format!("chunk {cidx} frame {fi}: {e}"))?;
+                                if buf.len() != f.raw.len() {
+                                    return Err(format!(
+                                        "chunk {cidx} frame {fi}: decoded {} bytes, expected {}",
+                                        buf.len(),
+                                        f.raw.len()
+                                    ));
+                                }
+                                // SAFETY: frame raw spans tile the buffer
+                                // disjointly and each frame index is pulled by
+                                // exactly one worker.
+                                unsafe { slices.write_at(f.raw.start, &buf) };
+                            }
+                        }
+                        Ok(())
+                    })();
+                    if r.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    r
+                });
+            for r in results {
+                r?;
+            }
+            match file.shuffle {
+                ShuffleMode::None => {}
+                ShuffleMode::Byte4 => shuffle::byte_unshuffle_into(&tmp, 4, &mut raw),
+                ShuffleMode::Bit4 => {
+                    let rawsize = entry.rawsize as usize;
+                    if tmp.len() != shuffle::bit_shuffled_len(rawsize, 4) {
+                        return Err(format!(
+                            "chunk {cidx}: bit-shuffled size {} inconsistent with raw size {rawsize}",
+                            tmp.len()
+                        ));
+                    }
+                    shuffle::bit_unshuffle_into(&tmp, 4, rawsize / 4, &mut raw);
+                }
+            }
+            if raw.len() != entry.rawsize as usize {
+                return Err(format!(
+                    "chunk {cidx}: raw size {} != index {}",
+                    raw.len(),
+                    entry.rawsize
+                ));
+            }
+            walk_block_prefixes(&raw, entry.nblocks, &mut offsets)?;
+        } else {
+            decode_chunk_into(file, stage2, payload, cidx, &mut tmp, &mut raw, &mut offsets)?;
+        }
+
+        // parallel stage 1: the chunk's blocks decode concurrently and
+        // scatter into disjoint field regions
+        let nb = offsets.len();
+        if nb == 0 {
+            continue;
+        }
+        let queue = SpanQueue::new(nb, nb.div_ceil(4 * nthreads).max(1));
+        let raw_ref = &raw;
+        let offsets_ref = &offsets;
+        let abort = AtomicBool::new(false);
+        let results: Vec<Result<(), String>> =
+            cluster::run_on(exec, nthreads.min(nb), |_| {
+                let r = (|| -> Result<(), String> {
+                    let mut scratch = Stage1Scratch::default();
+                    let mut block = vec![0f32; vol];
+                    while let Some(span) = queue.next_span() {
+                        // a sibling hit a corrupt block: stop draining
+                        if abort.load(Ordering::Relaxed) {
+                            return Ok(());
+                        }
+                        for j in span {
+                            let (off, size) = offsets_ref[j];
+                            decode_block_payload(
+                                file,
+                                &raw_ref[off..off + size],
+                                engine,
+                                &mut scratch,
+                                &mut block,
+                            )?;
+                            // SAFETY: block ids within the chunk are disjoint
+                            // across workers (queue) and the chunk index tiles
+                            // the block range (validated by the caller).
+                            unsafe {
+                                writer.insert_block(grid, entry.first_block as usize + j, &block)
+                            };
+                        }
+                    }
+                    Ok(())
+                })();
+                if r.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                r
+            });
+        for r in results {
+            r?;
+        }
+    }
+    Ok(())
 }
 
 /// The absolute stage-1 parameter this file was encoded with.
@@ -453,6 +768,11 @@ mod tests {
     fn smooth_field(n: usize, seed: u64) -> Field3 {
         let mut rng = Pcg32::new(seed);
         Field3::from_vec(n, n, n, crate::util::prop::gen_smooth_field(&mut rng, n))
+    }
+
+    fn bits_equal(a: &Field3, b: &Field3) -> bool {
+        a.data.len() == b.data.len()
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]
@@ -543,6 +863,77 @@ mod tests {
     }
 
     #[test]
+    fn shared_cache_readers_agree_and_share_decodes() {
+        // two readers over the same quantity, one shared cache + stream:
+        // the second reader's first access must be a cache hit
+        let f = smooth_field(64, 19);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 32 << 10;
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks >= 2);
+        let engine = NativeEngine;
+        let cache = Arc::new(ChunkCache::new(16));
+        let stream = cache.register_stream();
+        let mut r1 = BlockReader::new(&bytes, &engine)
+            .unwrap()
+            .with_shared_cache(cache.clone(), stream);
+        let mut r2 = BlockReader::new(&bytes, &engine)
+            .unwrap()
+            .with_shared_cache(cache.clone(), stream);
+        let bs = r1.file.bs as usize;
+        let mut a = vec![0f32; bs * bs * bs];
+        let mut b = vec![0f32; bs * bs * bs];
+        r1.read_block(0, &mut a).unwrap();
+        r2.read_block(0, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(r1.cache_misses, 1);
+        assert_eq!(r2.cache_hits, 1, "second reader must reuse the shared decode");
+        assert_eq!(r2.cache_misses, 0);
+        assert!(cache.hits() >= 1);
+    }
+
+    #[test]
+    fn concurrent_shared_cache_readers_decode_correctly() {
+        // several threads hammer one shared cache over the same archive;
+        // every block must come back identical to the serial decode
+        let f = smooth_field(64, 23);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 16 << 10;
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks >= 4);
+        let (full, file) = decompress_field(&bytes, &NativeEngine).unwrap();
+        let engine = NativeEngine;
+        let cache = Arc::new(ChunkCache::new(4)); // small: force churn
+        let stream = cache.register_stream();
+        let bs = file.bs as usize;
+        let grid = crate::core::block::BlockGrid::new(&f, bs);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let cache = cache.clone();
+                let bytes = &bytes;
+                let engine = &engine;
+                let full = &full;
+                let grid = &grid;
+                s.spawn(move || {
+                    let mut reader = BlockReader::new(bytes, engine)
+                        .unwrap()
+                        .with_shared_cache(cache, stream);
+                    let mut blk = vec![0f32; bs * bs * bs];
+                    let mut expected = crate::core::block::Block::zeros(bs);
+                    let mut rng = Pcg32::new(0x1234 + t);
+                    for _ in 0..60 {
+                        let id = rng.below(reader.file.nblocks);
+                        reader.read_block(id, &mut blk).unwrap();
+                        grid.extract(full, id as usize, &mut expected);
+                        assert_eq!(blk, expected.data, "block {id}");
+                    }
+                });
+            }
+        });
+        assert!(cache.hits() + cache.misses() >= 240);
+    }
+
+    #[test]
     fn parallel_whole_field_decode_matches_serial() {
         let f = smooth_field(96, 31); // 27 blocks at bs=32
         let mut cfg = PipelineConfig::paper_default(1e-3);
@@ -554,13 +945,91 @@ mod tests {
         for nthreads in [2usize, 4, 8] {
             let (par, file) = decompress_field_mt(&bytes, &NativeEngine, nthreads).unwrap();
             assert_eq!(file.nblocks as usize, st.nblocks);
-            let bitwise_equal = serial
-                .data
-                .iter()
-                .zip(&par.data)
-                .all(|(a, b)| a.to_bits() == b.to_bits());
-            assert!(bitwise_equal, "nthreads {nthreads}");
+            assert!(bits_equal(&serial, &par), "nthreads {nthreads}");
         }
+    }
+
+    #[test]
+    fn single_chunk_archive_decodes_in_parallel_bit_exact() {
+        // the wide path: one chunk, many sub-frames — stage-2 inflate and
+        // stage-1 decode must fan out and still match serial bit-for-bit
+        let f = smooth_field(64, 66);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 64 << 20; // everything in one chunk
+        cfg.frame_bytes = 2 << 10; // many frames inside it
+        for stage2 in [Codec::ZlibBest, Codec::Lz4, Codec::None] {
+            cfg.stage2 = stage2;
+            let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+            assert_eq!(st.nchunks, 1, "{stage2:?}");
+            let (file, _) = CzbFile::parse_header(&bytes).unwrap();
+            assert!(file.frame_raw > 0);
+            let (serial, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+            for nthreads in [2usize, 4, 8] {
+                let (par, _) = decompress_field_mt(&bytes, &NativeEngine, nthreads).unwrap();
+                assert!(bits_equal(&serial, &par), "{stage2:?} nthreads {nthreads}");
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_v1_archives_decode_bit_exact() {
+        // repack a v3 archive's chunks as monolithic legacy streams under
+        // a v1 header: exactly what a pre-framing writer produced. Every
+        // decode path must accept it and reproduce the same field.
+        let f = smooth_field(64, 55);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 64 << 10;
+        cfg.frame_bytes = 4 << 10;
+        let (v3, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks > 1);
+        let (file, _) = CzbFile::parse_header(&v3).unwrap();
+        let codec = file.stage2.codec();
+        let mut payloads: Vec<Vec<u8>> = Vec::new();
+        for entry in &file.chunks {
+            let payload = &v3[entry.offset as usize..][..entry.csize as usize];
+            let expect = file.chunk_stage2_len(entry);
+            let mut shuffled = Vec::new();
+            decompress_framed(codec, payload, expect, file.frame_raw as usize, &mut shuffled)
+                .unwrap();
+            let mut legacy = Vec::new();
+            codec.compress_into(&shuffled, &mut legacy);
+            payloads.push(legacy);
+        }
+        let mut v1 = file.clone();
+        v1.version = 1;
+        v1.frame_raw = 0;
+        let hsize = CzbFile::header_size_for(1, v1.name.len(), v1.chunks.len());
+        let mut offset = hsize as u64;
+        for (c, p) in v1.chunks.iter_mut().zip(&payloads) {
+            c.offset = offset;
+            c.csize = p.len() as u32;
+            offset += p.len() as u64;
+        }
+        let mut v1_bytes = Vec::new();
+        v1.write_header(&mut v1_bytes);
+        assert_eq!(v1_bytes.len(), hsize);
+        for p in &payloads {
+            v1_bytes.extend_from_slice(p);
+        }
+        let (a, _) = decompress_field(&v3, &NativeEngine).unwrap();
+        let (b, fb) = decompress_field(&v1_bytes, &NativeEngine).unwrap();
+        assert_eq!(fb.version, 1);
+        assert_eq!(fb.frame_raw, 0);
+        assert!(bits_equal(&a, &b), "legacy serial decode must match");
+        for nthreads in [2usize, 8, 16] {
+            let (c, _) = decompress_field_mt(&v1_bytes, &NativeEngine, nthreads).unwrap();
+            assert!(bits_equal(&a, &c), "legacy parallel decode (t={nthreads})");
+        }
+        // random access into the legacy archive
+        let engine = NativeEngine;
+        let mut reader = BlockReader::new(&v1_bytes, &engine).unwrap();
+        let bs = fb.bs as usize;
+        let mut blk = vec![0f32; bs * bs * bs];
+        reader.read_block(0, &mut blk).unwrap();
+        let grid = crate::core::block::BlockGrid::new(&a, bs);
+        let mut expected = crate::core::block::Block::zeros(bs);
+        grid.extract(&a, 0, &mut expected);
+        assert_eq!(blk, expected.data);
     }
 
     #[test]
@@ -602,18 +1071,18 @@ mod tests {
         assert_eq!(file_bit.shuffle, ShuffleMode::Bit4);
         let (d_byte, _) = decompress_field(&b_byte, &NativeEngine).unwrap();
         let (d_bit, _) = decompress_field(&b_bit, &NativeEngine).unwrap();
-        assert!(d_byte
-            .data
-            .iter()
-            .zip(&d_bit.data)
-            .all(|(a, b)| a.to_bits() == b.to_bits()));
-        // parallel decode handles Bit4 too
+        assert!(bits_equal(&d_byte, &d_bit));
+        // parallel decode handles Bit4 too — the chunk-parallel path...
         let (d_mt, _) = decompress_field_mt(&b_bit, &NativeEngine, 4).unwrap();
-        assert!(d_bit
-            .data
-            .iter()
-            .zip(&d_mt.data)
-            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(bits_equal(&d_bit, &d_mt));
+        // ...and the intra-chunk wide path (sub-frames smaller than the
+        // chunk streams + more threads than chunks), where the Bit4
+        // plane-padding arithmetic also shapes the frame spans
+        let mut cfg_framed = cfg.with_shuffle(ShuffleMode::Bit4);
+        cfg_framed.frame_bytes = 2 << 10;
+        let (b_framed, _) = compress_field(&f, "p", &cfg_framed, &NativeEngine);
+        let (d_wide, _) = decompress_field_mt(&b_framed, &NativeEngine, 64).unwrap();
+        assert!(bits_equal(&d_bit, &d_wide));
     }
 
     #[test]
@@ -638,6 +1107,55 @@ mod tests {
                 "nthreads {nthreads}"
             );
         }
+    }
+
+    #[test]
+    fn corrupt_frame_tables_error_for_every_codec() {
+        // satellite: every registered codec must reject fuzzed frame
+        // tables and truncated payloads — error, never panic or OOM — in
+        // the serial, chunk-parallel and wide decode paths alike
+        let f = smooth_field(32, 67);
+        for stage2 in Codec::ALL {
+            let mut cfg = PipelineConfig::new(16, Stage1::Copy, stage2);
+            cfg.chunk_bytes = 32 << 10;
+            cfg.frame_bytes = 4 << 10;
+            let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+            assert!(st.nchunks >= 2, "{stage2:?}: nchunks {}", st.nchunks);
+            let (file, _) = CzbFile::parse_header(&bytes).unwrap();
+            let mut bad = bytes.clone();
+            let lo = file.chunks[0].offset as usize;
+            bad[lo..lo + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(decompress_field(&bad, &NativeEngine).is_err(), "{stage2:?} serial");
+            for nthreads in [2usize, 16] {
+                assert!(
+                    decompress_field_mt(&bad, &NativeEngine, nthreads).is_err(),
+                    "{stage2:?} nthreads {nthreads}"
+                );
+            }
+            // truncated archive
+            assert!(decompress_field(&bytes[..bytes.len() - 3], &NativeEngine).is_err());
+            assert!(decompress_field_mt(&bytes[..bytes.len() - 3], &NativeEngine, 4).is_err());
+        }
+    }
+
+    #[test]
+    fn crafted_huge_rawsize_is_rejected_before_allocating() {
+        // a chunk-index entry claiming a 4 GiB raw stream on a tiny
+        // payload must be refused by the plausibility bound, not
+        // reserved for
+        let f = smooth_field(32, 71);
+        let cfg = PipelineConfig::paper_default(1e-3);
+        let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let (file, _) = CzbFile::parse_header(&bytes).unwrap();
+        // rawsize sits 12 bytes into chunk 0's 24-byte index entry
+        let entry0 = CzbFile::header_size(file.name.len(), file.chunks.len())
+            - file.chunks.len() * 24;
+        let mut bad = bytes.clone();
+        bad[entry0 + 12..entry0 + 16].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decompress_field(&bad, &NativeEngine).unwrap_err();
+        assert!(err.contains("plausible bound"), "{err}");
+        assert!(decompress_field_mt(&bad, &NativeEngine, 4).is_err());
+        assert!(decompress_field_mt(&bad, &NativeEngine, 64).is_err());
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! span-queue core, which fixes chunk boundaries by block-id arithmetic.
 use super::compressor::{
     compress_field_core, CompressStats, NativeEngine, PipelineConfig, WaveletEngine,
+    DEFAULT_FRAME_BYTES,
 };
 use super::decompressor::decompress_field_core;
 use super::format::{CzbFile, ShuffleMode, Stage1};
@@ -70,6 +71,7 @@ impl CompressParams {
 pub struct EngineBuilder {
     threads: usize,
     chunk_bytes: usize,
+    frame_bytes: usize,
     batch: usize,
     wavelet_engine: Box<dyn WaveletEngine>,
 }
@@ -79,6 +81,7 @@ impl EngineBuilder {
         Self {
             threads: 0,
             chunk_bytes: 4 << 20,
+            frame_bytes: DEFAULT_FRAME_BYTES,
             batch: 16,
             wavelet_engine: Box::new(NativeEngine),
         }
@@ -96,6 +99,15 @@ impl EngineBuilder {
     /// written with different chunk budgets differ byte-wise.
     pub fn chunk_bytes(mut self, n: usize) -> Self {
         self.chunk_bytes = n.max(1);
+        self
+    }
+
+    /// Raw bytes per stage-2 sub-frame of each sealed chunk (default
+    /// 256 KiB; 0 keeps the default rather than degenerating to 1-byte
+    /// frames). Format-affecting, like `chunk_bytes`. Smaller frames
+    /// expose more intra-chunk parallelism at a slight ratio cost.
+    pub fn frame_bytes(mut self, n: usize) -> Self {
+        self.frame_bytes = if n == 0 { DEFAULT_FRAME_BYTES } else { n };
         self
     }
 
@@ -122,6 +134,7 @@ impl EngineBuilder {
             pool: WorkerPool::new(threads),
             threads,
             chunk_bytes: self.chunk_bytes,
+            frame_bytes: self.frame_bytes,
             batch: self.batch,
             wavelet_engine: self.wavelet_engine,
         }
@@ -137,6 +150,7 @@ pub struct Engine {
     pool: WorkerPool,
     threads: usize,
     chunk_bytes: usize,
+    frame_bytes: usize,
     batch: usize,
     wavelet_engine: Box<dyn WaveletEngine>,
 }
@@ -154,6 +168,10 @@ impl Engine {
         self.chunk_bytes
     }
 
+    pub fn frame_bytes(&self) -> usize {
+        self.frame_bytes
+    }
+
     /// The session's wavelet-transform executor (shared with
     /// `BlockReader` for random access into session-produced archives).
     pub fn wavelet_engine(&self) -> &dyn WaveletEngine {
@@ -166,6 +184,7 @@ impl Engine {
         let mut cfg = PipelineConfig::new(params.bs, params.stage1, params.stage2);
         cfg.shuffle = params.shuffle;
         cfg.chunk_bytes = self.chunk_bytes;
+        cfg.frame_bytes = self.frame_bytes;
         cfg.batch = self.batch;
         cfg.nthreads = self.threads;
         cfg

@@ -2,18 +2,48 @@
 //!
 //! ## `.czb` — one compressed quantity
 //!
-//! Layout (little endian):
+//! Layout (little endian, version 3):
 //! ```text
 //! magic "CZB1" | u8 version | u8 name_len | name bytes
 //! u32 nx ny nz | u32 bs
 //! stage1: u8 id | u8 wavelet | u8 zbits | u8 coeff_codec
 //!         f32 param | f32 coeff_param
 //! u8 stage2 codec id | u8 shuffle mode
+//! u32 frame_raw                      (version >= 3 only)
 //! f32 global_min | f32 global_max
 //! u32 nblocks | u32 nchunks
 //! nchunks x { u64 offset | u32 csize | u32 rawsize | u32 first_block | u32 nblocks }
 //! chunk payloads...
 //! ```
+//!
+//! ### Framed chunk payloads (version 3)
+//!
+//! Each chunk's stage-2 payload is a *framed container*
+//! ([`crate::codec::stage2`]): the (shuffled) raw stream is cut into
+//! sub-frames of `frame_raw` bytes each (last one shorter), every frame
+//! compressed as an independent stage-2 stream, preceded by a frame
+//! table:
+//! ```text
+//! u32 nframes | nframes x u32 frame_csize | compressed frames ...
+//! ```
+//! Frame boundaries are pure arithmetic on the stream length, so the
+//! serialized archive stays byte-identical across thread counts while
+//! one chunk's frames compress and decompress concurrently (the paper's
+//! "independent deflate blocks", realized for every registered codec).
+//!
+//! ### Version history
+//!
+//! * **v1** — the original layout above without `frame_raw`; each chunk
+//!   payload is one monolithic stage-2 stream.
+//! * **v2** — identical layout to v1; the version byte was reserved for a
+//!   forward-compat experiment and no writer ever shipped it. Readers
+//!   accept it as unframed.
+//! * **v3** — adds the `u32 frame_raw` header field and framed chunk
+//!   payloads (current writer version, [`FORMAT_VERSION`]).
+//!
+//! Readers accept v1..=v3; `frame_raw == 0` on a parsed file means
+//! "unframed legacy payloads" and is what v≤2 files report.
+//!
 //! Within a chunk's *raw* stream every block is prefixed with its `u32`
 //! encoded size, so the decompressor can walk to any block after a single
 //! stage-2 inflate of the chunk.
@@ -206,6 +236,13 @@ pub struct CzbFile {
     pub stage1: Stage1,
     pub stage2: Codec,
     pub shuffle: ShuffleMode,
+    /// Header version this file was parsed from / will serialize as
+    /// (1..=[`FORMAT_VERSION`]; see the version history above).
+    pub version: u8,
+    /// Raw bytes per stage-2 sub-frame. `0` means unframed legacy chunk
+    /// payloads (always the case for v≤2 files); `> 0` means every chunk
+    /// payload carries a frame table.
+    pub frame_raw: u32,
     pub global_min: f32,
     pub global_max: f32,
     pub nblocks: u32,
@@ -214,19 +251,45 @@ pub struct CzbFile {
 
 pub const MAGIC: &[u8; 4] = b"CZB1";
 
+/// Current writer version (framed stage-2 chunk payloads).
+pub const FORMAT_VERSION: u8 = 3;
+
 impl CzbFile {
-    /// Serialized header size for `nchunks` entries.
+    /// Serialized header size for `nchunks` entries at the current writer
+    /// version ([`FORMAT_VERSION`]).
     pub fn header_size(name_len: usize, nchunks: usize) -> usize {
-        4 + 1 + 1 + name_len + 16 + 12 + 2 + 8 + 8 + nchunks * 24
+        Self::header_size_for(FORMAT_VERSION, name_len, nchunks)
+    }
+
+    /// Serialized header size for a specific format version.
+    pub fn header_size_for(version: u8, name_len: usize, nchunks: usize) -> usize {
+        let frame_field = if version >= 3 { 4 } else { 0 };
+        4 + 1 + 1 + name_len + 16 + 12 + 2 + frame_field + 8 + 8 + nchunks * 24
     }
 
     pub fn global_range(&self) -> f32 {
         (self.global_max - self.global_min).max(f32::MIN_POSITIVE)
     }
 
+    /// Length of a chunk's stage-2 *uncompressed* stream: the raw block
+    /// stream after the shuffle preconditioner (bit shuffling pads the
+    /// element count, so Bit4 streams are longer than `rawsize`). This is
+    /// what frame spans slice and what decoders validate against.
+    pub fn chunk_stage2_len(&self, entry: &ChunkEntry) -> usize {
+        match self.shuffle {
+            ShuffleMode::None | ShuffleMode::Byte4 => entry.rawsize as usize,
+            ShuffleMode::Bit4 => crate::codec::shuffle::bit_shuffled_len(entry.rawsize as usize, 4),
+        }
+    }
+
     pub fn write_header(&self, out: &mut Vec<u8>) {
+        assert!(
+            (1..=FORMAT_VERSION).contains(&self.version),
+            "unsupported writer version {}",
+            self.version
+        );
         out.extend_from_slice(MAGIC);
-        out.push(1u8);
+        out.push(self.version);
         let name = self.name.as_bytes();
         assert!(name.len() <= 255);
         out.push(name.len() as u8);
@@ -237,6 +300,10 @@ impl CzbFile {
         out.extend_from_slice(&self.stage1.encode());
         out.push(self.stage2.id());
         out.push(self.shuffle.id());
+        if self.version >= 3 {
+            assert!(self.frame_raw > 0, "v3 headers must carry a positive frame_raw");
+            out.extend_from_slice(&self.frame_raw.to_le_bytes());
+        }
         out.extend_from_slice(&self.global_min.to_le_bytes());
         out.extend_from_slice(&self.global_max.to_le_bytes());
         out.extend_from_slice(&self.nblocks.to_le_bytes());
@@ -251,6 +318,8 @@ impl CzbFile {
     }
 
     /// Parse a header from `buf`; returns (file, header bytes consumed).
+    /// Accepts versions 1..=[`FORMAT_VERSION`]: v≤2 files parse with
+    /// `frame_raw == 0` (unframed payloads) and decode bit-exactly.
     pub fn parse_header(buf: &[u8]) -> Result<(Self, usize), String> {
         let need = |n: usize, pos: usize| -> Result<(), String> {
             if buf.len() < pos + n {
@@ -263,15 +332,17 @@ impl CzbFile {
         if &buf[0..4] != MAGIC {
             return Err("bad magic".into());
         }
-        if buf[4] != 1 {
-            return Err(format!("bad version {}", buf[4]));
+        let version = buf[4];
+        if !(1..=FORMAT_VERSION).contains(&version) {
+            return Err(format!("bad version {version} (supported 1..={FORMAT_VERSION})"));
         }
         let name_len = buf[5] as usize;
         let mut pos = 6;
         need(name_len, pos)?;
         let name = String::from_utf8_lossy(&buf[pos..pos + name_len]).into_owned();
         pos += name_len;
-        need(16 + 12 + 2 + 8 + 8, pos)?;
+        let frame_field = if version >= 3 { 4 } else { 0 };
+        need(16 + 12 + 2 + frame_field + 8 + 8, pos)?;
         let rd_u32 = |pos: usize| u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
         let (nx, ny, nz, bs) = (rd_u32(pos), rd_u32(pos + 4), rd_u32(pos + 8), rd_u32(pos + 12));
         pos += 16;
@@ -280,6 +351,16 @@ impl CzbFile {
         let stage2 = Codec::from_id(buf[pos]).ok_or("bad stage2 id")?;
         let shuffle = ShuffleMode::from_id(buf[pos + 1]).ok_or("bad shuffle id")?;
         pos += 2;
+        let frame_raw = if version >= 3 {
+            let v = rd_u32(pos);
+            pos += 4;
+            if v == 0 {
+                return Err("v3 header with zero frame_raw".into());
+            }
+            v
+        } else {
+            0
+        };
         let global_min = f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
         let global_max = f32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
         pos += 8;
@@ -308,6 +389,8 @@ impl CzbFile {
                 stage1,
                 stage2,
                 shuffle,
+                version,
+                frame_raw,
                 global_min,
                 global_max,
                 nblocks,
@@ -337,6 +420,8 @@ mod tests {
             },
             stage2: Codec::ZlibDef,
             shuffle: ShuffleMode::Byte4,
+            version: FORMAT_VERSION,
+            frame_raw: 256 << 10,
             global_min: -1.5,
             global_max: 900.0,
             nblocks: 512,
@@ -359,8 +444,70 @@ mod tests {
         assert_eq!(g.stage1, f.stage1);
         assert_eq!(g.stage2, f.stage2);
         assert_eq!(g.shuffle, f.shuffle);
+        assert_eq!(g.version, FORMAT_VERSION);
+        assert_eq!(g.frame_raw, f.frame_raw);
         assert_eq!(g.chunks, f.chunks);
         assert_eq!((g.nx, g.ny, g.nz, g.bs), (f.nx, f.ny, f.nz, f.bs));
+    }
+
+    #[test]
+    fn legacy_v1_and_v2_headers_parse_unframed() {
+        // v≤2 layouts have no frame_raw field; parsing must report
+        // frame_raw == 0 so decoders take the unframed path
+        for version in [1u8, 2] {
+            let mut f = sample();
+            f.version = version;
+            f.frame_raw = 0;
+            let mut buf = Vec::new();
+            f.write_header(&mut buf);
+            assert_eq!(
+                buf.len(),
+                CzbFile::header_size_for(version, f.name.len(), f.chunks.len())
+            );
+            // the legacy header is exactly 4 bytes shorter than v3's
+            assert_eq!(
+                buf.len() + 4,
+                CzbFile::header_size(f.name.len(), f.chunks.len())
+            );
+            let (g, consumed) = CzbFile::parse_header(&buf).unwrap();
+            assert_eq!(consumed, buf.len());
+            assert_eq!(g.version, version);
+            assert_eq!(g.frame_raw, 0, "v{version} must parse as unframed");
+            assert_eq!(g.chunks, f.chunks);
+            assert_eq!(g.stage1, f.stage1);
+        }
+    }
+
+    #[test]
+    fn unsupported_versions_and_zero_frame_raw_error() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        let mut future = buf.clone();
+        future[4] = FORMAT_VERSION + 1;
+        assert!(CzbFile::parse_header(&future).is_err());
+        future[4] = 0;
+        assert!(CzbFile::parse_header(&future).is_err());
+        // zero out the frame_raw field of a v3 header
+        let frame_pos = 6 + f.name.len() + 16 + 12 + 2;
+        let mut bad = buf.clone();
+        bad[frame_pos..frame_pos + 4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(CzbFile::parse_header(&bad).is_err());
+    }
+
+    #[test]
+    fn chunk_stage2_len_accounts_for_bit_padding() {
+        let mut f = sample();
+        let entry = ChunkEntry { offset: 0, csize: 9, rawsize: 1001, first_block: 0, nblocks: 1 };
+        f.shuffle = ShuffleMode::None;
+        assert_eq!(f.chunk_stage2_len(&entry), 1001);
+        f.shuffle = ShuffleMode::Byte4;
+        assert_eq!(f.chunk_stage2_len(&entry), 1001);
+        f.shuffle = ShuffleMode::Bit4;
+        assert_eq!(
+            f.chunk_stage2_len(&entry),
+            crate::codec::shuffle::bit_shuffled_len(1001, 4)
+        );
     }
 
     #[test]

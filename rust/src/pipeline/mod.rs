@@ -30,29 +30,41 @@
 //! of blocks (~`chunk_bytes` of raw data each) off a
 //! [`crate::cluster::SpanQueue`]; each span becomes one chunk — per-block
 //! lossy stage 1 into a worker-private buffer, lossless stage 2 (shuffle
-//! + codec) over the filled buffer — and the chunks are concatenated in
-//! block order into a single stream per quantity. Span boundaries are
-//! fixed by block-id arithmetic, so the `.czb` output is byte-identical
-//! for every thread count and every executor (pool or scoped).
+//! + framed codec) over the filled buffer — and the chunks are
+//! concatenated in block order into a single stream per quantity. Span
+//! boundaries are fixed by block-id arithmetic, so the `.czb` output is
+//! byte-identical for every thread count and every executor (pool or
+//! scoped). When a field yields fewer spans than workers, the *wide
+//! path* fans out inside each span instead — parallel stage-1 block
+//! ranges, then parallel stage-2 sub-frames — with the same bytes.
 //!
-//! Stage-1 schemes are trait objects ([`stage1::Stage1Codec`]): the
-//! wavelet, zfp, sz, fpzip and copy paths all dispatch through one
-//! registry, so a new scheme implements the trait and registers —
-//! neither `compressor.rs` nor `decompressor.rs` changes.
+//! Both substages are trait objects behind registries: stage-1 schemes
+//! implement [`stage1::Stage1Codec`] (wavelet, zfp, sz, fpzip, copy) and
+//! stage-2 lossless back-ends implement
+//! [`crate::codec::stage2::Stage2Codec`] (czlib, lz4lite, zstdlite,
+//! lzmalite, copy). A new codec on either side implements its trait and
+//! registers — neither `compressor.rs` nor `decompressor.rs` changes.
 //!
 //! **Decompression** ([`decompressor`]): whole-field decode pulls chunks
 //! off the same queue type and scatters blocks into the shared output
-//! field, stopping early via a shared abort flag when any chunk fails;
-//! random access goes through the chunk-cached [`BlockReader`].
+//! field, stopping early via a shared abort flag when any chunk fails.
+//! Archives with fewer chunks than workers decode through the wide path:
+//! each chunk's stage-2 sub-frames (format v3) inflate concurrently into
+//! disjoint slices and its blocks stage-1 decode concurrently — a
+//! single-chunk archive scales with threads. Random access goes through
+//! [`BlockReader`] over a sharded concurrent [`ChunkCache`]
+//! ([`chunk_cache`]); `.czs` archives share one cache across every
+//! reader they hand out.
 //!
 //! **Buffer lifecycle**: every worker owns its scratch — batch transform
 //! buffer, block gather, the [`stage1::Stage1Scratch`] encode/decode
 //! buffers, shuffle buffer, the decompressor's inflate/offset buffers —
 //! allocated once per worker and reused for every block/chunk; the
 //! wavelet transform keeps its line buffers in a thread-local pool, the
-//! fpc decoders fill caller-owned `_into` buffers, and the
-//! [`BlockReader`] LRU recycles evicted chunk buffers. The steady-state
-//! per-block path allocates nothing in either direction.
+//! fpc decoders fill caller-owned `_into` buffers, and the chunk cache
+//! recycles evicted sole-owner buffers. The steady-state per-block path
+//! allocates nothing in either direction.
+pub mod chunk_cache;
 pub mod compressor;
 pub mod dataset;
 pub mod decompressor;
@@ -60,9 +72,13 @@ pub mod engine;
 pub mod format;
 pub mod stage1;
 
-pub use compressor::{compress_field, CompressStats, NativeEngine, PipelineConfig, WaveletEngine};
+pub use chunk_cache::{ChunkCache, StreamId};
+pub use compressor::{
+    compress_field, CompressStats, NativeEngine, PipelineConfig, WaveletEngine,
+    DEFAULT_FRAME_BYTES,
+};
 pub use dataset::{Dataset, DatasetWriter, QuantityEntry};
 pub use decompressor::{decompress_field, decompress_field_mt, BlockReader};
 pub use engine::{CompressParams, Engine, EngineBuilder};
-pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1};
+pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1, FORMAT_VERSION};
 pub use stage1::{Stage1Codec, Stage1Scratch};
