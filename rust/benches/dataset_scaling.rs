@@ -1,0 +1,180 @@
+//! Bench: cross-quantity `.czs` decode scaling — the multi-QoI ex-situ
+//! read path. Builds a 7-quantity archive on disk, decodes it with
+//! `Engine::decompress_dataset` at 1/2/4/8 threads (lazy file-backed
+//! open each sample) and reports the speedup over the serial
+//! per-quantity baseline (one thread, one quantity after another).
+//!
+//! Asserts the streaming invariants along the way: a lazy open keeps
+//! untouched sections off the heap, and every thread count decodes
+//! bit-identically to the eager in-memory path. The ≥1.5x-at-8-threads
+//! fan-out target is enforced on hosts with ≥8 hardware threads. Also
+//! sweeps the `DatasetOptions::cache_chunks` knob over a random
+//! block-access workload. Emits `BENCH_dataset.json`.
+//!
+//! `DATASET_SCALING_FAST=1` shrinks fields and budgets for CI;
+//! `DATASET_SCALING_N` overrides the field side (divisible by 32).
+use cubismz::core::Field3;
+use cubismz::pipeline::{CompressParams, Dataset, DatasetOptions, Engine, NativeEngine};
+use cubismz::util::bench::{bench_budget, write_json, Json};
+use cubismz::util::prng::Pcg32;
+
+/// Quantities per step (the paper's CFD workflow dumps ~7).
+const NQ: usize = 7;
+
+fn main() {
+    let fast = std::env::var("DATASET_SCALING_FAST").is_ok();
+    let n: usize = std::env::var("DATASET_SCALING_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 64 } else { 128 });
+    assert!(n % 32 == 0, "DATASET_SCALING_N must be divisible by 32");
+    let (budget, samples) = if fast { (1.0, 5) } else { (3.0, 12) };
+    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let raw_bytes = n * n * n * 4 * NQ;
+    println!(
+        "bench dataset_scaling: {NQ} x {n}^3 quantities ({} MB raw), {hw} hardware threads",
+        raw_bytes / 1_000_000
+    );
+
+    let dir = std::env::temp_dir().join("cubismz_dataset_scaling");
+    std::fs::create_dir_all(&dir).expect("create bench dir");
+    let path = dir.join("step.czs");
+
+    // several chunks per quantity so intra-quantity decode can spread
+    // too, but few enough that cross-quantity fan-out is what matters
+    let chunk_bytes = (n * n * n * 4 / 8).max(32 * 32 * 32 * 4 + 4);
+    let writer_engine = Engine::builder().threads(hw).chunk_bytes(chunk_bytes).build();
+    let params = CompressParams::paper_default(1e-3);
+    let mut w = Dataset::create(&path).expect("create archive");
+    for i in 0..NQ as u64 {
+        let mut rng = Pcg32::new(1000 + i);
+        let f = Field3::from_vec(n, n, n, cubismz::util::prop::gen_smooth_field(&mut rng, n));
+        w.write_quantity(&writer_engine, &f, &format!("q{i}"), &params).expect("write quantity");
+    }
+    w.finish().expect("finish archive");
+    let archive_bytes = std::fs::metadata(&path).expect("stat archive").len();
+    println!("  archive: {archive_bytes} bytes, chunk_bytes {chunk_bytes}");
+
+    // streaming open: decoding one quantity must leave the rest on disk
+    let serial = Engine::builder().threads(1).build();
+    let lazy = Dataset::open(&path).expect("open archive");
+    assert_eq!(lazy.resident_bytes(), 0, "nothing resident before first touch");
+    let (q0, _) = lazy.read_quantity("q0", &serial).expect("decode q0");
+    let resident_one = lazy.resident_bytes();
+    assert!(
+        (resident_one as u64) < archive_bytes,
+        "lazy open must not pull the whole archive for one quantity"
+    );
+    println!("  lazy open: {resident_one} of {archive_bytes} bytes resident after one quantity");
+
+    // eager per-quantity reference bits for the identity checks
+    let eager = Dataset::from_bytes(std::fs::read(&path).expect("read archive")).expect("parse");
+    let reference: Vec<Vec<f32>> = eager
+        .entries()
+        .iter()
+        .map(|e| {
+            serial.decompress_bytes(eager.section(&e.name).expect("section")).expect("decode").0.data
+        })
+        .collect();
+    assert!(
+        q0.data.iter().zip(&reference[0]).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "lazy single-quantity decode must match the eager path"
+    );
+
+    // serial per-quantity baseline: one thread, one quantity after
+    // another — the pre-fan-out decompress_dataset_file shape. Re-opens
+    // per sample so no decoded-chunk cache warms across samples.
+    let sb = bench_budget("serial per-quantity baseline", budget, samples, || {
+        let ds = Dataset::open(&path).unwrap();
+        for e in ds.entries() {
+            serial.decompress_bytes(ds.section(&e.name).unwrap()).unwrap();
+        }
+    });
+    sb.report_mbps(raw_bytes);
+
+    let mut rows = Vec::new();
+    let mut t8 = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let engine = Engine::builder().threads(threads).build();
+        let s = bench_budget(&format!("decompress_dataset/t={threads}"), budget, samples, || {
+            let ds = Dataset::open(&path).unwrap();
+            engine.decompress_dataset(&ds, None).unwrap()
+        });
+        s.report_mbps(raw_bytes);
+        // bit identity vs the eager per-quantity reference
+        let ds = Dataset::open(&path).unwrap();
+        let decoded = engine.decompress_dataset(&ds, None).unwrap();
+        for ((name, field, _), expect) in decoded.iter().zip(&reference) {
+            assert!(
+                field.data.iter().zip(expect).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lazy fan-out decode of {name} must match the eager path (t={threads})"
+            );
+        }
+        if threads == 8 {
+            t8 = s.mean;
+        }
+        println!("  t={threads}: {:.2}x vs serial baseline", sb.mean / s.mean);
+        rows.push(Json::Obj(vec![
+            ("threads".into(), Json::Int(threads as i64)),
+            ("decode_mbps".into(), Json::Num(raw_bytes as f64 / 1e6 / s.mean)),
+            ("speedup_vs_serial".into(), Json::Num(sb.mean / s.mean)),
+        ]));
+    }
+    if hw >= 8 {
+        let sp = sb.mean / t8;
+        println!("fan-out scaling check (8t vs serial baseline, target >= 1.5x): {sp:.2}x");
+        assert!(
+            sp >= 1.5,
+            "cross-quantity decode must beat the serial per-quantity baseline: {sp:.2}x"
+        );
+    } else {
+        println!("  (only {hw} hardware threads — 1.5x target not enforced on this host)");
+    }
+
+    // cache-size sweep: random block access through the shared cache —
+    // the DatasetOptions::cache_chunks knob this bench exists to size
+    let wav = NativeEngine;
+    let reads = if fast { 300 } else { 3000 };
+    let mut sweep = Vec::new();
+    for cache_chunks in [4usize, 32, 128] {
+        let ds = DatasetOptions::new().cache_chunks(cache_chunks).open(&path).unwrap();
+        let mut reader = ds.block_reader("q0", &wav).unwrap();
+        let bs = reader.file.bs as usize;
+        let nblocks = reader.file.nblocks;
+        let mut blk = vec![0f32; bs * bs * bs];
+        let mut rng = Pcg32::new(7);
+        let t = std::time::Instant::now();
+        for _ in 0..reads {
+            let id = rng.below(nblocks);
+            reader.read_block(id, &mut blk).unwrap();
+        }
+        let secs = t.elapsed().as_secs_f64();
+        println!(
+            "  cache_chunks={cache_chunks}: {reads} random block reads in {:.1} ms ({} hits / {} misses)",
+            secs * 1e3,
+            reader.cache_hits,
+            reader.cache_misses
+        );
+        sweep.push(Json::Obj(vec![
+            ("cache_chunks".into(), Json::Int(cache_chunks as i64)),
+            ("reads".into(), Json::Int(reads as i64)),
+            ("secs".into(), Json::Num(secs)),
+            ("hits".into(), Json::Int(reader.cache_hits as i64)),
+            ("misses".into(), Json::Int(reader.cache_misses as i64)),
+        ]));
+    }
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("dataset_scaling".into())),
+        ("field".into(), Json::Str(format!("smooth/{n}^3 x{NQ}"))),
+        ("raw_bytes".into(), Json::Int(raw_bytes as i64)),
+        ("archive_bytes".into(), Json::Int(archive_bytes as i64)),
+        ("hw_threads".into(), Json::Int(hw as i64)),
+        ("resident_after_one_quantity".into(), Json::Int(resident_one as i64)),
+        ("serial_baseline_mbps".into(), Json::Num(raw_bytes as f64 / 1e6 / sb.mean)),
+        ("rows".into(), Json::Arr(rows)),
+        ("cache_sweep".into(), Json::Arr(sweep)),
+    ]);
+    write_json("BENCH_dataset.json", &doc).expect("write BENCH_dataset.json");
+    println!("wrote BENCH_dataset.json");
+}

@@ -8,8 +8,8 @@ use crate::core::Field3;
 use crate::io::{h5lite, parallel};
 use crate::metrics::psnr;
 use crate::pipeline::{
-    compress_field, decompress_field_mt, CompressParams, CompressStats, Dataset, Engine,
-    PipelineConfig, WaveletEngine,
+    compress_field, decompress_field_mt, CompressParams, CompressStats, Dataset, DatasetOptions,
+    Engine, PipelineConfig, WaveletEngine,
 };
 use crate::util::error::{Context, Result};
 use std::path::Path;
@@ -81,7 +81,47 @@ pub fn psnr_file(
 /// comma-separated `only` subset) into one `.czs` archive on a single
 /// [`Engine`] session — the multi-QoI shape of the paper's CFD workflow.
 /// Returns (name, stats) per quantity in archive order.
+///
+/// The archive is built at a sibling temp path and renamed into place
+/// only on success: a mid-archive failure must never leave a
+/// trailer-less partial `.czs` at the output path, and a failing re-run
+/// must not clobber an existing good archive.
 pub fn compress_dataset_file(
+    input: &Path,
+    only: Option<&str>,
+    output: &Path,
+    params: &CompressParams,
+    engine: &Engine,
+) -> Result<Vec<(String, CompressStats)>> {
+    // unique per process AND per call: two concurrent compressions to
+    // the same output must not interleave writes into one temp file
+    static TMP_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let mut tmp_name = output
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("archive.czs"));
+    tmp_name.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    let tmp_path = output.with_file_name(tmp_name);
+    match compress_dataset_to(input, only, &tmp_path, params, engine) {
+        Ok(stats) => match std::fs::rename(&tmp_path, output) {
+            Ok(()) => Ok(stats),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp_path);
+                Err(anyhow!("moving {} into place: {e}", output.display()))
+            }
+        },
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp_path);
+            Err(e)
+        }
+    }
+}
+
+fn compress_dataset_to(
     input: &Path,
     only: Option<&str>,
     output: &Path,
@@ -131,18 +171,24 @@ pub fn compress_dataset_file(
 
 /// Ex-situ: decompress every quantity of a `.czs` archive back into one
 /// h5lite container. Returns the quantity names.
+///
+/// The archive opens lazily (`opts` carries the open-time knobs) and
+/// all quantities decode concurrently on the session pool via
+/// [`Engine::decompress_dataset`]: quantity *i+1*'s section I/O and
+/// stage-2 inflate overlap quantity *i*'s block decode.
 pub fn decompress_dataset_file(
     input: &Path,
     output: &Path,
     engine: &Engine,
+    opts: &DatasetOptions,
 ) -> Result<Vec<String>> {
-    let archive = Dataset::open(input).map_err(|e| anyhow!(e))?;
-    let mut datasets = Vec::new();
-    for entry in archive.entries() {
-        let (field, _file) = archive.read_quantity(&entry.name, engine).map_err(|e| anyhow!(e))?;
+    let archive = opts.open(input).map_err(|e| anyhow!(e))?;
+    let decoded = engine.decompress_dataset(&archive, None).map_err(|e| anyhow!(e))?;
+    let mut datasets = Vec::with_capacity(decoded.len());
+    for (name, field, _file) in &decoded {
         // name by the archive entry, not the inner .czb header: sections
         // repackaged under a new name must keep that name on the way out
-        datasets.push(h5lite::Dataset::from_field(&entry.name, &field));
+        datasets.push(h5lite::Dataset::from_field(name, field));
     }
     h5lite::write(output, &datasets)?;
     Ok(datasets.into_iter().map(|d| d.name).collect())
@@ -257,12 +303,52 @@ mod tests {
         let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, vec!["p", "rho"]);
         let out = tmp("step_out.h5l");
-        let back = decompress_dataset_file(&czs, &out, &engine).unwrap();
+        let back = decompress_dataset_file(&czs, &out, &engine, &DatasetOptions::new()).unwrap();
         assert_eq!(back, vec!["p".to_string(), "rho".to_string()]);
         let p = h5lite::read(&out, "p").unwrap();
         assert_eq!(p.data.len(), 32 * 32 * 32);
-        // unknown subset errors instead of writing an empty archive
+        // unknown subset errors instead of writing an empty archive —
+        // and must not clobber the good archive already at the path
         assert!(compress_dataset_file(&h5, Some("nope"), &czs, &params, &engine).is_err());
+        assert_eq!(Dataset::open(&czs).unwrap().names(), vec!["p", "rho"]);
+    }
+
+    #[test]
+    fn failed_dataset_compression_leaves_no_partial_archive() {
+        let sim = CloudSim::new(CloudConfig::paper(32));
+        let h5 = tmp("atomic.h5l");
+        h5lite::write(
+            &h5,
+            &[h5lite::Dataset::from_field("p", &sim.field(Qoi::Pressure, step_to_time(5000)))],
+        )
+        .unwrap();
+        let czs = tmp("atomic.czs");
+        let _ = std::fs::remove_file(&czs);
+        // any leftover "atomic.czs.<pid>.<n>.tmp" sibling is a cleanup bug
+        let stray_tmps = || {
+            std::fs::read_dir(czs.parent().unwrap())
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().starts_with("atomic.czs."))
+                .count()
+        };
+        let engine = Engine::builder().threads(2).build();
+        let params = CompressParams::paper_default(1e-3);
+        // "p" compresses fine, then the missing quantity fails the run
+        // AFTER a section was already written — no partial .czs (and no
+        // stray temp file) may remain at the output path
+        assert!(compress_dataset_file(&h5, Some("p,ghost"), &czs, &params, &engine).is_err());
+        assert!(!czs.exists(), "failed compression must not leave a partial archive");
+        assert_eq!(stray_tmps(), 0, "temp file must be cleaned up on failure");
+        // a successful run lands atomically and opens lazily
+        compress_dataset_file(&h5, None, &czs, &params, &engine).unwrap();
+        assert_eq!(stray_tmps(), 0, "temp file must be renamed away on success");
+        let ds = Dataset::open(&czs).unwrap();
+        assert!(ds.is_file_backed());
+        assert_eq!(ds.names(), vec!["p"]);
+        // a later failing run leaves the existing good archive untouched
+        assert!(compress_dataset_file(&h5, Some("ghost"), &czs, &params, &engine).is_err());
+        assert_eq!(Dataset::open(&czs).unwrap().names(), vec!["p"]);
     }
 
     #[test]

@@ -9,8 +9,8 @@ use cubismz::coordinator;
 use cubismz::core::FieldStats;
 use cubismz::io::h5lite;
 use cubismz::pipeline::{
-    CoeffCodec, CompressParams, CzbFile, Dataset, Engine, NativeEngine, PipelineConfig,
-    ShuffleMode, Stage1, WaveletEngine,
+    CoeffCodec, CompressParams, CzbFile, DatasetOptions, Engine, NativeEngine, PipelineConfig,
+    ShuffleMode, Stage1, WaveletEngine, DEFAULT_DATASET_CACHE_CHUNKS,
 };
 use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
 use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
@@ -246,13 +246,21 @@ fn cmd_compress_dataset(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--cache-chunks` flag: decoded chunks the archive-wide shared cache
+/// holds (the `DATASET_CACHE_CHUNKS` knob, exposed for sweeps).
+fn dataset_options_of(args: &Args) -> Result<DatasetOptions> {
+    Ok(DatasetOptions::new()
+        .cache_chunks(args.num("cache-chunks", DEFAULT_DATASET_CACHE_CHUNKS)?))
+}
+
 fn cmd_decompress_dataset(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     let out = PathBuf::from(args.req("out")?);
     let cfg = config_of(args)?;
     let engine = session_of(args, &cfg)?;
+    let opts = dataset_options_of(args)?;
     let t = std::time::Instant::now();
-    let names = coordinator::decompress_dataset_file(&input, &out, &engine)?;
+    let names = coordinator::decompress_dataset_file(&input, &out, &engine, &opts)?;
     println!(
         "{} -> {} ({} quantities: {}) ({:.3}s, {} threads)",
         input.display(),
@@ -277,9 +285,19 @@ fn cmd_recompress(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
-    let bytes = std::fs::read(&input)?;
-    if bytes.len() >= 4 && &bytes[..4] == cubismz::pipeline::dataset::CZS_MAGIC {
-        let ds = Dataset::from_bytes(bytes).map_err(|e| anyhow!(e))?;
+    // sniff the magic without pulling the file in: .czs archives open
+    // lazily (trailer + header-prefix reads only), .czb files still
+    // load fully below
+    let is_czs = {
+        use std::io::Read;
+        let mut head = [0u8; 4];
+        std::fs::File::open(&input)?
+            .read_exact(&mut head)
+            .map(|_| &head == cubismz::pipeline::dataset::CZS_MAGIC)
+            .unwrap_or(false)
+    };
+    if is_czs {
+        let ds = dataset_options_of(args)?.open(&input).map_err(|e| anyhow!(e))?;
         println!("file        : {} (czs dataset archive)", input.display());
         println!("quantities  : {}", ds.entries().len());
         let mut raw_total = 0u64;
@@ -304,8 +322,14 @@ fn cmd_info(args: &Args) -> Result<()> {
             comp_total += e.len;
         }
         println!("total CR    : {:.2}", raw_total as f64 / comp_total.max(1) as f64);
+        println!(
+            "resident    : {} of {} archive bytes loaded (lazy section reads)",
+            ds.resident_bytes(),
+            ds.archive_bytes()
+        );
         return Ok(());
     }
+    let bytes = std::fs::read(&input)?;
     let (f, hdr) = CzbFile::parse_header(&bytes).map_err(|e| anyhow!(e))?;
     println!("file        : {}", input.display());
     println!("dataset     : {}", f.name);
@@ -365,10 +389,13 @@ USAGE: czb <command> [flags]
   decompress  --in f.czb --out f.h5l [--engine native|pjrt] [--threads N (0 = all cores)]
   recompress  --in f.czb --out g.czb [same flags as compress]
   compress-dataset    --in f.h5l --out f.czs [--qoi p,rho] [same scheme flags as compress]
-                      (all quantities through one Engine session into one .czs archive)
+                      (all quantities through one Engine session into one .czs archive,
+                       written via a temp file so failures leave no partial archive)
   decompress-dataset  --in f.czs --out f.h5l [--threads N] [--engine native|pjrt]
+                      [--cache-chunks N (shared decoded-chunk cache size, default 32)]
+                      (lazy section reads; quantities decode concurrently on one pool)
   codecs      (list the registered stage-2 codecs, ids, efforts and aliases)
-  info        --in f.czb | f.czs
+  info        --in f.czb | f.czs  [--cache-chunks N]  (czs archives open lazily)
   psnr        --ref f.h5l --dataset NAME --in f.czb"
     );
     std::process::exit(2);

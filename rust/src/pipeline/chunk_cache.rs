@@ -99,6 +99,12 @@ impl ChunkCache {
         self.shards.len()
     }
 
+    /// Total decoded chunks the cache can hold (shards × per-shard
+    /// budget; at least the `capacity` it was built with).
+    pub fn capacity(&self) -> usize {
+        self.per_shard * self.shards.len()
+    }
+
     /// Total decoded chunks resident right now (sums shard sizes; racy
     /// by nature, intended for stats and tests).
     pub fn len(&self) -> usize {
@@ -187,6 +193,16 @@ mod tests {
             block_offsets: vec![(0, nbytes)],
             first_block,
         })
+    }
+
+    #[test]
+    fn capacity_covers_the_requested_budget() {
+        for cap in [1usize, 3, 8, 32, 100] {
+            let cache = ChunkCache::new(cap);
+            assert!(cache.capacity() >= cap, "cap {cap} -> {}", cache.capacity());
+            // the shard rounding never more than doubles the budget
+            assert!(cache.capacity() <= cap.max(MIN_PER_SHARD) * 2, "cap {cap}");
+        }
     }
 
     #[test]

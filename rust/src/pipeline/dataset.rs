@@ -5,30 +5,53 @@
 //! Layout (see the format overview in [`super::format`]): an 8-byte
 //! header, each quantity as a complete `.czb` section, and a trailer
 //! index written last — so a [`DatasetWriter`] streams to any
-//! `io::Write` without seeking, and [`Dataset::open`] finds every
-//! section from the fixed-size trailer tail. Sections are independent
-//! `.czb` streams: whole-quantity decode and random block access
-//! ([`Dataset::block_reader`]) never touch the other quantities.
+//! `io::Write` without seeking, and a reader can map an archive of any
+//! size from three small reads (header, fixed-size trailer tail, entry
+//! table).
 //!
-//! Random access shares one sharded [`ChunkCache`] across every reader
-//! the archive hands out: each quantity gets a [`StreamId`] at parse
-//! time, so two readers over the same quantity reuse each other's
-//! decoded chunks while readers over different quantities never collide
-//! — and none of them serialize on a single cache lock.
+//! # Streaming opens
+//!
+//! Section bytes come from a [`SectionSource`]: either an in-memory
+//! buffer ([`Dataset::from_bytes`], everything resident up front) or a
+//! file handle with lazy positioned reads ([`Dataset::open`]). A lazy
+//! open parses only the trailer; each section's bytes are fetched the
+//! first time a decode touches that quantity and stay cached on the
+//! handle, so the archive-resident footprint is bounded by the sections
+//! actually used ([`Dataset::resident_bytes`]) — post-hoc analysis that
+//! reads one field of a many-GB step archive never pulls the rest in.
+//! [`Dataset::quantity_header`] reads only a section *prefix* on
+//! file-backed archives, so `czb info`-style inspection stays cheap too.
+//! Open-time knobs (the shared cache size) live on [`DatasetOptions`].
+//!
+//! # Shared chunk cache and concurrent decode
+//!
+//! Every reader the archive hands out — random-access
+//! [`Dataset::block_reader`] handles *and* whole-quantity decodes via
+//! [`Dataset::read_quantity`] / `Engine::decompress_dataset` — shares
+//! one sharded [`ChunkCache`]: each quantity gets a [`StreamId`] at
+//! parse time, so readers over the same quantity reuse each other's
+//! decoded chunks while different quantities never collide, and none of
+//! them serialize on a single cache lock. Cross-quantity parallel decode
+//! (all requested quantities scheduled onto one worker pool, section
+//! I/O overlapping sibling block decode) is
+//! `Engine::decompress_dataset`; see [`super::engine`].
 use super::chunk_cache::{ChunkCache, StreamId};
 use super::compressor::{CompressStats, WaveletEngine};
 use super::decompressor::BlockReader;
 use super::engine::{CompressParams, Engine};
-use super::format::CzbFile;
+use super::format::{CzbFile, ERR_TRUNCATED_HEADER};
 use crate::core::Field3;
 use std::io::Write;
-use std::path::Path;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+#[cfg(not(unix))]
+use std::sync::Mutex;
+use std::sync::{Arc, OnceLock};
 
 /// Decoded chunks the archive-wide shared cache holds across all
-/// quantities (a visualization session touches a few hot chunks per
-/// quantity at a time).
-const DATASET_CACHE_CHUNKS: usize = 32;
+/// quantities by default (a visualization session touches a few hot
+/// chunks per quantity at a time). Override per archive with
+/// [`DatasetOptions::cache_chunks`] or the CLI `--cache-chunks` flag.
+pub const DEFAULT_DATASET_CACHE_CHUNKS: usize = 32;
 
 /// Archive magic ("CubismZ Step").
 pub const CZS_MAGIC: &[u8; 4] = b"CZS1";
@@ -49,7 +72,9 @@ pub struct QuantityEntry {
 
 /// Streaming `.czs` writer: sections go out as they are compressed, the
 /// index goes out on [`DatasetWriter::finish`]. Dropping a writer
-/// without `finish` leaves a trailer-less (unreadable) archive.
+/// without `finish` leaves a trailer-less (unreadable) archive — the
+/// coordinator's file entry point builds archives at a temp path and
+/// renames on success for exactly that reason.
 pub struct DatasetWriter<W: Write> {
     sink: W,
     pos: u64,
@@ -97,9 +122,18 @@ impl<W: Write> DatasetWriter<W> {
     }
 
     /// Append an already-serialized `.czb` stream as the quantity `name`
-    /// (e.g. repackaging existing single-quantity files).
+    /// (e.g. repackaging existing single-quantity files). The bytes must
+    /// start with a parseable `.czb` header — a section that would only
+    /// fail at read time, possibly on a far-away machine, is rejected
+    /// here instead.
     pub fn write_section(&mut self, name: &str, czb: &[u8]) -> std::io::Result<()> {
         self.check_name(name)?;
+        if let Err(e) = CzbFile::parse_header(czb) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("section {name} is not a valid .czb stream: {e}"),
+            ));
+        }
         let offset = self.pos;
         self.sink.write_all(czb)?;
         self.push_entry(name, offset, czb.len() as u64);
@@ -168,12 +202,227 @@ impl<W: Write> Write for CountingWriter<'_, W> {
     }
 }
 
-/// A parsed, fully-loaded `.czs` archive with random access to
-/// quantities and blocks.
+/// File-backed lazy section reads: positioned reads off one shared
+/// handle, so concurrent readers never serialize on a seek cursor.
+pub struct FileSource {
+    file: std::fs::File,
+    len: u64,
+    path: PathBuf,
+    /// Non-unix fallback: without `pread`, positioned reads share a
+    /// seek cursor and need a lock.
+    #[cfg(not(unix))]
+    lock: Mutex<()>,
+}
+
+impl FileSource {
+    fn new(file: std::fs::File, len: u64, path: PathBuf) -> Self {
+        Self {
+            file,
+            len,
+            path,
+            #[cfg(not(unix))]
+            lock: Mutex::new(()),
+        }
+    }
+
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _g = self.lock.lock().unwrap();
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(buf)
+        }
+    }
+}
+
+/// Where a [`Dataset`]'s bytes come from: a fully resident in-memory
+/// buffer, or a file handle that reads each section on first touch.
+pub enum SectionSource {
+    /// The whole archive is resident (what [`Dataset::from_bytes`] uses).
+    Memory(Vec<u8>),
+    /// Sections load lazily with positioned reads (what
+    /// [`Dataset::open`] uses).
+    File(FileSource),
+}
+
+impl SectionSource {
+    /// Total archive length in bytes.
+    pub fn len(&self) -> u64 {
+        match self {
+            SectionSource::Memory(b) => b.len() as u64,
+            SectionSource::File(f) => f.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read an exact byte range into a fresh buffer (trailer parsing and
+    /// header-prefix reads; section loads go through [`Dataset`]'s
+    /// per-section cache instead).
+    fn read_range(&self, offset: u64, len: usize) -> Result<Vec<u8>, String> {
+        match self {
+            SectionSource::Memory(bytes) => {
+                let lo = offset as usize;
+                bytes
+                    .get(lo..lo + len)
+                    .map(|s| s.to_vec())
+                    .ok_or_else(|| "czs read past end of buffer".to_string())
+            }
+            SectionSource::File(f) => {
+                let mut buf = vec![0u8; len];
+                f.read_exact_at(&mut buf, offset).map_err(|e| {
+                    format!("reading {len} bytes at {offset} from {}: {e}", f.path.display())
+                })?;
+                Ok(buf)
+            }
+        }
+    }
+}
+
+fn check_archive_header(head: &[u8]) -> Result<(), String> {
+    if &head[..4] != CZS_MAGIC {
+        return Err("bad czs magic".into());
+    }
+    if head[4] != 1 {
+        return Err(format!("bad czs version {}", head[4]));
+    }
+    Ok(())
+}
+
+fn parse_trailer_tail(tail: &[u8]) -> Result<(usize, usize), String> {
+    debug_assert_eq!(tail.len(), TRAILER_TAIL);
+    if &tail[8..] != CZS_TRAILER_MAGIC {
+        return Err("missing czs trailer (archive not finished?)".into());
+    }
+    let count = u32::from_le_bytes(tail[0..4].try_into().unwrap()) as usize;
+    let table_bytes = u32::from_le_bytes(tail[4..8].try_into().unwrap()) as usize;
+    Ok((count, table_bytes))
+}
+
+/// Walk the trailer's entry table. Strict by design: names must be valid
+/// UTF-8 (a lossy decode could alias two corrupt names to the same
+/// replacement string and silently resolve `section(name)` to the wrong
+/// quantity) and unique, and every section must lie between the header
+/// and the table.
+fn parse_entry_table(
+    table: &[u8],
+    count: usize,
+    table_start: u64,
+) -> Result<Vec<QuantityEntry>, String> {
+    // every entry serializes to >= 17 bytes (name_len + u64 offset +
+    // u64 len), so a count the table cannot hold is corrupt — reject
+    // it before sizing any allocation by it
+    if count > table.len() / 17 {
+        return Err(format!(
+            "czs entry count {count} impossible for a {}-byte table",
+            table.len()
+        ));
+    }
+    let mut entries: Vec<QuantityEntry> = Vec::with_capacity(count);
+    let mut seen: std::collections::HashSet<&str> =
+        std::collections::HashSet::with_capacity(count);
+    let mut pos = 0usize;
+    for i in 0..count {
+        if table.len() < pos + 1 {
+            return Err("truncated czs table entry".into());
+        }
+        let nl = table[pos] as usize;
+        pos += 1;
+        if table.len() < pos + nl + 16 {
+            return Err("truncated czs table entry".into());
+        }
+        let name = std::str::from_utf8(&table[pos..pos + nl])
+            .map_err(|_| format!("czs entry {i} name is not valid UTF-8"))?;
+        pos += nl;
+        let offset = u64::from_le_bytes(table[pos..pos + 8].try_into().unwrap());
+        let len = u64::from_le_bytes(table[pos + 8..pos + 16].try_into().unwrap());
+        pos += 16;
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| "czs section overflow".to_string())?;
+        if offset < HEADER_LEN as u64 || end > table_start {
+            return Err(format!("czs section {name} out of bounds"));
+        }
+        if !seen.insert(name) {
+            return Err(format!("duplicate czs quantity name {name}"));
+        }
+        entries.push(QuantityEntry { name: name.to_string(), offset, len });
+    }
+    if pos != table.len() {
+        return Err("czs trailer table has trailing garbage".into());
+    }
+    Ok(entries)
+}
+
+/// Open-time knobs for a [`Dataset`]:
+/// `DatasetOptions::new().cache_chunks(64).open(path)`.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetOptions {
+    cache_chunks: usize,
+}
+
+impl DatasetOptions {
+    pub fn new() -> Self {
+        Self { cache_chunks: DEFAULT_DATASET_CACHE_CHUNKS }
+    }
+
+    /// Decoded chunks the archive-wide shared [`ChunkCache`] holds
+    /// across all quantities (default
+    /// [`DEFAULT_DATASET_CACHE_CHUNKS`]).
+    pub fn cache_chunks(mut self, n: usize) -> Self {
+        self.cache_chunks = n.max(1);
+        self
+    }
+
+    /// Lazily open an archive: only the trailer is read here; section
+    /// bytes load on first touch.
+    pub fn open(&self, path: &Path) -> Result<Dataset, String> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| format!("opening {}: {e}", path.display()))?;
+        let len = file
+            .metadata()
+            .map_err(|e| format!("stat {}: {e}", path.display()))?
+            .len();
+        Dataset::from_source(
+            SectionSource::File(FileSource::new(file, len, path.to_path_buf())),
+            self.cache_chunks,
+        )
+    }
+
+    /// Parse an in-memory archive (everything resident up front).
+    pub fn from_bytes(&self, bytes: Vec<u8>) -> Result<Dataset, String> {
+        Dataset::from_source(SectionSource::Memory(bytes), self.cache_chunks)
+    }
+}
+
+impl Default for DatasetOptions {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A parsed `.czs` archive with random access to quantities and blocks.
+/// File-backed handles ([`Dataset::open`]) load section bytes lazily;
+/// in-memory handles ([`Dataset::from_bytes`]) slice their buffer.
 pub struct Dataset {
-    bytes: Vec<u8>,
+    source: SectionSource,
     entries: Vec<QuantityEntry>,
-    /// Shared across every [`BlockReader`] this archive hands out.
+    /// Lazily loaded section bytes, one slot per entry (file-backed
+    /// sources only; in-memory archives slice the backing buffer). A
+    /// load error is cached like a payload so a truncated section fails
+    /// consistently instead of re-reading.
+    sections: Vec<OnceLock<Result<Vec<u8>, String>>>,
+    /// Shared across every [`BlockReader`] and whole-quantity decode
+    /// this archive hands out.
     cache: Arc<ChunkCache>,
     /// One stream identity per quantity, same order as `entries`.
     streams: Vec<StreamId>,
@@ -186,75 +435,40 @@ impl Dataset {
         DatasetWriter::new(std::io::BufWriter::new(std::fs::File::create(path)?))
     }
 
-    /// Open an archive from disk.
+    /// Lazily open an archive from disk with default options: seeks the
+    /// fixed-size trailer tail, parses the index, and defers every
+    /// section read until a decode touches that quantity.
     pub fn open(path: &Path) -> Result<Self, String> {
-        let bytes = std::fs::read(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
-        Self::from_bytes(bytes)
+        DatasetOptions::new().open(path)
     }
 
     /// Parse an in-memory archive.
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self, String> {
-        if bytes.len() < HEADER_LEN + TRAILER_TAIL {
+        DatasetOptions::new().from_bytes(bytes)
+    }
+
+    fn from_source(source: SectionSource, cache_chunks: usize) -> Result<Self, String> {
+        let total = source.len();
+        if total < (HEADER_LEN + TRAILER_TAIL) as u64 {
             return Err("czs archive too short".into());
         }
-        if &bytes[..4] != CZS_MAGIC {
-            return Err("bad czs magic".into());
-        }
-        if bytes[4] != 1 {
-            return Err(format!("bad czs version {}", bytes[4]));
-        }
-        let tail = bytes.len() - TRAILER_TAIL;
-        if &bytes[tail + 8..] != CZS_TRAILER_MAGIC {
-            return Err("missing czs trailer (archive not finished?)".into());
-        }
-        let count = u32::from_le_bytes(bytes[tail..tail + 4].try_into().unwrap()) as usize;
-        let table_bytes = u32::from_le_bytes(bytes[tail + 4..tail + 8].try_into().unwrap()) as usize;
-        let table_start = tail
-            .checked_sub(table_bytes)
+        let head = source.read_range(0, HEADER_LEN)?;
+        check_archive_header(&head)?;
+        let tail_pos = total - TRAILER_TAIL as u64;
+        let tail = source.read_range(tail_pos, TRAILER_TAIL)?;
+        let (count, table_bytes) = parse_trailer_tail(&tail)?;
+        let table_start = tail_pos
+            .checked_sub(table_bytes as u64)
             .ok_or_else(|| "czs trailer table larger than archive".to_string())?;
-        if table_start < HEADER_LEN {
+        if table_start < HEADER_LEN as u64 {
             return Err("czs trailer table overlaps header".into());
         }
-        let table = &bytes[table_start..tail];
-        // every entry serializes to >= 17 bytes (name_len + u64 offset +
-        // u64 len), so a count the table cannot hold is corrupt — reject
-        // it before sizing any allocation by it
-        if count > table.len() / 17 {
-            return Err(format!(
-                "czs entry count {count} impossible for a {}-byte table",
-                table.len()
-            ));
-        }
-        let mut entries = Vec::with_capacity(count);
-        let mut pos = 0usize;
-        for _ in 0..count {
-            if table.len() < pos + 1 {
-                return Err("truncated czs table entry".into());
-            }
-            let nl = table[pos] as usize;
-            pos += 1;
-            if table.len() < pos + nl + 16 {
-                return Err("truncated czs table entry".into());
-            }
-            let name = String::from_utf8_lossy(&table[pos..pos + nl]).into_owned();
-            pos += nl;
-            let offset = u64::from_le_bytes(table[pos..pos + 8].try_into().unwrap());
-            let len = u64::from_le_bytes(table[pos + 8..pos + 16].try_into().unwrap());
-            pos += 16;
-            let end = offset
-                .checked_add(len)
-                .ok_or_else(|| "czs section overflow".to_string())?;
-            if (offset as usize) < HEADER_LEN || end as usize > table_start {
-                return Err(format!("czs section {name} out of bounds"));
-            }
-            entries.push(QuantityEntry { name, offset, len });
-        }
-        if pos != table.len() {
-            return Err("czs trailer table has trailing garbage".into());
-        }
-        let cache = Arc::new(ChunkCache::new(DATASET_CACHE_CHUNKS));
+        let table = source.read_range(table_start, table_bytes)?;
+        let entries = parse_entry_table(&table, count, table_start)?;
+        let cache = Arc::new(ChunkCache::new(cache_chunks));
         let streams = entries.iter().map(|_| cache.register_stream()).collect();
-        Ok(Self { bytes, entries, cache, streams })
+        let sections = entries.iter().map(|_| OnceLock::new()).collect();
+        Ok(Self { source, entries, sections, cache, streams })
     }
 
     /// Quantities in archive order.
@@ -267,30 +481,137 @@ impl Dataset {
         self.entries.iter().map(|e| e.name.as_str()).collect()
     }
 
-    /// The raw `.czb` section bytes of the entry at `idx` (single home of
-    /// the offset arithmetic).
-    fn section_at(&self, idx: usize) -> &[u8] {
-        let e = &self.entries[idx];
-        &self.bytes[e.offset as usize..(e.offset + e.len) as usize]
+    /// True when sections load lazily from a file handle rather than an
+    /// in-memory buffer.
+    pub fn is_file_backed(&self) -> bool {
+        matches!(self.source, SectionSource::File(_))
     }
 
-    /// The raw `.czb` section of a quantity.
-    pub fn section(&self, name: &str) -> Option<&[u8]> {
-        let idx = self.entries.iter().position(|e| e.name == name)?;
-        Some(self.section_at(idx))
+    /// Total serialized archive size in bytes.
+    pub fn archive_bytes(&self) -> u64 {
+        self.source.len()
+    }
+
+    /// Archive bytes currently resident in memory: the whole buffer for
+    /// in-memory handles, the sum of lazily loaded sections for
+    /// file-backed ones — the gauge that a streaming open only pays for
+    /// the sections actually touched.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.source {
+            SectionSource::Memory(b) => b.len(),
+            SectionSource::File(_) => self
+                .sections
+                .iter()
+                .filter_map(|s| s.get())
+                .map(|r| r.as_ref().map(|b| b.len()).unwrap_or(0))
+                .sum(),
+        }
+    }
+
+    pub(crate) fn index_of(&self, name: &str) -> Result<usize, String> {
+        self.entries
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| format!("quantity {name} not found"))
+    }
+
+    pub(crate) fn stream_of(&self, idx: usize) -> StreamId {
+        self.streams[idx]
+    }
+
+    /// Section bytes already resident, without triggering a load.
+    fn resident_section(&self, idx: usize) -> Option<&[u8]> {
+        match &self.source {
+            SectionSource::Memory(bytes) => {
+                let e = &self.entries[idx];
+                Some(&bytes[e.offset as usize..(e.offset + e.len) as usize])
+            }
+            SectionSource::File(_) => match self.sections[idx].get() {
+                Some(Ok(b)) => Some(b.as_slice()),
+                _ => None,
+            },
+        }
+    }
+
+    /// The raw `.czb` section bytes of the entry at `idx`, loading them
+    /// on first touch for file-backed sources (single home of the
+    /// offset arithmetic).
+    pub(crate) fn section_at(&self, idx: usize) -> Result<&[u8], String> {
+        let e = &self.entries[idx];
+        match &self.source {
+            SectionSource::Memory(bytes) => {
+                // bounds proven at parse time: offset >= header, end <= table
+                Ok(&bytes[e.offset as usize..(e.offset + e.len) as usize])
+            }
+            SectionSource::File(f) => {
+                let slot = self.sections[idx].get_or_init(|| {
+                    let mut buf = vec![0u8; e.len as usize];
+                    f.read_exact_at(&mut buf, e.offset).map_err(|err| {
+                        format!(
+                            "reading section {} ({} bytes at {}) from {}: {err}",
+                            e.name,
+                            e.len,
+                            e.offset,
+                            f.path.display()
+                        )
+                    })?;
+                    Ok(buf)
+                });
+                match slot {
+                    Ok(b) => Ok(b.as_slice()),
+                    Err(err) => Err(err.clone()),
+                }
+            }
+        }
+    }
+
+    /// The raw `.czb` section of a quantity, loading it on first touch
+    /// for file-backed archives.
+    pub fn section(&self, name: &str) -> Result<&[u8], String> {
+        self.section_at(self.index_of(name)?)
     }
 
     /// Parse a quantity's `.czb` header without decompressing anything.
+    /// On a file-backed archive whose section is not yet resident this
+    /// reads only a growing header *prefix* (headers are a few KiB even
+    /// with large chunk tables), so `info`-style inspection of a huge
+    /// archive never pulls payloads in.
     pub fn quantity_header(&self, name: &str) -> Result<CzbFile, String> {
-        let section = self.section(name).ok_or_else(|| format!("quantity {name} not found"))?;
-        Ok(CzbFile::parse_header(section)?.0)
+        let idx = self.index_of(name)?;
+        if let Some(section) = self.resident_section(idx) {
+            return Ok(CzbFile::parse_header(section)?.0);
+        }
+        let e = &self.entries[idx];
+        let len = e.len as usize;
+        let mut want = 4096.min(len);
+        loop {
+            let buf = self.source.read_range(e.offset, want)?;
+            match CzbFile::parse_header(&buf) {
+                Ok((file, _)) => return Ok(file),
+                Err(err) => {
+                    // only a too-short prefix earns a bigger read; any
+                    // other parse error is genuine corruption and must
+                    // not escalate to reading the whole section
+                    if want == len || err != ERR_TRUNCATED_HEADER {
+                        return Err(err);
+                    }
+                    want = (want * 4).min(len);
+                }
+            }
+        }
     }
 
-    /// Decompress one whole quantity on `engine`'s session pool; the
-    /// other sections are never touched.
+    /// Decompress one whole quantity on `engine`'s session pool. When
+    /// the section has at least as many chunks as the session has
+    /// workers, the decode goes through the archive-wide shared
+    /// [`ChunkCache`]: chunks a [`Dataset::block_reader`] already
+    /// inflated are reused and the full decode leaves its chunks behind
+    /// for later random access. A *starved* section (fewer chunks than
+    /// workers) takes the cache-free intra-chunk wide path instead —
+    /// thread scaling beats cache reuse there. Other sections are never
+    /// touched (or, on file-backed archives, even read).
     pub fn read_quantity(&self, name: &str, engine: &Engine) -> Result<(Field3, CzbFile), String> {
-        let section = self.section(name).ok_or_else(|| format!("quantity {name} not found"))?;
-        engine.decompress_bytes(section)
+        engine.decompress_section(self, self.index_of(name)?)
     }
 
     /// Random block access into one quantity via a chunk-cached
@@ -304,17 +625,13 @@ impl Dataset {
         name: &str,
         wavelet_engine: &'a dyn WaveletEngine,
     ) -> Result<BlockReader<'a>, String> {
-        let idx = self
-            .entries
-            .iter()
-            .position(|e| e.name == name)
-            .ok_or_else(|| format!("quantity {name} not found"))?;
-        Ok(BlockReader::new(self.section_at(idx), wavelet_engine)?
+        let idx = self.index_of(name)?;
+        Ok(BlockReader::new(self.section_at(idx)?, wavelet_engine)?
             .with_shared_cache(self.cache.clone(), self.streams[idx]))
     }
 
-    /// The archive-wide chunk cache shared by all
-    /// [`Dataset::block_reader`] handles.
+    /// The archive-wide chunk cache shared by all readers and
+    /// whole-quantity decodes.
     pub fn chunk_cache(&self) -> &Arc<ChunkCache> {
         &self.cache
     }
@@ -328,6 +645,16 @@ mod tests {
     fn smooth_field(n: usize, seed: u64) -> Field3 {
         let mut rng = Pcg32::new(seed);
         Field3::from_vec(n, n, n, crate::util::prop::gen_smooth_field(&mut rng, n))
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("cubismz_dataset_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]
@@ -345,6 +672,7 @@ mod tests {
         let bytes = w.finish().unwrap();
         let ds = Dataset::from_bytes(bytes).unwrap();
         assert_eq!(ds.names(), vec!["q0", "q1", "q2"]);
+        assert!(!ds.is_file_backed());
         for (name, f) in &fields {
             // section bytes must be exactly the engine's .czb stream
             let (direct, _) = engine.compress_vec(f, name, &params);
@@ -352,13 +680,9 @@ mod tests {
             let (back, file) = ds.read_quantity(name, &engine).unwrap();
             assert_eq!(&file.name, name);
             let (expected, _) = engine.decompress_bytes(&direct).unwrap();
-            assert!(back
-                .data
-                .iter()
-                .zip(&expected.data)
-                .all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(bits_equal(&back.data, &expected.data));
         }
-        assert!(ds.section("nope").is_none());
+        assert!(ds.section("nope").is_err());
         assert!(ds.read_quantity("nope", &engine).is_err());
     }
 
@@ -412,6 +736,264 @@ mod tests {
     }
 
     #[test]
+    fn lazy_open_reads_only_touched_sections() {
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let path = tmp("lazy.czs");
+        let fields: Vec<(String, Field3)> =
+            (0..3u64).map(|i| (format!("q{i}"), smooth_field(32, 700 + i))).collect();
+        let mut w = Dataset::create(&path).unwrap();
+        for (name, f) in &fields {
+            w.write_quantity(&engine, f, name, &params).unwrap();
+        }
+        w.finish().unwrap();
+        let archive_len = std::fs::metadata(&path).unwrap().len() as usize;
+
+        let ds = Dataset::open(&path).unwrap();
+        assert!(ds.is_file_backed());
+        assert_eq!(ds.archive_bytes() as usize, archive_len);
+        assert_eq!(ds.names(), vec!["q0", "q1", "q2"]);
+        // opening touched nothing but the trailer
+        assert_eq!(ds.resident_bytes(), 0);
+        // header inspection reads a transient prefix, caches nothing
+        let hdr = ds.quantity_header("q1").unwrap();
+        assert_eq!(hdr.name, "q1");
+        assert_eq!(ds.resident_bytes(), 0);
+        // decoding one quantity loads exactly that section
+        let (back, _) = ds.read_quantity("q1", &engine).unwrap();
+        let q1_len = ds.entries()[1].len as usize;
+        assert_eq!(ds.resident_bytes(), q1_len);
+        assert!(ds.resident_bytes() < archive_len);
+        // and matches the eager in-memory decode bit for bit
+        let eager = Dataset::from_bytes(std::fs::read(&path).unwrap()).unwrap();
+        let (expected, _) = eager.read_quantity("q1", &engine).unwrap();
+        assert!(bits_equal(&back.data, &expected.data));
+        // a second read re-uses the resident section (no growth)
+        ds.read_quantity("q1", &engine).unwrap();
+        assert_eq!(ds.resident_bytes(), q1_len);
+    }
+
+    #[test]
+    fn lazy_decode_is_bit_identical_across_thread_counts() {
+        let writer_engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let path = tmp("lazy_threads.czs");
+        let fields: Vec<(String, Field3)> =
+            (0..4u64).map(|i| (format!("q{i}"), smooth_field(64, 900 + i))).collect();
+        let mut w = Dataset::create(&path).unwrap();
+        for (name, f) in &fields {
+            w.write_quantity(&writer_engine, f, name, &params).unwrap();
+        }
+        w.finish().unwrap();
+        // eager per-quantity reference
+        let eager = Dataset::from_bytes(std::fs::read(&path).unwrap()).unwrap();
+        let reference: Vec<Vec<f32>> = fields
+            .iter()
+            .map(|(name, _)| {
+                writer_engine.decompress_bytes(eager.section(name).unwrap()).unwrap().0.data
+            })
+            .collect();
+        for threads in [1usize, 2, 3, 8] {
+            let engine = Engine::builder().threads(threads).build();
+            let ds = Dataset::open(&path).unwrap();
+            let decoded = engine.decompress_dataset(&ds, None).unwrap();
+            assert_eq!(decoded.len(), fields.len());
+            for (i, (name, field, file)) in decoded.iter().enumerate() {
+                assert_eq!(name, &fields[i].0);
+                assert_eq!(&file.name, name);
+                assert!(
+                    bits_equal(&field.data, &reference[i]),
+                    "{name} differs at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_over_a_file_backed_source() {
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let path = tmp("concurrent.czs");
+        let fields: Vec<(String, Field3)> =
+            (0..4u64).map(|i| (format!("q{i}"), smooth_field(32, 1100 + i))).collect();
+        let mut w = Dataset::create(&path).unwrap();
+        for (name, f) in &fields {
+            w.write_quantity(&engine, f, name, &params).unwrap();
+        }
+        w.finish().unwrap();
+        let eager = Dataset::from_bytes(std::fs::read(&path).unwrap()).unwrap();
+        let reference: Vec<Vec<f32>> = fields
+            .iter()
+            .map(|(name, _)| engine.decompress_bytes(eager.section(name).unwrap()).unwrap().0.data)
+            .collect();
+        let ds = Dataset::open(&path).unwrap();
+        let wav = crate::pipeline::NativeEngine;
+        // every thread lazily loads a different section concurrently;
+        // two threads share q0 so one section also gets racing loads
+        std::thread::scope(|s| {
+            for (t, (name, f)) in fields.iter().enumerate().chain(std::iter::once((4, &fields[0])))
+            {
+                let ds = &ds;
+                let wav = &wav;
+                let expected = &reference[if t == 4 { 0 } else { t }];
+                s.spawn(move || {
+                    let mut reader = ds.block_reader(name, wav).unwrap();
+                    let bs = reader.file.bs as usize;
+                    let grid = crate::core::block::BlockGrid::new(f, bs);
+                    let mut blk = vec![0f32; bs * bs * bs];
+                    let mut exp = crate::core::block::Block::zeros(bs);
+                    let full = Field3::from_vec(f.nx, f.ny, f.nz, expected.clone());
+                    for id in 0..reader.file.nblocks {
+                        reader.read_block(id, &mut blk).unwrap();
+                        grid.extract(&full, id as usize, &mut exp);
+                        assert_eq!(blk, exp.data, "{name} block {id}");
+                    }
+                });
+            }
+        });
+        assert_eq!(ds.resident_bytes() as u64, ds.entries().iter().map(|e| e.len).sum::<u64>());
+    }
+
+    #[test]
+    fn truncated_file_backed_sections_error_not_panic() {
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let path = tmp("truncated.czs");
+        let fields: Vec<(String, Field3)> =
+            (0..2u64).map(|i| (format!("q{i}"), smooth_field(32, 1300 + i))).collect();
+        let mut w = Dataset::create(&path).unwrap();
+        for (name, f) in &fields {
+            w.write_quantity(&engine, f, name, &params).unwrap();
+        }
+        w.finish().unwrap();
+        // open first (index parses fine), then truncate into the last
+        // section: its lazy load must surface an error, the section
+        // before the cut must still decode
+        let ds = Dataset::open(&path).unwrap();
+        let cut = ds.entries()[1].offset + 4;
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(cut)
+            .unwrap();
+        let err = ds.read_quantity("q1", &engine).unwrap_err();
+        assert!(err.contains("q1"), "{err}");
+        assert!(ds.read_quantity("q0", &engine).is_ok());
+        // the load error is cached, not retried into a panic
+        assert!(ds.read_quantity("q1", &engine).is_err());
+        // header-prefix reads past the cut error too
+        assert!(ds.quantity_header("q1").is_err());
+        // re-opening the truncated file fails at the trailer
+        assert!(Dataset::open(&path).is_err());
+    }
+
+    #[test]
+    fn quantity_header_fails_fast_on_corrupt_magic() {
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let path = tmp("corrupt_header.czs");
+        let f = smooth_field(32, 37);
+        let mut w = Dataset::create(&path).unwrap();
+        w.write_quantity(&engine, &f, "p", &params).unwrap();
+        w.finish().unwrap();
+        let ds = Dataset::open(&path).unwrap();
+        // smash the section's .czb magic on disk
+        use std::io::{Seek, SeekFrom};
+        let mut fh = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        fh.seek(SeekFrom::Start(ds.entries()[0].offset)).unwrap();
+        fh.write_all(b"XXXX").unwrap();
+        drop(fh);
+        // corruption (not a short prefix) must fail fast, without
+        // escalating to a whole-section read or caching anything
+        let err = ds.quantity_header("p").unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+        assert_eq!(ds.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn trailer_tail_short_reads_error() {
+        // files shorter than header + trailer tail
+        for len in [0usize, 4, 19] {
+            let path = tmp(&format!("short_{len}.czs"));
+            std::fs::write(&path, vec![0u8; len]).unwrap();
+            assert!(Dataset::open(&path).is_err(), "len {len}");
+        }
+        // right length, garbage trailer magic
+        let path = tmp("badmagic.czs");
+        let mut bytes = DatasetWriter::new(Vec::new()).unwrap().finish().unwrap();
+        let n = bytes.len();
+        bytes[n - 1] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Dataset::open(&path).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_and_duplicate_names_are_rejected() {
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 17);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        w.write_quantity(&engine, &f, "qa", &params).unwrap();
+        w.write_quantity(&engine, &f, "qb", &params).unwrap();
+        let bytes = w.finish().unwrap();
+        // table layout: 2 entries x (1 + 2 + 16) = 38 bytes before the tail
+        let table_start = bytes.len() - TRAILER_TAIL - 38;
+        // corrupt the first name to invalid UTF-8
+        let mut bad = bytes.clone();
+        bad[table_start + 1] = 0xFF;
+        bad[table_start + 2] = 0xFE;
+        let err = Dataset::from_bytes(bad).unwrap_err();
+        assert!(err.contains("UTF-8"), "{err}");
+        // rename the second entry to alias the first
+        let mut dup = bytes.clone();
+        let second_name = table_start + 19 + 1;
+        dup[second_name..second_name + 2].copy_from_slice(b"qa");
+        let err = Dataset::from_bytes(dup).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        // the pristine bytes still parse
+        assert_eq!(Dataset::from_bytes(bytes).unwrap().names(), vec!["qa", "qb"]);
+    }
+
+    #[test]
+    fn write_section_validates_czb_streams() {
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 6);
+        let (czb, _) = engine.compress_vec(&f, "p", &params);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        // garbage is rejected up front, naming the section
+        let err = w.write_section("vel", b"not a czb stream").unwrap_err();
+        assert!(err.to_string().contains("vel"), "{err}");
+        assert!(w.entries().is_empty(), "rejected section must not be recorded");
+        // a truncated-but-magic prefix is rejected too
+        assert!(w.write_section("vel", &czb[..5]).is_err());
+        // the real stream goes in, under its repackaged name
+        w.write_section("vel", &czb).unwrap();
+        let ds = Dataset::from_bytes(w.finish().unwrap()).unwrap();
+        assert_eq!(ds.names(), vec!["vel"]);
+        let (back, file) = ds.read_quantity("vel", &engine).unwrap();
+        assert_eq!(file.name, "p"); // inner header keeps its original name
+        let (expected, _) = engine.decompress_bytes(&czb).unwrap();
+        assert!(bits_equal(&back.data, &expected.data));
+    }
+
+    #[test]
+    fn cache_chunks_knob_sizes_the_shared_cache() {
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 21);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        w.write_quantity(&engine, &f, "p", &params).unwrap();
+        let bytes = w.finish().unwrap();
+        let small = DatasetOptions::new().cache_chunks(1).from_bytes(bytes.clone()).unwrap();
+        let big = DatasetOptions::new().cache_chunks(64).from_bytes(bytes).unwrap();
+        assert!(small.chunk_cache().capacity() < big.chunk_cache().capacity());
+        assert!(small.chunk_cache().capacity() >= 1);
+        assert!(big.chunk_cache().capacity() >= 64);
+    }
+
+    #[test]
     fn writer_rejects_duplicate_and_bad_names() {
         let engine = Engine::builder().threads(1).build();
         let params = CompressParams::paper_default(1e-3);
@@ -440,5 +1022,27 @@ mod tests {
         crafted[tail..tail + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = Dataset::from_bytes(crafted).unwrap_err();
         assert!(err.contains("entry count"), "{err}");
+    }
+
+    #[test]
+    fn crafted_out_of_bounds_sections_are_rejected() {
+        // a section claiming to extend past the entry table must be
+        // rejected at parse time, for the in-memory and lazy path alike
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 31);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        w.write_quantity(&engine, &f, "p", &params).unwrap();
+        let bytes = w.finish().unwrap();
+        // entry layout: u8 len | name | u64 offset | u64 len
+        let table_start = bytes.len() - TRAILER_TAIL - (1 + 1 + 16);
+        let len_pos = table_start + 1 + 1 + 8;
+        let mut bad = bytes.clone();
+        bad[len_pos..len_pos + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = Dataset::from_bytes(bad.clone()).unwrap_err();
+        assert!(err.contains("overflow") || err.contains("out of bounds"), "{err}");
+        let path = tmp("oob.czs");
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Dataset::open(&path).is_err());
     }
 }

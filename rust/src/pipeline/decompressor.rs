@@ -2,7 +2,7 @@
 //! chunk containing the target block, stage-2 inflate it (cached), then
 //! stage-1 decode the block.
 //!
-//! Three access paths:
+//! Four access paths:
 //! * **Random access** via [`BlockReader::read_block`] — decoded chunks
 //!   live in a sharded concurrent [`ChunkCache`]
 //!   ([`super::chunk_cache`]). A reader owns a small private cache by
@@ -27,6 +27,20 @@
 //!   threads at all. Unframed few-chunk archives keep the chunk-granular
 //!   path (their stage-2 streams cannot split), single-chunk ones still
 //!   go wide for the parallel block decode.
+//! * **Multi-section fan-out** via [`decompress_sections`] (what
+//!   `Engine::decompress_dataset` and `.czs` whole-quantity reads
+//!   drive) — many independent `.czb` sections decode concurrently on
+//!   one executor: workers sweep the sections with staggered starting
+//!   points (worker *t* begins at section *t*), the first to arrive at
+//!   a section loads its bytes (lazy archive I/O) and opens it, and
+//!   every worker steals chunk spans from whichever sections are open —
+//!   so several section loads proceed concurrently, section *i+1*'s
+//!   inflate overlaps section *i*'s block decode, and nobody idles at
+//!   per-quantity barriers.
+//!   Decoded chunks route through the shared [`ChunkCache`], keyed by
+//!   each section's [`StreamId`], so whole-quantity decodes and random
+//!   block access reuse each other's work. Bit-identical to decoding
+//!   each section alone.
 //!
 //! Stage 2 dispatches through the [`crate::codec::stage2`] registry;
 //! every inflate passes the exact expected size as the decode limit, so
@@ -41,7 +55,7 @@ use crate::codec::stage2::{self, decompress_framed, parse_frame_table, Stage2Cod
 use crate::core::block::{Block, BlockGrid};
 use crate::core::Field3;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Resolve the registered stage-2 codec of a parsed file.
 fn stage2_of(file: &CzbFile) -> &'static dyn Stage2Codec {
@@ -748,6 +762,221 @@ fn decompress_chunks_wide(
         }
     }
     Ok(())
+}
+
+/// One `.czb` section of a multi-section decode ([`decompress_sections`]):
+/// how to get its bytes — invoked lazily by the first worker to arrive,
+/// so archive section I/O overlaps sibling decode — and the shared-cache
+/// identity its decoded chunks are filed under.
+pub(crate) struct SectionJob<'a> {
+    pub(crate) load: Box<dyn Fn() -> Result<&'a [u8], String> + Sync + 'a>,
+    pub(crate) cache: Arc<ChunkCache>,
+    pub(crate) stream: StreamId,
+}
+
+/// A section a worker has opened: parsed header, validated chunk index,
+/// output field allocated (parked in the matching [`QuantState`]) and a
+/// chunk queue every worker can steal spans from.
+struct OpenedSection<'a> {
+    file: CzbFile,
+    grid: BlockGrid,
+    payload: &'a [u8],
+    queue: SpanQueue,
+    writer: FieldWriter,
+    stage2: &'static dyn Stage2Codec,
+}
+
+/// Per-section shared state of a multi-section decode.
+struct QuantState<'a> {
+    /// Opened exactly once by the first worker to arrive (the lazy
+    /// section load, header parse and output allocation happen inside).
+    opened: OnceLock<Result<OpenedSection<'a>, String>>,
+    /// Output field parked by the opener while workers scatter blocks
+    /// into it through the raw [`FieldWriter`].
+    out: Mutex<Option<Field3>>,
+    /// First chunk-decode error; `failed` stops siblings from pulling
+    /// more of this section's spans (other sections are unaffected).
+    error: Mutex<Option<String>>,
+    failed: AtomicBool,
+}
+
+impl<'a> QuantState<'a> {
+    fn new() -> Self {
+        Self {
+            opened: OnceLock::new(),
+            out: Mutex::new(None),
+            error: Mutex::new(None),
+            failed: AtomicBool::new(false),
+        }
+    }
+
+    fn fail(&self, e: String) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+        self.failed.store(true, Ordering::Relaxed);
+    }
+}
+
+fn open_section<'a>(
+    job: &SectionJob<'a>,
+    st: &QuantState<'a>,
+) -> Result<OpenedSection<'a>, String> {
+    let payload = (job.load)()?;
+    let (file, _header_len) = CzbFile::parse_header(payload)?;
+    validate_chunk_index(&file)?;
+    let mut field = Field3::zeros(file.nx as usize, file.ny as usize, file.nz as usize);
+    let grid = grid_for(&file, &field)?;
+    let writer = FieldWriter { ptr: field.data.as_mut_ptr(), len: field.data.len() };
+    let queue = SpanQueue::new(file.chunks.len(), 1);
+    let stage2 = stage2_of(&file);
+    // the Vec's heap buffer (what `writer` points into) is unaffected by
+    // moving the Field3 into the mutex
+    *st.out.lock().unwrap() = Some(field);
+    Ok(OpenedSection { file, grid, payload, queue, writer, stage2 })
+}
+
+/// Decode chunk `cidx` of an opened section into its shared output
+/// field, through the shared chunk cache: a hit skips the stage-2
+/// inflate entirely, a miss decodes into recycled buffers and leaves the
+/// decoded chunk behind for random-access readers over the same stream.
+fn decode_section_chunk(
+    o: &OpenedSection,
+    cache: &ChunkCache,
+    stream: StreamId,
+    cidx: usize,
+    engine: &dyn WaveletEngine,
+    tmp: &mut Vec<u8>,
+    spare: &mut Option<(Vec<u8>, Vec<(usize, usize)>)>,
+    scratch: &mut Stage1Scratch,
+    block: &mut [f32],
+) -> Result<(), String> {
+    let entry = o.file.chunks[cidx];
+    let decoded = match cache.get(stream, cidx as u32) {
+        Some(c) => c,
+        None => {
+            let payload = chunk_payload(o.payload, &entry)?;
+            let (mut raw, mut offsets) = spare.take().unwrap_or_default();
+            if let Err(e) =
+                decode_chunk_into(&o.file, o.stage2, payload, cidx, tmp, &mut raw, &mut offsets)
+            {
+                *spare = Some((raw, offsets));
+                return Err(e);
+            }
+            let decoded = Arc::new(DecodedChunk {
+                raw,
+                block_offsets: offsets,
+                first_block: entry.first_block,
+            });
+            if let Some(bufs) = cache.insert(stream, cidx as u32, decoded.clone()) {
+                *spare = Some(bufs);
+            }
+            decoded
+        }
+    };
+    // a cached chunk under this stream id must describe these bytes; the
+    // raw scatter below relies on the shape, so check it regardless
+    if decoded.first_block != entry.first_block
+        || decoded.block_offsets.len() != entry.nblocks as usize
+    {
+        return Err(format!("chunk {cidx}: cached chunk shape mismatch"));
+    }
+    for (j, &(off, size)) in decoded.block_offsets.iter().enumerate() {
+        decode_block_payload(&o.file, &decoded.raw[off..off + size], engine, scratch, block)?;
+        // SAFETY: validate_chunk_index proved the chunk index tiles
+        // 0..nblocks disjointly and the section queue hands each chunk
+        // to exactly one worker, so this block id is written exactly
+        // once and lies inside the field buffer.
+        unsafe { o.writer.insert_block(&o.grid, entry.first_block as usize + j, block) };
+    }
+    Ok(())
+}
+
+/// Decode many independent `.czb` sections concurrently on one executor
+/// with cross-section overlap (the `.czs` multi-quantity read path; see
+/// the module docs). Returns one result per job, in job order; a failed
+/// section does not stop its siblings. Bit-identical to decoding each
+/// section alone at any thread count.
+pub(crate) fn decompress_sections(
+    exec: &dyn Execute,
+    jobs: &[SectionJob<'_>],
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+) -> Vec<Result<(Field3, CzbFile), String>> {
+    let states: Vec<QuantState> = jobs.iter().map(|_| QuantState::new()).collect();
+    let nthreads = nthreads.max(1);
+    let njobs = jobs.len();
+    cluster::run_on(exec, nthreads, |t| {
+        // worker-owned scratch, shared across every section it touches
+        let mut tmp: Vec<u8> = Vec::new();
+        let mut spare: Option<(Vec<u8>, Vec<(usize, usize)>)> = None;
+        let mut scratch = Stage1Scratch::default();
+        let mut block: Vec<f32> = Vec::new();
+        // staggered sweep start: worker t begins at section t, so up to
+        // njobs section loads + opens are in flight at once instead of
+        // every worker queueing behind section 0's OnceLock; each worker
+        // still visits every section, so all queues drain before return
+        for k in 0..njobs {
+            let qi = (k + t) % njobs;
+            let (job, st) = (&jobs[qi], &states[qi]);
+            let Ok(o) = st.opened.get_or_init(|| open_section(job, st)) else {
+                continue;
+            };
+            let bs = o.file.bs as usize;
+            block.clear();
+            block.resize(bs * bs * bs, 0.0);
+            while let Some(span) = o.queue.next_span() {
+                // a sibling hit a corrupt chunk in this section: stop
+                // pulling its work, move on to the next section
+                if st.failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                for cidx in span {
+                    if let Err(e) = decode_section_chunk(
+                        o,
+                        &job.cache,
+                        job.stream,
+                        cidx,
+                        engine,
+                        &mut tmp,
+                        &mut spare,
+                        &mut scratch,
+                        &mut block,
+                    ) {
+                        st.fail(e);
+                        break;
+                    }
+                }
+            }
+        }
+    });
+    states
+        .iter()
+        .map(|st| match st.opened.get() {
+            // unreachable in practice: every worker sweeps every section
+            None => Err("section was never opened".to_string()),
+            Some(Err(e)) => Err(e.clone()),
+            Some(Ok(o)) => {
+                if st.failed.load(Ordering::Relaxed) {
+                    Err(st
+                        .error
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .unwrap_or_else(|| "section decode failed".to_string()))
+                } else {
+                    let field = st
+                        .out
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("opened section parked its output field");
+                    Ok((field, o.file.clone()))
+                }
+            }
+        })
+        .collect()
 }
 
 /// The absolute stage-1 parameter this file was encoded with.

@@ -27,7 +27,8 @@ use super::compressor::{
     compress_field_core, CompressStats, NativeEngine, PipelineConfig, WaveletEngine,
     DEFAULT_FRAME_BYTES,
 };
-use super::decompressor::decompress_field_core;
+use super::dataset::Dataset;
+use super::decompressor::{decompress_field_core, decompress_sections, SectionJob};
 use super::format::{CzbFile, ShuffleMode, Stage1};
 use crate::cluster::WorkerPool;
 use crate::codec::Codec;
@@ -238,6 +239,92 @@ impl Engine {
     pub fn decompress_bytes(&self, bytes: &[u8]) -> Result<(Field3, CzbFile), String> {
         decompress_field_core(&self.pool, bytes, self.wavelet_engine.as_ref(), self.threads)
     }
+
+    /// Decompress every quantity of a `.czs` archive (or the `names`
+    /// subset, in the given order) concurrently on the session pool.
+    ///
+    /// All requested quantities are scheduled onto the one worker pool
+    /// at once: quantity *i+1*'s section I/O (lazy on file-backed
+    /// archives) and stage-2 inflate overlap quantity *i*'s block
+    /// decode, and idle workers steal chunk spans from whichever
+    /// quantity still has work — no per-quantity barriers. Decoded
+    /// chunks go through the archive's shared [`super::ChunkCache`].
+    /// Output is bit-identical to decoding each quantity alone, at
+    /// every thread count. Returns `(archive entry name, field, parsed
+    /// header)` per quantity.
+    ///
+    /// Scheduling is chunk-granular: when several sections together
+    /// have fewer chunks than workers (tiny or huge-chunk archives),
+    /// some workers idle — a single requested quantity instead falls
+    /// back to the intra-chunk wide path via the same route
+    /// [`Dataset::read_quantity`] takes.
+    pub fn decompress_dataset(
+        &self,
+        dataset: &Dataset,
+        names: Option<&[&str]>,
+    ) -> Result<Vec<(String, Field3, CzbFile)>, String> {
+        let indices: Vec<usize> = match names {
+            None => (0..dataset.entries().len()).collect(),
+            Some(ns) => ns
+                .iter()
+                .map(|n| dataset.index_of(n))
+                .collect::<Result<_, _>>()?,
+        };
+        // one quantity has no cross-section work to overlap; route it
+        // through the single-section path, which can go wide inside
+        // starved chunks
+        let results = if indices.len() == 1 {
+            vec![self.decompress_section(dataset, indices[0])]
+        } else {
+            self.decompress_sections_of(dataset, &indices)
+        };
+        let mut out = Vec::with_capacity(indices.len());
+        for (&idx, r) in indices.iter().zip(results) {
+            let name = &dataset.entries()[idx].name;
+            let (field, file) = r.map_err(|e| format!("quantity {name}: {e}"))?;
+            out.push((name.clone(), field, file));
+        }
+        Ok(out)
+    }
+
+    /// Decompress one section of a `.czs` archive on the session pool
+    /// (what [`Dataset::read_quantity`] drives). Sections with at least
+    /// as many chunks as workers decode chunk-granular through the
+    /// archive's shared chunk cache; a lone *starved* section (fewer
+    /// chunks than workers) takes the intra-chunk wide path instead —
+    /// chunk-granular cache routing could keep only one worker per
+    /// chunk busy, losing the single-chunk scaling the framed format
+    /// exists for. Both paths are bit-identical.
+    pub(crate) fn decompress_section(
+        &self,
+        dataset: &Dataset,
+        idx: usize,
+    ) -> Result<(Field3, CzbFile), String> {
+        let section = dataset.section_at(idx)?;
+        let (file, _) = CzbFile::parse_header(section)?;
+        if file.chunks.len() < self.threads {
+            return self.decompress_bytes(section);
+        }
+        self.decompress_sections_of(dataset, &[idx])
+            .pop()
+            .expect("one job yields one result")
+    }
+
+    fn decompress_sections_of(
+        &self,
+        dataset: &Dataset,
+        indices: &[usize],
+    ) -> Vec<Result<(Field3, CzbFile), String>> {
+        let jobs: Vec<SectionJob<'_>> = indices
+            .iter()
+            .map(|&i| SectionJob {
+                load: Box::new(move || dataset.section_at(i)),
+                cache: dataset.chunk_cache().clone(),
+                stream: dataset.stream_of(i),
+            })
+            .collect();
+        decompress_sections(&self.pool, &jobs, self.wavelet_engine.as_ref(), self.threads)
+    }
 }
 
 impl Default for Engine {
@@ -320,6 +407,93 @@ mod tests {
             .iter()
             .zip(&expected.data)
             .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn decompress_dataset_fans_out_and_matches_per_quantity() {
+        use crate::pipeline::dataset::{Dataset, DatasetWriter};
+        let engine = Engine::builder().threads(4).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let fields: Vec<(String, Field3)> =
+            (0..5u64).map(|i| (format!("q{i}"), smooth_field(32, 40 + i))).collect();
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        for (name, f) in &fields {
+            w.write_quantity(&engine, f, name, &params).unwrap();
+        }
+        let ds = Dataset::from_bytes(w.finish().unwrap()).unwrap();
+        // all quantities, archive order
+        let all = engine.decompress_dataset(&ds, None).unwrap();
+        assert_eq!(
+            all.iter().map(|(n, ..)| n.as_str()).collect::<Vec<_>>(),
+            vec!["q0", "q1", "q2", "q3", "q4"]
+        );
+        for (name, field, file) in &all {
+            assert_eq!(&file.name, name);
+            let (expected, _) = engine.decompress_bytes(ds.section(name).unwrap()).unwrap();
+            assert!(
+                field.data.iter().zip(&expected.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name}"
+            );
+        }
+        // subset, caller order
+        let some = engine.decompress_dataset(&ds, Some(&["q3", "q0"])).unwrap();
+        assert_eq!(some.len(), 2);
+        assert_eq!(some[0].0, "q3");
+        assert_eq!(some[1].0, "q0");
+        // unknown quantity errors
+        assert!(engine.decompress_dataset(&ds, Some(&["nope"])).is_err());
+        // empty selection is a no-op
+        assert!(engine.decompress_dataset(&ds, Some(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn starved_sections_take_the_wide_path_bit_exact() {
+        use crate::pipeline::dataset::{Dataset, DatasetWriter};
+        // one framed chunk, more threads than chunks: read_quantity must
+        // fall back to the intra-chunk wide path and stay bit-identical
+        let engine = Engine::builder()
+            .threads(8)
+            .chunk_bytes(64 << 20)
+            .frame_bytes(2 << 10)
+            .build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(64, 60);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        w.write_quantity(&engine, &f, "p", &params).unwrap();
+        let ds = Dataset::from_bytes(w.finish().unwrap()).unwrap();
+        let section = ds.section("p").unwrap().to_vec();
+        let (file, _) = CzbFile::parse_header(&section).unwrap();
+        assert_eq!(file.chunks.len(), 1, "section must be single-chunk for this test");
+        let (serial, _) = decompress_field(&section, &NativeEngine).unwrap();
+        let (wide, _) = ds.read_quantity("p", &engine).unwrap();
+        assert!(wide
+            .data
+            .iter()
+            .zip(&serial.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn decompress_dataset_reports_the_corrupt_quantity() {
+        use crate::pipeline::dataset::{Dataset, DatasetWriter};
+        let engine = Engine::builder().threads(3).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        for (i, seed) in [50u64, 51, 52].iter().enumerate() {
+            w.write_quantity(&engine, &smooth_field(32, *seed), &format!("q{i}"), &params)
+                .unwrap();
+        }
+        let mut bytes = w.finish().unwrap();
+        let ds0 = Dataset::from_bytes(bytes.clone()).unwrap();
+        // smash q1's .czb magic so its open fails deterministically
+        let off = ds0.entries()[1].offset as usize;
+        bytes[off..off + 4].copy_from_slice(b"XXXX");
+        let ds = Dataset::from_bytes(bytes).unwrap();
+        let err = engine.decompress_dataset(&ds, None).unwrap_err();
+        assert!(err.contains("q1"), "{err}");
+        // the healthy sibling still decodes on its own
+        assert!(ds.read_quantity("q0", &engine).is_ok());
+        assert!(ds.read_quantity("q2", &engine).is_ok());
     }
 
     #[test]

@@ -61,10 +61,29 @@
 //! trailer: nquantities x { u8 name_len | name | u64 offset | u64 len }
 //!          u32 nquantities | u32 table_bytes | magic "CZSE"
 //! ```
-//! Readers parse the fixed 12-byte trailer tail, walk the entry table,
-//! and then treat every section as an independent `.czb` — whole-quantity
-//! decode and random block access (via `BlockReader` over the section
-//! slice) both work without touching the other quantities.
+//! Because the trailer tail has a fixed 12-byte size, a reader maps an
+//! archive of any size from three small reads — the 8-byte header, the
+//! tail, and the entry table the tail locates — which is exactly what
+//! the file-backed `SectionSource` behind `Dataset::open` does: section
+//! payloads are *never* read at open time; each section's bytes are
+//! fetched with a positioned read the first time a decode touches that
+//! quantity, so the archive-resident footprint is bounded by the
+//! sections actually used. Every section is then an independent `.czb`:
+//! whole-quantity decode, cross-quantity parallel decode
+//! (`Engine::decompress_dataset`) and random block access (`BlockReader`
+//! over the section slice) all work without touching — or reading —
+//! the other quantities.
+//!
+//! The trailer is validated strictly. Entry names must be valid UTF-8
+//! (a lossy decode could alias two corrupt names to the same
+//! replacement-character string and silently resolve a lookup to the
+//! wrong quantity) and unique, and every section must lie between the
+//! header and the entry table. On the write side, repackaged sections
+//! must start with a parseable `.czb` header (`write_section` validates
+//! up front instead of deferring the failure to read time), and the
+//! coordinator's file entry point builds archives at a temp path and
+//! renames on success so a mid-archive failure never leaves a
+//! trailer-less partial archive behind.
 use crate::codec::Codec;
 use crate::wavelet::WaveletKind;
 
@@ -254,6 +273,12 @@ pub const MAGIC: &[u8; 4] = b"CZB1";
 /// Current writer version (framed stage-2 chunk payloads).
 pub const FORMAT_VERSION: u8 = 3;
 
+/// Exact error [`CzbFile::parse_header`] returns when the buffer is
+/// merely too short. Callers feeding a growing header *prefix* (the
+/// `.czs` lazy `quantity_header`) retry with more bytes on exactly this
+/// error; any other parse error is genuine corruption and fails fast.
+pub const ERR_TRUNCATED_HEADER: &str = "truncated czb header";
+
 impl CzbFile {
     /// Serialized header size for `nchunks` entries at the current writer
     /// version ([`FORMAT_VERSION`]).
@@ -323,7 +348,7 @@ impl CzbFile {
     pub fn parse_header(buf: &[u8]) -> Result<(Self, usize), String> {
         let need = |n: usize, pos: usize| -> Result<(), String> {
             if buf.len() < pos + n {
-                Err("truncated czb header".into())
+                Err(ERR_TRUNCATED_HEADER.into())
             } else {
                 Ok(())
             }

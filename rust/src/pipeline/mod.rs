@@ -20,9 +20,15 @@
 //!
 //! Whole simulation steps bundle into `.czs` archives ([`dataset`]):
 //! [`Dataset::create`] + `DatasetWriter::write_quantity` append one
-//! `.czb` section per quantity and a trailer index; [`Dataset::open`]
-//! gives whole-quantity decode and chunk-cached random block access
-//! without touching the other sections.
+//! `.czb` section per quantity and a trailer index. [`Dataset::open`]
+//! is *streaming*: it parses only the fixed-size trailer tail and loads
+//! section bytes lazily on first touch (a [`dataset::SectionSource`]
+//! abstracts file-backed vs in-memory archives), so reading one field
+//! of a many-GB step never pulls the rest in. `Engine::decompress_dataset`
+//! decodes all requested quantities concurrently on the session pool —
+//! section I/O and stage-2 inflate of quantity *i+1* overlap quantity
+//! *i*'s block decode — and both whole-quantity decode and random block
+//! access route through the archive-wide sharded [`ChunkCache`].
 //!
 //! # Stages
 //!
@@ -77,7 +83,10 @@ pub use compressor::{
     compress_field, CompressStats, NativeEngine, PipelineConfig, WaveletEngine,
     DEFAULT_FRAME_BYTES,
 };
-pub use dataset::{Dataset, DatasetWriter, QuantityEntry};
+pub use dataset::{
+    Dataset, DatasetOptions, DatasetWriter, QuantityEntry, SectionSource,
+    DEFAULT_DATASET_CACHE_CHUNKS,
+};
 pub use decompressor::{decompress_field, decompress_field_mt, BlockReader};
 pub use engine::{CompressParams, Engine, EngineBuilder};
 pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1, FORMAT_VERSION};

@@ -35,7 +35,7 @@ def fmt_delta(old, new):
 
 def row_key(row):
     """Stable identity for a row across runs (threads/eps/... if present)."""
-    for k in ("threads", "eps", "name", "field"):
+    for k in ("threads", "eps", "cache_chunks", "name", "field"):
         if k in row:
             return (k, row[k])
     return None
@@ -79,13 +79,19 @@ def main():
         if cur is None or prev is None:
             continue
         try:
-            if isinstance(cur.get("rows"), list) and isinstance(prev.get("rows"), list):
-                diff_rows(prev["rows"], cur["rows"])
             for k, v in cur.items():
-                if k == "rows":
+                pv = prev.get(k)
+                # any top-level list of row objects diffs row-by-row:
+                # "rows", but also named sections like "cache_sweep"
+                # (dataset_scaling) or "single_chunk_stage2"
+                # (thread_scaling)
+                if isinstance(v, list) and isinstance(pv, list) and v and isinstance(v[0], dict):
+                    if k != "rows":
+                        print(f"  [{k}]")
+                    diff_rows(pv, v)
                     continue
-                d = fmt_delta(prev.get(k), v)
-                if d is not None and prev.get(k) != v:
+                d = fmt_delta(pv, v)
+                if d is not None and pv != v:
                     print(f"  {k}: {d}")
         except Exception as e:  # fail-soft by contract
             print(f"  ! diff failed: {e}")
