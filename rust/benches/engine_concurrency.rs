@@ -1,0 +1,192 @@
+//! Bench: multi-stream Engine throughput — N concurrent submissions vs
+//! the same N submitted sequentially, on one multi-generation pool.
+//!
+//! The tentpole claim this guards: concurrent tenants sharing one
+//! session must beat taking turns, because idle workers steal across the
+//! live submissions (each stream's barrier tails and serial sections —
+//! field stats, header assembly, output concat — overlap a sibling's
+//! parallel phase instead of idling the pool). Streams are sized to
+//! leave a scheduling tail (spans slightly outnumber workers), the shape
+//! where a lone submission scales worst.
+//!
+//! Hard asserts:
+//! * every concurrently compressed stream is byte-identical to a lone
+//!   submission of the same field (and every concurrent decode
+//!   bit-identical to the serial decoder) — scheduling never leaks into
+//!   any tenant's bytes;
+//! * on hosts with >= 8 hardware threads, aggregate throughput of 4
+//!   concurrent submissions is >= 1.3x the sequential baseline for both
+//!   compression and decompression.
+//!
+//! Emits `BENCH_concurrency.json`. `ENGINE_CONCURRENCY_FAST=1` shrinks
+//! fields and budgets for CI; `ENGINE_CONCURRENCY_N` overrides the field
+//! side.
+use cubismz::core::Field3;
+use cubismz::pipeline::{decompress_field, CompressParams, Engine, NativeEngine, PipelineConfig};
+use cubismz::util::bench::{bench_budget, write_json, Json};
+use cubismz::util::prng::Pcg32;
+
+/// Concurrent tenants (the issue's "several simultaneous streams").
+const STREAMS: usize = 4;
+/// Pool size the 1.3x target is specified at.
+const THREADS: usize = 8;
+
+fn main() {
+    let fast = std::env::var("ENGINE_CONCURRENCY_FAST").is_ok();
+    let n: usize = std::env::var("ENGINE_CONCURRENCY_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 64 } else { 96 });
+    let bs = if fast { 16 } else { 32 };
+    assert!(n % bs == 0, "field side must be divisible by the block size {bs}");
+    let (budget, samples) = if fast { (0.8, 4) } else { (3.0, 10) };
+    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let raw_bytes = n * n * n * 4 * STREAMS;
+    println!(
+        "bench engine_concurrency: {STREAMS} x {n}^3 streams ({} MB raw), pool {THREADS}, \
+         {hw} hardware threads",
+        raw_bytes / 1_000_000
+    );
+
+    // spans slightly outnumber the pool so a lone submission has a
+    // scheduling tail — the regime concurrency exists to fill
+    let nblocks = (n / bs).pow(3);
+    let block_raw = bs * bs * bs * 4 + 4;
+    let span_blocks = (nblocks / (THREADS + 2)).max(1);
+    let chunk_bytes = span_blocks * block_raw;
+    let mut cfg = PipelineConfig::paper_default(1e-3);
+    cfg.bs = bs;
+    let params = CompressParams::from_config(&cfg);
+    let engine = Engine::builder().threads(THREADS).chunk_bytes(chunk_bytes).build();
+    let engine = &engine;
+
+    let fields: Vec<Field3> = (0..STREAMS as u64)
+        .map(|i| {
+            let mut rng = Pcg32::new(4000 + i);
+            Field3::from_vec(n, n, n, cubismz::util::prop::gen_smooth_field(&mut rng, n))
+        })
+        .collect();
+
+    // lone-submission references: the bytes every mode must reproduce
+    let references: Vec<Vec<u8>> = fields
+        .iter()
+        .map(|f| engine.compress_vec(f, "q", &params).0)
+        .collect();
+    let nchunks = {
+        let (file, _) = cubismz::pipeline::CzbFile::parse_header(&references[0]).unwrap();
+        file.chunks.len()
+    };
+    println!("  {nchunks} chunks per stream (chunk_bytes {chunk_bytes})");
+
+    // --- compression: sequential baseline vs concurrent submissions ---
+    let seq_c = bench_budget("compress/4 sequential", budget, samples, || {
+        for f in &fields {
+            std::hint::black_box(engine.compress_vec(f, "q", &params));
+        }
+    });
+    seq_c.report_mbps(raw_bytes);
+    let conc_c = bench_budget("compress/4 concurrent", budget, samples, || {
+        std::thread::scope(|s| {
+            for f in &fields {
+                s.spawn(move || std::hint::black_box(engine.compress_vec(f, "q", &params)));
+            }
+        })
+    });
+    conc_c.report_mbps(raw_bytes);
+
+    // per-stream byte identity under full concurrency
+    let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
+        let handles: Vec<_> = fields
+            .iter()
+            .map(|f| s.spawn(move || engine.compress_vec(f, "q", &params).0))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (k, (got, expect)) in outputs.iter().zip(&references).enumerate() {
+        assert_eq!(got, expect, "concurrent stream {k} drifted from its lone submission");
+    }
+
+    // --- decompression: sequential baseline vs concurrent submissions ---
+    let seq_d = bench_budget("decompress/4 sequential", budget, samples, || {
+        for bytes in &references {
+            std::hint::black_box(engine.decompress_bytes(bytes).unwrap());
+        }
+    });
+    seq_d.report_mbps(raw_bytes);
+    let conc_d = bench_budget("decompress/4 concurrent", budget, samples, || {
+        std::thread::scope(|s| {
+            for bytes in &references {
+                s.spawn(move || std::hint::black_box(engine.decompress_bytes(bytes).unwrap()));
+            }
+        })
+    });
+    conc_d.report_mbps(raw_bytes);
+
+    // per-stream bit identity under full concurrency, vs the serial decoder
+    let decoded: Vec<Field3> = std::thread::scope(|s| {
+        let handles: Vec<_> = references
+            .iter()
+            .map(|bytes| s.spawn(move || engine.decompress_bytes(bytes).unwrap().0))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (k, (got, bytes)) in decoded.iter().zip(&references).enumerate() {
+        let (serial, _) = decompress_field(bytes, &NativeEngine).unwrap();
+        assert!(
+            got.data.iter().zip(&serial.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "concurrent decode of stream {k} drifted from the serial decoder"
+        );
+    }
+
+    let sp_c = seq_c.mean / conc_c.mean;
+    let sp_d = seq_d.mean / conc_d.mean;
+    println!("  compress:   {sp_c:.2}x aggregate vs sequential (target >= 1.3x at 8 threads)");
+    println!("  decompress: {sp_d:.2}x aggregate vs sequential (target >= 1.3x at 8 threads)");
+    if hw >= 8 {
+        assert!(
+            sp_c >= 1.3,
+            "concurrent compression must beat sequential submissions: {sp_c:.2}x"
+        );
+        assert!(
+            sp_d >= 1.3,
+            "concurrent decompression must beat sequential submissions: {sp_d:.2}x"
+        );
+    } else {
+        println!("  (only {hw} hardware threads — 1.3x target not enforced on this host)");
+    }
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("engine_concurrency".into())),
+        ("field".into(), Json::Str(format!("smooth/{n}^3 x{STREAMS}"))),
+        ("raw_bytes".into(), Json::Int(raw_bytes as i64)),
+        ("hw_threads".into(), Json::Int(hw as i64)),
+        ("pool_threads".into(), Json::Int(THREADS as i64)),
+        ("streams".into(), Json::Int(STREAMS as i64)),
+        ("chunks_per_stream".into(), Json::Int(nchunks as i64)),
+        (
+            "rows".into(),
+            Json::Arr(vec![
+                Json::Obj(vec![
+                    ("name".into(), Json::Str("compress_sequential".into())),
+                    ("mbps".into(), Json::Num(raw_bytes as f64 / 1e6 / seq_c.mean)),
+                ]),
+                Json::Obj(vec![
+                    ("name".into(), Json::Str("compress_concurrent".into())),
+                    ("mbps".into(), Json::Num(raw_bytes as f64 / 1e6 / conc_c.mean)),
+                    ("speedup_vs_sequential".into(), Json::Num(sp_c)),
+                ]),
+                Json::Obj(vec![
+                    ("name".into(), Json::Str("decompress_sequential".into())),
+                    ("mbps".into(), Json::Num(raw_bytes as f64 / 1e6 / seq_d.mean)),
+                ]),
+                Json::Obj(vec![
+                    ("name".into(), Json::Str("decompress_concurrent".into())),
+                    ("mbps".into(), Json::Num(raw_bytes as f64 / 1e6 / conc_d.mean)),
+                    ("speedup_vs_sequential".into(), Json::Num(sp_d)),
+                ]),
+            ]),
+        ),
+    ]);
+    write_json("BENCH_concurrency.json", &doc).expect("write BENCH_concurrency.json");
+    println!("wrote BENCH_concurrency.json");
+}

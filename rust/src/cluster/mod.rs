@@ -14,6 +14,18 @@
 //! compression and decompression pipelines are executor-agnostic: they
 //! pull spans off the queue inside whatever executor drives them, so one
 //! scheduling mechanism serves both directions and both lifetimes.
+//!
+//! The pool is *multi-generation*: every [`Execute::execute`] call
+//! registers a submission (its job plus per-submission worker-index
+//! queue) in a shared injector, idle workers steal indices across the
+//! live submissions oldest-first, and each submitting thread also drains
+//! its own submission — so several streams compress or decompress
+//! concurrently on one pool, a small request keeps making progress on
+//! its submitter while a large one streams on the workers, and a
+//! panicked submission is re-raised on its own submitter without
+//! touching its siblings. Each submission's job still drives its own
+//! [`SpanQueue`], which is what keeps every stream's bytes independent
+//! of scheduling.
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -50,11 +62,16 @@ impl SpanQueue {
     }
 }
 
-/// Worker executor: runs `job(0), job(1), ..., job(n-1)` concurrently and
-/// returns once every index has completed. Implementations may cap `n` at
-/// their own concurrency and run the job inline when `n <= 1`; callers
-/// must only rely on every index executing exactly once before the call
-/// returns. A panic inside the job propagates to the caller.
+/// Worker executor: runs `job(0), job(1), ..., job(n-1)` and returns once
+/// every index has completed. Implementations may cap `n` at their own
+/// concurrency, run the job inline when `n <= 1`, and — when the executor
+/// is busy with other submissions — run several indices *sequentially* on
+/// one thread; callers must only rely on every index executing exactly
+/// once before the call returns, so jobs must never block waiting for a
+/// sibling index to start (the pipelines' drain-a-shared-queue workers
+/// satisfy this by construction). A panic inside the job propagates to
+/// the caller. Executors may be driven from several threads at once;
+/// each call's completion is tracked independently.
 pub trait Execute: Sync {
     fn execute(&self, n: usize, job: &(dyn Fn(usize) + Sync));
 
@@ -116,50 +133,104 @@ pub fn run_workers<R: Send>(nthreads: usize, worker: impl Fn(usize) -> R + Sync)
 }
 
 /// A job handed to pool workers: a borrowed closure whose lifetime is
-/// erased. Soundness: `WorkerPool::execute` blocks until every worker has
-/// finished the generation, so the borrow outlives every use.
+/// erased. Soundness: `WorkerPool::execute` blocks until every index of
+/// its submission has completed (observed under the pool lock), so the
+/// borrow outlives every call through the pointer.
 type ErasedJob = &'static (dyn Fn(usize) + Sync);
 
-struct PoolJob {
+/// One live submission in the pool's injector: an erased job plus the
+/// claim/completion state of its `n` worker indices. Indices are the
+/// per-submission work queue — workers claim them one at a time under
+/// the pool lock, so a submission's concurrency grows and shrinks with
+/// the pool's load instead of being fixed at post time.
+struct Submission {
+    id: u64,
     job: ErasedJob,
-    participants: usize,
+    /// Worker indices this submission hands out (`job(0..n)`).
+    n: usize,
+    /// Next unclaimed worker index.
+    next: usize,
+    /// Indices claimed-or-unclaimed that have not finished yet; the
+    /// submission is complete when this reaches zero.
+    remaining: usize,
+    /// Set when the job panicked under any index (re-thrown by the
+    /// submitter; siblings are unaffected).
+    panicked: bool,
+}
+
+impl Submission {
+    /// Claim the next unclaimed index, if any.
+    fn claim(&mut self) -> Option<(u64, ErasedJob, usize)> {
+        if self.next >= self.n {
+            return None;
+        }
+        let c = (self.id, self.job, self.next);
+        self.next += 1;
+        Some(c)
+    }
 }
 
 struct PoolState {
-    /// Current job, replaced each generation.
-    job: Option<PoolJob>,
-    /// Bumped once per submitted job; workers run each generation once.
-    generation: u64,
-    /// Workers that have not finished the current generation yet.
-    remaining: usize,
-    /// Set when a job panicked in some worker (re-thrown by the submitter).
-    panicked: bool,
+    /// Live submissions, oldest first (pushed at the back). A completed
+    /// entry is removed by its submitter once observed drained.
+    subs: Vec<Submission>,
+    next_id: u64,
     shutdown: bool,
 }
 
 struct PoolShared {
     state: Mutex<PoolState>,
-    /// Wakes workers when a new generation (or shutdown) is posted.
+    /// Wakes workers when a submission (or shutdown) is posted.
     work_cv: Condvar,
-    /// Wakes the submitter when `remaining` hits zero.
+    /// Wakes submitters when some submission fully drains.
     done_cv: Condvar,
 }
 
+/// Mark one claimed index of submission `id` finished; wakes submitters
+/// when the submission drains.
+fn complete_index(shared: &PoolShared, id: u64, panicked: bool) {
+    let mut g = shared.state.lock().unwrap();
+    let sub = g
+        .subs
+        .iter_mut()
+        .find(|s| s.id == id)
+        .expect("submission stays registered until its submitter retires it");
+    sub.remaining -= 1;
+    if panicked {
+        sub.panicked = true;
+    }
+    if sub.remaining == 0 {
+        shared.done_cv.notify_all();
+    }
+}
+
+/// Run one claimed index, containing any panic to its submission.
+fn run_index(shared: &PoolShared, id: u64, job: ErasedJob, index: usize) {
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(index)));
+    complete_index(shared, id, r.is_err());
+}
+
 /// Persistent worker pool: `threads` long-lived OS threads parked on a
-/// condvar between jobs. Each [`Execute::execute`] call posts one
-/// generation: every worker wakes, indices `< n` run the job, and the
-/// submitting thread blocks until the generation drains — which is what
-/// makes handing workers a *borrowed* closure sound. Submissions are
-/// serialized (one job at a time); dropping the pool joins the threads.
+/// condvar between submissions. Each [`Execute::execute`] call registers
+/// one *submission* — a job with `n` worker indices — in the shared
+/// injector and returns once all of its indices have completed, which is
+/// what makes handing workers a *borrowed* closure sound. Submissions
+/// from different threads overlap freely (the pool is multi-generation):
+/// idle workers steal indices across the live submissions oldest-first,
+/// and the submitting thread itself drains its own submission's indices,
+/// so every submission makes progress even while an older one has all
+/// pool workers streaming — a small request finishes on its submitter
+/// instead of queueing behind a large neighbour. A panic inside one
+/// submission re-raises on that submission's submitter only; dropping
+/// the pool joins the threads.
 ///
 /// This replaces per-field scoped spawning for session use: an in-situ
 /// code dumping ~7 quantities per step pays thread creation once per run
-/// instead of once per quantity.
+/// instead of once per quantity — and several such sessions' callers can
+/// now share the one pool concurrently.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    /// Serializes submitters so generations never overlap.
-    submit: Mutex<()>,
 }
 
 impl WorkerPool {
@@ -167,13 +238,7 @@ impl WorkerPool {
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState {
-                job: None,
-                generation: 0,
-                remaining: 0,
-                panicked: false,
-                shutdown: false,
-            }),
+            state: Mutex::new(PoolState { subs: Vec::new(), next_id: 0, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
@@ -182,44 +247,49 @@ impl WorkerPool {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("cz-pool-{t}"))
-                    .spawn(move || worker_loop(&shared, t))
+                    .spawn(move || worker_loop(&shared))
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { shared, handles, submit: Mutex::new(()) }
+        Self { shared, handles }
     }
 
     pub fn threads(&self) -> usize {
         self.handles.len()
     }
+
+    /// Claim the next unclaimed index of submission `id` (the caller's
+    /// own submission, which stays registered until the caller retires
+    /// it in [`Execute::execute`]).
+    fn claim_own(&self, id: u64) -> Option<(ErasedJob, usize)> {
+        let mut g = self.shared.state.lock().unwrap();
+        g.subs
+            .iter_mut()
+            .find(|s| s.id == id)
+            .expect("own submission is live until its submitter retires it")
+            .claim()
+            .map(|(_, job, index)| (job, index))
+    }
 }
 
-fn worker_loop(shared: &PoolShared, idx: usize) {
-    let mut seen_gen = 0u64;
+fn worker_loop(shared: &PoolShared) {
     loop {
-        let (job, participants) = {
+        // steal an index from the oldest live submission that still has
+        // unclaimed ones; park when none (claimable work only appears
+        // with a new submission, so work_cv is the only wake source)
+        let (id, job, index) = {
             let mut g = shared.state.lock().unwrap();
-            while !g.shutdown && g.generation == seen_gen {
+            loop {
+                if let Some(c) = g.subs.iter_mut().find_map(|s| s.claim()) {
+                    break c;
+                }
+                if g.shutdown {
+                    return;
+                }
                 g = shared.work_cv.wait(g).unwrap();
             }
-            if g.shutdown {
-                return;
-            }
-            seen_gen = g.generation;
-            let j = g.job.as_ref().expect("generation posted without a job");
-            (j.job, j.participants)
         };
-        if idx < participants {
-            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(idx)));
-            if r.is_err() {
-                shared.state.lock().unwrap().panicked = true;
-            }
-        }
-        let mut g = shared.state.lock().unwrap();
-        g.remaining -= 1;
-        if g.remaining == 0 {
-            shared.done_cv.notify_all();
-        }
+        run_index(shared, id, job, index);
     }
 }
 
@@ -232,29 +302,41 @@ impl Execute for WorkerPool {
             job(0);
             return;
         }
-        let guard = self.submit.lock().unwrap();
         // SAFETY: only the lifetime is erased; this function does not
-        // return until every worker has finished the generation, so the
-        // borrow is live for every call through the pointer.
-        let erased: ErasedJob = unsafe {
-            std::mem::transmute::<&(dyn Fn(usize) + Sync), ErasedJob>(job)
+        // return until every index of this submission has completed, so
+        // the borrow is live for every call through the pointer.
+        let erased: ErasedJob =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), ErasedJob>(job) };
+        let id = {
+            let mut g = self.shared.state.lock().unwrap();
+            let id = g.next_id;
+            g.next_id += 1;
+            g.subs.push(Submission { id, job: erased, n, next: 0, remaining: n, panicked: false });
+            self.shared.work_cv.notify_all();
+            id
         };
+        // help drain our own submission: run whatever indices the pool
+        // workers have not claimed yet on this thread. This is what keeps
+        // a submission live when every worker is busy with an older one
+        // (and makes a nested submission from inside a job finite).
+        while let Some((job, index)) = self.claim_own(id) {
+            run_index(&self.shared, id, job, index);
+        }
+        // wait for stolen indices to finish, then retire the submission
         let panicked = {
             let mut g = self.shared.state.lock().unwrap();
-            g.job = Some(PoolJob { job: erased, participants: n });
-            g.generation += 1;
-            g.remaining = self.handles.len();
-            g.panicked = false;
-            self.shared.work_cv.notify_all();
-            while g.remaining > 0 {
+            loop {
+                let pos = g
+                    .subs
+                    .iter()
+                    .position(|s| s.id == id)
+                    .expect("own submission is live until retired here");
+                if g.subs[pos].remaining == 0 {
+                    break g.subs.remove(pos).panicked;
+                }
                 g = self.shared.done_cv.wait(g).unwrap();
             }
-            g.job = None;
-            g.panicked
         };
-        // release the submit lock cleanly BEFORE re-raising, or the
-        // propagated panic would poison it and brick the pool
-        drop(guard);
         if panicked {
             panic!("worker thread panicked");
         }
@@ -590,6 +672,110 @@ mod tests {
         assert!(r.is_err(), "panic in a pool worker must reach the submitter");
         // the pool must still be usable after a panicked generation
         assert_eq!(run_on(&pool, 2, |t| t), vec![0, 1]);
+    }
+
+    #[test]
+    fn concurrent_submissions_make_independent_progress() {
+        // liveness of the multi-generation injector: submission A spins
+        // until a LATER submission B runs. The one-generation pool
+        // deadlocked here (B queued behind A's submit gate); now B rides
+        // its own submitter even with every pool worker parked inside A.
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(2);
+        let flag = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let a = s.spawn(|| {
+                run_on(&pool, 2, |_| {
+                    while !flag.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                })
+            });
+            // regardless of arrival order, B must complete and unblock A
+            run_on(&pool, 2, |t| {
+                if t == 0 {
+                    flag.store(true, Ordering::Release);
+                }
+            });
+            a.join().expect("submission A must finish once B ran");
+        });
+    }
+
+    #[test]
+    fn small_submission_finishes_while_large_one_streams() {
+        // throughput shape of the tentpole: a large submission holds the
+        // whole pool; a small one submitted later must still complete
+        // (the large one's spans only finish after the small one did)
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(4);
+        let small_done = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let large = s.spawn(|| {
+                let q = SpanQueue::new(64, 1);
+                run_on(&pool, 4, |_| {
+                    while let Some(_span) = q.next_span() {
+                        while !small_done.load(Ordering::Acquire) {
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+            });
+            let out = run_on(&pool, 4, |t| t + 1);
+            small_done.store(true, Ordering::Release);
+            assert_eq!(out, vec![1, 2, 3, 4]);
+            large.join().expect("large submission finishes after the small one");
+        });
+    }
+
+    #[test]
+    fn panicked_submission_does_not_poison_siblings() {
+        let pool = WorkerPool::new(4);
+        std::thread::scope(|s| {
+            let bad = s.spawn(|| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    pool.execute(2, &|t| {
+                        if t == 1 {
+                            panic!("boom");
+                        }
+                    });
+                }))
+            });
+            // a sibling keeps streaming generations throughout
+            for i in 0..50usize {
+                let out = run_on(&pool, 3, |t| t * 100 + i);
+                assert_eq!(out, vec![i, 100 + i, 200 + i]);
+            }
+            let r = bad.join().expect("submitter thread itself must not die");
+            assert!(r.is_err(), "panic must reach the panicking submission's submitter");
+        });
+        // the pool stays usable afterwards
+        assert_eq!(run_on(&pool, 2, |t| t), vec![0, 1]);
+    }
+
+    #[test]
+    fn pool_drop_waits_for_queued_submissions() {
+        use std::sync::atomic::AtomicUsize;
+        // main drops its handle while submissions are still in flight on
+        // other threads: every index must still run exactly once and the
+        // final drop (last Arc) must join cleanly, not hang or abandon
+        let pool = std::sync::Arc::new(WorkerPool::new(2));
+        let hits = std::sync::Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                let hits = hits.clone();
+                std::thread::spawn(move || {
+                    run_on(&*pool, 2, |_| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                })
+            })
+            .collect();
+        drop(pool);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::pipeline::{
     Engine, PipelineConfig, WaveletEngine,
 };
 use crate::util::error::{Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Ex-situ: read a dataset from an h5lite container, compress it, write
 /// the `.czb` file. Returns the stats.
@@ -194,6 +194,136 @@ pub fn decompress_dataset_file(
     Ok(datasets.into_iter().map(|d| d.name).collect())
 }
 
+/// One unit of a multi-file batch ([`compress_files`]): which dataset of
+/// which h5lite container, compressed to which `.czb` path.
+#[derive(Clone, Debug)]
+pub struct CompressJob {
+    pub input: PathBuf,
+    pub dataset: String,
+    pub output: PathBuf,
+}
+
+/// Run `batch.len()` tasks on up to `jobs` submitter threads pulling
+/// from a shared cursor, collecting one result per task in batch order.
+/// The engine's multi-generation pool is what lets the submissions
+/// overlap; this helper only supplies the submitter threads.
+fn run_batch<R: Send>(
+    len: usize,
+    jobs: usize,
+    task: impl Fn(usize) -> Result<R> + Sync,
+) -> Vec<Result<R>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let jobs = jobs.clamp(1, len.max(1));
+    let slots: Vec<Mutex<Option<Result<R>>>> = (0..len).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= len {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(task(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("batch cursor covers every index"))
+        .collect()
+}
+
+/// Ex-situ, multi-stream: compress a whole batch of (container, dataset)
+/// pairs through ONE [`Engine`] session, `jobs` files in flight at a
+/// time. Each submitter thread reads its container, submits the field
+/// onto the shared pool (submissions overlap — idle workers steal across
+/// the live streams) and streams the `.czb` to its output path. Every
+/// output is byte-identical to compressing that file alone; a failing
+/// job reports its own error without stopping the siblings. Returns
+/// (dataset, stats) per job in batch order; the first failure, if any.
+pub fn compress_files(
+    batch: &[CompressJob],
+    params: &CompressParams,
+    engine: &Engine,
+    jobs: usize,
+) -> Result<Vec<(String, CompressStats)>> {
+    use std::sync::OnceLock;
+    // one parse per distinct container, loaded lazily by the first job
+    // that touches it and shared by its siblings — h5lite::read pulls
+    // the WHOLE file per call, so the common shape (every job a dataset
+    // of one container) would otherwise read and hold `jobs` full
+    // copies of the archive at once
+    let distinct: Vec<&Path> = batch.iter().fold(Vec::new(), |mut acc, j| {
+        if !acc.contains(&j.input.as_path()) {
+            acc.push(j.input.as_path());
+        }
+        acc
+    });
+    let containers: Vec<OnceLock<Result<Vec<h5lite::Dataset>, String>>> =
+        distinct.iter().map(|_| OnceLock::new()).collect();
+    let results = run_batch(batch.len(), jobs, |i| {
+        let job = &batch[i];
+        let slot = distinct
+            .iter()
+            .position(|p| *p == job.input.as_path())
+            .expect("every batch input is in the distinct list");
+        let datasets = containers[slot]
+            .get_or_init(|| h5lite::read_all(&job.input))
+            .as_ref()
+            .map_err(|e| anyhow!(e))?;
+        let ds = datasets
+            .iter()
+            .find(|d| d.name == job.dataset)
+            .ok_or_else(|| anyhow!("dataset {} not in {}", job.dataset, job.input.display()))?;
+        let field = ds.to_field();
+        let file = std::fs::File::create(&job.output)
+            .with_context(|| format!("creating {}", job.output.display()))?;
+        let mut sink = std::io::BufWriter::new(file);
+        let stats = engine
+            .compress(&field, &job.dataset, params, &mut sink)
+            .with_context(|| format!("compressing {}", job.dataset))?;
+        std::io::Write::flush(&mut sink)
+            .with_context(|| format!("writing {}", job.output.display()))?;
+        Ok(stats)
+    });
+    batch
+        .iter()
+        .zip(results)
+        .map(|(job, r)| {
+            r.map(|stats| (job.dataset.clone(), stats))
+                .with_context(|| format!("job {}", job.output.display()))
+        })
+        .collect()
+}
+
+/// Ex-situ, multi-stream: decompress many `.czb` files through ONE
+/// [`Engine`] session, `jobs` files in flight at a time (each becomes an
+/// h5lite container at its paired output path). Bit-identical to
+/// decompressing each file alone. Returns the dataset names in batch
+/// order. Output paths must be pairwise distinct — jobs run
+/// concurrently, so two pairs naming one output would race-write it
+/// (the CLI refuses colliding file stems up front).
+pub fn decompress_files(
+    pairs: &[(PathBuf, PathBuf)],
+    engine: &Engine,
+    jobs: usize,
+) -> Result<Vec<String>> {
+    let results = run_batch(pairs.len(), jobs, |i| {
+        let (input, output) = &pairs[i];
+        let bytes =
+            std::fs::read(input).with_context(|| format!("reading {}", input.display()))?;
+        let (field, file) = engine.decompress_bytes(&bytes).map_err(|e| anyhow!(e))?;
+        h5lite::write(output, &[h5lite::Dataset::from_field(&file.name, &field)])?;
+        Ok(file.name)
+    });
+    pairs
+        .iter()
+        .zip(results)
+        .map(|((input, _), r)| r.with_context(|| format!("job {}", input.display())))
+        .collect()
+}
+
 /// Result of one in-situ dump step.
 #[derive(Clone, Debug)]
 pub struct DumpReport {
@@ -349,6 +479,61 @@ mod tests {
         // a later failing run leaves the existing good archive untouched
         assert!(compress_dataset_file(&h5, Some("ghost"), &czs, &params, &engine).is_err());
         assert_eq!(Dataset::open(&czs).unwrap().names(), vec!["p"]);
+    }
+
+    #[test]
+    fn multi_file_batch_through_one_engine() {
+        let sim = CloudSim::new(CloudConfig::paper(32));
+        let h5 = tmp("batch.h5l");
+        let datasets: Vec<h5lite::Dataset> = Qoi::ALL
+            .iter()
+            .map(|q| h5lite::Dataset::from_field(q.name(), &sim.field(*q, step_to_time(5000))))
+            .collect();
+        h5lite::write(&h5, &datasets).unwrap();
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let batch: Vec<CompressJob> = Qoi::ALL
+            .iter()
+            .map(|q| CompressJob {
+                input: h5.clone(),
+                dataset: q.name().to_string(),
+                output: tmp(&format!("batch_{}.czb", q.name())),
+            })
+            .collect();
+        let stats = compress_files(&batch, &params, &engine, batch.len()).unwrap();
+        assert_eq!(stats.len(), Qoi::ALL.len());
+        // every concurrently produced file is byte-identical to a lone
+        // submission of the same quantity on the same session
+        for job in &batch {
+            let ds = h5lite::read(&h5, &job.dataset).unwrap();
+            let (reference, _) = engine.compress_vec(&ds.to_field(), &job.dataset, &params);
+            assert_eq!(std::fs::read(&job.output).unwrap(), reference, "{}", job.dataset);
+        }
+        // decompress the batch back through the same session
+        let pairs: Vec<(PathBuf, PathBuf)> = batch
+            .iter()
+            .map(|j| (j.output.clone(), tmp(&format!("batch_{}_out.h5l", j.dataset))))
+            .collect();
+        let names = decompress_files(&pairs, &engine, 3).unwrap();
+        let expected: Vec<String> = Qoi::ALL.iter().map(|q| q.name().to_string()).collect();
+        assert_eq!(names, expected);
+        for (j, (_, out)) in batch.iter().zip(&pairs) {
+            let back = h5lite::read(out, &j.dataset).unwrap();
+            assert_eq!(back.data.len(), 32 * 32 * 32, "{}", j.dataset);
+        }
+        // a bad job reports its own error; siblings still land on disk
+        let mut bad = batch.clone();
+        for j in &mut bad {
+            let _ = std::fs::remove_file(&j.output);
+        }
+        bad[1].dataset = "ghost".to_string();
+        let err = compress_files(&bad, &params, &engine, 2).unwrap_err().to_string();
+        assert!(err.contains("job"), "{err}");
+        assert!(bad[0].output.exists(), "healthy sibling must still be written");
+        assert!(bad[2].output.exists(), "healthy sibling must still be written");
+        // jobs=1 degenerates to the sequential flow with the same bytes
+        let seq = compress_files(&batch, &params, &engine, 1).unwrap();
+        assert_eq!(seq.len(), batch.len());
     }
 
     #[test]

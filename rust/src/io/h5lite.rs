@@ -112,20 +112,21 @@ fn parse_table(bytes: &[u8]) -> Result<(Vec<TableEntry>, usize), String> {
     Ok((out, pos))
 }
 
-/// Read one dataset by name.
-pub fn read(path: &Path, name: &str) -> Result<Dataset, String> {
-    let mut bytes = Vec::new();
-    File::open(path)
-        .and_then(|mut f| f.read_to_end(&mut bytes))
-        .map_err(|e| e.to_string())?;
-    let (table, _) = parse_table(&bytes)?;
-    let (n, nx, ny, nz, offset) = table
-        .into_iter()
-        .find(|(n, ..)| n == name)
-        .ok_or_else(|| format!("dataset {name} not found"))?;
-    let len = (nx * ny * nz) as usize;
+/// Decode one table entry's payload out of the full file buffer. All
+/// size arithmetic is checked: a corrupt table with oversized dims must
+/// error here, not wrap past the truncation check (or panic later when
+/// the dims disagree with the decoded length).
+fn decode_entry(bytes: &[u8], entry: TableEntry) -> Result<Dataset, String> {
+    let (name, nx, ny, nz, offset) = entry;
+    let len = (nx as usize)
+        .checked_mul(ny as usize)
+        .and_then(|v| v.checked_mul(nz as usize))
+        .ok_or_else(|| format!("dataset {name}: dims {nx}x{ny}x{nz} overflow"))?;
     let lo = offset as usize;
-    let hi = lo + len * 4;
+    let hi = len
+        .checked_mul(4)
+        .and_then(|b| lo.checked_add(b))
+        .ok_or_else(|| "payload offset overflow".to_string())?;
     if bytes.len() < hi {
         return Err("payload truncated".into());
     }
@@ -133,13 +134,33 @@ pub fn read(path: &Path, name: &str) -> Result<Dataset, String> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    Ok(Dataset { name: n, nx, ny, nz, data })
+    Ok(Dataset { name, nx, ny, nz, data })
 }
 
-/// Read all datasets.
+/// Read one dataset by name.
+pub fn read(path: &Path, name: &str) -> Result<Dataset, String> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| e.to_string())?;
+    let (table, _) = parse_table(&bytes)?;
+    let entry = table
+        .into_iter()
+        .find(|(n, ..)| n == name)
+        .ok_or_else(|| format!("dataset {name} not found"))?;
+    decode_entry(&bytes, entry)
+}
+
+/// Read all datasets from ONE file read + table parse, shared by every
+/// entry — what the multi-stream compress flow fans out over (per-entry
+/// `read` calls would re-load the whole container once per dataset).
 pub fn read_all(path: &Path) -> Result<Vec<Dataset>, String> {
-    let names = list(path)?;
-    names.into_iter().map(|(n, ..)| read(path, &n)).collect()
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| e.to_string())?;
+    let (table, _) = parse_table(&bytes)?;
+    table.into_iter().map(|entry| decode_entry(&bytes, entry)).collect()
 }
 
 #[cfg(test)]

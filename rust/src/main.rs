@@ -176,11 +176,72 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--jobs` flag: concurrent submitter threads of a multi-stream flow
+/// (0 or absent = one submitter per stream).
+fn jobs_of(args: &Args, nstreams: usize) -> Result<usize> {
+    Ok(match args.num("jobs", 0usize)? {
+        0 => nstreams.max(1),
+        n => n,
+    })
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     let dataset = args.req("dataset")?;
     let out = PathBuf::from(args.req("out")?);
     let cfg = config_of(args)?;
+    let datasets: Vec<&str> =
+        dataset.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if datasets.len() > 1 {
+        // multi-stream flow: every dataset is one concurrent submission
+        // on a single Engine session; --out names a directory
+        let engine = session_of(args, &cfg)?;
+        let params = CompressParams::from_config(&cfg);
+        let jobs = jobs_of(args, datasets.len())?;
+        // outputs are named by dataset: a repeated name would race-write
+        // one .czb — refuse instead of silently clobbering
+        for (i, name) in datasets.iter().enumerate() {
+            if datasets[..i].contains(name) {
+                return Err(anyhow!("duplicate dataset {name} in --dataset list"));
+            }
+        }
+        std::fs::create_dir_all(&out)?;
+        let batch: Vec<coordinator::CompressJob> = datasets
+            .iter()
+            .map(|name| coordinator::CompressJob {
+                input: input.clone(),
+                dataset: name.to_string(),
+                output: out.join(format!("{name}.czb")),
+            })
+            .collect();
+        let t = std::time::Instant::now();
+        let stats = coordinator::compress_files(&batch, &params, &engine, jobs)?;
+        let (mut raw, mut comp) = (0usize, 0usize);
+        for ((name, st), job) in stats.iter().zip(&batch) {
+            println!(
+                "  {:>8} -> {}: {} -> {} bytes  CR {:.2}",
+                name,
+                job.output.display(),
+                st.raw_bytes,
+                st.compressed_bytes,
+                st.ratio()
+            );
+            raw += st.raw_bytes;
+            comp += st.compressed_bytes;
+        }
+        println!(
+            "{} streams -> {}  CR {:.2}  ({:.3}s, {jobs} jobs x {} threads)",
+            stats.len(),
+            out.display(),
+            raw as f64 / comp.max(1) as f64,
+            t.elapsed().as_secs_f64(),
+            engine.threads(),
+        );
+        return Ok(());
+    }
+    // single stream: use the cleaned element so a stray trailing comma
+    // ("--dataset p,") does not leak into the lookup
+    let dataset = *datasets.first().ok_or_else(|| anyhow!("empty --dataset"))?;
     let engine = engine_of(args)?;
     let t = std::time::Instant::now();
     let st = coordinator::compress_file(&input, dataset, &out, &cfg, engine.as_ref())?;
@@ -200,8 +261,65 @@ fn cmd_compress(args: &Args) -> Result<()> {
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
-    let input = PathBuf::from(args.req("in")?);
+    let input = args.req("in")?;
     let out = PathBuf::from(args.req("out")?);
+    let inputs: Vec<&str> = input.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    // a comma inside a real filename must not engage the multi-stream
+    // flow: if the raw value names an existing file, it is one input
+    if inputs.len() > 1 && !std::path::Path::new(input).is_file() {
+        // multi-stream flow: every .czb is one concurrent submission on
+        // a single Engine session; --out names a directory
+        let mut cfg = config_of(args)?;
+        // decompression historically defaults --threads to all cores
+        cfg.nthreads = threads_of(args, 0)?;
+        let engine = session_of(args, &cfg)?;
+        let jobs = jobs_of(args, inputs.len())?;
+        std::fs::create_dir_all(&out)?;
+        let pairs: Vec<(PathBuf, PathBuf)> = inputs
+            .iter()
+            .map(|p| {
+                let p = PathBuf::from(p);
+                let stem = p
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "stream".to_string());
+                let o = out.join(format!("{stem}.h5l"));
+                (p, o)
+            })
+            .collect();
+        // outputs are named by file stem: two inputs sharing a stem would
+        // race-write one .h5l — refuse instead of silently clobbering
+        for (i, (_, o)) in pairs.iter().enumerate() {
+            if pairs[..i].iter().any(|(_, prev)| prev == o) {
+                return Err(anyhow!(
+                    "output collision: two inputs map to {} (same file stem); \
+                     rename one or decompress it separately",
+                    o.display()
+                ));
+            }
+        }
+        let t = std::time::Instant::now();
+        let names = coordinator::decompress_files(&pairs, &engine, jobs)?;
+        for (name, (i, o)) in names.iter().zip(&pairs) {
+            println!("  {name}: {} -> {}", i.display(), o.display());
+        }
+        println!(
+            "{} streams -> {} ({:.3}s, {jobs} jobs x {} threads)",
+            names.len(),
+            out.display(),
+            t.elapsed().as_secs_f64(),
+            engine.threads(),
+        );
+        return Ok(());
+    }
+    // single stream: a raw comma-bearing filename wins when it exists;
+    // otherwise use the cleaned element so a stray trailing comma
+    // ("--in a.czb,") does not leak into the path
+    let input = if std::path::Path::new(input).is_file() {
+        PathBuf::from(input)
+    } else {
+        PathBuf::from(*inputs.first().ok_or_else(|| anyhow!("empty --in"))?)
+    };
     let engine = engine_of(args)?;
     let nthreads = threads_of(args, 0)?;
     let t = std::time::Instant::now();
@@ -386,7 +504,12 @@ USAGE: czb <command> [flags]
               [--stage2 zlib|zlib-def|zlib-best|lz4|zstd|lzma|none (case-insensitive, see codecs)]
               [--shuffle [none|byte4|bit4]] [--bs 32] [--chunk-bytes N] [--frame-bytes N (0 = default 256Ki)]
               [--threads N (0 = all cores)] [--engine native|pjrt]
+              (--dataset p,rho,E compresses every stream concurrently on one engine
+               into --out DIR/<name>.czb; [--jobs N] caps the streams in flight, 0 = all;
+               a comma in --dataset always separates streams)
   decompress  --in f.czb --out f.h5l [--engine native|pjrt] [--threads N (0 = all cores)]
+              (--in a.czb,b.czb decompresses the streams concurrently on one engine
+               into --out DIR/<stem>.h5l; [--jobs N] as above)
   recompress  --in f.czb --out g.czb [same flags as compress]
   compress-dataset    --in f.h5l --out f.czs [--qoi p,rho] [same scheme flags as compress]
                       (all quantities through one Engine session into one .czs archive,

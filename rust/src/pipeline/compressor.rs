@@ -19,6 +19,12 @@
 //!   wavelet transform uses a thread-local line pool; the per-block loop
 //!   performs no heap allocation.
 //!
+//! Every run of this core is one *submission* on its executor: the
+//! queue, scratch and abort state are all call-local, so any number of
+//! threads may drive the same persistent pool concurrently (the
+//! multi-generation [`crate::cluster::WorkerPool`]) without their
+//! streams interacting — scheduling never leaks into the bytes.
+//!
 //! Stage 2 dispatches through the [`crate::codec::stage2`] registry and
 //! seals every chunk as a *framed* container (fixed-arithmetic sub-frames,
 //! `format.rs` v3). When the field yields fewer spans than workers — the
@@ -40,7 +46,9 @@ use crate::wavelet::{self, WaveletKind};
 
 /// Pluggable executor for the batched wavelet transform: native Rust or
 /// the PJRT executable built from the Pallas kernel (`runtime::PjrtEngine`).
-pub trait WaveletEngine: Sync {
+/// `Send + Sync` so a `pipeline::Engine` session holding one stays
+/// shareable across concurrently submitting threads.
+pub trait WaveletEngine: Send + Sync {
     /// In-place forward transform of `n` contiguous bs³ blocks.
     fn forward_batch(&self, kind: WaveletKind, blocks: &mut [f32], bs: usize, levels: usize);
     /// In-place inverse transform of `n` contiguous bs³ blocks.

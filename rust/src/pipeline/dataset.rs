@@ -413,6 +413,13 @@ impl Default for DatasetOptions {
 /// A parsed `.czs` archive with random access to quantities and blocks.
 /// File-backed handles ([`Dataset::open`]) load section bytes lazily;
 /// in-memory handles ([`Dataset::from_bytes`]) slice their buffer.
+///
+/// `Dataset` is `Send + Sync` (asserted below): concurrent readers —
+/// several threads calling [`crate::pipeline::Engine::decompress_dataset`]
+/// or [`Dataset::read_quantity`] on one handle — share the lazy section
+/// slots (first toucher loads, `OnceLock`) and the archive-wide chunk
+/// cache, so parallel tenants reuse rather than repeat each other's
+/// section I/O and stage-2 work.
 pub struct Dataset {
     source: SectionSource,
     entries: Vec<QuantityEntry>,
@@ -427,6 +434,12 @@ pub struct Dataset {
     /// One stream identity per quantity, same order as `entries`.
     streams: Vec<StreamId>,
 }
+
+/// Compile-time guarantee of the concurrent-reader contract above.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Dataset>();
+};
 
 impl Dataset {
     /// Start writing an archive at `path` (convenience for

@@ -42,6 +42,12 @@
 //!   block access reuse each other's work. Bit-identical to decoding
 //!   each section alone.
 //!
+//! Every decode path keeps its queue, abort flag and error state local
+//! to the call, so any number of threads may submit decodes onto one
+//! persistent pool concurrently (the multi-generation
+//! [`crate::cluster::WorkerPool`]): a corrupt stream aborts only its own
+//! submission's workers, never a sibling's.
+//!
 //! Stage 2 dispatches through the [`crate::codec::stage2`] registry;
 //! every inflate passes the exact expected size as the decode limit, so
 //! corrupt streams can neither overrun nor size an allocation.

@@ -23,6 +23,17 @@
 //! `.czb` bytes an `Engine` produces are byte-identical to the free
 //! functions' output for every thread count — both drive the same
 //! span-queue core, which fixes chunk boundaries by block-id arithmetic.
+//!
+//! `Engine` is `Send + Sync` and every entry point takes `&self`: any
+//! number of threads may call `compress`, `decompress` and
+//! `decompress_dataset` on one session concurrently, with no external
+//! locking. Each call is one *submission* on the multi-generation pool —
+//! idle workers steal across live submissions oldest-first while each
+//! submitting thread drains its own, so a small request completes while
+//! a large one streams, and per-submission error/abort state keeps a
+//! corrupt stream from poisoning its neighbours. Every stream's bytes
+//! are identical to what a lone submission produces, at every thread
+//! count and under any interleaving.
 use super::compressor::{
     compress_field_core, CompressStats, NativeEngine, PipelineConfig, WaveletEngine,
     DEFAULT_FRAME_BYTES,
@@ -145,8 +156,10 @@ impl EngineBuilder {
 /// A compression session: persistent worker pool + wavelet-transform
 /// executor + session-level pipeline knobs. Build once via
 /// [`Engine::builder`], then compress/decompress any number of
-/// quantities; `&Engine` is `Sync`, so one session can serve concurrent
-/// callers (submissions are serialized onto the pool).
+/// quantities. `Engine` is `Send + Sync`: threads submit concurrently
+/// through `&Engine` (or an `Arc<Engine>`) with no external locking —
+/// each call is an independent submission on the multi-generation pool,
+/// scheduled work-stealing across all live submissions.
 pub struct Engine {
     pool: WorkerPool,
     threads: usize,
@@ -155,6 +168,13 @@ pub struct Engine {
     batch: usize,
     wavelet_engine: Box<dyn WaveletEngine>,
 }
+
+/// Compile-time guarantee that sessions stay shareable and movable
+/// across submitting threads (the concurrency contract above).
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+};
 
 impl Engine {
     pub fn builder() -> EngineBuilder {
@@ -494,6 +514,148 @@ mod tests {
         // the healthy sibling still decodes on its own
         assert!(ds.read_quantity("q0", &engine).is_ok());
         assert!(ds.read_quantity("q2", &engine).is_ok());
+    }
+
+    #[test]
+    fn concurrent_submissions_are_byte_identical_per_stream() {
+        // the tentpole invariant: several threads submitting at once
+        // through one session must each get exactly the bytes (and bits)
+        // a lone submission produces — work stealing across submissions
+        // must never leak into any stream
+        let engine = Engine::builder().threads(4).chunk_bytes(32 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let fields: Vec<Field3> = (0..4u64).map(|i| smooth_field(64, 200 + i)).collect();
+        let references: Vec<Vec<u8>> = fields
+            .iter()
+            .map(|f| {
+                let mut cfg = engine.config_for(&params);
+                cfg.nthreads = 1;
+                compress_field(f, "q", &cfg, &NativeEngine).0
+            })
+            .collect();
+        let engine = &engine;
+        for _round in 0..3 {
+            let outputs: Vec<Vec<u8>> = std::thread::scope(|s| {
+                let handles: Vec<_> = fields
+                    .iter()
+                    .map(|f| s.spawn(move || engine.compress_vec(f, "q", &params).0))
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (k, (got, expect)) in outputs.iter().zip(&references).enumerate() {
+                assert_eq!(got, expect, "stream {k}");
+            }
+            // concurrent decompression of the four streams, against the
+            // serial decoder
+            let decoded: Vec<Field3> = std::thread::scope(|s| {
+                let handles: Vec<_> = references
+                    .iter()
+                    .map(|bytes| s.spawn(move || engine.decompress_bytes(bytes).unwrap().0))
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (k, (got, bytes)) in decoded.iter().zip(&references).enumerate() {
+                let (serial, _) = decompress_field(bytes, &NativeEngine).unwrap();
+                assert!(
+                    got.data.iter().zip(&serial.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "stream {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn errored_submission_does_not_poison_streaming_sibling() {
+        // one tenant repeatedly feeds the session corrupt streams; a
+        // sibling compressing at the same time must still produce
+        // byte-identical archives
+        let engine = Engine::builder().threads(4).chunk_bytes(32 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(64, 77);
+        let (reference, _) = {
+            let mut cfg = engine.config_for(&params);
+            cfg.nthreads = 1;
+            compress_field(&f, "q", &cfg, &NativeEngine)
+        };
+        let mut corrupt = reference.clone();
+        let lo = corrupt.len() / 2;
+        for b in &mut corrupt[lo..] {
+            *b = 0xAB;
+        }
+        std::thread::scope(|s| {
+            let bad = s.spawn(|| {
+                for _ in 0..20 {
+                    assert!(engine.decompress_bytes(&corrupt).is_err());
+                    assert!(engine.decompress_bytes(b"not a czb").is_err());
+                }
+            });
+            for _ in 0..10 {
+                let (bytes, _) = engine.compress_vec(&f, "q", &params);
+                assert_eq!(bytes, reference, "sibling stream drifted");
+            }
+            bad.join().unwrap();
+        });
+        // the session stays fully usable afterwards
+        let (back, _) = engine.decompress_bytes(&reference).unwrap();
+        assert_eq!(back.data.len(), f.data.len());
+    }
+
+    #[test]
+    fn zero_length_inputs_submitted_concurrently() {
+        // degenerate tenants must neither wedge the pool nor disturb a
+        // real stream: an empty field (zero blocks) roundtrips, an empty
+        // byte stream errors
+        let engine = Engine::builder().threads(4).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(64, 88);
+        let (reference, _) = engine.compress_vec(&f, "q", &params);
+        let empty = Field3::zeros(0, 0, 0);
+        std::thread::scope(|s| {
+            let z1 = s.spawn(|| {
+                for _ in 0..10 {
+                    let (bytes, st) = engine.compress_vec(&empty, "void", &params);
+                    assert_eq!(st.nblocks, 0);
+                    assert_eq!(st.nchunks, 0);
+                    let (back, file) = engine.decompress_bytes(&bytes).unwrap();
+                    assert_eq!(file.name, "void");
+                    assert!(back.data.is_empty());
+                }
+            });
+            let z2 = s.spawn(|| {
+                for _ in 0..10 {
+                    assert!(engine.decompress_bytes(&[]).is_err());
+                }
+            });
+            for _ in 0..5 {
+                let (bytes, _) = engine.compress_vec(&f, "q", &params);
+                assert_eq!(bytes, reference);
+            }
+            z1.join().unwrap();
+            z2.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn engine_dropped_while_submissions_queued() {
+        // the owner's handle goes away while tenants still stream: the
+        // session must survive until the last submission retires (Arc),
+        // then shut the pool down cleanly
+        let engine = std::sync::Arc::new(Engine::builder().threads(2).chunk_bytes(32 << 10).build());
+        let params = CompressParams::paper_default(1e-3);
+        let mut handles = Vec::new();
+        for seed in 0..4u64 {
+            let engine = engine.clone();
+            handles.push(std::thread::spawn(move || {
+                let f = smooth_field(64, 300 + seed);
+                let (bytes, _) = engine.compress_vec(&f, "q", &params);
+                let (back, _) = engine.decompress_bytes(&bytes).unwrap();
+                assert_eq!(back.data.len(), f.data.len());
+            }));
+        }
+        drop(engine);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -18,6 +18,26 @@
 //! session exists to avoid (an in-situ code dumps ~7 quantities per
 //! step).
 //!
+//! # Concurrent submissions
+//!
+//! `Engine` is `Send + Sync` and every entry point takes `&self`: one
+//! session serves any number of submitting threads with no external
+//! locking. Each `compress`/`decompress`/`decompress_dataset` call is
+//! one *submission* on the multi-generation
+//! [`crate::cluster::WorkerPool`] — submissions register per-call work
+//! queues in a shared injector, idle workers steal across the live
+//! submissions oldest-first, and every submitting thread also drains its
+//! own submission, so a small request completes while a large one
+//! streams and a saturated pool degrades to caller-thread progress
+//! instead of queueing. Determinism is per stream: whatever the
+//! interleaving, each submission's bytes are identical to running it
+//! alone (chunk, frame and span boundaries are fixed by arithmetic, and
+//! all queue/abort/error state is call-local). A corrupt stream aborts
+//! only its own submission's workers; the session stays healthy for its
+//! other tenants. `coordinator::compress_files`/`decompress_files` (CLI:
+//! `czb compress --dataset p,rho,E --jobs N`) batch many files over one
+//! session this way.
+//!
 //! Whole simulation steps bundle into `.czs` archives ([`dataset`]):
 //! [`Dataset::create`] + `DatasetWriter::write_quantity` append one
 //! `.czb` section per quantity and a trailer index. [`Dataset::open`]

@@ -1,0 +1,128 @@
+//! Compile-only stand-in for the external `xla` crate (xla-rs).
+//!
+//! Mirrors exactly the API surface `runtime/pjrt_xla.rs` calls so the
+//! `--cfg pjrt_runtime` codepath can be type-checked on the offline
+//! image (no registry, no XLA binaries). Every constructor fails with an
+//! explanatory error, so code that probes availability — which is all of
+//! the callers — falls back to the native engine at runtime exactly like
+//! the default-build stub engine does. Swap the path dependency in
+//! `rust/Cargo.toml` for the real crate to execute PJRT for real.
+use std::fmt;
+
+/// Stub error: every operation reports the runtime as unavailable.
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} is compile-only — link the real xla crate to run the PJRT engine"
+    ))
+}
+
+/// Stand-in for `xla::PjRtClient`. `cpu()` always fails, which is the
+/// single probe point every caller goes through.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer` (what `execute` yields).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("compile-only"), "{e}");
+    }
+}

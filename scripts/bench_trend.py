@@ -1,18 +1,43 @@
 #!/usr/bin/env python3
-"""Fail-soft bench trend diff for the BENCH_*.json files the benches emit.
+"""Bench trend diff for the BENCH_*.json files the benches emit.
 
 Usage: bench_trend.py PREV_DIR CUR_DIR
 
 Compares every BENCH_*.json present in CUR_DIR against the same-named
 file in PREV_DIR (a previous CI run's artifact) and prints per-metric
 deltas. Missing files, malformed JSON, or schema drift are reported and
-skipped — the script always exits 0 so a broken trend check can never
-fail the build.
+skipped.
+
+By default the script is fail-soft: it always exits 0, so a broken trend
+check can never fail the build (what CI runs). With BENCH_TREND_STRICT=1
+in the environment — intended for local use before sending a perf-
+sensitive change — any named throughput row (a metric key containing
+"mbps", "speedup" or "per_sec") that regressed by more than 25% makes
+the script exit nonzero after printing the full diff.
 """
 import glob
 import json
 import os
 import sys
+
+STRICT = os.environ.get("BENCH_TREND_STRICT") == "1"
+# throughput-like metrics are higher-is-better; >25% drop = regression
+REGRESSION_FRACTION = 0.25
+REGRESSIONS = []
+
+
+def is_throughput_key(key):
+    k = key.lower()
+    return "mbps" in k or "speedup" in k or "per_sec" in k
+
+
+def note_regression(context, key, old, new):
+    if not isinstance(old, (int, float)) or not isinstance(new, (int, float)):
+        return
+    if not is_throughput_key(key) or old <= 0:
+        return
+    if new < old * (1.0 - REGRESSION_FRACTION):
+        REGRESSIONS.append(f"{context} {key}: {old:.3g} -> {new:.3g}")
 
 
 def load(path):
@@ -41,7 +66,7 @@ def row_key(row):
     return None
 
 
-def diff_rows(old_rows, new_rows, indent="  "):
+def diff_rows(label, old_rows, new_rows, indent="  "):
     old_by_key = {row_key(r): r for r in old_rows if row_key(r) is not None}
     for new in new_rows:
         key = row_key(new)
@@ -56,6 +81,7 @@ def diff_rows(old_rows, new_rows, indent="  "):
             d = fmt_delta(old.get(k), v)
             if d is not None:
                 parts.append(f"{k} {d}")
+                note_regression(f"{label} {key[0]}={key[1]}", k, old.get(k), v)
         print(f"{indent}{key[0]}={key[1]}: " + ("; ".join(parts) if parts else "(no numeric fields)"))
 
 
@@ -88,14 +114,25 @@ def main():
                 if isinstance(v, list) and isinstance(pv, list) and v and isinstance(v[0], dict):
                     if k != "rows":
                         print(f"  [{k}]")
-                    diff_rows(pv, v)
+                    diff_rows(name, pv, v)
                     continue
                 d = fmt_delta(pv, v)
                 if d is not None and pv != v:
                     print(f"  {k}: {d}")
+                    note_regression(name, k, pv, v)
         except Exception as e:  # fail-soft by contract
             print(f"  ! diff failed: {e}")
-    print("(trend diff is informational only; never fails the build)")
+    if REGRESSIONS:
+        print(f"throughput regressions > {int(REGRESSION_FRACTION * 100)}%:")
+        for r in REGRESSIONS:
+            print(f"  !! {r}")
+        if STRICT:
+            print("BENCH_TREND_STRICT=1: failing on the regressions above")
+            sys.exit(1)
+    if STRICT:
+        print("(strict mode: no throughput regression above the threshold)")
+    else:
+        print("(trend diff is informational only; set BENCH_TREND_STRICT=1 to fail on >25% throughput regressions)")
 
 
 if __name__ == "__main__":
