@@ -49,7 +49,7 @@ fn main() {
                 "{:28} {:>9.2} {:>11.1} {:>9.2} {:>9.2}",
                 label,
                 st.ratio(),
-                psnr(&f.data, &back.data),
+                psnr(&f.data, &back.data).expect("psnr defined"),
                 tc,
                 td
             );

@@ -121,7 +121,7 @@ fn main() {
                 grid.extract(&field, id, &mut blk);
                 lgrid.insert(&mut local, j, &blk);
             }
-            let db = psnr(&local.data, &back.data);
+            let db = psnr(&local.data, &back.data).expect("psnr defined");
             println!(
                 "{:>6} {:>6} {:>9.1} {:>10.1} {:>10.0} {:>10.3}",
                 step,

@@ -29,5 +29,5 @@ fn main() {
 
     // 3. decompress and check fidelity
     let (back, _) = decompress_field(&bytes, &NativeEngine).expect("decompress");
-    println!("PSNR: {:.1} dB", psnr(&field.data, &back.data));
+    println!("PSNR: {:.1} dB", psnr(&field.data, &back.data).expect("psnr defined"));
 }

@@ -1,0 +1,97 @@
+//! Bench: the price of integrity. Measures `verify_stream` (checksum
+//! walk, no inflate) throughput, full v4 decode throughput, and — by
+//! rebuilding the identical payload stream as a checksum-less v3 file —
+//! the decode-time overhead the per-chunk CRC32C verification adds.
+//! The acceptance bar is < 3% overhead. Emits `BENCH_verify.json` for
+//! `scripts/bench_trend.py`; `VERIFY_BENCH_FAST=1` shrinks the field
+//! and budgets for CI.
+use cubismz::pipeline::{
+    compress_field, decompress_field_mt, verify_stream, CzbFile, NativeEngine, PipelineConfig,
+};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::util::bench::{bench_budget, write_json, Json};
+
+/// Rebuild a v4 stream as a byte-equivalent v3 stream: same chunk
+/// payloads, no CRC column, no header digest. The only differences a
+/// decoder sees are the missing checksum verification and a slightly
+/// smaller header — the cleanest possible A/B for checksum cost.
+fn as_v3(stream: &[u8]) -> Vec<u8> {
+    let (file, hsize) = CzbFile::parse_header(stream).expect("bench stream parses");
+    let delta = (file.chunks.len() * 4 + 4) as u64;
+    let mut v3 = file.clone();
+    v3.version = 3;
+    v3.chunk_crcs.clear();
+    for c in &mut v3.chunks {
+        c.offset -= delta;
+    }
+    let mut out = Vec::with_capacity(stream.len() - delta as usize);
+    v3.write_header(&mut out);
+    assert_eq!(out.len() as u64, hsize as u64 - delta);
+    out.extend_from_slice(&stream[hsize..]);
+    out
+}
+
+fn main() {
+    let fast = std::env::var("VERIFY_BENCH_FAST").is_ok();
+    let n = if fast { 64 } else { 96 };
+    let budget = if fast { 0.6 } else { 2.0 };
+    let nthreads = std::env::var("VERIFY_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1usize);
+    let sim = CloudSim::new(CloudConfig::paper(n));
+    let f = sim.field(Qoi::Pressure, step_to_time(10000));
+    let bytes = f.nbytes();
+    println!(
+        "bench verify: p at 10k, {n}^3 ({} MB), {nthreads} thread(s){}",
+        bytes / 1_000_000,
+        if fast { ", fast mode" } else { "" }
+    );
+    let eps_list: &[f32] = if fast { &[1e-3] } else { &[1e-2, 1e-3, 1e-4] };
+    let mut rows = Vec::new();
+    for &eps in eps_list {
+        let cfg = PipelineConfig::paper_default(eps).with_threads(nthreads);
+        let (stream, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+        let v3_stream = as_v3(&stream);
+        // same payload bytes decode to the same field through both
+        // headers — the A/B is honest or the bench is meaningless
+        let (a, _) = decompress_field_mt(&stream, &NativeEngine, nthreads).unwrap();
+        let (b, _) = decompress_field_mt(&v3_stream, &NativeEngine, nthreads).unwrap();
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "v3 rebuild decodes differently"
+        );
+
+        let sv = bench_budget(&format!("verify/eps={eps:.0e}"), budget * 0.5, 200, || {
+            verify_stream(&stream).unwrap()
+        });
+        sv.report_mbps(bytes);
+        let s4 = bench_budget(&format!("decode_v4/eps={eps:.0e}"), budget, 50, || {
+            decompress_field_mt(&stream, &NativeEngine, nthreads).unwrap()
+        });
+        s4.report_mbps(bytes);
+        let s3 = bench_budget(&format!("decode_v3/eps={eps:.0e}"), budget, 50, || {
+            decompress_field_mt(&v3_stream, &NativeEngine, nthreads).unwrap()
+        });
+        s3.report_mbps(bytes);
+        let overhead_pct = (s4.mean / s3.mean - 1.0) * 100.0;
+        println!("  checksum overhead: {overhead_pct:+.2}% of decode time");
+        rows.push(Json::Obj(vec![
+            ("eps".into(), Json::Num(eps as f64)),
+            ("verify_mbps".into(), Json::Num(bytes as f64 / 1e6 / sv.mean)),
+            ("decode_mbps".into(), Json::Num(bytes as f64 / 1e6 / s4.mean)),
+            ("decode_v3_mbps".into(), Json::Num(bytes as f64 / 1e6 / s3.mean)),
+            ("checksum_overhead_pct".into(), Json::Num(overhead_pct)),
+        ]));
+    }
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("verify".into())),
+        ("field".into(), Json::Str(format!("p@10k/{n}^3"))),
+        ("raw_bytes".into(), Json::Int(bytes as i64)),
+        ("nthreads".into(), Json::Int(nthreads as i64)),
+        ("rows".into(), Json::Arr(rows)),
+    ]);
+    let out = "BENCH_verify.json";
+    write_json(out, &doc).expect("write BENCH_verify.json");
+    println!("wrote {out}");
+}

@@ -36,7 +36,7 @@ fn run_cfg(f: &Field3, cfg: &PipelineConfig) -> (f64, f64, f64, f64) {
     let t = Timer::start();
     let (back, _) = decompress_field(&bytes, &NativeEngine).expect("decompress");
     let td = t.secs();
-    (st.ratio(), psnr(&f.data, &back.data), tc, td)
+    (st.ratio(), psnr(&f.data, &back.data).expect("psnr defined"), tc, td)
 }
 
 fn table1(n: usize) {

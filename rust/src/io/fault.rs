@@ -1,0 +1,338 @@
+//! Deterministic fault injection for the end-to-end integrity harness.
+//!
+//! A [`FaultPlan`] is a *script*: which I/O operations fail transiently,
+//! which reads come back short, which bytes flip in flight, where the
+//! file appears to end. Built once (consuming builder), then armed on a
+//! real I/O path — the `.czs` [`crate::pipeline::dataset::FileSource`]
+//! via `DatasetOptions::open_with_faults`, or any `Read`/`Write` via
+//! the [`FaultReader`] / [`FaultWriter`] adapters, or a positioned-read
+//! file via [`FaultFile`]. Everything a plan does is a pure function of
+//! its script and the monotonic operation counter, so a failing run
+//! replays exactly (`CZB_FAULT_SEED` pins the script the test harness
+//! generates).
+//!
+//! The plan is immutable after build; the only mutable state is two
+//! atomic counters (operations seen, faults fired), which makes one
+//! plan safely shareable across the concurrent readers a `.czs` decode
+//! fans out — each scripted fault fires on exactly one operation index,
+//! whichever thread draws it.
+//!
+//! Fault classes and what the stack above must do with them:
+//!
+//! * **Transient errors** (`ErrorKind::Interrupted` / `WouldBlock`) —
+//!   retried in place by `FileSource::read_exact_at`'s bounded
+//!   retry-with-backoff; the caller never sees them unless they
+//!   persist past the budget.
+//! * **Short reads** — the retry loop continues where the read left
+//!   off; no layer may assume one call fills its buffer.
+//! * **Bit flips** — survive the read path untouched by design; the
+//!   CRC32C layers (czb chunk/header digests, czs section digests)
+//!   must detect them, and salvage decode must contain them.
+//! * **Truncation** — the file appears to end at byte N; reads past it
+//!   return EOF, which must surface as a clean error, never a hang or
+//!   panic.
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A scripted set of I/O faults. See the module docs for the classes.
+/// `Default`/[`FaultPlan::new`] is the empty plan (no faults), so a
+/// faulted code path with an empty plan behaves identically to the
+/// unfaulted one — the property the harness's control runs pin.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// `(operation index, kind)`: that numbered read/write attempt
+    /// fails with a transient error of this kind instead of running.
+    transient: Vec<(usize, std::io::ErrorKind)>,
+    /// `(operation index, max bytes)`: that attempt is capped to a
+    /// short (but nonzero) length.
+    short_reads: Vec<(usize, usize)>,
+    /// `(absolute byte offset, bit mask)`: data read over this offset
+    /// comes back with these bits flipped.
+    flips: Vec<(u64, u8)>,
+    /// The file pretends to end at this byte.
+    truncate_at: Option<u64>,
+    /// Monotonic count of read/write attempts routed through the plan.
+    ops: AtomicUsize,
+    /// Faults actually fired (a test's proof that its script ran).
+    injected: AtomicUsize,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Script attempt number `op` (0-based, counted across the whole
+    /// plan) to fail with a transient error of `kind`.
+    pub fn fail_op(mut self, op: usize, kind: std::io::ErrorKind) -> Self {
+        self.transient.push((op, kind));
+        self
+    }
+
+    /// Script attempt number `op` to read at most `max` bytes
+    /// (clamped to at least 1 — a zero-length "short read" would be
+    /// indistinguishable from EOF).
+    pub fn short_read(mut self, op: usize, max: usize) -> Self {
+        self.short_reads.push((op, max.max(1)));
+        self
+    }
+
+    /// Flip `mask`'s bits in any data read over absolute offset
+    /// `offset`.
+    pub fn flip_bit(mut self, offset: u64, mask: u8) -> Self {
+        self.flips.push((offset, mask));
+        self
+    }
+
+    /// Make the file appear to end at byte `n`.
+    pub fn truncate_at(mut self, n: u64) -> Self {
+        self.truncate_at = Some(n);
+        self
+    }
+
+    /// Faults fired so far.
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Read/write attempts routed through the plan so far.
+    pub fn ops(&self) -> usize {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    /// The file length the plan lets callers see.
+    pub fn visible_len(&self, real: u64) -> u64 {
+        match self.truncate_at {
+            Some(n) => n.min(real),
+            None => real,
+        }
+    }
+
+    /// Gate one read/write attempt at `offset` asking for `want`
+    /// bytes: returns the (possibly shortened) length to actually
+    /// request, or the scripted transient error. Each call consumes
+    /// one operation index.
+    pub fn before_read(&self, _offset: u64, want: usize) -> std::io::Result<usize> {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed);
+        if let Some(&(_, kind)) = self.transient.iter().find(|&&(o, _)| o == op) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Err(std::io::Error::new(kind, format!("injected transient fault at op {op}")));
+        }
+        if let Some(&(_, max)) = self.short_reads.iter().find(|&&(o, _)| o == op) {
+            if want > max {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Ok(max);
+            }
+        }
+        Ok(want)
+    }
+
+    /// Apply scripted bit flips to data just read from `offset`.
+    pub fn after_read(&self, offset: u64, buf: &mut [u8]) {
+        for &(at, mask) in &self.flips {
+            if at >= offset && at < offset + buf.len() as u64 {
+                buf[(at - offset) as usize] ^= mask;
+                self.injected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// A `Read` adapter driving a [`FaultPlan`] over any inner reader
+/// (tracks its own stream position for the flip offsets).
+pub struct FaultReader<R: Read> {
+    inner: R,
+    plan: FaultPlan,
+    pos: u64,
+}
+
+impl<R: Read> FaultReader<R> {
+    pub fn new(inner: R, plan: FaultPlan) -> Self {
+        Self { inner, plan, pos: 0 }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl<R: Read> Read for FaultReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut want = buf.len();
+        let visible = self.plan.visible_len(u64::MAX);
+        if self.pos >= visible {
+            return Ok(0);
+        }
+        want = want.min((visible - self.pos) as usize);
+        want = self.plan.before_read(self.pos, want)?;
+        let n = self.inner.read(&mut buf[..want])?;
+        self.plan.after_read(self.pos, &mut buf[..n]);
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+/// A `Write` adapter driving a [`FaultPlan`] over any inner writer:
+/// transient errors and short writes come from the same script
+/// machinery as reads; `truncate_at` becomes "disk full at byte N"
+/// (a hard `WriteZero` error, since a writer cannot salvage past a
+/// full disk).
+pub struct FaultWriter<W: Write> {
+    inner: W,
+    plan: FaultPlan,
+    pos: u64,
+}
+
+impl<W: Write> FaultWriter<W> {
+    pub fn new(inner: W, plan: FaultPlan) -> Self {
+        Self { inner, plan, pos: 0 }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for FaultWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if let Some(full_at) = self.plan.truncate_at {
+            if self.pos >= full_at {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "injected: disk full",
+                ));
+            }
+        }
+        let want = self.plan.before_read(self.pos, buf.len())?;
+        let n = self.inner.write(&buf[..want])?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A positioned-read file with a [`FaultPlan`] armed — the same shape
+/// [`crate::pipeline::dataset::FileSource`] exposes, for harness code
+/// that wants faulted `pread`-style access without a `.czs` archive.
+pub struct FaultFile {
+    file: std::fs::File,
+    len: u64,
+    plan: FaultPlan,
+}
+
+impl FaultFile {
+    pub fn open(path: &std::path::Path, plan: FaultPlan) -> std::io::Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(Self { file, len, plan })
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// One positioned read attempt through the plan (0 = EOF). May
+    /// return fewer bytes than asked, exactly like `pread(2)`.
+    pub fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<usize> {
+        let visible = self.plan.visible_len(self.len);
+        if offset >= visible {
+            return Ok(0);
+        }
+        let mut want = buf.len().min((visible - offset) as usize);
+        want = self.plan.before_read(offset, want)?;
+        let n = {
+            #[cfg(unix)]
+            {
+                use std::os::unix::fs::FileExt;
+                self.file.read_at(&mut buf[..want], offset)?
+            }
+            #[cfg(not(unix))]
+            {
+                use std::io::{Read, Seek, SeekFrom};
+                let mut f = &self.file;
+                f.seek(SeekFrom::Start(offset))?;
+                f.read(&mut buf[..want])?
+            }
+        };
+        self.plan.after_read(offset, &mut buf[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let data = b"0123456789abcdef".to_vec();
+        let mut r = FaultReader::new(data.as_slice(), FaultPlan::new());
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(r.plan().injected(), 0);
+    }
+
+    #[test]
+    fn scripted_faults_fire_once_at_their_op() {
+        let data = vec![0u8; 64];
+        let plan = FaultPlan::new()
+            .fail_op(0, std::io::ErrorKind::Interrupted)
+            .short_read(1, 3)
+            .flip_bit(10, 0x01);
+        let mut r = FaultReader::new(data.as_slice(), plan);
+        let mut buf = [0u8; 64];
+        // op 0: transient
+        let e = r.read(&mut buf).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+        // op 1: short read of at most 3 bytes
+        let n = r.read(&mut buf).unwrap();
+        assert_eq!(n, 3);
+        // draining picks up the flipped bit at absolute offset 10
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        let mut whole = buf[..n].to_vec();
+        whole.extend_from_slice(&rest);
+        assert_eq!(whole.len(), 64);
+        assert_eq!(whole[10], 0x01);
+        assert!(whole.iter().enumerate().all(|(i, &b)| i == 10 || b == 0));
+        assert_eq!(r.plan().injected(), 3);
+    }
+
+    #[test]
+    fn truncation_reads_eof_and_writes_disk_full() {
+        let data = vec![7u8; 32];
+        let mut r = FaultReader::new(data.as_slice(), FaultPlan::new().truncate_at(20));
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, vec![7u8; 20]);
+
+        let mut w = FaultWriter::new(Vec::new(), FaultPlan::new().truncate_at(5));
+        w.write_all(&[1, 2, 3]).unwrap();
+        w.write_all(&[4, 5]).unwrap();
+        let err = w.write_all(&[6]).unwrap_err();
+        assert!(err.to_string().contains("disk full"), "{err}");
+        assert_eq!(w.into_inner(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn writer_transients_and_short_writes_fire_too() {
+        let plan = FaultPlan::new()
+            .fail_op(1, std::io::ErrorKind::Interrupted)
+            .short_read(2, 2);
+        let mut w = FaultWriter::new(Vec::new(), plan);
+        assert_eq!(w.write(b"ab").unwrap(), 2); // op 0: clean
+        let e = w.write(b"cd").unwrap_err(); // op 1: transient
+        assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+        assert_eq!(w.write(b"cdef").unwrap(), 2); // op 2: short
+        assert_eq!(w.plan().injected(), 2);
+        assert_eq!(w.into_inner(), b"abcd".to_vec());
+    }
+}

@@ -1,6 +1,9 @@
 //! I/O layer: the `h5lite` container (HDF5 substitute — see DESIGN.md §4),
-//! raw binary readers, the exscan-offset shared-file parallel writer, and
-//! filesystem throughput measurement (HACC-IO-style baseline).
+//! raw binary readers, the exscan-offset shared-file parallel writer,
+//! filesystem throughput measurement (HACC-IO-style baseline), and a
+//! deterministic fault-injection harness ([`fault`]) for proving the
+//! integrity layers end to end.
+pub mod fault;
 pub mod h5lite;
 pub mod parallel;
 pub mod raw;

@@ -260,7 +260,60 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `czb decompress --salvage`: decode every intact chunk of a damaged
+/// file, zero-fill the corrupt ones, and enumerate what was lost. Exits
+/// 3 when anything was lost so scripts can tell a lossy recovery from a
+/// clean decode.
+fn cmd_decompress_salvage(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let mut cfg = config_of(args)?;
+    cfg.nthreads = threads_of(args, 0)?;
+    let engine = session_of(args, &cfg)?;
+    let t = std::time::Instant::now();
+    let reports = coordinator::salvage_file(&input, &out, &engine)?;
+    let mut damaged = false;
+    for (name, r) in &reports {
+        match r {
+            Ok(rep) if rep.is_clean() => {
+                println!("  {:>8}: clean ({} chunks)", name, rep.total_chunks);
+            }
+            Ok(rep) => {
+                damaged = true;
+                println!(
+                    "  {:>8}: salvaged {}/{} chunks ({} blocks zero-filled)",
+                    name,
+                    rep.salvaged_chunks(),
+                    rep.total_chunks,
+                    rep.lost_blocks
+                );
+                for (idx, why) in &rep.corrupt_chunks {
+                    println!("           chunk {idx}: {why}");
+                }
+            }
+            Err(e) => {
+                damaged = true;
+                println!("  {name:>8}: unreadable, skipped: {e}");
+            }
+        }
+    }
+    println!(
+        "{} -> {} ({:.3}s, {} threads)",
+        input.display(),
+        out.display(),
+        t.elapsed().as_secs_f64(),
+        engine.threads(),
+    );
+    if damaged {
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
+    if args.flag("salvage") {
+        return cmd_decompress_salvage(args);
+    }
     let input = args.req("in")?;
     let out = PathBuf::from(args.req("out")?);
     let inputs: Vec<&str> = input.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
@@ -469,6 +522,59 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `czb verify`: walk every checksum of a `.czb`/`.czs` file without
+/// writing anything; `--deep` additionally decodes each quantity and
+/// reports CR + idempotence PSNR. Exit 0 = clean, 3 = corrupt content,
+/// 1 = unreadable file, 2 = usage error.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let deep = args.flag("deep");
+    let mut cfg = config_of(args)?;
+    cfg.nthreads = threads_of(args, 0)?;
+    let engine = session_of(args, &cfg)?;
+    let t = std::time::Instant::now();
+    let report = coordinator::verify_file(&input, deep, &engine)?;
+    for e in &report.entries {
+        match &e.outcome {
+            Ok(r) if r.is_clean() => {
+                let mut extra = String::new();
+                if let Some(cr) = e.compression_ratio {
+                    extra.push_str(&format!("  CR {cr:.2}"));
+                }
+                if let Some(p) = e.psnr_db {
+                    extra.push_str(&format!("  idempotence PSNR {p:.1} dB"));
+                }
+                println!("  {:>8}: ok ({} chunks{extra})", e.name, r.total_chunks);
+            }
+            Ok(r) => {
+                println!(
+                    "  {:>8}: CORRUPT ({}/{} chunks bad, {} blocks affected)",
+                    e.name,
+                    r.corrupt_chunks.len(),
+                    r.total_chunks,
+                    r.lost_blocks
+                );
+                for (idx, why) in &r.corrupt_chunks {
+                    println!("           chunk {idx}: {why}");
+                }
+            }
+            Err(why) => println!("  {:>8}: CORRUPT ({why})", e.name),
+        }
+    }
+    println!(
+        "{}: {} ({} quantities, {}{:.3}s)",
+        input.display(),
+        if report.is_clean() { "clean" } else { "CORRUPT" },
+        report.entries.len(),
+        if deep { "deep, " } else { "" },
+        t.elapsed().as_secs_f64(),
+    );
+    if !report.is_clean() {
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
 fn cmd_codecs() -> Result<()> {
     println!("registered stage-2 codecs (--stage2 accepts any name or alias, case-insensitive):");
     for c in cubismz::codec::stage2::REGISTRY {
@@ -510,6 +616,8 @@ USAGE: czb <command> [flags]
   decompress  --in f.czb --out f.h5l [--engine native|pjrt] [--threads N (0 = all cores)]
               (--in a.czb,b.czb decompresses the streams concurrently on one engine
                into --out DIR/<stem>.h5l; [--jobs N] as above)
+              [--salvage: decode every intact chunk of a damaged .czb or .czs,
+               zero-fill corrupt chunks and list them; exit 3 if anything was lost]
   recompress  --in f.czb --out g.czb [same flags as compress]
   compress-dataset    --in f.h5l --out f.czs [--qoi p,rho] [same scheme flags as compress]
                       (all quantities through one Engine session into one .czs archive,
@@ -517,6 +625,11 @@ USAGE: czb <command> [flags]
   decompress-dataset  --in f.czs --out f.h5l [--threads N] [--engine native|pjrt]
                       [--cache-chunks N (shared decoded-chunk cache size, default 32)]
                       (lazy section reads; quantities decode concurrently on one pool)
+  verify      --in f.czb|f.czs [--deep] [--threads N] [--engine native|pjrt]
+              (walk every checksum — v4 header digest, per-chunk CRC32C, czs section
+               digests — without decoding; --deep fully decodes each quantity and
+               reports CR + idempotence PSNR)
+              exit codes: 0 clean, 3 corrupt content, 1 unreadable file, 2 usage
   codecs      (list the registered stage-2 codecs, ids, efforts and aliases)
   info        --in f.czb | f.czs  [--cache-chunks N]  (czs archives open lazily)
   psnr        --ref f.h5l --dataset NAME --in f.czb"
@@ -544,6 +657,7 @@ fn main() {
         "recompress" => cmd_recompress(&args),
         "compress-dataset" => cmd_compress_dataset(&args),
         "decompress-dataset" => cmd_decompress_dataset(&args),
+        "verify" => cmd_verify(&args),
         "codecs" => cmd_codecs(),
         "info" => cmd_info(&args),
         "psnr" => cmd_psnr(&args),

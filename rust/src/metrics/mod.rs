@@ -1,37 +1,60 @@
 //! Quality metrics: compression ratio and PSNR (paper §3, eq. 1).
+//!
+//! Every metric returns `Option` rather than asserting: these run over
+//! *decoded* data, which after a salvage decode may be empty,
+//! length-mismatched or hole-ridden — a verification report must say
+//! "undefined" for such inputs, not bring the tool down mid-report.
 
-/// Mean squared error between two equally sized datasets.
-pub fn mse(r: &[f32], d: &[f32]) -> f64 {
-    assert_eq!(r.len(), d.len());
-    assert!(!r.is_empty());
+/// Mean squared error between two equally sized datasets. `None` when
+/// the inputs are empty or differ in length (the metric is undefined,
+/// not zero).
+pub fn mse(r: &[f32], d: &[f32]) -> Option<f64> {
+    if r.is_empty() || r.len() != d.len() {
+        return None;
+    }
     let mut acc = 0.0f64;
     for (a, b) in r.iter().zip(d) {
         let e = (*a as f64) - (*b as f64);
         acc += e * e;
     }
-    acc / r.len() as f64
+    Some(acc / r.len() as f64)
 }
 
 /// Peak signal-to-noise ratio per paper eq. (1):
 /// `PSNR = 20 log10( (max_R - min_R) / (2 sqrt(MSE)) )` in dB.
-/// Identical datasets give +inf.
-pub fn psnr(reference: &[f32], decoded: &[f32]) -> f64 {
+/// Identical datasets give `Some(+inf)`. The reference range scans
+/// finite values only (a stray NaN in a salvaged field must not poison
+/// the whole figure); `None` when the reference has no finite values,
+/// the inputs are empty/mismatched, or the error itself is non-finite.
+pub fn psnr(reference: &[f32], decoded: &[f32]) -> Option<f64> {
     let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
     for &v in reference {
-        lo = lo.min(v as f64);
-        hi = hi.max(v as f64);
+        if v.is_finite() {
+            lo = lo.min(v as f64);
+            hi = hi.max(v as f64);
+        }
     }
-    let m = mse(reference, decoded);
+    if lo > hi {
+        return None; // no finite reference values
+    }
+    let m = mse(reference, decoded)?;
     if m == 0.0 {
-        return f64::INFINITY;
+        return Some(f64::INFINITY);
     }
-    20.0 * ((hi - lo) / (2.0 * m.sqrt())).log10()
+    if !m.is_finite() {
+        return None;
+    }
+    Some(20.0 * ((hi - lo) / (2.0 * m.sqrt())).log10())
 }
 
 /// Compression ratio: raw bytes / compressed bytes (incl. metadata).
-pub fn compression_ratio(raw_bytes: usize, compressed_bytes: usize) -> f64 {
-    assert!(compressed_bytes > 0);
-    raw_bytes as f64 / compressed_bytes as f64
+/// `None` for zero compressed bytes (nothing was produced — a failed
+/// or skipped quantity, not an infinitely good one).
+pub fn compression_ratio(raw_bytes: usize, compressed_bytes: usize) -> Option<f64> {
+    if compressed_bytes == 0 {
+        return None;
+    }
+    Some(raw_bytes as f64 / compressed_bytes as f64)
 }
 
 #[cfg(test)]
@@ -41,7 +64,7 @@ mod tests {
     #[test]
     fn identical_is_infinite() {
         let a = vec![1.0f32, 2.0, 3.0];
-        assert!(psnr(&a, &a).is_infinite());
+        assert!(psnr(&a, &a).unwrap().is_infinite());
     }
 
     #[test]
@@ -49,7 +72,7 @@ mod tests {
         // range 1, uniform error 0.5 -> mse 0.25 -> 20 log10(1/(2*0.5)) = 0 dB
         let r = vec![0.0f32, 1.0];
         let d = vec![0.5f32, 0.5];
-        assert!((psnr(&r, &d) - 0.0).abs() < 1e-9);
+        assert!((psnr(&r, &d).unwrap() - 0.0).abs() < 1e-9);
     }
 
     #[test]
@@ -57,17 +80,38 @@ mod tests {
         let r: Vec<f32> = (0..100).map(|i| i as f32).collect();
         let d1: Vec<f32> = r.iter().map(|v| v + 0.1).collect();
         let d2: Vec<f32> = r.iter().map(|v| v + 0.01).collect();
-        assert!(psnr(&r, &d2) > psnr(&r, &d1) + 19.0);
+        assert!(psnr(&r, &d2).unwrap() > psnr(&r, &d1).unwrap() + 19.0);
     }
 
     #[test]
     fn cr_basic() {
-        assert_eq!(compression_ratio(100, 10), 10.0);
+        assert_eq!(compression_ratio(100, 10), Some(10.0));
+        assert_eq!(compression_ratio(100, 0), None);
     }
 
     #[test]
-    #[should_panic]
-    fn mse_len_mismatch_panics() {
-        mse(&[1.0], &[1.0, 2.0]);
+    fn undefined_inputs_are_none_not_panics() {
+        assert_eq!(mse(&[1.0], &[1.0, 2.0]), None);
+        assert_eq!(mse(&[], &[]), None);
+        assert_eq!(psnr(&[], &[]), None);
+        assert_eq!(psnr(&[1.0], &[1.0, 2.0]), None);
+    }
+
+    #[test]
+    fn nan_reference_does_not_poison_the_range() {
+        // a salvaged hole (or upstream NaN) in the reference: the range
+        // comes from the finite values, the MSE still counts every pair
+        let r = vec![0.0f32, f32::NAN, 1.0];
+        let d = vec![0.5f32, f32::NAN, 0.5];
+        // NaN - NaN = NaN -> mse non-finite -> undefined, but no panic
+        assert_eq!(psnr(&r, &d), None);
+        // all-NaN reference has no range at all
+        assert_eq!(psnr(&[f32::NAN; 4], &[0.0; 4]), None);
+        // finite pairs with a NaN-free error stay defined
+        let r = vec![0.0f32, 1.0, f32::INFINITY];
+        let d = vec![0.5f32, 0.5, f32::INFINITY];
+        // inf - inf = NaN -> undefined; drop the pair and it's 0 dB
+        assert_eq!(psnr(&r, &d), None);
+        assert!((psnr(&r[..2], &d[..2]).unwrap() - 0.0).abs() < 1e-9);
     }
 }

@@ -326,6 +326,7 @@ pub(crate) fn compress_field_core(
         global_max: stats.max as f32,
         nblocks: nblocks as u32,
         chunks,
+        chunk_crcs: merged.iter().map(|c| crate::util::crc32c::crc32c(&c.payload)).collect(),
     };
     let stats = CompressStats {
         raw_bytes: field.nbytes(),

@@ -57,8 +57,14 @@ pub const DEFAULT_DATASET_CACHE_CHUNKS: usize = 32;
 pub const CZS_MAGIC: &[u8; 4] = b"CZS1";
 /// Trailer magic, the last four bytes of every archive.
 pub const CZS_TRAILER_MAGIC: &[u8; 4] = b"CZSE";
+/// Container version the writer emits. v2 (current) adds a CRC32C per
+/// trailer entry, covering the quantity's whole `.czb` section; v1
+/// archives (no digest column) still open, with `crc: None`.
+pub const CZS_VERSION: u8 = 2;
 const HEADER_LEN: usize = 8;
 const TRAILER_TAIL: usize = 12; // u32 count | u32 table_bytes | magic
+/// Transient-error retry budget for positioned file reads.
+const READ_RETRIES: u32 = 8;
 
 /// One quantity's location inside a `.czs` archive.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -68,6 +74,9 @@ pub struct QuantityEntry {
     pub offset: u64,
     /// Length of the section in bytes.
     pub len: u64,
+    /// CRC32C of the whole section (v2 trailers); `None` on v1
+    /// archives, which carry no digests.
+    pub crc: Option<u32>,
 }
 
 /// Streaming `.czs` writer: sections go out as they are compressed, the
@@ -86,7 +95,7 @@ impl<W: Write> DatasetWriter<W> {
     pub fn new(mut sink: W) -> std::io::Result<Self> {
         let mut header = [0u8; HEADER_LEN];
         header[..4].copy_from_slice(CZS_MAGIC);
-        header[4] = 1; // version
+        header[4] = CZS_VERSION;
         sink.write_all(&header)?;
         Ok(Self { sink, pos: HEADER_LEN as u64, entries: Vec::new() })
     }
@@ -102,12 +111,17 @@ impl<W: Write> DatasetWriter<W> {
     ) -> std::io::Result<CompressStats> {
         self.check_name(name)?;
         let offset = self.pos;
-        let mut counter = CountingWriter { inner: &mut self.sink, written: 0 };
+        let mut counter = CountingWriter {
+            inner: &mut self.sink,
+            written: 0,
+            crc: crate::util::crc32c::Crc32c::new(),
+        };
         let result = engine.compress(field, name, params, &mut counter);
         let len = counter.written;
+        let crc = counter.crc.finish();
         match result {
             Ok(stats) => {
-                self.push_entry(name, offset, len);
+                self.push_entry(name, offset, len, crc);
                 Ok(stats)
             }
             Err(e) => {
@@ -136,7 +150,7 @@ impl<W: Write> DatasetWriter<W> {
         }
         let offset = self.pos;
         self.sink.write_all(czb)?;
-        self.push_entry(name, offset, czb.len() as u64);
+        self.push_entry(name, offset, czb.len() as u64, crate::util::crc32c::crc32c(czb));
         Ok(())
     }
 
@@ -156,9 +170,9 @@ impl<W: Write> DatasetWriter<W> {
         Ok(())
     }
 
-    fn push_entry(&mut self, name: &str, offset: u64, len: u64) {
+    fn push_entry(&mut self, name: &str, offset: u64, len: u64, crc: u32) {
         self.pos += len;
-        self.entries.push(QuantityEntry { name: name.to_string(), offset, len });
+        self.entries.push(QuantityEntry { name: name.to_string(), offset, len, crc: Some(crc) });
     }
 
     /// Quantities written so far.
@@ -174,6 +188,8 @@ impl<W: Write> DatasetWriter<W> {
             table.extend_from_slice(e.name.as_bytes());
             table.extend_from_slice(&e.offset.to_le_bytes());
             table.extend_from_slice(&e.len.to_le_bytes());
+            let crc = e.crc.expect("writer entries always carry a digest");
+            table.extend_from_slice(&crc.to_le_bytes());
         }
         self.sink.write_all(&table)?;
         self.sink.write_all(&(self.entries.len() as u32).to_le_bytes())?;
@@ -184,17 +200,20 @@ impl<W: Write> DatasetWriter<W> {
     }
 }
 
-/// Counts bytes on their way to the shared sink, so section lengths
-/// don't require a seekable writer.
+/// Counts bytes on their way to the shared sink and accumulates the
+/// section digest as they stream by, so neither lengths nor CRCs
+/// require a seekable writer.
 struct CountingWriter<'a, W: Write> {
     inner: &'a mut W,
     written: u64,
+    crc: crate::util::crc32c::Crc32c,
 }
 
 impl<W: Write> Write for CountingWriter<'_, W> {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
         let n = self.inner.write(buf)?;
         self.written += n as u64;
+        self.crc.update(&buf[..n]);
         Ok(n)
     }
     fn flush(&mut self) -> std::io::Result<()> {
@@ -208,6 +227,12 @@ pub struct FileSource {
     file: std::fs::File,
     len: u64,
     path: PathBuf,
+    /// Scripted faults armed on every positioned read
+    /// ([`DatasetOptions::open_with_faults`]); `None` in production
+    /// opens. Sits on the real I/O boundary so the retry loop and the
+    /// checksum layers above are exercised exactly as a flaky disk
+    /// would.
+    faults: Option<crate::io::fault::FaultPlan>,
     /// Non-unix fallback: without `pread`, positioned reads share a
     /// seek cursor and need a lock.
     #[cfg(not(unix))]
@@ -220,25 +245,95 @@ impl FileSource {
             file,
             len,
             path,
+            faults: None,
             #[cfg(not(unix))]
             lock: Mutex::new(()),
         }
     }
 
-    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
-        #[cfg(unix)]
-        {
-            use std::os::unix::fs::FileExt;
-            self.file.read_exact_at(buf, offset)
+    /// One positioned read attempt, routed through the fault plan when
+    /// one is armed. Returns the bytes actually read (0 = end of file),
+    /// which may be fewer than asked — exactly the `pread(2)` contract
+    /// the retry loop above is written against.
+    fn read_at_once(&self, buf: &mut [u8], offset: u64) -> std::io::Result<usize> {
+        let mut want = buf.len();
+        if let Some(plan) = &self.faults {
+            let visible = plan.visible_len(self.len);
+            if offset >= visible {
+                return Ok(0);
+            }
+            want = want.min((visible - offset) as usize);
+            want = plan.before_read(offset, want)?;
         }
-        #[cfg(not(unix))]
-        {
-            use std::io::{Read, Seek, SeekFrom};
-            let _g = self.lock.lock().unwrap();
-            let mut f = &self.file;
-            f.seek(SeekFrom::Start(offset))?;
-            f.read_exact(buf)
+        let n = {
+            #[cfg(unix)]
+            {
+                use std::os::unix::fs::FileExt;
+                self.file.read_at(&mut buf[..want], offset)?
+            }
+            #[cfg(not(unix))]
+            {
+                use std::io::{Read, Seek, SeekFrom};
+                let _g = self.lock.lock().unwrap();
+                let mut f = &self.file;
+                f.seek(SeekFrom::Start(offset))?;
+                f.read(&mut buf[..want])?
+            }
+        };
+        if let Some(plan) = &self.faults {
+            plan.after_read(offset, &mut buf[..n]);
         }
+        Ok(n)
+    }
+
+    /// Positioned exact read with bounded retry: transient
+    /// `Interrupted` / `WouldBlock` errors (signal delivery, saturated
+    /// network filesystems) are retried up to [`READ_RETRIES`] times —
+    /// `WouldBlock` with a short growing backoff, `Interrupted`
+    /// immediately — and short reads continue where they left off. A
+    /// successful partial read resets the budget; anything persistent
+    /// or genuine (EOF mid-read, real I/O error) surfaces.
+    fn read_exact_at(&self, mut buf: &mut [u8], mut offset: u64) -> std::io::Result<()> {
+        let mut retries = 0u32;
+        while !buf.is_empty() {
+            match self.read_at_once(buf, offset) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "short read (file truncated?)",
+                    ))
+                }
+                Ok(n) => {
+                    let rest = std::mem::take(&mut buf);
+                    buf = &mut rest[n..];
+                    offset += n as u64;
+                    retries = 0;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted | std::io::ErrorKind::WouldBlock
+                    ) =>
+                {
+                    retries += 1;
+                    if retries > READ_RETRIES {
+                        return Err(std::io::Error::new(
+                            e.kind(),
+                            format!(
+                                "read at {offset} still failing after {READ_RETRIES} retries: {e}"
+                            ),
+                        ));
+                    }
+                    if e.kind() == std::io::ErrorKind::WouldBlock {
+                        std::thread::sleep(std::time::Duration::from_micros(
+                            50 << retries.min(8),
+                        ));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
     }
 }
 
@@ -288,14 +383,16 @@ impl SectionSource {
     }
 }
 
-fn check_archive_header(head: &[u8]) -> Result<(), String> {
+/// Validate the 8-byte archive header and return its version (1 or 2 —
+/// the version decides the trailer entry layout).
+fn check_archive_header(head: &[u8]) -> Result<u8, String> {
     if &head[..4] != CZS_MAGIC {
         return Err("bad czs magic".into());
     }
-    if head[4] != 1 {
+    if !(1..=CZS_VERSION).contains(&head[4]) {
         return Err(format!("bad czs version {}", head[4]));
     }
-    Ok(())
+    Ok(head[4])
 }
 
 fn parse_trailer_tail(tail: &[u8]) -> Result<(usize, usize), String> {
@@ -317,11 +414,15 @@ fn parse_entry_table(
     table: &[u8],
     count: usize,
     table_start: u64,
+    version: u8,
 ) -> Result<Vec<QuantityEntry>, String> {
-    // every entry serializes to >= 17 bytes (name_len + u64 offset +
-    // u64 len), so a count the table cannot hold is corrupt — reject
-    // it before sizing any allocation by it
-    if count > table.len() / 17 {
+    // v1 entries: u8 name_len | name | u64 offset | u64 len; v2 appends
+    // a u32 section CRC
+    let fixed = if version >= 2 { 20 } else { 16 };
+    // every entry serializes to >= 1 + fixed bytes, so a count the
+    // table cannot hold is corrupt — reject it before sizing any
+    // allocation by it
+    if count > table.len() / (1 + fixed) {
         return Err(format!(
             "czs entry count {count} impossible for a {}-byte table",
             table.len()
@@ -337,7 +438,7 @@ fn parse_entry_table(
         }
         let nl = table[pos] as usize;
         pos += 1;
-        if table.len() < pos + nl + 16 {
+        if table.len() < pos + nl + fixed {
             return Err("truncated czs table entry".into());
         }
         let name = std::str::from_utf8(&table[pos..pos + nl])
@@ -346,6 +447,13 @@ fn parse_entry_table(
         let offset = u64::from_le_bytes(table[pos..pos + 8].try_into().unwrap());
         let len = u64::from_le_bytes(table[pos + 8..pos + 16].try_into().unwrap());
         pos += 16;
+        let crc = if version >= 2 {
+            let c = u32::from_le_bytes(table[pos..pos + 4].try_into().unwrap());
+            pos += 4;
+            Some(c)
+        } else {
+            None
+        };
         let end = offset
             .checked_add(len)
             .ok_or_else(|| "czs section overflow".to_string())?;
@@ -355,7 +463,7 @@ fn parse_entry_table(
         if !seen.insert(name) {
             return Err(format!("duplicate czs quantity name {name}"));
         }
-        entries.push(QuantityEntry { name: name.to_string(), offset, len });
+        entries.push(QuantityEntry { name: name.to_string(), offset, len, crc });
     }
     if pos != table.len() {
         return Err("czs trailer table has trailing garbage".into());
@@ -398,6 +506,26 @@ impl DatasetOptions {
         )
     }
 
+    /// Lazily open an archive with a scripted fault plan armed on every
+    /// positioned read — the test seam the end-to-end fault-injection
+    /// harness ([`crate::io::fault`]) drives. Production opens never
+    /// pay for it: [`DatasetOptions::open`] leaves the plan `None`.
+    pub fn open_with_faults(
+        &self,
+        path: &Path,
+        faults: crate::io::fault::FaultPlan,
+    ) -> Result<Dataset, String> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| format!("opening {}: {e}", path.display()))?;
+        let len = file
+            .metadata()
+            .map_err(|e| format!("stat {}: {e}", path.display()))?
+            .len();
+        let mut src = FileSource::new(file, len, path.to_path_buf());
+        src.faults = Some(faults);
+        Dataset::from_source(SectionSource::File(src), self.cache_chunks)
+    }
+
     /// Parse an in-memory archive (everything resident up front).
     pub fn from_bytes(&self, bytes: Vec<u8>) -> Result<Dataset, String> {
         Dataset::from_source(SectionSource::Memory(bytes), self.cache_chunks)
@@ -428,6 +556,11 @@ pub struct Dataset {
     /// load error is cached like a payload so a truncated section fails
     /// consistently instead of re-reading.
     sections: Vec<OnceLock<Result<Vec<u8>, String>>>,
+    /// Lazily verified section digests (czs v2 trailers), one slot per
+    /// entry: the first decode to touch a section pays one CRC32C pass
+    /// over it, every later touch reuses the verdict. `crc: None`
+    /// entries (v1 archives) skip the check entirely.
+    digests: Vec<OnceLock<Result<(), String>>>,
     /// Shared across every [`BlockReader`] and whole-quantity decode
     /// this archive hands out.
     cache: Arc<ChunkCache>,
@@ -466,7 +599,7 @@ impl Dataset {
             return Err("czs archive too short".into());
         }
         let head = source.read_range(0, HEADER_LEN)?;
-        check_archive_header(&head)?;
+        let version = check_archive_header(&head)?;
         let tail_pos = total - TRAILER_TAIL as u64;
         let tail = source.read_range(tail_pos, TRAILER_TAIL)?;
         let (count, table_bytes) = parse_trailer_tail(&tail)?;
@@ -477,11 +610,12 @@ impl Dataset {
             return Err("czs trailer table overlaps header".into());
         }
         let table = source.read_range(table_start, table_bytes)?;
-        let entries = parse_entry_table(&table, count, table_start)?;
+        let entries = parse_entry_table(&table, count, table_start, version)?;
         let cache = Arc::new(ChunkCache::new(cache_chunks));
         let streams = entries.iter().map(|_| cache.register_stream()).collect();
         let sections = entries.iter().map(|_| OnceLock::new()).collect();
-        Ok(Self { source, entries, sections, cache, streams })
+        let digests = entries.iter().map(|_| OnceLock::new()).collect();
+        Ok(Self { source, entries, sections, digests, cache, streams })
     }
 
     /// Quantities in archive order.
@@ -498,6 +632,17 @@ impl Dataset {
     /// in-memory buffer.
     pub fn is_file_backed(&self) -> bool {
         matches!(self.source, SectionSource::File(_))
+    }
+
+    /// Faults the armed [`crate::io::fault::FaultPlan`] has fired so
+    /// far — `None` unless the archive came from
+    /// [`DatasetOptions::open_with_faults`]. The harness's proof that a
+    /// scripted fault actually ran through the real I/O path.
+    pub fn faults_injected(&self) -> Option<usize> {
+        match &self.source {
+            SectionSource::File(f) => f.faults.as_ref().map(|p| p.injected()),
+            SectionSource::Memory(_) => None,
+        }
     }
 
     /// Total serialized archive size in bytes.
@@ -548,13 +693,42 @@ impl Dataset {
 
     /// The raw `.czb` section bytes of the entry at `idx`, loading them
     /// on first touch for file-backed sources (single home of the
-    /// offset arithmetic).
+    /// offset arithmetic). When the trailer carries a section digest
+    /// (czs v2), the first touch also verifies it — one CRC pass per
+    /// section per handle, catching damage anywhere in the section
+    /// before any decode interprets the bytes.
     pub(crate) fn section_at(&self, idx: usize) -> Result<&[u8], String> {
         let e = &self.entries[idx];
-        match &self.source {
+        let bytes = self.section_at_unverified(idx)?;
+        if let Some(want) = e.crc {
+            self.digests[idx]
+                .get_or_init(|| {
+                    let got = crate::util::crc32c::crc32c(bytes);
+                    if got == want {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "section {}: digest mismatch (stored {want:#010x}, computed {got:#010x})",
+                            e.name
+                        ))
+                    }
+                })
+                .clone()?;
+        }
+        Ok(bytes)
+    }
+
+    /// [`Dataset::section_at`] minus the trailer-digest gate: salvage
+    /// decodes want the bytes even when the section-wide digest already
+    /// failed, because the per-chunk checksums inside the section
+    /// localize damage far more precisely than one section-wide
+    /// verdict.
+    pub(crate) fn section_at_unverified(&self, idx: usize) -> Result<&[u8], String> {
+        let e = &self.entries[idx];
+        let bytes: &[u8] = match &self.source {
             SectionSource::Memory(bytes) => {
                 // bounds proven at parse time: offset >= header, end <= table
-                Ok(&bytes[e.offset as usize..(e.offset + e.len) as usize])
+                &bytes[e.offset as usize..(e.offset + e.len) as usize]
             }
             SectionSource::File(f) => {
                 let slot = self.sections[idx].get_or_init(|| {
@@ -571,11 +745,12 @@ impl Dataset {
                     Ok(buf)
                 });
                 match slot {
-                    Ok(b) => Ok(b.as_slice()),
-                    Err(err) => Err(err.clone()),
+                    Ok(b) => b.as_slice(),
+                    Err(err) => return Err(err.clone()),
                 }
             }
-        }
+        };
+        Ok(bytes)
     }
 
     /// The raw `.czb` section of a quantity, loading it on first touch
@@ -950,8 +1125,8 @@ mod tests {
         w.write_quantity(&engine, &f, "qa", &params).unwrap();
         w.write_quantity(&engine, &f, "qb", &params).unwrap();
         let bytes = w.finish().unwrap();
-        // table layout: 2 entries x (1 + 2 + 16) = 38 bytes before the tail
-        let table_start = bytes.len() - TRAILER_TAIL - 38;
+        // table layout: 2 entries x (1 + 2 + 16 + 4) = 46 bytes before the tail
+        let table_start = bytes.len() - TRAILER_TAIL - 46;
         // corrupt the first name to invalid UTF-8
         let mut bad = bytes.clone();
         bad[table_start + 1] = 0xFF;
@@ -960,7 +1135,7 @@ mod tests {
         assert!(err.contains("UTF-8"), "{err}");
         // rename the second entry to alias the first
         let mut dup = bytes.clone();
-        let second_name = table_start + 19 + 1;
+        let second_name = table_start + 23 + 1;
         dup[second_name..second_name + 2].copy_from_slice(b"qa");
         let err = Dataset::from_bytes(dup).unwrap_err();
         assert!(err.contains("duplicate"), "{err}");
@@ -1047,8 +1222,8 @@ mod tests {
         let mut w = DatasetWriter::new(Vec::new()).unwrap();
         w.write_quantity(&engine, &f, "p", &params).unwrap();
         let bytes = w.finish().unwrap();
-        // entry layout: u8 len | name | u64 offset | u64 len
-        let table_start = bytes.len() - TRAILER_TAIL - (1 + 1 + 16);
+        // entry layout: u8 len | name | u64 offset | u64 len | u32 crc
+        let table_start = bytes.len() - TRAILER_TAIL - (1 + 1 + 16 + 4);
         let len_pos = table_start + 1 + 1 + 8;
         let mut bad = bytes.clone();
         bad[len_pos..len_pos + 8].copy_from_slice(&u64::MAX.to_le_bytes());
@@ -1057,5 +1232,79 @@ mod tests {
         let path = tmp("oob.czs");
         std::fs::write(&path, &bad).unwrap();
         assert!(Dataset::open(&path).is_err());
+    }
+
+    #[test]
+    fn v1_archives_still_parse_without_digests() {
+        // hand-build the pre-digest layout: version byte 1 and 17-byte
+        // minimum trailer entries with no CRC column — what every
+        // archive written before czs v2 looks like on disk
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 41);
+        let (czb, _) = engine.compress_vec(&f, "p", &params);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CZS_MAGIC);
+        bytes.push(1);
+        bytes.extend_from_slice(&[0u8; 3]);
+        let offset = bytes.len() as u64;
+        bytes.extend_from_slice(&czb);
+        let mut table = Vec::new();
+        table.push(1u8);
+        table.extend_from_slice(b"p");
+        table.extend_from_slice(&offset.to_le_bytes());
+        table.extend_from_slice(&(czb.len() as u64).to_le_bytes());
+        let table_len = table.len() as u32;
+        bytes.extend_from_slice(&table);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&table_len.to_le_bytes());
+        bytes.extend_from_slice(CZS_TRAILER_MAGIC);
+        let ds = Dataset::from_bytes(bytes).unwrap();
+        assert_eq!(ds.entries()[0].crc, None);
+        let (back, _) = ds.read_quantity("p", &engine).unwrap();
+        let (expected, _) = engine.decompress_bytes(&czb).unwrap();
+        assert!(bits_equal(&back.data, &expected.data));
+        // an unknown future version is refused up front
+        let mut future = Vec::new();
+        future.extend_from_slice(CZS_MAGIC);
+        future.push(CZS_VERSION + 1);
+        future.extend_from_slice(&vec![0u8; 32]);
+        let err = Dataset::from_bytes(future).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn section_digests_catch_flipped_bytes_on_first_touch() {
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let path = tmp("digest.czs");
+        let mut w = Dataset::create(&path).unwrap();
+        for (i, name) in ["q0", "q1"].iter().enumerate() {
+            w.write_quantity(&engine, &smooth_field(32, 1500 + i as u64), name, &params)
+                .unwrap();
+        }
+        w.finish().unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // open first, then flip one payload byte deep inside q1 on disk:
+        // the digest fires at q1's lazy load, q0 is untouched
+        let ds = Dataset::open(&path).unwrap();
+        assert!(ds.entries().iter().all(|e| e.crc.is_some()));
+        let target = (ds.entries()[1].offset + ds.entries()[1].len / 2) as usize;
+        let mut damaged = clean.clone();
+        damaged[target] ^= 0x10;
+        std::fs::write(&path, &damaged).unwrap();
+        let err = ds.read_quantity("q1", &engine).unwrap_err();
+        assert!(err.contains("digest mismatch"), "{err}");
+        assert!(err.contains("q1"), "{err}");
+        // the verdict is cached, and the sibling still decodes
+        assert!(ds.read_quantity("q1", &engine).is_err());
+        assert!(ds.read_quantity("q0", &engine).is_ok());
+        // the in-memory path checks the same digest
+        let ds2 = Dataset::from_bytes(damaged).unwrap();
+        assert!(ds2.read_quantity("q1", &engine).unwrap_err().contains("digest mismatch"));
+        assert!(ds2.read_quantity("q0", &engine).is_ok());
+        // and the clean bytes still round-trip
+        let ds3 = Dataset::from_bytes(clean).unwrap();
+        assert!(ds3.read_quantity("q1", &engine).is_ok());
     }
 }

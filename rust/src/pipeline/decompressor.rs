@@ -152,6 +152,7 @@ fn decode_chunk_into(
 ) -> Result<(), String> {
     let entry = &file.chunks[idx];
     check_rawsize(file, entry, idx)?;
+    verify_chunk_crc(file, payload, idx)?;
     let expect = file.chunk_stage2_len(entry);
     raw.clear();
     match file.shuffle {
@@ -247,6 +248,26 @@ fn validate_chunk_index(file: &CzbFile) -> Result<(), String> {
     }
     if next != file.nblocks {
         return Err(format!("chunks cover {next} of {} blocks", file.nblocks));
+    }
+    Ok(())
+}
+
+/// Verify a chunk payload against its stored CRC32C. v≥4 archives carry
+/// one digest per chunk ([`CzbFile::chunk_crcs`]); older files carry
+/// none and skip the check (their decode stays bit-identical). Runs
+/// before any inflate, so a flipped payload bit is classified as a
+/// checksum mismatch instead of surfacing as a downstream codec error —
+/// or worse, silently wrong floats under a codec that cannot notice.
+fn verify_chunk_crc(file: &CzbFile, payload: &[u8], idx: usize) -> Result<(), String> {
+    if file.version >= 4 {
+        if let Some(&want) = file.chunk_crcs.get(idx) {
+            let got = crate::util::crc32c::crc32c(payload);
+            if got != want {
+                return Err(format!(
+                    "chunk {idx}: payload checksum mismatch (stored {want:#010x}, computed {got:#010x})"
+                ));
+            }
+        }
     }
     Ok(())
 }
@@ -525,6 +546,167 @@ pub(crate) fn decompress_field_core(
     Ok((field, file))
 }
 
+/// What an integrity walk or salvage decode found, chunk by chunk.
+/// Produced by [`verify_stream`] (checksum-only), the salvage decoders
+/// ([`decompress_field_salvage`], `Engine::decompress_salvage`), and
+/// `czb verify`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DecodeReport {
+    /// Chunks the stream's index declares.
+    pub total_chunks: usize,
+    /// `(chunk index, error)` for every chunk that failed its checksum,
+    /// bounds check or decode — sorted by index, at most one entry per
+    /// chunk, empty for a clean stream.
+    pub corrupt_chunks: Vec<(usize, String)>,
+    /// Blocks belonging to the corrupt chunks (zero-filled by salvage).
+    pub lost_blocks: usize,
+}
+
+impl DecodeReport {
+    /// No corruption found.
+    pub fn is_clean(&self) -> bool {
+        self.corrupt_chunks.is_empty()
+    }
+
+    /// Chunks that survived.
+    pub fn salvaged_chunks(&self) -> usize {
+        self.total_chunks - self.corrupt_chunks.len()
+    }
+}
+
+/// Checksum-only integrity walk over serialized `.czb` bytes: parse the
+/// header (v≥4 headers are digest-verified by `parse_header` itself),
+/// validate the chunk index, then bounds-check and CRC every chunk
+/// payload without inflating anything — reading each compressed byte
+/// once is what makes `czb verify` fast enough to run routinely.
+///
+/// `Err` means the stream is unreadable (bad magic, truncated or
+/// digest-corrupt header, inconsistent chunk index); `Ok` with a
+/// non-empty [`DecodeReport::corrupt_chunks`] means the header is sound
+/// but those payloads are damaged. Files below v4 carry no payload
+/// checksums, so for them this only proves the index and bounds are
+/// consistent — `czb verify --deep` actually decodes and catches what a
+/// missing checksum cannot.
+pub fn verify_stream(bytes: &[u8]) -> Result<DecodeReport, String> {
+    let (file, _header_len) = CzbFile::parse_header(bytes)?;
+    validate_chunk_index(&file)?;
+    let mut report = DecodeReport {
+        total_chunks: file.chunks.len(),
+        ..DecodeReport::default()
+    };
+    for (i, entry) in file.chunks.iter().enumerate() {
+        let r = chunk_payload(bytes, entry).and_then(|p| verify_chunk_crc(&file, p, i));
+        if let Err(e) = r {
+            report.lost_blocks += entry.nblocks as usize;
+            report.corrupt_chunks.push((i, e));
+        }
+    }
+    Ok(report)
+}
+
+/// Salvage decompression (serial): decode every intact chunk, zero-fill
+/// the blocks of every corrupt one, and report what was lost instead of
+/// failing the stream. See [`decompress_field_salvage_core`].
+pub fn decompress_field_salvage(
+    bytes: &[u8],
+    engine: &dyn WaveletEngine,
+) -> Result<(Field3, CzbFile, DecodeReport), String> {
+    decompress_field_salvage_core(&ScopedExec, bytes, engine, 1)
+}
+
+/// Salvage decompression on the given executor: the graceful-degradation
+/// counterpart of [`decompress_field_core`]. Chunks decode in parallel
+/// exactly like the strict chunk-granular path, but there is no abort
+/// flag — a chunk that fails its checksum, inflate or stage-1 decode is
+/// zero-filled (all of its blocks, erasing any partially scattered
+/// output so corrupt regions are deterministic zeros rather than
+/// garbage) and recorded in the [`DecodeReport`], while every other
+/// chunk still decodes bit-identically to the strict paths.
+///
+/// `Err` is reserved for unreadable streams (header/index damage);
+/// payload damage always comes back as `Ok` with a populated report.
+pub(crate) fn decompress_field_salvage_core(
+    exec: &dyn Execute,
+    bytes: &[u8],
+    engine: &dyn WaveletEngine,
+    nthreads: usize,
+) -> Result<(Field3, CzbFile, DecodeReport), String> {
+    let (file, _header_len) = CzbFile::parse_header(bytes)?;
+    validate_chunk_index(&file)?;
+    let mut field = Field3::zeros(file.nx as usize, file.ny as usize, file.nz as usize);
+    let grid = grid_for(&file, &field)?;
+    let stage2 = stage2_of(&file);
+    let bs = file.bs as usize;
+    let vol = bs * bs * bs;
+    let nchunks = file.chunks.len();
+    let writer = FieldWriter { ptr: field.data.as_mut_ptr(), len: field.data.len() };
+    let queue = SpanQueue::new(nchunks, 1);
+    let failures: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+    cluster::run_on(exec, nthreads.max(1).min(nchunks.max(1)), |_| {
+        let mut tmp: Vec<u8> = Vec::new();
+        let mut raw: Vec<u8> = Vec::new();
+        let mut offsets: Vec<(usize, usize)> = Vec::new();
+        let mut scratch = Stage1Scratch::default();
+        let mut block = vec![0f32; vol];
+        let zeros = vec![0f32; vol];
+        while let Some(span) = queue.next_span() {
+            for cidx in span {
+                let entry = file.chunks[cidx];
+                let decoded = chunk_payload(bytes, &entry)
+                    .and_then(|payload| {
+                        decode_chunk_into(
+                            &file,
+                            stage2,
+                            payload,
+                            cidx,
+                            &mut tmp,
+                            &mut raw,
+                            &mut offsets,
+                        )
+                    })
+                    .and_then(|()| {
+                        for (j, &(off, size)) in offsets.iter().enumerate() {
+                            decode_block_payload(
+                                &file,
+                                &raw[off..off + size],
+                                engine,
+                                &mut scratch,
+                                &mut block,
+                            )?;
+                            // SAFETY: same disjointness argument as the
+                            // strict chunk-parallel path — validated chunk
+                            // index, one worker per chunk.
+                            unsafe {
+                                writer.insert_block(&grid, entry.first_block as usize + j, &block)
+                            };
+                        }
+                        Ok(())
+                    });
+                if let Err(e) = decoded {
+                    // Erase anything the failed chunk partially scattered:
+                    // the chunk's blocks are owned by this worker, so the
+                    // rewrite races with nobody.
+                    for j in 0..entry.nblocks as usize {
+                        // SAFETY: as above.
+                        unsafe {
+                            writer.insert_block(&grid, entry.first_block as usize + j, &zeros)
+                        };
+                    }
+                    failures.lock().unwrap().push((cidx, e));
+                }
+            }
+        }
+    });
+    let mut corrupt = failures.into_inner().unwrap();
+    corrupt.sort_by_key(|&(i, _)| i);
+    let lost_blocks = corrupt
+        .iter()
+        .map(|&(i, _)| file.chunks[i].nblocks as usize)
+        .sum();
+    let report = DecodeReport { total_chunks: nchunks, corrupt_chunks: corrupt, lost_blocks };
+    Ok((field, file, report))
+}
+
 /// Chunk-granular parallel decode: every worker owns its inflate/decode
 /// buffers (allocation-free steady state) and scatters finished blocks
 /// straight into the shared output field — block writes are disjoint
@@ -631,6 +813,7 @@ fn decompress_chunks_wide(
     for (cidx, entry) in file.chunks.iter().enumerate() {
         let payload = chunk_payload(bytes, entry)?;
         check_rawsize(file, entry, cidx)?;
+        verify_chunk_crc(file, payload, cidx)?;
         let expect = file.chunk_stage2_len(entry);
         let frames = if file.frame_raw > 0 {
             parse_frame_table(payload, expect, file.frame_raw as usize)
@@ -1018,7 +1201,7 @@ mod tests {
             let cfg = PipelineConfig::paper_default(eps);
             let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
             let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
-            let p = psnr(&f.data, &back.data);
+            let p = psnr(&f.data, &back.data).unwrap();
             // tighter epsilon -> higher PSNR
             assert!(p > prev_psnr - 1.0, "eps {eps}: psnr {p} prev {prev_psnr}");
             assert!(p > 40.0, "eps {eps}: psnr {p}");
@@ -1283,7 +1466,7 @@ mod tests {
             let cfg = PipelineConfig::new(32, stage1, Codec::ZlibDef);
             let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
             let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
-            psnrs.push(psnr(&f.data, &back.data));
+            psnrs.push(psnr(&f.data, &back.data).unwrap());
         }
         for w in psnrs.windows(2) {
             assert!((w[0] - w[1]).abs() < 0.6, "psnrs {psnrs:?}");
@@ -1382,11 +1565,16 @@ mod tests {
         let cfg = PipelineConfig::paper_default(1e-3);
         let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
         let (file, _) = CzbFile::parse_header(&bytes).unwrap();
-        // rawsize sits 12 bytes into chunk 0's 24-byte index entry
-        let entry0 = CzbFile::header_size(file.name.len(), file.chunks.len())
-            - file.chunks.len() * 24;
+        // rawsize sits 12 bytes into chunk 0's 24-byte index entry; the
+        // v4 header ends with nchunks CRCs plus the header digest
+        let hsize = CzbFile::header_size(file.name.len(), file.chunks.len());
+        let entry0 = hsize - file.chunks.len() * 24 - file.chunks.len() * 4 - 4;
         let mut bad = bytes.clone();
         bad[entry0 + 12..entry0 + 16].copy_from_slice(&u32::MAX.to_le_bytes());
+        // re-seal the header digest so the plausibility bound (not the
+        // digest check) is what rejects the crafted entry
+        let fixed = crate::util::crc32c::crc32c(&bad[..hsize - 4]);
+        bad[hsize - 4..hsize].copy_from_slice(&fixed.to_le_bytes());
         let err = decompress_field(&bad, &NativeEngine).unwrap_err();
         assert!(err.contains("plausible bound"), "{err}");
         assert!(decompress_field_mt(&bad, &NativeEngine, 4).is_err());
@@ -1410,5 +1598,128 @@ mod tests {
         // truncated payload must error, in both paths
         assert!(decompress_field(&bytes[..bytes.len() - 10], &NativeEngine).is_err());
         assert!(decompress_field_mt(&bytes[..bytes.len() - 10], &NativeEngine, 4).is_err());
+    }
+
+    /// Compress with several chunks and return (bytes, parsed header,
+    /// header length) for the corruption tests.
+    fn chunked_archive(seed: u64) -> (Vec<u8>, CzbFile, usize) {
+        let f = smooth_field(64, seed);
+        let mut cfg = PipelineConfig::paper_default(1e-3);
+        cfg.chunk_bytes = 64 << 10;
+        let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
+        assert!(st.nchunks > 2, "want several chunks, got {}", st.nchunks);
+        let (file, hlen) = CzbFile::parse_header(&bytes).unwrap();
+        (bytes, file, hlen)
+    }
+
+    #[test]
+    fn flipped_payload_bit_is_a_checksum_mismatch_in_every_path() {
+        let (bytes, file, _) = chunked_archive(81);
+        let target = 1usize; // corrupt chunk 1, leave its neighbors alone
+        let entry = file.chunks[target];
+        let mut bad = bytes.clone();
+        bad[entry.offset as usize + entry.csize as usize / 2] ^= 0x01;
+        let err = decompress_field(&bad, &NativeEngine).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        for nthreads in [2usize, 4, 8] {
+            let err = decompress_field_mt(&bad, &NativeEngine, nthreads).unwrap_err();
+            assert!(err.contains("checksum mismatch"), "t={nthreads}: {err}");
+        }
+    }
+
+    #[test]
+    fn verify_stream_walks_without_decoding() {
+        let (bytes, file, _) = chunked_archive(82);
+        let clean = verify_stream(&bytes).unwrap();
+        assert!(clean.is_clean());
+        assert_eq!(clean.total_chunks, file.chunks.len());
+        assert_eq!(clean.lost_blocks, 0);
+        // flip one payload bit: exactly that chunk is reported
+        let target = file.chunks.len() - 1;
+        let entry = file.chunks[target];
+        let mut bad = bytes.clone();
+        bad[entry.offset as usize] ^= 0x80;
+        let r = verify_stream(&bad).unwrap();
+        assert_eq!(r.corrupt_chunks.len(), 1);
+        assert_eq!(r.corrupt_chunks[0].0, target);
+        assert!(r.corrupt_chunks[0].1.contains("checksum mismatch"));
+        assert_eq!(r.lost_blocks, entry.nblocks as usize);
+        assert_eq!(r.salvaged_chunks(), file.chunks.len() - 1);
+        // a flipped header bit makes the stream unreadable, not corrupt
+        let mut worse = bytes.clone();
+        worse[7] ^= 0x01;
+        let err = verify_stream(&worse).unwrap_err();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn salvage_decodes_around_a_corrupt_chunk() {
+        let (bytes, file, _) = chunked_archive(83);
+        let (clean_field, _) = decompress_field(&bytes, &NativeEngine).unwrap();
+        // clean salvage is bit-identical to the strict decode
+        let (s, _, rep) = decompress_field_salvage(&bytes, &NativeEngine).unwrap();
+        assert!(rep.is_clean());
+        assert!(bits_equal(&s, &clean_field));
+        // corrupt one mid-archive chunk
+        let target = file.chunks.len() / 2;
+        let entry = file.chunks[target];
+        let mut bad = bytes.clone();
+        bad[entry.offset as usize + 3] ^= 0x40;
+        let grid = crate::core::block::BlockGrid::new(&clean_field, file.bs as usize);
+        let lost: std::ops::Range<usize> = entry.first_block as usize
+            ..entry.first_block as usize + entry.nblocks as usize;
+        for nthreads in [1usize, 2, 4, 8] {
+            let (field, _, rep) =
+                decompress_field_salvage_core(&ScopedExec, &bad, &NativeEngine, nthreads)
+                    .unwrap();
+            assert_eq!(rep.total_chunks, file.chunks.len(), "t={nthreads}");
+            assert_eq!(rep.corrupt_chunks.len(), 1, "t={nthreads}");
+            assert_eq!(rep.corrupt_chunks[0].0, target, "t={nthreads}");
+            assert_eq!(rep.lost_blocks, entry.nblocks as usize, "t={nthreads}");
+            // every surviving block is bit-identical to the clean decode,
+            // every lost block is exactly zero
+            let bs = file.bs as usize;
+            let mut got = crate::core::block::Block::zeros(bs);
+            let mut want = crate::core::block::Block::zeros(bs);
+            for id in 0..file.nblocks as usize {
+                grid.extract(&field, id, &mut got);
+                if lost.contains(&id) {
+                    assert!(got.data.iter().all(|&v| v == 0.0), "t={nthreads} block {id}");
+                } else {
+                    grid.extract(&clean_field, id, &mut want);
+                    assert_eq!(got.data, want.data, "t={nthreads} block {id}");
+                }
+            }
+        }
+        // strict decode refuses the same bytes
+        assert!(decompress_field(&bad, &NativeEngine).is_err());
+    }
+
+    #[test]
+    fn salvage_never_errors_on_payload_damage() {
+        // smash every payload: the stream stays readable, so salvage must
+        // return a full report rather than an error — and never panic
+        let (bytes, file, hlen) = chunked_archive(84);
+        let mut bad = bytes.clone();
+        for b in bad[hlen..].iter_mut() {
+            *b = 0xAB;
+        }
+        for nthreads in [1usize, 4, 8] {
+            let (field, _, rep) =
+                decompress_field_salvage_core(&ScopedExec, &bad, &NativeEngine, nthreads)
+                    .unwrap();
+            assert_eq!(rep.corrupt_chunks.len(), file.chunks.len(), "t={nthreads}");
+            assert_eq!(rep.lost_blocks, file.nblocks as usize, "t={nthreads}");
+            assert_eq!(rep.salvaged_chunks(), 0);
+            assert!(field.data.iter().all(|&v| v == 0.0), "t={nthreads}");
+            // indices come back sorted and unique
+            for w in rep.corrupt_chunks.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+        }
+        // header damage is still a hard error for salvage
+        let mut worse = bytes.clone();
+        worse[9] ^= 0x02;
+        assert!(decompress_field_salvage(&worse, &NativeEngine).is_err());
     }
 }

@@ -39,7 +39,10 @@ use super::compressor::{
     DEFAULT_FRAME_BYTES,
 };
 use super::dataset::Dataset;
-use super::decompressor::{decompress_field_core, decompress_sections, SectionJob};
+use super::decompressor::{
+    decompress_field_core, decompress_field_salvage_core, decompress_sections, DecodeReport,
+    SectionJob,
+};
 use super::format::{CzbFile, ShuffleMode, Stage1};
 use crate::cluster::WorkerPool;
 use crate::codec::Codec;
@@ -258,6 +261,55 @@ impl Engine {
     /// Decompress an in-memory `.czb` stream on the session pool.
     pub fn decompress_bytes(&self, bytes: &[u8]) -> Result<(Field3, CzbFile), String> {
         decompress_field_core(&self.pool, bytes, self.wavelet_engine.as_ref(), self.threads)
+    }
+
+    /// Salvage-decompress an in-memory `.czb` stream on the session
+    /// pool: every intact chunk decodes (bit-identical to
+    /// [`Engine::decompress_bytes`]), every corrupt chunk's blocks are
+    /// zero-filled, and the [`DecodeReport`] enumerates exactly what was
+    /// lost. `Err` only for unreadable streams (header/index damage) —
+    /// the CLI's `czb decompress --salvage` mode.
+    pub fn decompress_salvage(
+        &self,
+        bytes: &[u8],
+    ) -> Result<(Field3, CzbFile, DecodeReport), String> {
+        decompress_field_salvage_core(&self.pool, bytes, self.wavelet_engine.as_ref(), self.threads)
+    }
+
+    /// Salvage-decompress quantities of a `.czs` archive (all of them,
+    /// or the `names` subset in the given order): each quantity is
+    /// decoded with [`Engine::decompress_salvage`] in turn
+    /// (chunk-parallel within), and — unlike the strict
+    /// [`Engine::decompress_dataset`] — one damaged quantity never
+    /// fails its siblings: its per-quantity `Result` carries the error
+    /// while every other quantity still comes back, possibly with
+    /// salvaged holes of its own. The section-wide trailer digest is
+    /// deliberately bypassed here — the per-chunk checksums inside each
+    /// section localize payload damage, so a section the strict path
+    /// refuses outright salvages everything but its broken chunks;
+    /// only genuinely unreadable sections (header/index damage) come
+    /// back as that quantity's `Err`.
+    pub fn decompress_dataset_salvage(
+        &self,
+        dataset: &Dataset,
+        names: Option<&[&str]>,
+    ) -> Result<Vec<(String, Result<(Field3, CzbFile, DecodeReport), String>)>, String> {
+        let indices: Vec<usize> = match names {
+            None => (0..dataset.entries().len()).collect(),
+            Some(ns) => ns
+                .iter()
+                .map(|n| dataset.index_of(n))
+                .collect::<Result<_, _>>()?,
+        };
+        let mut out = Vec::with_capacity(indices.len());
+        for idx in indices {
+            let name = dataset.entries()[idx].name.clone();
+            let r = dataset
+                .section_at_unverified(idx)
+                .and_then(|section| self.decompress_salvage(section));
+            out.push((name, r));
+        }
+        Ok(out)
     }
 
     /// Decompress every quantity of a `.czs` archive (or the `names`
@@ -514,6 +566,53 @@ mod tests {
         // the healthy sibling still decodes on its own
         assert!(ds.read_quantity("q0", &engine).is_ok());
         assert!(ds.read_quantity("q2", &engine).is_ok());
+    }
+
+    #[test]
+    fn dataset_salvage_isolates_damage_per_quantity() {
+        use crate::pipeline::dataset::{Dataset, DatasetWriter};
+        let engine = Engine::builder().threads(3).chunk_bytes(16 << 10).build();
+        let params = CompressParams::paper_default(1e-3);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        for (i, seed) in [60u64, 61, 62].iter().enumerate() {
+            w.write_quantity(&engine, &smooth_field(32, *seed), &format!("q{i}"), &params)
+                .unwrap();
+        }
+        let clean_bytes = w.finish().unwrap();
+        let clean_ds = Dataset::from_bytes(clean_bytes.clone()).unwrap();
+        let clean = engine.decompress_dataset(&clean_ds, None).unwrap();
+        // damage q0's czb header (unreadable) and one payload byte deep
+        // inside q1 (salvageable); q2 stays pristine
+        let mut bytes = clean_bytes.clone();
+        let q0 = clean_ds.entries()[0].clone();
+        let q1 = clean_ds.entries()[1].clone();
+        bytes[q0.offset as usize..q0.offset as usize + 4].copy_from_slice(b"XXXX");
+        bytes[(q1.offset + q1.len - 5) as usize] ^= 0x04;
+        let ds = Dataset::from_bytes(bytes).unwrap();
+        // strict decode fails the archive; salvage triages per quantity
+        assert!(engine.decompress_dataset(&ds, None).is_err());
+        let results = engine.decompress_dataset_salvage(&ds, None).unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].0, "q0");
+        assert!(results[0].1.is_err(), "header damage is unreadable");
+        let (field, _, rep) = results[1].1.as_ref().unwrap();
+        assert_eq!(rep.corrupt_chunks.len(), 1, "one damaged chunk in q1");
+        assert!(rep.salvaged_chunks() > 0);
+        assert!(!field.data.is_empty());
+        let (f2, _, rep2) = results[2].1.as_ref().unwrap();
+        assert!(rep2.is_clean());
+        // the pristine quantity salvages bit-identically to the strict
+        // decode of the clean archive
+        assert!(f2
+            .data
+            .iter()
+            .zip(&clean[2].1.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // name subsetting works and keeps the requested order
+        let sub = engine.decompress_dataset_salvage(&ds, Some(&["q2", "q1"])).unwrap();
+        assert_eq!(sub[0].0, "q2");
+        assert_eq!(sub[1].0, "q1");
+        assert!(engine.decompress_dataset_salvage(&ds, Some(&["nope"])).is_err());
     }
 
     #[test]

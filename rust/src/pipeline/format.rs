@@ -2,7 +2,7 @@
 //!
 //! ## `.czb` — one compressed quantity
 //!
-//! Layout (little endian, version 3):
+//! Layout (little endian, version 4):
 //! ```text
 //! magic "CZB1" | u8 version | u8 name_len | name bytes
 //! u32 nx ny nz | u32 bs
@@ -13,6 +13,8 @@
 //! f32 global_min | f32 global_max
 //! u32 nblocks | u32 nchunks
 //! nchunks x { u64 offset | u32 csize | u32 rawsize | u32 first_block | u32 nblocks }
+//! nchunks x u32 chunk_crc32c        (version >= 4 only)
+//! u32 header_crc32c                 (version >= 4 only)
 //! chunk payloads...
 //! ```
 //!
@@ -39,10 +41,22 @@
 //!   forward-compat experiment and no writer ever shipped it. Readers
 //!   accept it as unframed.
 //! * **v3** — adds the `u32 frame_raw` header field and framed chunk
-//!   payloads (current writer version, [`FORMAT_VERSION`]).
+//!   payloads.
+//! * **v4** — adds end-to-end integrity checksums (current writer
+//!   version, [`FORMAT_VERSION`]): one CRC32C
+//!   ([`crate::util::crc32c`]) per compressed chunk payload, serialized
+//!   after the chunk index, followed by a whole-header CRC32C over every
+//!   preceding header byte (magic through the chunk-CRC list). The
+//!   header digest is verified by [`CzbFile::parse_header`]; the
+//!   per-chunk digests are verified by the decoder right before each
+//!   payload is inflated (and by `czb verify` without decoding). The
+//!   CRCs are pure functions of the payload bytes, so v4 streams remain
+//!   byte-identical across thread counts.
 //!
-//! Readers accept v1..=v3; `frame_raw == 0` on a parsed file means
-//! "unframed legacy payloads" and is what v≤2 files report.
+//! Readers accept v1..=v4; `frame_raw == 0` on a parsed file means
+//! "unframed legacy payloads" and is what v≤2 files report. Files below
+//! v4 carry no checksums ([`CzbFile::chunk_crcs`] parses empty) and
+//! decode bit-exactly with every integrity check skipped.
 //!
 //! Within a chunk's *raw* stream every block is prefixed with its `u32`
 //! encoded size, so the decompressor can walk to any block after a single
@@ -266,12 +280,17 @@ pub struct CzbFile {
     pub global_max: f32,
     pub nblocks: u32,
     pub chunks: Vec<ChunkEntry>,
+    /// One CRC32C per chunk payload, parallel to `chunks`. Empty for
+    /// v≤3 files (the layouts carry no checksums); serialized and
+    /// required (`len == chunks.len()`) for v≥4.
+    pub chunk_crcs: Vec<u32>,
 }
 
 pub const MAGIC: &[u8; 4] = b"CZB1";
 
-/// Current writer version (framed stage-2 chunk payloads).
-pub const FORMAT_VERSION: u8 = 3;
+/// Current writer version (framed stage-2 chunk payloads + CRC32C
+/// integrity checksums).
+pub const FORMAT_VERSION: u8 = 4;
 
 /// Exact error [`CzbFile::parse_header`] returns when the buffer is
 /// merely too short. Callers feeding a growing header *prefix* (the
@@ -289,7 +308,9 @@ impl CzbFile {
     /// Serialized header size for a specific format version.
     pub fn header_size_for(version: u8, name_len: usize, nchunks: usize) -> usize {
         let frame_field = if version >= 3 { 4 } else { 0 };
-        4 + 1 + 1 + name_len + 16 + 12 + 2 + frame_field + 8 + 8 + nchunks * 24
+        // v4: one u32 CRC per chunk plus the whole-header digest
+        let crc_fields = if version >= 4 { nchunks * 4 + 4 } else { 0 };
+        4 + 1 + 1 + name_len + 16 + 12 + 2 + frame_field + 8 + 8 + nchunks * 24 + crc_fields
     }
 
     pub fn global_range(&self) -> f32 {
@@ -313,6 +334,9 @@ impl CzbFile {
             "unsupported writer version {}",
             self.version
         );
+        // the header digest covers only this header's bytes, wherever
+        // the caller's buffer already stood
+        let start = out.len();
         out.extend_from_slice(MAGIC);
         out.push(self.version);
         let name = self.name.as_bytes();
@@ -339,6 +363,18 @@ impl CzbFile {
             out.extend_from_slice(&c.rawsize.to_le_bytes());
             out.extend_from_slice(&c.first_block.to_le_bytes());
             out.extend_from_slice(&c.nblocks.to_le_bytes());
+        }
+        if self.version >= 4 {
+            assert_eq!(
+                self.chunk_crcs.len(),
+                self.chunks.len(),
+                "v4 headers need one chunk CRC per chunk entry"
+            );
+            for crc in &self.chunk_crcs {
+                out.extend_from_slice(&crc.to_le_bytes());
+            }
+            let digest = crate::util::crc32c::crc32c(&out[start..]);
+            out.extend_from_slice(&digest.to_le_bytes());
         }
     }
 
@@ -404,6 +440,25 @@ impl CzbFile {
             });
             pos += 24;
         }
+        let mut chunk_crcs = Vec::new();
+        if version >= 4 {
+            need(nchunks * 4 + 4, pos)?;
+            chunk_crcs.reserve_exact(nchunks);
+            for _ in 0..nchunks {
+                chunk_crcs.push(rd_u32(pos));
+                pos += 4;
+            }
+            // whole-header digest: every byte from the magic up to (not
+            // including) the digest itself
+            let stored = rd_u32(pos);
+            let computed = crate::util::crc32c::crc32c(&buf[..pos]);
+            if stored != computed {
+                return Err(format!(
+                    "czb header digest mismatch (stored {stored:#010x}, computed {computed:#010x})"
+                ));
+            }
+            pos += 4;
+        }
         Ok((
             Self {
                 name,
@@ -420,6 +475,7 @@ impl CzbFile {
                 global_max,
                 nblocks,
                 chunks,
+                chunk_crcs,
             },
             pos,
         ))
@@ -454,6 +510,7 @@ mod tests {
                 ChunkEntry { offset: 0, csize: 100, rawsize: 400, first_block: 0, nblocks: 300 },
                 ChunkEntry { offset: 100, csize: 50, rawsize: 200, first_block: 300, nblocks: 212 },
             ],
+            chunk_crcs: vec![0xDEAD_BEEF, 0x0BAD_F00D],
         }
     }
 
@@ -472,6 +529,7 @@ mod tests {
         assert_eq!(g.version, FORMAT_VERSION);
         assert_eq!(g.frame_raw, f.frame_raw);
         assert_eq!(g.chunks, f.chunks);
+        assert_eq!(g.chunk_crcs, f.chunk_crcs);
         assert_eq!((g.nx, g.ny, g.nz, g.bs), (f.nx, f.ny, f.nz, f.bs));
     }
 
@@ -489,15 +547,17 @@ mod tests {
                 buf.len(),
                 CzbFile::header_size_for(version, f.name.len(), f.chunks.len())
             );
-            // the legacy header is exactly 4 bytes shorter than v3's
+            // the legacy header lacks v3's frame_raw field and v4's CRC
+            // fields (one per chunk + the header digest)
             assert_eq!(
-                buf.len() + 4,
+                buf.len() + 4 + f.chunks.len() * 4 + 4,
                 CzbFile::header_size(f.name.len(), f.chunks.len())
             );
             let (g, consumed) = CzbFile::parse_header(&buf).unwrap();
             assert_eq!(consumed, buf.len());
             assert_eq!(g.version, version);
             assert_eq!(g.frame_raw, 0, "v{version} must parse as unframed");
+            assert!(g.chunk_crcs.is_empty(), "v{version} carries no checksums");
             assert_eq!(g.chunks, f.chunks);
             assert_eq!(g.stage1, f.stage1);
         }
@@ -585,5 +645,47 @@ mod tests {
         let mut bad = buf.clone();
         bad[0] = b'X';
         assert!(CzbFile::parse_header(&bad).is_err());
+    }
+
+    #[test]
+    fn v3_headers_still_write_and_parse_without_checksums() {
+        let mut f = sample();
+        f.version = 3;
+        f.chunk_crcs.clear();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        assert_eq!(buf.len(), CzbFile::header_size_for(3, f.name.len(), f.chunks.len()));
+        let (g, consumed) = CzbFile::parse_header(&buf).unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(g.version, 3);
+        assert_eq!(g.frame_raw, f.frame_raw);
+        assert!(g.chunk_crcs.is_empty());
+        assert_eq!(g.chunks, f.chunks);
+    }
+
+    #[test]
+    fn header_digest_detects_any_flipped_byte() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        // a flip anywhere the digest covers — the name, a dimension, a
+        // chunk-index field, a stored chunk CRC — must fail the parse
+        // (some positions already fail a structural check; all must err)
+        for pos in [7usize, 20, buf.len() - 30, buf.len() - 8] {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x10;
+            assert!(CzbFile::parse_header(&bad).is_err(), "flip at {pos} undetected");
+        }
+        // flipping the stored digest itself is also a mismatch
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let err = CzbFile::parse_header(&bad).unwrap_err();
+        assert!(err.contains("digest mismatch"), "{err}");
+        // writing appends to the caller's buffer: the digest must cover
+        // only this header's bytes, independent of what precedes them
+        let mut prefixed = vec![0xEEu8; 11];
+        f.write_header(&mut prefixed);
+        assert_eq!(&prefixed[11..], &buf[..]);
     }
 }

@@ -82,6 +82,31 @@
 //! ([`chunk_cache`]); `.czs` archives share one cache across every
 //! reader they hand out.
 //!
+//! # Integrity and graceful degradation
+//!
+//! `.czb` v4 streams carry a CRC32C per compressed chunk plus a
+//! whole-header digest, and `.czs` v2 trailers carry one CRC32C per
+//! section ([`crate::util::crc32c`]); every decode path verifies what
+//! it touches, so a flipped bit surfaces as a precise checksum error
+//! instead of a downstream codec failure or silently wrong floats.
+//! Older files (czb ≤ v3, czs v1) parse and decode bit-exactly with the
+//! checks skipped. Three consumers sit on top:
+//!
+//! * [`verify_stream`] / `czb verify` — checksum-only walk (exit 0
+//!   clean, 3 corrupt, 1 unreadable); `--deep` additionally decodes
+//!   everything and reports per-quantity compression ratio and PSNR.
+//! * [`decompress_field_salvage`] / `Engine::decompress_salvage` /
+//!   `czb decompress --salvage` — decode every intact chunk, zero-fill
+//!   and enumerate the corrupt ones in a [`DecodeReport`] instead of
+//!   failing the stream; per-quantity isolation on `.czs` archives via
+//!   `Engine::decompress_dataset_salvage`.
+//! * [`crate::io::fault`] — a deterministic fault-injection harness
+//!   (scripted short reads, transient errors, bit flips, truncation)
+//!   armed on `.czs` positioned reads via
+//!   [`DatasetOptions::open_with_faults`], proving end-to-end that
+//!   every fault is retried, detected or salvaged — never a panic, a
+//!   hang or a silent wrong answer (`rust/tests/fault_injection.rs`).
+//!
 //! **Buffer lifecycle**: every worker owns its scratch — batch transform
 //! buffer, block gather, the [`stage1::Stage1Scratch`] encode/decode
 //! buffers, shuffle buffer, the decompressor's inflate/offset buffers —
@@ -107,7 +132,10 @@ pub use dataset::{
     Dataset, DatasetOptions, DatasetWriter, QuantityEntry, SectionSource,
     DEFAULT_DATASET_CACHE_CHUNKS,
 };
-pub use decompressor::{decompress_field, decompress_field_mt, BlockReader};
+pub use decompressor::{
+    decompress_field, decompress_field_mt, decompress_field_salvage, verify_stream, BlockReader,
+    DecodeReport,
+};
 pub use engine::{CompressParams, Engine, EngineBuilder};
 pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1, FORMAT_VERSION};
 pub use stage1::{Stage1Codec, Stage1Scratch};

@@ -1,0 +1,137 @@
+//! CRC32C (Castagnoli) — the integrity checksum behind `.czb` v4 and
+//! `.czs` v2 ([`crate::pipeline::format`]). Implemented in-tree
+//! (the offline image has no `crc32fast`/`crc32c` crate) with the
+//! classic slice-by-8 table method: eight 256-entry tables, built once
+//! in a `const fn`, let the hot loop fold 8 input bytes per iteration
+//! instead of 1. Reflected polynomial `0x82F63B78`, init/xorout
+//! `0xFFFFFFFF` — the same parameterization iSCSI, ext4 and the SSE4.2
+//! `crc32` instruction use, so the known-answer vector
+//! `crc32c(b"123456789") == 0xE3069283` pins the implementation.
+
+const POLY: u32 = 0x82F6_3B78;
+
+const fn build_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            k += 1;
+        }
+        t[0][i] = crc;
+        i += 1;
+    }
+    let mut j = 1;
+    while j < 8 {
+        let mut i = 0;
+        while i < 256 {
+            t[j][i] = (t[j - 1][i] >> 8) ^ t[0][(t[j - 1][i] & 0xFF) as usize];
+            i += 1;
+        }
+        j += 1;
+    }
+    t
+}
+
+static TABLES: [[u32; 256]; 8] = build_tables();
+
+/// CRC32C of `data` in one shot.
+pub fn crc32c(data: &[u8]) -> u32 {
+    crc32c_append(0, data)
+}
+
+/// Extend a previous [`crc32c`] result with more bytes:
+/// `crc32c_append(crc32c(a), b) == crc32c(a ++ b)`.
+pub fn crc32c_append(crc: u32, data: &[u8]) -> u32 {
+    let mut crc = !crc;
+    let mut chunks = data.chunks_exact(8);
+    for b in &mut chunks {
+        let lo = crc ^ u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let hi = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+        crc = TABLES[7][(lo & 0xFF) as usize]
+            ^ TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ TABLES[4][(lo >> 24) as usize]
+            ^ TABLES[3][(hi & 0xFF) as usize]
+            ^ TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ TABLES[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Streaming CRC32C for writers that see the bytes in pieces (the
+/// `.czs` [`crate::pipeline::dataset::DatasetWriter`] accumulates each
+/// section's digest as the engine streams it out).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Crc32c(u32);
+
+impl Crc32c {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        self.0 = crc32c_append(self.0, data);
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn known_answer_vector() {
+        // the canonical iSCSI/RFC 3720 check value
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+        // single byte exercises only the tail loop
+        assert_eq!(crc32c(b"a"), crc32c_append(0, b"a"));
+    }
+
+    #[test]
+    fn append_matches_one_shot_at_every_split() {
+        let mut rng = Pcg32::new(0x51AB);
+        let data: Vec<u8> = (0..257).map(|_| rng.next_u32() as u8).collect();
+        let whole = crc32c(&data);
+        for split in 0..data.len() {
+            let (a, b) = data.split_at(split);
+            assert_eq!(crc32c_append(crc32c(a), b), whole, "split {split}");
+        }
+    }
+
+    #[test]
+    fn streaming_struct_matches_one_shot() {
+        let mut rng = Pcg32::new(7);
+        let data: Vec<u8> = (0..4096).map(|_| rng.next_u32() as u8).collect();
+        let mut h = Crc32c::new();
+        for piece in data.chunks(13) {
+            h.update(piece);
+        }
+        assert_eq!(h.finish(), crc32c(&data));
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut rng = Pcg32::new(99);
+        let mut data: Vec<u8> = (0..100).map(|_| rng.next_u32() as u8).collect();
+        let clean = crc32c(&data);
+        for i in 0..data.len() {
+            for bit in 0..8 {
+                data[i] ^= 1 << bit;
+                assert_ne!(crc32c(&data), clean, "flip byte {i} bit {bit}");
+                data[i] ^= 1 << bit;
+            }
+        }
+    }
+}

@@ -1,9 +1,10 @@
 //! Small self-contained utilities: bit-level I/O, a seeded PRNG (the image
 //! has no `rand`), a property-test helper, a micro-benchmark harness
-//! (the image has no `criterion`), and a minimal error type (the image
-//! has no `anyhow`).
+//! (the image has no `criterion`), a slice-by-8 CRC32C (the image has no
+//! `crc32fast`), and a minimal error type (the image has no `anyhow`).
 pub mod bench;
 pub mod bitio;
+pub mod crc32c;
 pub mod error;
 pub mod prng;
 pub mod prop;

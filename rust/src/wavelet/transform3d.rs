@@ -268,7 +268,7 @@ mod tests {
                 inverse_3d(kind, &mut blk.data, bs, max_levels(bs), &mut s);
                 grid.insert(&mut out, id, &blk);
             }
-            crate::metrics::psnr(&f.data, &out.data)
+            crate::metrics::psnr(&f.data, &out.data).unwrap()
         };
         let p4 = fidelity(WaveletKind::Interp4);
         let p3 = fidelity(WaveletKind::Avg3);

@@ -33,7 +33,7 @@ fn simulator_to_file_to_field_all_qois() {
         let read_back = std::fs::read(&path).unwrap();
         let (g, file) = decompress_field(&read_back, &NativeEngine).unwrap();
         assert_eq!(file.name, qoi.name());
-        let p = psnr(&f.data, &g.data);
+        let p = psnr(&f.data, &g.data).unwrap();
         assert!(p > 45.0, "{qoi:?} psnr {p}");
     }
 }
@@ -142,7 +142,7 @@ fn restart_snapshot_fpzip_lossless_ratio_in_paper_band() {
         total_raw += st.raw_bytes;
         total_comp += st.compressed_bytes;
     }
-    let cr = compression_ratio(total_raw, total_comp);
+    let cr = compression_ratio(total_raw, total_comp).unwrap();
     assert!(cr > 1.5 && cr < 20.0, "restart CR {cr}");
 }
 
@@ -162,7 +162,7 @@ fn zbits_and_shuffle_improve_ratio_without_breaking_bounds() {
         let cfg = PipelineConfig::new(32, stage1, Codec::ZlibDef).with_shuffle(shuffle);
         let (bytes, st) = compress_field(&f, "p", &cfg, &NativeEngine);
         let (back, _) = decompress_field(&bytes, &NativeEngine).unwrap();
-        (st.ratio(), psnr(&f.data, &back.data))
+        (st.ratio(), psnr(&f.data, &back.data).unwrap())
     };
     let (cr_plain, ps_plain) = mk(0, ShuffleMode::None);
     let (cr_shuf, ps_shuf) = mk(0, ShuffleMode::Byte4);

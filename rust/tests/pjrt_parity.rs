@@ -108,6 +108,6 @@ fn pipeline_with_pjrt_engine_end_to_end() {
     assert_eq!(st_pjrt.nblocks, st_native.nblocks);
     // decompress the pjrt-compressed stream with the native engine
     let (back, _) = decompress_field(&bytes_pjrt, &NativeEngine).unwrap();
-    let p = psnr(&f.data, &back.data);
+    let p = psnr(&f.data, &back.data).unwrap();
     assert!(p > 40.0, "psnr {p}");
 }
