@@ -1,0 +1,209 @@
+//! Bench: `czb serve` under concurrent client load — request latency
+//! quantiles and aggregate throughput through the TCP front-end.
+//!
+//! Spins up a real loopback server (one shared engine), then drives it
+//! with several client connections issuing a compress → decompress →
+//! verify cycle over mixed field sizes. Every response is checked
+//! bit-identical against a locally compressed reference, so the bench
+//! doubles as a sustained-load correctness test.
+//!
+//! Emits `BENCH_serve.json` with lower-is-better `p50_ms`/`p99_ms` rows
+//! per operation plus aggregate `mbps` (raw field bytes moved through
+//! the compress path per wall second). `SERVE_LOAD_FAST=1` shrinks the
+//! run for CI.
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cubismz::core::Field3;
+use cubismz::pipeline::{CompressParams, Engine, PipelineConfig, ShuffleMode};
+use cubismz::service::{Client, ServeConfig, Server};
+use cubismz::util::bench::{write_json, Json};
+
+/// Concurrent client connections.
+const CLIENTS: usize = 4;
+const EPS: f32 = 1e-3;
+const BS: u32 = 16;
+
+/// Latency samples for one operation, in seconds.
+#[derive(Default)]
+struct Samples(Vec<f64>);
+
+impl Samples {
+    fn quantile_ms(&mut self, q: f64) -> f64 {
+        assert!(!self.0.is_empty(), "no samples recorded");
+        self.0.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((self.0.len() as f64 - 1.0) * q).round() as usize;
+        self.0[idx] * 1e3
+    }
+
+    fn mean_ms(&self) -> f64 {
+        self.0.iter().sum::<f64>() / self.0.len() as f64 * 1e3
+    }
+}
+
+/// What one client thread brings home.
+#[derive(Default)]
+struct ClientRun {
+    compress: Samples,
+    decompress: Samples,
+    verify: Samples,
+    raw_bytes: u64,
+    requests: u64,
+}
+
+fn smooth_field(seed: usize, n: usize) -> Field3 {
+    let data = (0..n * n * n)
+        .map(|i| (((i * 31 + seed * 127) % 509) as f32 * 0.061).sin() * 0.8)
+        .collect();
+    Field3::from_vec(n, n, n, data)
+}
+
+fn main() {
+    let fast = std::env::var("SERVE_LOAD_FAST").is_ok();
+    let budget = if fast { Duration::from_millis(800) } else { Duration::from_secs(6) };
+    let sizes = if fast { [16usize, 32] } else { [32usize, 48] };
+    let cfg = ServeConfig {
+        // admission sized well above the client count: this bench
+        // measures service latency, not backpressure
+        admit_normal: CLIENTS * 4,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).expect("bind loopback server");
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run().expect("accept loop"));
+    println!(
+        "bench serve_load: {CLIENTS} clients x {:?} fields, {:.1}s budget, server on {addr}",
+        sizes,
+        budget.as_secs_f64()
+    );
+
+    // local references: the bytes the server must reproduce per
+    // (client, size) pair — also what `verify` walks
+    let local = Engine::builder().build();
+    let params = {
+        let mut p = CompressParams::from_config(&PipelineConfig::paper_default(EPS));
+        p.bs = BS as usize;
+        p.shuffle = ShuffleMode::Byte4;
+        p
+    };
+    let fields: Vec<Vec<Field3>> = (0..CLIENTS)
+        .map(|c| sizes.iter().map(|&n| smooth_field(c, n)).collect())
+        .collect();
+    let references: Vec<Vec<Vec<u8>>> = fields
+        .iter()
+        .map(|fs| fs.iter().map(|f| local.compress_vec(f, "q", &params).0).collect())
+        .collect();
+    let fields = Arc::new(fields);
+    let references = Arc::new(references);
+
+    let t0 = Instant::now();
+    let runs: Vec<ClientRun> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let fields = Arc::clone(&fields);
+                let references = Arc::clone(&references);
+                s.spawn(move || {
+                    let mut run = ClientRun::default();
+                    let mut client = Client::connect(addr)
+                        .expect("connect")
+                        .tenant(&format!("bench-{c}"));
+                    let mut i = 0usize;
+                    while t0.elapsed() < budget {
+                        let field = &fields[c][i % fields[c].len()];
+                        let reference = &references[c][i % fields[c].len()];
+                        let raw = (field.data.len() * 4) as u64;
+
+                        let q0 = Instant::now();
+                        let czb = client
+                            .compress("q", field, BS, EPS, ShuffleMode::Byte4)
+                            .expect("transport")
+                            .expect("compress refused");
+                        run.compress.0.push(q0.elapsed().as_secs_f64());
+                        assert_eq!(&czb, reference, "client {c}: stream drifted under load");
+
+                        let q0 = Instant::now();
+                        let (_, back) = client
+                            .decompress(&czb)
+                            .expect("transport")
+                            .expect("decompress refused");
+                        run.decompress.0.push(q0.elapsed().as_secs_f64());
+                        assert_eq!(
+                            back.data.len(),
+                            field.data.len(),
+                            "client {c}: decode shape drifted"
+                        );
+
+                        let q0 = Instant::now();
+                        let summary = client
+                            .verify(&czb)
+                            .expect("transport")
+                            .expect("verify refused");
+                        run.verify.0.push(q0.elapsed().as_secs_f64());
+                        assert!(summary.clean, "client {c}: stream failed remote verify");
+
+                        run.raw_bytes += raw;
+                        run.requests += 3;
+                        i += 1;
+                    }
+                    run
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    handle.shutdown();
+    server_thread.join().unwrap();
+
+    let mut compress = Samples::default();
+    let mut decompress = Samples::default();
+    let mut verify = Samples::default();
+    let mut raw_bytes = 0u64;
+    let mut requests = 0u64;
+    for mut r in runs {
+        compress.0.append(&mut r.compress.0);
+        decompress.0.append(&mut r.decompress.0);
+        verify.0.append(&mut r.verify.0);
+        raw_bytes += r.raw_bytes;
+        requests += r.requests;
+    }
+    // raw field bytes make the round trip twice (up on compress, down
+    // on decompress) — rate the compress direction only
+    let mbps = raw_bytes as f64 / 1e6 / elapsed;
+    let rps = requests as f64 / elapsed;
+
+    let mut rows = Vec::new();
+    for (name, s) in [
+        ("compress", &mut compress),
+        ("decompress", &mut decompress),
+        ("verify", &mut verify),
+    ] {
+        let (p50, p99, mean) = (s.quantile_ms(0.5), s.quantile_ms(0.99), s.mean_ms());
+        println!(
+            "  {name:<10} {:>6} reqs  p50 {p50:.3} ms  p99 {p99:.3} ms  mean {mean:.3} ms",
+            s.0.len()
+        );
+        rows.push(Json::Obj(vec![
+            ("name".into(), Json::Str(name.into())),
+            ("requests".into(), Json::Int(s.0.len() as i64)),
+            ("p50_ms".into(), Json::Num(p50)),
+            ("p99_ms".into(), Json::Num(p99)),
+            ("mean_ms".into(), Json::Num(mean)),
+        ]));
+    }
+    println!("  aggregate: {mbps:.1} MB/s raw through compress, {rps:.0} req/s over {CLIENTS} clients");
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("serve_load".into())),
+        ("clients".into(), Json::Int(CLIENTS as i64)),
+        ("sizes".into(), Json::Arr(sizes.iter().map(|&n| Json::Int(n as i64)).collect())),
+        ("elapsed_secs".into(), Json::Num(elapsed)),
+        ("requests".into(), Json::Int(requests as i64)),
+        ("mbps".into(), Json::Num(mbps)),
+        ("requests_per_sec".into(), Json::Num(rps)),
+        ("rows".into(), Json::Arr(rows)),
+    ]);
+    write_json("BENCH_serve.json", &doc).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

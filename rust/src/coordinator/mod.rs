@@ -144,6 +144,26 @@ fn deep_metrics(
     Ok((cr, psnr(&field.data, &again.data)))
 }
 
+/// Verify one in-memory `.czb` stream (a single quantity): the same
+/// checksum walk — and optional deep decode — as [`verify_file`]'s
+/// `.czb` branch, shared with the service front-end's `verify`
+/// request, which receives its stream over a socket rather than from
+/// a path.
+pub fn verify_czb_bytes(bytes: &[u8], deep: bool, engine: &Engine) -> VerifyEntry {
+    let name = crate::pipeline::CzbFile::parse_header(bytes)
+        .map(|(f, _)| f.name)
+        .unwrap_or_else(|_| "?".to_string());
+    let mut outcome = verify_stream(bytes);
+    let (mut cr, mut db) = (None, None);
+    if deep && matches!(&outcome, Ok(r) if r.is_clean()) {
+        match deep_metrics(engine, bytes) {
+            Ok((c, p)) => (cr, db) = (c, p),
+            Err(e) => outcome = Err(format!("deep decode: {e}")),
+        }
+    }
+    VerifyEntry { name, outcome, compression_ratio: cr, psnr_db: db }
+}
+
 /// Verify the integrity of a `.czb` or `.czs` file (sniffed by magic)
 /// without writing anything.
 ///
@@ -188,18 +208,7 @@ pub fn verify_file(input: &Path, deep: bool, engine: &Engine) -> Result<VerifyRe
     } else if &head == crate::pipeline::format::MAGIC {
         let bytes =
             std::fs::read(input).with_context(|| format!("reading {}", input.display()))?;
-        let name = crate::pipeline::CzbFile::parse_header(&bytes)
-            .map(|(f, _)| f.name)
-            .unwrap_or_else(|_| "?".to_string());
-        let mut outcome = verify_stream(&bytes);
-        let (mut cr, mut db) = (None, None);
-        if deep && matches!(&outcome, Ok(r) if r.is_clean()) {
-            match deep_metrics(engine, &bytes) {
-                Ok((c, p)) => (cr, db) = (c, p),
-                Err(e) => outcome = Err(format!("deep decode: {e}")),
-            }
-        }
-        entries.push(VerifyEntry { name, outcome, compression_ratio: cr, psnr_db: db });
+        entries.push(verify_czb_bytes(&bytes, deep, engine));
     } else {
         return Err(anyhow!(
             "{}: not a .czb or .czs file (magic {:02x?})",

@@ -15,6 +15,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
 pub mod scaling;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod wavelet;

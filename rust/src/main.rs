@@ -13,6 +13,7 @@ use cubismz::pipeline::{
     ShuffleMode, Stage1, WaveletEngine, DEFAULT_DATASET_CACHE_CHUNKS,
 };
 use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
+use cubismz::service;
 use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
 use cubismz::wavelet::WaveletKind;
 use std::collections::HashMap;
@@ -62,6 +63,79 @@ impl Args {
     fn flag(&self, name: &str) -> bool {
         self.get(name).is_some()
     }
+
+    /// Reject flags the command does not know (sorted so the error is
+    /// deterministic). A typo like `--treads 8` must be a usage error,
+    /// not a silently ignored no-op that runs single-threaded.
+    fn check_known(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        unknown.sort_unstable();
+        match unknown.first() {
+            None => Ok(()),
+            Some(k) => Err(anyhow!("unknown flag --{k} for `czb {cmd}`")),
+        }
+    }
+}
+
+/// The flags each subcommand accepts (`None` = unknown command).
+/// `scheme` commands share the pipeline-parameter flags consumed by
+/// [`config_of`]/[`session_of`].
+fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
+    const SCHEME: &[&str] = &[
+        "scheme",
+        "wavelet",
+        "eps",
+        "prec",
+        "zbits",
+        "coeff",
+        "stage2",
+        "shuffle",
+        "bs",
+        "chunk-bytes",
+        "frame-bytes",
+        "threads",
+        "engine",
+    ];
+    let (base, scheme): (&[&str], bool) = match cmd {
+        "gen" => (&["size", "step", "out", "bubbles", "production", "qoi"], false),
+        "compress" => (&["in", "dataset", "out", "jobs"], true),
+        "decompress" => (&["in", "out", "salvage", "jobs"], true),
+        "recompress" => (&["in", "out"], true),
+        "compress-dataset" => (&["in", "out", "qoi"], true),
+        "decompress-dataset" => (&["in", "out", "cache-chunks"], true),
+        "verify" => (&["in", "deep"], true),
+        "codecs" => (&[], false),
+        "info" => (&["in", "cache-chunks"], false),
+        "psnr" => (&["ref", "dataset", "in", "engine"], false),
+        "serve" => (
+            &[
+                "addr",
+                "threads",
+                "admit",
+                "admit-high",
+                "retry-after-ms",
+                "quota-capacity",
+                "quota-rate",
+                "max-body",
+            ],
+            false,
+        ),
+        "client" => (
+            &["addr", "op", "in", "out", "dataset", "eps", "bs", "shuffle", "tenant", "priority"],
+            false,
+        ),
+        _ => return None,
+    };
+    let mut v = base.to_vec();
+    if scheme {
+        v.extend_from_slice(SCHEME);
+    }
+    Some(v)
 }
 
 /// `--threads` flag with `default` when absent; 0 means all cores. Safe to
@@ -78,6 +152,18 @@ fn engine_of(args: &Args) -> Result<Box<dyn WaveletEngine>> {
         "native" => Ok(Box::new(NativeEngine)),
         "pjrt" => Ok(Box::new(PjrtEngine::new(default_artifacts_dir())?)),
         e => Err(anyhow!("unknown engine {e} (native|pjrt)")),
+    }
+}
+
+/// `--shuffle` flag shared by `compress` and `client`: absent = none,
+/// bare `--shuffle` keeps its historical meaning (byte shuffle), a
+/// value names the mode.
+fn shuffle_of(args: &Args) -> Result<ShuffleMode> {
+    match args.get("shuffle") {
+        None => Ok(ShuffleMode::None),
+        Some("true") => Ok(ShuffleMode::Byte4),
+        Some(name) => ShuffleMode::from_name(name)
+            .ok_or_else(|| anyhow!("unknown shuffle mode {name} (none|byte4|bit4)")),
     }
 }
 
@@ -117,13 +203,7 @@ fn config_of(args: &Args) -> Result<PipelineConfig> {
     let stage2 =
         Codec::from_name(stage2_name).ok_or_else(|| anyhow!("unknown stage2 codec {stage2_name}"))?;
     let mut cfg = PipelineConfig::new(bs, stage1, stage2);
-    cfg.shuffle = match args.get("shuffle") {
-        None => ShuffleMode::None,
-        // bare `--shuffle` keeps its historical meaning: byte shuffle
-        Some("true") => ShuffleMode::Byte4,
-        Some(name) => ShuffleMode::from_name(name)
-            .ok_or_else(|| anyhow!("unknown shuffle mode {name} (none|byte4|bit4)"))?,
-    };
+    cfg.shuffle = shuffle_of(args)?;
     cfg.nthreads = threads_of(args, 1)?;
     cfg.chunk_bytes = args.num("chunk-bytes", 4usize << 20)?;
     // one policy everywhere (CLI, EngineBuilder, PipelineConfig): 0 means
@@ -600,6 +680,129 @@ fn cmd_psnr(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `czb serve`: run the long-running compression service (see
+/// docs/PROTOCOL.md for the wire protocol). Drains gracefully on
+/// SIGTERM/SIGINT or a client `shutdown` request.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = service::ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:9321").to_string(),
+        threads: threads_of(args, 0)?,
+        admit_normal: args.num("admit", 0usize)?,
+        admit_high_extra: args.num("admit-high", 2usize)?,
+        retry_after_ms: args.num("retry-after-ms", 100u32)?,
+        quota_capacity: args.num("quota-capacity", 256u64 << 20)?,
+        quota_rate: args.num("quota-rate", 0u64)?,
+        max_body: args.num("max-body", service::proto::DEFAULT_MAX_BODY)?,
+        ..Default::default()
+    };
+    let server = service::Server::bind(&cfg)?;
+    let addr = server.local_addr()?;
+    service::install_sigterm_drain(server.handle());
+    println!(
+        "czb serve: listening on {addr} (quota {}; SIGTERM or a `shutdown` frame drains)",
+        if cfg.quota_rate > 0 {
+            format!("{} B + {} B/s per tenant", cfg.quota_capacity, cfg.quota_rate)
+        } else {
+            "off".to_string()
+        },
+    );
+    server.run()?;
+    println!("czb serve: drained");
+    Ok(())
+}
+
+/// One refusal-aware exchange for `czb client`: refusals (busy, quota,
+/// shutting_down, error) exit 4 so scripts can tell "the server said
+/// no" from "the transport broke" (exit 1).
+fn client_reply<T>(r: std::result::Result<service::Reply<T>, String>) -> Result<T> {
+    match r {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(refusal)) => {
+            eprintln!("refused: {refusal}");
+            std::process::exit(4);
+        }
+        Err(e) => Err(anyhow!(e)),
+    }
+}
+
+/// `czb client`: one request against a running `czb serve`.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:9321");
+    let op = args.req("op")?;
+    let mut client = service::Client::connect(addr)?;
+    if let Some(t) = args.get("tenant") {
+        client = client.tenant(t);
+    }
+    client = client.priority(match args.get("priority").unwrap_or("normal") {
+        "normal" => service::proto::Priority::Normal,
+        "high" => service::proto::Priority::High,
+        p => return Err(anyhow!("unknown priority {p} (normal|high)")),
+    });
+    match op {
+        "stat" => {
+            print!("{}", client_reply(client.stat())?);
+        }
+        "shutdown" => {
+            client_reply(client.shutdown())?;
+            println!("server draining");
+        }
+        "compress" => {
+            let input = PathBuf::from(args.req("in")?);
+            let dataset = args.req("dataset")?;
+            let out = PathBuf::from(args.req("out")?);
+            let field = h5lite::read(&input, dataset).map_err(|e| anyhow!(e))?.to_field();
+            let bs: u32 = args.num("bs", 32u32)?;
+            let eps: f32 = args.num("eps", 1e-3f32)?;
+            let shuffle = shuffle_of(args)?;
+            let t = std::time::Instant::now();
+            let czb =
+                client_reply(client.compress(dataset, &field, bs, eps, shuffle))?;
+            std::fs::write(&out, &czb)?;
+            println!(
+                "{dataset}: {} -> {} bytes via {addr}  CR {:.2}  ({:.3}s)",
+                field.nbytes(),
+                czb.len(),
+                field.nbytes() as f64 / czb.len().max(1) as f64,
+                t.elapsed().as_secs_f64(),
+            );
+        }
+        "decompress" => {
+            let input = PathBuf::from(args.req("in")?);
+            let out = PathBuf::from(args.req("out")?);
+            let czb = std::fs::read(&input)?;
+            let t = std::time::Instant::now();
+            let (name, field) = client_reply(client.decompress(&czb))?;
+            h5lite::write(&out, &[h5lite::Dataset::from_field(&name, &field)])?;
+            println!(
+                "{name} ({}x{}x{}) -> {} via {addr} ({:.3}s)",
+                field.nx,
+                field.ny,
+                field.nz,
+                out.display(),
+                t.elapsed().as_secs_f64(),
+            );
+        }
+        "verify" => {
+            let input = PathBuf::from(args.req("in")?);
+            let czb = std::fs::read(&input)?;
+            let s = client_reply(client.verify(&czb))?;
+            println!(
+                "{}: {} ({} chunks, {} corrupt, {} blocks lost)",
+                input.display(),
+                if s.clean { "clean" } else { "CORRUPT" },
+                s.total_chunks,
+                s.corrupt_chunks,
+                s.lost_blocks,
+            );
+            if !s.clean {
+                std::process::exit(3);
+            }
+        }
+        o => return Err(anyhow!("unknown op {o} (compress|decompress|verify|stat|shutdown)")),
+    }
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
         "czb — CubismZ-RS parallel compression tool
@@ -632,7 +835,25 @@ USAGE: czb <command> [flags]
               exit codes: 0 clean, 3 corrupt content, 1 unreadable file, 2 usage
   codecs      (list the registered stage-2 codecs, ids, efforts and aliases)
   info        --in f.czb | f.czs  [--cache-chunks N]  (czs archives open lazily)
-  psnr        --ref f.h5l --dataset NAME --in f.czb"
+  psnr        --ref f.h5l --dataset NAME --in f.czb
+  serve       [--addr 127.0.0.1:9321] [--threads N (0 = all cores)]
+              [--admit N (in-flight requests, 0 = 2x threads)] [--admit-high N (extra
+               high-priority slots)] [--retry-after-ms MS] [--max-body BYTES]
+              [--quota-capacity BYTES] [--quota-rate BYTES/S (0 = quotas off)]
+              (long-running compression service: length-prefixed binary frames over
+               TCP — compress/decompress/verify/stat/shutdown — one shared engine
+               pool for all connections; overload answers busy/quota + retry-after
+               instead of queueing; SIGTERM or a shutdown frame drains gracefully;
+               wire format in docs/PROTOCOL.md)
+  client      --op compress|decompress|verify|stat|shutdown [--addr HOST:PORT]
+              [--tenant ID] [--priority normal|high]
+              (compress:   --in f.h5l --dataset NAME --out f.czb [--eps 1e-3]
+                           [--bs 32] [--shuffle [none|byte4|bit4]])
+              (decompress: --in f.czb --out f.h5l)   (verify: --in f.czb)
+              exit codes: 0 ok, 3 verify found corruption, 4 server refused
+              (busy/quota/draining/error), 1 transport failure, 2 usage
+
+Unknown flags after a subcommand are a usage error (exit 2)."
     );
     std::process::exit(2);
 }
@@ -650,6 +871,18 @@ fn main() {
             usage();
         }
     };
+    match allowed_flags(cmd.as_str()) {
+        None => {
+            eprintln!("unknown command {cmd}");
+            usage();
+        }
+        Some(allowed) => {
+            if let Err(e) = args.check_known(&cmd, &allowed) {
+                eprintln!("error: {e}");
+                usage();
+            }
+        }
+    }
     let r = match cmd.as_str() {
         "gen" => cmd_gen(&args),
         "compress" => cmd_compress(&args),
@@ -661,10 +894,10 @@ fn main() {
         "codecs" => cmd_codecs(),
         "info" => cmd_info(&args),
         "psnr" => cmd_psnr(&args),
-        _ => {
-            eprintln!("unknown command {cmd}");
-            usage();
-        }
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        // allowed_flags() already rejected unknown commands
+        _ => unreachable!("command {cmd} has a flag list but no dispatch arm"),
     };
     if let Err(e) = r {
         eprintln!("error: {e:#}");

@@ -1,9 +1,12 @@
-//! Quality metrics: compression ratio and PSNR (paper §3, eq. 1).
+//! Quality metrics: compression ratio and PSNR (paper §3, eq. 1) —
+//! plus the live operational metric registry ([`registry`]) the
+//! service front-end exports.
 //!
 //! Every metric returns `Option` rather than asserting: these run over
 //! *decoded* data, which after a salvage decode may be empty,
 //! length-mismatched or hole-ridden — a verification report must say
 //! "undefined" for such inputs, not bring the tool down mid-report.
+pub mod registry;
 
 /// Mean squared error between two equally sized datasets. `None` when
 /// the inputs are empty or differ in length (the metric is undefined,

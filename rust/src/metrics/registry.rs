@@ -1,0 +1,315 @@
+//! Live operational metrics: lock-free counters, gauges and log-scale
+//! histograms, aggregated in a [`Registry`] the long-running service
+//! front-end (`czb serve`) exports as a plaintext `stat` response.
+//!
+//! The per-run numbers in `BENCH_*.json` answer "how fast is this
+//! build"; this registry answers "what is this *process* doing right
+//! now" — requests and responses by type, bytes in/out, engine stage
+//! timings, queue depth, per-tenant usage. Everything on the hot path
+//! is a relaxed atomic add (no locks, no allocation); only the
+//! per-tenant map takes a short mutex, once per request, keyed by the
+//! tenant id in the request header.
+//!
+//! Histograms are fixed log₂ buckets over microseconds (bucket *i*
+//! covers `[2^i, 2^{i+1})` µs, 32 buckets ≈ up to 71 minutes), so a
+//! quantile read costs one pass over 32 counters and never allocates.
+//! Quantiles are upper-bound estimates — each sample reports the top of
+//! its bucket — which is the right bias for latency SLOs (never
+//! under-report).
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (queue depth, open connections): goes up and
+/// down, may be read mid-flight.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, v: i64) {
+        self.0.fetch_sub(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂-bucketed latency histogram over microseconds. See the module
+/// docs for the bucket layout and quantile bias.
+pub struct Histogram {
+    buckets: [AtomicU64; Histogram::NBUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    const NBUCKETS: usize = 32;
+
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(micros: u64) -> usize {
+        // floor(log2(max(v,1))), clamped into the table
+        (63 - micros.max(1).leading_zeros() as usize).min(Self::NBUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i` in seconds (what quantiles report).
+    fn bucket_upper_secs(i: usize) -> f64 {
+        (1u64 << (i + 1).min(63)) as f64 * 1e-6
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        let micros = (secs.max(0.0) * 1e6) as u64;
+        self.buckets[Self::bucket_of(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total recorded time in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    /// Approximate quantile `q` in `[0, 1]`, in seconds: the upper bound
+    /// of the bucket containing the `ceil(q·count)`-th sample. `None`
+    /// when nothing was recorded. Reads are racy against concurrent
+    /// records by design — a monitoring read never blocks the hot path.
+    pub fn quantile_secs(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Some(Self::bucket_upper_secs(i));
+            }
+        }
+        Some(Self::bucket_upper_secs(Self::NBUCKETS - 1))
+    }
+}
+
+/// What one tenant (request-header id) has consumed so far.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantUsage {
+    pub requests: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Requests refused by that tenant's token bucket.
+    pub throttled: u64,
+}
+
+/// Request operations the service meters, in wire order.
+pub const OPS: [&str; 5] = ["compress", "decompress", "verify", "stat", "shutdown"];
+/// Response statuses the service meters, in wire order.
+pub const STATUSES: [&str; 6] = ["ok", "error", "busy", "quota", "shutting_down", "bad_request"];
+
+/// The process-wide metric set. One instance is shared (`Arc`) between
+/// the service front-end, the [`crate::pipeline::Engine`] it drives
+/// (via `EngineBuilder::metrics`) and the exporter
+/// ([`crate::service::metrics_export`]).
+#[derive(Default)]
+pub struct Registry {
+    /// Requests received, by operation (indexed like [`OPS`]).
+    pub requests: [Counter; OPS.len()],
+    /// Responses sent, by status (indexed like [`STATUSES`]).
+    pub responses: [Counter; STATUSES.len()],
+    /// Request/response body bytes moved over the wire.
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+    /// Admitted submissions currently in flight (admission queue depth).
+    pub queue_depth: Gauge,
+    /// Open client connections.
+    pub connections: Gauge,
+    /// End-to-end request latency by operation (compress, decompress,
+    /// verify — stat/shutdown are too cheap to matter).
+    pub latency_compress: Histogram,
+    pub latency_decompress: Histogram,
+    pub latency_verify: Histogram,
+    /// Engine-side totals, recorded by `Engine::compress`/`decompress*`
+    /// whatever the caller (service, CLI batch, tests).
+    pub engine_compress_calls: Counter,
+    pub engine_decompress_calls: Counter,
+    pub engine_raw_bytes: Counter,
+    pub engine_compressed_bytes: Counter,
+    pub engine_decoded_bytes: Counter,
+    /// Stage wall-time totals in microseconds (summed over threads).
+    pub stage1_micros: Counter,
+    pub stage2_micros: Counter,
+    tenants: Mutex<HashMap<String, TenantUsage>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one request for `tenant` ("" meters as the anonymous
+    /// tenant), with the body bytes it brought and took away.
+    pub fn record_tenant(&self, tenant: &str, bytes_in: u64, bytes_out: u64, throttled: bool) {
+        let mut g = self.tenants.lock().unwrap();
+        let u = g.entry(tenant.to_string()).or_default();
+        u.requests += 1;
+        u.bytes_in += bytes_in;
+        u.bytes_out += bytes_out;
+        if throttled {
+            u.throttled += 1;
+        }
+    }
+
+    /// Per-tenant usage, sorted by tenant id for a stable export order.
+    pub fn tenants_snapshot(&self) -> Vec<(String, TenantUsage)> {
+        let g = self.tenants.lock().unwrap();
+        let mut v: Vec<(String, TenantUsage)> =
+            g.iter().map(|(k, u)| (k.clone(), *u)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Latency histogram for a request op, when that op is metered.
+    pub fn latency_of(&self, op_index: usize) -> Option<&Histogram> {
+        match OPS.get(op_index).copied() {
+            Some("compress") => Some(&self.latency_compress),
+            Some("decompress") => Some(&self.latency_decompress),
+            Some("verify") => Some(&self.latency_verify),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.add(3);
+        g.sub(1);
+        assert_eq!(g.get(), 2);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_secs(0.5), None);
+        // 90 fast samples at ~100µs, 10 slow at ~50ms
+        for _ in 0..90 {
+            h.record_secs(100e-6);
+        }
+        for _ in 0..10 {
+            h.record_secs(50e-3);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_secs(0.5).unwrap();
+        let p99 = h.quantile_secs(0.99).unwrap();
+        // p50 lands in the fast bucket (upper bound <= 256µs), p99 in the
+        // slow one (upper bound >= 50ms); quantiles never under-report
+        assert!(p50 >= 100e-6 && p50 <= 512e-6, "p50 {p50}");
+        assert!(p99 >= 50e-3, "p99 {p99}");
+        assert!(p99 <= 0.2, "p99 {p99}");
+        assert!((h.sum_secs() - (90.0 * 100e-6 + 10.0 * 50e-3)).abs() < 1e-3);
+        // monotone in q
+        assert!(h.quantile_secs(1.0).unwrap() >= p99);
+        assert!(h.quantile_secs(0.0).unwrap() <= p50);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = Histogram::new();
+        h.record_secs(0.0); // clamps to the first bucket
+        h.record_secs(1e9); // clamps to the last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_secs(1.0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn tenant_usage_accumulates_per_id() {
+        let r = Registry::new();
+        r.record_tenant("a", 100, 50, false);
+        r.record_tenant("b", 10, 0, true);
+        r.record_tenant("a", 1, 2, false);
+        let snap = r.tenants_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[0].1.requests, 2);
+        assert_eq!(snap[0].1.bytes_in, 101);
+        assert_eq!(snap[0].1.bytes_out, 52);
+        assert_eq!(snap[0].1.throttled, 0);
+        assert_eq!(snap[1].1.throttled, 1);
+    }
+
+    #[test]
+    fn latency_of_maps_metered_ops() {
+        let r = Registry::new();
+        assert!(r.latency_of(0).is_some());
+        assert!(r.latency_of(1).is_some());
+        assert!(r.latency_of(2).is_some());
+        assert!(r.latency_of(3).is_none(), "stat is not metered");
+        assert!(r.latency_of(99).is_none());
+    }
+
+    #[test]
+    fn registry_is_send_sync() {
+        const fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Registry>();
+    }
+}

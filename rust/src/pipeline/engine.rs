@@ -47,7 +47,9 @@ use super::format::{CzbFile, ShuffleMode, Stage1};
 use crate::cluster::WorkerPool;
 use crate::codec::Codec;
 use crate::core::Field3;
+use crate::metrics::registry::Registry;
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Per-call compression parameters: what to compress *with*, as opposed
 /// to the session-level knobs (threads, chunk budget, batch size) fixed
@@ -89,6 +91,7 @@ pub struct EngineBuilder {
     frame_bytes: usize,
     batch: usize,
     wavelet_engine: Box<dyn WaveletEngine>,
+    metrics: Option<Arc<Registry>>,
 }
 
 impl EngineBuilder {
@@ -99,6 +102,7 @@ impl EngineBuilder {
             frame_bytes: DEFAULT_FRAME_BYTES,
             batch: 16,
             wavelet_engine: Box::new(NativeEngine),
+            metrics: None,
         }
     }
 
@@ -140,6 +144,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Live metric registry the session reports into: every
+    /// `compress`/`decompress*` call adds its byte totals and stage
+    /// wall-times (relaxed atomic adds — no effect on the hot path when
+    /// unset). The service front-end shares one registry between the
+    /// engine and its `/metrics`-style `stat` exporter.
+    pub fn metrics(mut self, registry: Arc<Registry>) -> Self {
+        self.metrics = Some(registry);
+        self
+    }
+
     pub fn build(self) -> Engine {
         let threads = match self.threads {
             0 => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
@@ -152,6 +166,7 @@ impl EngineBuilder {
             frame_bytes: self.frame_bytes,
             batch: self.batch,
             wavelet_engine: self.wavelet_engine,
+            metrics: self.metrics,
         }
     }
 }
@@ -170,6 +185,7 @@ pub struct Engine {
     frame_bytes: usize,
     batch: usize,
     wavelet_engine: Box<dyn WaveletEngine>,
+    metrics: Option<Arc<Registry>>,
 }
 
 /// Compile-time guarantee that sessions stay shareable and movable
@@ -232,6 +248,13 @@ impl Engine {
         for p in &cs.payloads {
             sink.write_all(p)?;
         }
+        if let Some(m) = &self.metrics {
+            m.engine_compress_calls.inc();
+            m.engine_raw_bytes.add(cs.stats.raw_bytes as u64);
+            m.engine_compressed_bytes.add(cs.stats.compressed_bytes as u64);
+            m.stage1_micros.add((cs.stats.t_stage1 * 1e6) as u64);
+            m.stage2_micros.add((cs.stats.t_stage2 * 1e6) as u64);
+        }
         Ok(cs.stats)
     }
 
@@ -260,7 +283,12 @@ impl Engine {
 
     /// Decompress an in-memory `.czb` stream on the session pool.
     pub fn decompress_bytes(&self, bytes: &[u8]) -> Result<(Field3, CzbFile), String> {
-        decompress_field_core(&self.pool, bytes, self.wavelet_engine.as_ref(), self.threads)
+        let r = decompress_field_core(&self.pool, bytes, self.wavelet_engine.as_ref(), self.threads);
+        if let (Some(m), Ok((field, _))) = (&self.metrics, &r) {
+            m.engine_decompress_calls.inc();
+            m.engine_decoded_bytes.add(field.nbytes() as u64);
+        }
+        r
     }
 
     /// Salvage-decompress an in-memory `.czb` stream on the session
@@ -755,6 +783,25 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn metrics_registry_records_engine_totals() {
+        use crate::metrics::registry::Registry;
+        let reg = std::sync::Arc::new(Registry::new());
+        let engine = Engine::builder().threads(2).metrics(reg.clone()).build();
+        let f = smooth_field(32, 12);
+        let params = CompressParams::paper_default(1e-3);
+        let (bytes, stats) = engine.compress_vec(&f, "p", &params);
+        assert_eq!(reg.engine_compress_calls.get(), 1);
+        assert_eq!(reg.engine_raw_bytes.get(), stats.raw_bytes as u64);
+        assert_eq!(reg.engine_compressed_bytes.get(), stats.compressed_bytes as u64);
+        let (back, _) = engine.decompress_bytes(&bytes).unwrap();
+        assert_eq!(reg.engine_decompress_calls.get(), 1);
+        assert_eq!(reg.engine_decoded_bytes.get(), back.nbytes() as u64);
+        // failed decodes are not counted as decompressions
+        assert!(engine.decompress_bytes(b"junk").is_err());
+        assert_eq!(reg.engine_decompress_calls.get(), 1);
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Admission control: a bounded count of in-flight requests with an
+//! express lane, refusing (not queueing) the overflow.
+//!
+//! The worker pool underneath already multiplexes any number of
+//! submissions fairly — what it cannot do is bound *memory*: every
+//! admitted request holds its decoded field and response buffers alive
+//! until it finishes. So the service admits at most `normal_limit`
+//! concurrent requests on the normal lane, plus `high_extra` reserved
+//! slots only high-priority requests may take. A refused request gets
+//! an explicit `busy` response with a retry hint; nothing is ever
+//! parked in an unbounded queue where the client can't see it.
+//!
+//! Slots are RAII: [`Admission::try_acquire`] hands out a [`Permit`]
+//! whose `Drop` releases the slot, so a panicking handler or an early
+//! `return` can never leak capacity.
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::proto::Priority;
+
+/// Why a request was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Busy {
+    /// Backpressure hint for the client, in milliseconds.
+    pub retry_after_ms: u32,
+}
+
+struct Inner {
+    in_flight: AtomicUsize,
+    normal_limit: usize,
+    total_limit: usize,
+    retry_after_ms: u32,
+}
+
+/// Shared admission state (cheap to clone; all clones meter the same
+/// slots).
+#[derive(Clone)]
+pub struct Admission {
+    inner: Arc<Inner>,
+}
+
+/// One admitted in-flight request. Dropping it releases the slot.
+pub struct Permit {
+    inner: Arc<Inner>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.inner.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Admission {
+    /// `normal_limit` slots for everyone, `high_extra` more that only
+    /// [`Priority::High`] requests can occupy. Limits are clamped to at
+    /// least one normal slot (an admission control that admits nothing
+    /// is a misconfiguration, not a policy).
+    pub fn new(normal_limit: usize, high_extra: usize, retry_after_ms: u32) -> Self {
+        let normal_limit = normal_limit.max(1);
+        Self {
+            inner: Arc::new(Inner {
+                in_flight: AtomicUsize::new(0),
+                normal_limit,
+                total_limit: normal_limit + high_extra,
+                retry_after_ms,
+            }),
+        }
+    }
+
+    /// Try to occupy a slot for a request on `priority`'s lane.
+    pub fn try_acquire(&self, priority: Priority) -> Result<Permit, Busy> {
+        let limit = match priority {
+            Priority::Normal => self.inner.normal_limit,
+            Priority::High => self.inner.total_limit,
+        };
+        // CAS loop rather than fetch_add/undo: a burst of refused
+        // requests must not transiently inflate the count past the
+        // limit and refuse an admissible sibling.
+        let mut cur = self.inner.in_flight.load(Ordering::Acquire);
+        loop {
+            if cur >= limit {
+                return Err(Busy { retry_after_ms: self.inner.retry_after_ms });
+            }
+            match self.inner.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Ok(Permit { inner: Arc::clone(&self.inner) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Requests currently holding a permit.
+    pub fn in_flight(&self) -> usize {
+        self.inner.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn normal_limit(&self) -> usize {
+        self.inner.normal_limit
+    }
+
+    pub fn total_limit(&self) -> usize {
+        self.inner.total_limit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permits_bound_the_normal_lane() {
+        let a = Admission::new(2, 0, 100);
+        let p1 = a.try_acquire(Priority::Normal).unwrap();
+        let _p2 = a.try_acquire(Priority::Normal).unwrap();
+        let busy = a.try_acquire(Priority::Normal).unwrap_err();
+        assert_eq!(busy.retry_after_ms, 100);
+        assert_eq!(a.in_flight(), 2);
+        drop(p1);
+        assert_eq!(a.in_flight(), 1);
+        let _p3 = a.try_acquire(Priority::Normal).unwrap();
+    }
+
+    #[test]
+    fn high_lane_has_reserved_headroom() {
+        let a = Admission::new(1, 1, 50);
+        let _p1 = a.try_acquire(Priority::Normal).unwrap();
+        // normal lane is full, the express slot still admits high
+        assert!(a.try_acquire(Priority::Normal).is_err());
+        let _p2 = a.try_acquire(Priority::High).unwrap();
+        // now even high is full
+        assert!(a.try_acquire(Priority::High).is_err());
+        assert_eq!(a.in_flight(), 2);
+    }
+
+    #[test]
+    fn zero_limits_are_clamped_to_one_slot() {
+        let a = Admission::new(0, 0, 10);
+        let _p = a.try_acquire(Priority::Normal).unwrap();
+        assert!(a.try_acquire(Priority::High).is_err());
+    }
+
+    #[test]
+    fn dropped_permits_never_leak_under_contention() {
+        let a = Admission::new(4, 2, 1);
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    let pri = if i % 2 == 0 { Priority::Normal } else { Priority::High };
+                    let mut admitted = 0u32;
+                    for _ in 0..500 {
+                        if let Ok(p) = a.try_acquire(pri) {
+                            admitted += 1;
+                            assert!(a.in_flight() <= a.total_limit());
+                            drop(p);
+                        }
+                    }
+                    admitted
+                })
+            })
+            .collect();
+        let total: u32 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(a.in_flight(), 0, "every permit must have been returned");
+    }
+}

@@ -1,0 +1,642 @@
+//! One client connection: the per-frame request loop between a
+//! `Read`/`Write` pair and the shared engine.
+//!
+//! The handler is generic over the transport so tests can drive it with
+//! in-memory buffers and the fault-injection adapters from
+//! [`crate::io::fault`] — the TCP server wraps a `TcpStream` in
+//! [`IdleAwareReader`] and hands it here.
+//!
+//! # Close policy
+//!
+//! The frame layer tells three situations apart and each has exactly
+//! one outcome — never a panic, a hang, or a submission left behind:
+//!
+//! * clean EOF between frames → the client is done, close quietly;
+//! * malformed frame (bad magic/version/op, oversized declaration,
+//!   mid-header truncation) → one `bad_request` response, then close:
+//!   the stream position can no longer be trusted;
+//! * I/O error → close; the peer is gone.
+//!
+//! Within a well-formed frame, a *semantic* failure (corrupt `.czb`
+//! body, undecodable field) earns an `error` response and the
+//! connection stays open — except a compress body that fails mid-parse,
+//! which also desyncs the stream and closes after responding.
+//!
+//! Refused requests (admission `busy`, quota, draining) have their
+//! declared body drained so the next frame still parses.
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::verify_czb_bytes;
+use crate::metrics::registry::Registry;
+use crate::pipeline::{CompressParams, Engine, PipelineConfig};
+
+use super::admission::Admission;
+use super::metrics_export;
+use super::proto::{self, FrameError, Op, RequestHeader, Status, VerifySummary};
+use super::quota::Quota;
+
+/// Everything a connection handler shares with its siblings.
+#[derive(Clone)]
+pub struct ConnCtx {
+    pub engine: Arc<Engine>,
+    pub metrics: Arc<Registry>,
+    pub admission: Admission,
+    pub quota: Arc<Quota>,
+    /// Drain flag: set by a `shutdown` request or SIGTERM. Work ops are
+    /// refused with `shutting_down`; `stat` and `shutdown` still serve.
+    pub stop: Arc<AtomicBool>,
+    /// Largest request body this server will accept.
+    pub max_body: u64,
+}
+
+impl ConnCtx {
+    pub fn new(
+        engine: Arc<Engine>,
+        metrics: Arc<Registry>,
+        admission: Admission,
+        quota: Arc<Quota>,
+    ) -> Self {
+        Self {
+            engine,
+            metrics,
+            admission,
+            quota,
+            stop: Arc::new(AtomicBool::new(false)),
+            max_body: proto::DEFAULT_MAX_BODY,
+        }
+    }
+
+    pub fn with_max_body(mut self, n: u64) -> Self {
+        self.max_body = n;
+        self
+    }
+}
+
+/// How a connection ended (for tests and server logs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnOutcome {
+    /// EOF at a frame boundary — the client hung up normally.
+    CleanClose,
+    /// A malformed or desynced frame: the peer got one diagnostic
+    /// response (when the pipe still worked), then we closed.
+    ProtocolError,
+    /// The transport failed mid-frame.
+    IoError,
+}
+
+/// Serve frames until the connection ends. See the module docs for the
+/// close policy.
+pub fn serve_connection<R: Read, W: Write>(r: &mut R, w: &mut W, ctx: &ConnCtx) -> ConnOutcome {
+    loop {
+        let hdr = match proto::read_request_header(r, ctx.max_body) {
+            Ok(h) => h,
+            Err(FrameError::Eof) => return ConnOutcome::CleanClose,
+            Err(FrameError::Malformed(m)) => {
+                ctx.metrics.responses[Status::BadRequest.index()].inc();
+                let _ = proto::write_response(w, Status::BadRequest, 0, m.as_bytes());
+                return ConnOutcome::ProtocolError;
+            }
+            Err(FrameError::Io(_)) => return ConnOutcome::IoError,
+        };
+        ctx.metrics.requests[hdr.op.index()].inc();
+        ctx.metrics.bytes_in.add(hdr.body_len);
+        match handle_request(r, w, ctx, &hdr) {
+            Ok(true) => {}
+            Ok(false) => return ConnOutcome::ProtocolError,
+            Err(_) => return ConnOutcome::IoError,
+        }
+    }
+}
+
+/// Handle one request whose header has been read. `Ok(true)` keeps the
+/// connection open, `Ok(false)` closes it after a diagnostic response,
+/// `Err` is a transport failure.
+fn handle_request<R: Read, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    ctx: &ConnCtx,
+    hdr: &RequestHeader,
+) -> std::io::Result<bool> {
+    match hdr.op {
+        // stat and shutdown serve even while draining — an operator
+        // watching a drain needs both.
+        Op::Stat => {
+            proto::drain_body(r, hdr.body_len)?;
+            ctx.metrics.queue_depth.set(ctx.admission.in_flight() as i64);
+            let text = metrics_export::render(&ctx.metrics);
+            respond(w, ctx, hdr, Status::Ok, 0, text.as_bytes(), false)?;
+            Ok(true)
+        }
+        Op::Shutdown => {
+            proto::drain_body(r, hdr.body_len)?;
+            ctx.stop.store(true, Ordering::SeqCst);
+            respond(w, ctx, hdr, Status::Ok, 0, b"draining", false)?;
+            Ok(true)
+        }
+        Op::Compress | Op::Decompress | Op::Verify => handle_work(r, w, ctx, hdr),
+    }
+}
+
+fn handle_work<R: Read, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    ctx: &ConnCtx,
+    hdr: &RequestHeader,
+) -> std::io::Result<bool> {
+    if ctx.stop.load(Ordering::SeqCst) {
+        proto::drain_body(r, hdr.body_len)?;
+        respond(w, ctx, hdr, Status::ShuttingDown, 0, b"server is draining", false)?;
+        return Ok(true);
+    }
+    // Admission first, then quota: the permit is taken *before* the
+    // body is read, so a saturated server refuses deterministically
+    // even while clients are still streaming bodies — and a quota
+    // refusal must not burn a slot it won't use.
+    let permit = match ctx.admission.try_acquire(hdr.priority) {
+        Ok(p) => p,
+        Err(busy) => {
+            proto::drain_body(r, hdr.body_len)?;
+            respond(
+                w,
+                ctx,
+                hdr,
+                Status::Busy,
+                busy.retry_after_ms,
+                b"admission control: all slots busy",
+                false,
+            )?;
+            return Ok(true);
+        }
+    };
+    ctx.metrics.queue_depth.set(ctx.admission.in_flight() as i64);
+    if let Err(t) = ctx.quota.try_consume(&hdr.tenant, hdr.body_len) {
+        drop(permit);
+        ctx.metrics.queue_depth.set(ctx.admission.in_flight() as i64);
+        proto::drain_body(r, hdr.body_len)?;
+        respond(
+            w,
+            ctx,
+            hdr,
+            Status::Quota,
+            t.retry_after_ms,
+            b"tenant byte quota exhausted",
+            true,
+        )?;
+        return Ok(true);
+    }
+    let t0 = Instant::now();
+    let keep_open = match hdr.op {
+        Op::Compress => {
+            match proto::decode_compress_body(r, hdr.body_len) {
+                Err(e) => {
+                    // a half-parsed compress body desyncs the stream:
+                    // respond, then close
+                    respond(w, ctx, hdr, Status::Error, 0, e.as_bytes(), false)?;
+                    false
+                }
+                Ok(req) => {
+                    let mut params =
+                        CompressParams::from_config(&PipelineConfig::paper_default(req.eps));
+                    params.bs = req.bs as usize;
+                    params.shuffle = req.shuffle;
+                    let mut out = Vec::new();
+                    match ctx.engine.compress(&req.field, &req.name, &params, &mut out) {
+                        Ok(_) => respond_timed(w, ctx, hdr, t0, &out)?,
+                        Err(e) => {
+                            respond(w, ctx, hdr, Status::Error, 0, e.to_string().as_bytes(), false)?
+                        }
+                    }
+                    true
+                }
+            }
+        }
+        Op::Decompress => {
+            let body = read_body(r, hdr.body_len)?;
+            match ctx.engine.decompress_bytes(&body) {
+                Ok((field, file)) => {
+                    let out = proto::encode_field_body(&file.name, &field);
+                    respond_timed(w, ctx, hdr, t0, &out)?;
+                }
+                Err(e) => respond(w, ctx, hdr, Status::Error, 0, e.as_bytes(), false)?,
+            }
+            true
+        }
+        Op::Verify => {
+            let body = read_body(r, hdr.body_len)?;
+            let entry = verify_czb_bytes(&body, false, &ctx.engine);
+            match &entry.outcome {
+                Ok(report) => {
+                    let s = VerifySummary {
+                        clean: report.is_clean(),
+                        total_chunks: report.total_chunks as u32,
+                        corrupt_chunks: report.corrupt_chunks.len() as u32,
+                        lost_blocks: report.lost_blocks as u64,
+                    };
+                    respond_timed(w, ctx, hdr, t0, &proto::encode_verify_body(&s))?;
+                }
+                Err(e) => respond(w, ctx, hdr, Status::Error, 0, e.as_bytes(), false)?,
+            }
+            true
+        }
+        _ => unreachable!("handle_work only sees work ops"),
+    };
+    drop(permit);
+    ctx.metrics.queue_depth.set(ctx.admission.in_flight() as i64);
+    Ok(keep_open)
+}
+
+/// Read a whole declared body into memory (decompress/verify inputs —
+/// the decode paths need random access to the stream).
+fn read_body<R: Read>(r: &mut R, n: u64) -> std::io::Result<Vec<u8>> {
+    let mut body = Vec::with_capacity(n.min(64 << 20) as usize);
+    let copied = std::io::copy(&mut r.take(n), &mut body)?;
+    if copied != n {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("stream ended {copied} bytes into a {n}-byte body"),
+        ));
+    }
+    Ok(body)
+}
+
+/// Send a response and do the per-request accounting (response
+/// counter, bytes out, per-tenant usage).
+fn respond<W: Write>(
+    w: &mut W,
+    ctx: &ConnCtx,
+    hdr: &RequestHeader,
+    status: Status,
+    retry_after_ms: u32,
+    body: &[u8],
+    throttled: bool,
+) -> std::io::Result<()> {
+    ctx.metrics.responses[status.index()].inc();
+    ctx.metrics.bytes_out.add(body.len() as u64);
+    ctx.metrics.record_tenant(&hdr.tenant, hdr.body_len, body.len() as u64, throttled);
+    proto::write_response(w, status, retry_after_ms, body)
+}
+
+/// `respond` for a successful work op: also records end-to-end latency.
+fn respond_timed<W: Write>(
+    w: &mut W,
+    ctx: &ConnCtx,
+    hdr: &RequestHeader,
+    t0: Instant,
+    body: &[u8],
+) -> std::io::Result<()> {
+    if let Some(h) = ctx.metrics.latency_of(hdr.op.index()) {
+        h.record_secs(t0.elapsed().as_secs_f64());
+    }
+    respond(w, ctx, hdr, Status::Ok, 0, body, false)
+}
+
+/// A `Read` adapter for socket transports with a read timeout: retries
+/// `WouldBlock`/`TimedOut` so the blocking frame reader above can wait
+/// indefinitely for the next frame, *unless* the drain flag is set —
+/// then the wait reports EOF and an idle connection closes cleanly
+/// instead of pinning the drain forever.
+pub struct IdleAwareReader<R> {
+    inner: R,
+    stop: Arc<AtomicBool>,
+}
+
+impl<R: Read> IdleAwareReader<R> {
+    pub fn new(inner: R, stop: Arc<AtomicBool>) -> Self {
+        Self { inner, stop }
+    }
+}
+
+impl<R: Read> Read for IdleAwareReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.inner.read(buf) {
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return Ok(0);
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Field3;
+    use crate::io::fault::{FaultPlan, FaultReader};
+    use crate::pipeline::ShuffleMode;
+    use crate::service::proto::{
+        decode_field_body, read_response_header, write_request, Priority, DEFAULT_MAX_BODY,
+    };
+
+    fn test_ctx() -> ConnCtx {
+        let metrics = Arc::new(Registry::new());
+        let engine = Arc::new(
+            Engine::builder().threads(2).metrics(Arc::clone(&metrics)).build(),
+        );
+        ConnCtx::new(engine, metrics, Admission::new(4, 1, 25), Arc::new(Quota::unlimited()))
+    }
+
+    fn test_field() -> Field3 {
+        let (nx, ny, nz) = (16, 16, 16);
+        let data = (0..nx * ny * nz)
+            .map(|i| ((i % 97) as f32 * 0.21).sin())
+            .collect();
+        Field3::from_vec(nx, ny, nz, data)
+    }
+
+    fn read_response(r: &mut dyn Read) -> (Status, u32, Vec<u8>) {
+        let h = read_response_header(r, DEFAULT_MAX_BODY).unwrap();
+        let mut body = vec![0u8; h.body_len as usize];
+        r.read_exact(&mut body).unwrap();
+        (h.status, h.retry_after_ms, body)
+    }
+
+    #[test]
+    fn compress_decompress_verify_roundtrip_one_connection() {
+        let ctx = test_ctx();
+        let field = test_field();
+        // frame 1: compress
+        let mut wire = Vec::new();
+        let body = proto::encode_compress_body("rho", &field, 8, 1e-4, ShuffleMode::Byte4);
+        write_request(&mut wire, Op::Compress, Priority::Normal, "t1", &body).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::CleanClose
+        );
+        let mut resp = out.as_slice();
+        let (st, _, czb) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok);
+        // frames 2+3 on one connection: decompress then verify the czb
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Decompress, Priority::Normal, "t1", &czb).unwrap();
+        write_request(&mut wire, Op::Verify, Priority::High, "t1", &czb).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::CleanClose
+        );
+        let mut resp = out.as_slice();
+        let (st, _, fb) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok);
+        let (name, back) = decode_field_body(&fb).unwrap();
+        assert_eq!(name, "rho");
+        assert_eq!(back.nx, field.nx);
+        // lossy wavelet path: decoded data matches a local decode
+        // bit-for-bit (done against the server's own czb)
+        let (local, _) = ctx.engine.decompress_bytes(&czb).unwrap();
+        assert_eq!(back.data, local.data, "server decode must be bit-identical to local");
+        let (st, _, vb) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok);
+        let summary = proto::decode_verify_body(&vb).unwrap();
+        assert!(summary.clean);
+        assert!(summary.total_chunks >= 1);
+        // accounting moved
+        assert_eq!(ctx.metrics.requests[Op::Compress.index()].get(), 1);
+        assert_eq!(ctx.metrics.requests[Op::Decompress.index()].get(), 1);
+        assert_eq!(ctx.metrics.responses[Status::Ok.index()].get(), 3);
+        assert_eq!(ctx.admission.in_flight(), 0);
+        assert_eq!(ctx.metrics.queue_depth.get(), 0);
+        let tenants = ctx.metrics.tenants_snapshot();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].1.requests, 3);
+    }
+
+    #[test]
+    fn stat_and_shutdown_frames() {
+        let ctx = test_ctx();
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        write_request(&mut wire, Op::Shutdown, Priority::Normal, "", b"").unwrap();
+        // after shutdown, a work op is refused with shutting_down
+        let body = proto::encode_compress_body("x", &test_field(), 8, 1e-4, ShuffleMode::None);
+        write_request(&mut wire, Op::Compress, Priority::Normal, "", &body).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::CleanClose
+        );
+        let mut resp = out.as_slice();
+        let (st, _, stat_body) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok);
+        let text = String::from_utf8(stat_body).unwrap();
+        assert!(text.contains("czb_requests_total{op=\"stat\"} 1"), "{text}");
+        let (st, _, _) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok, "shutdown acks");
+        assert!(ctx.stop.load(Ordering::SeqCst));
+        let (st, _, _) = read_response(&mut resp);
+        assert_eq!(st, Status::ShuttingDown, "work after shutdown is refused");
+    }
+
+    #[test]
+    fn corrupt_decompress_body_keeps_the_connection_open() {
+        let ctx = test_ctx();
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Decompress, Priority::Normal, "", b"not a czb").unwrap();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::CleanClose
+        );
+        let mut resp = out.as_slice();
+        let (st, _, msg) = read_response(&mut resp);
+        assert_eq!(st, Status::Error);
+        assert!(!msg.is_empty());
+        let (st, _, _) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok, "the stat frame after the bad body still serves");
+        assert_eq!(ctx.admission.in_flight(), 0, "no permit leaked");
+    }
+
+    #[test]
+    fn malformed_magic_gets_bad_request_then_close() {
+        let ctx = test_ctx();
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        wire[0] = b'X';
+        // a second, well-formed frame after the garbage must NOT be served
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::ProtocolError
+        );
+        let mut resp = out.as_slice();
+        let (st, _, msg) = read_response(&mut resp);
+        assert_eq!(st, Status::BadRequest);
+        assert!(String::from_utf8_lossy(&msg).contains("magic"));
+        assert!(resp.is_empty(), "nothing served after a desynced frame");
+        assert_eq!(ctx.metrics.responses[Status::BadRequest.index()].get(), 1);
+    }
+
+    #[test]
+    fn oversized_declared_body_is_refused_without_reading_it() {
+        let ctx = test_ctx().with_max_body(1024);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Decompress, Priority::Normal, "", &[0u8; 4096]).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::ProtocolError
+        );
+        let (st, _, msg) = read_response(&mut out.as_slice());
+        assert_eq!(st, Status::BadRequest);
+        assert!(String::from_utf8_lossy(&msg).contains("exceeds"));
+    }
+
+    #[test]
+    fn busy_and_quota_refusals_keep_framing() {
+        let metrics = Arc::new(Registry::new());
+        let engine = Arc::new(Engine::builder().threads(1).build());
+        // zero-slot normal lane (clamped to 1) occupied by a held permit
+        let admission = Admission::new(1, 0, 42);
+        let _held = admission.try_acquire(Priority::Normal).unwrap();
+        let ctx = ConnCtx::new(engine, metrics, admission, Arc::new(Quota::new(10, 1)));
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Verify, Priority::Normal, "t", b"0123456789").unwrap();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "t", b"").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::CleanClose
+        );
+        let mut resp = out.as_slice();
+        let (st, retry, _) = read_response(&mut resp);
+        assert_eq!(st, Status::Busy);
+        assert_eq!(retry, 42);
+        let (st, _, _) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok, "framing intact after the refusal");
+        // now free the slot: the next refusal comes from the quota
+        drop(_held);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Verify, Priority::Normal, "t", &[0u8; 10]).unwrap();
+        write_request(&mut wire, Op::Verify, Priority::Normal, "t", &[0u8; 10]).unwrap();
+        let mut out = Vec::new();
+        serve_connection(&mut wire.as_slice(), &mut out, &ctx);
+        let mut resp = out.as_slice();
+        let (st, _, _) = read_response(&mut resp); // drains the full bucket (error: not a czb)
+        assert_eq!(st, Status::Error);
+        let (st, retry, _) = read_response(&mut resp);
+        assert_eq!(st, Status::Quota);
+        assert!(retry > 0, "quota refusal must carry a retry hint");
+        let throttled = ctx.metrics.tenants_snapshot();
+        assert_eq!(throttled[0].1.throttled, 1);
+        assert_eq!(ctx.admission.in_flight(), 0);
+    }
+
+    // ---- fault-injected transports (satellite: protocol robustness) ----
+
+    #[test]
+    fn interrupted_and_short_reads_still_serve() {
+        let ctx = test_ctx();
+        let field = test_field();
+        let body = proto::encode_compress_body("q", &field, 8, 1e-4, ShuffleMode::Byte4);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Compress, Priority::Normal, "t", &body).unwrap();
+        let plan = FaultPlan::new()
+            .fail_op(0, std::io::ErrorKind::Interrupted)
+            .short_read(1, 5)
+            .fail_op(3, std::io::ErrorKind::Interrupted)
+            .short_read(4, 7)
+            .fail_op(7, std::io::ErrorKind::Interrupted);
+        let mut r = FaultReader::new(wire.as_slice(), plan);
+        let mut out = Vec::new();
+        assert_eq!(serve_connection(&mut r, &mut out, &ctx), ConnOutcome::CleanClose);
+        assert!(r.plan().injected() >= 3, "the fault script must have fired");
+        let (st, _, czb) = read_response(&mut out.as_slice());
+        assert_eq!(st, Status::Ok);
+        let (back, _) = ctx.engine.decompress_bytes(&czb).unwrap();
+        assert_eq!(back.nx, field.nx);
+    }
+
+    #[test]
+    fn header_bit_flip_is_a_clean_protocol_error() {
+        let ctx = test_ctx();
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        // flip a bit in the magic as it crosses the wire
+        let plan = FaultPlan::new().flip_bit(1, 0x40);
+        let mut r = FaultReader::new(wire.as_slice(), plan);
+        let mut out = Vec::new();
+        assert_eq!(serve_connection(&mut r, &mut out, &ctx), ConnOutcome::ProtocolError);
+        assert_eq!(r.plan().injected(), 1);
+        let (st, _, _) = read_response(&mut out.as_slice());
+        assert_eq!(st, Status::BadRequest);
+        assert_eq!(ctx.admission.in_flight(), 0);
+    }
+
+    #[test]
+    fn body_bit_flip_surfaces_as_a_czb_integrity_error() {
+        let ctx = test_ctx();
+        let field = test_field();
+        let (czb, _) = ctx.engine.compress_vec(
+            &field,
+            "q",
+            &CompressParams::from_config(&PipelineConfig::paper_default(1e-4)),
+        );
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Decompress, Priority::Normal, "", &czb).unwrap();
+        // flip one payload bit mid-body (past header+tenant, inside czb data)
+        let at = (proto::REQ_HEADER_LEN + czb.len() / 2) as u64;
+        let mut r = FaultReader::new(wire.as_slice(), FaultPlan::new().flip_bit(at, 0x10));
+        let mut out = Vec::new();
+        // the frame is intact, the body is corrupt: error response, open conn
+        assert_eq!(serve_connection(&mut r, &mut out, &ctx), ConnOutcome::CleanClose);
+        assert_eq!(r.plan().injected(), 1);
+        let (st, _, msg) = read_response(&mut out.as_slice());
+        assert_eq!(st, Status::Error, "{}", String::from_utf8_lossy(&msg));
+        assert_eq!(ctx.admission.in_flight(), 0, "failed request returned its permit");
+    }
+
+    #[test]
+    fn truncated_frames_never_hang_or_leak_permits() {
+        let ctx = test_ctx();
+        let field = test_field();
+        let body = proto::encode_compress_body("q", &field, 8, 1e-4, ShuffleMode::None);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Compress, Priority::Normal, "tenant", &body).unwrap();
+        // cut the stream at a few hostile offsets: mid-header, mid-tenant,
+        // mid-prefix, mid-samples
+        for cut in [3u64, 9, 17, 30, 64, (wire.len() - 5) as u64] {
+            let plan = FaultPlan::new().truncate_at(cut);
+            let mut r = FaultReader::new(wire.as_slice(), plan);
+            let mut out = Vec::new();
+            let outcome = serve_connection(&mut r, &mut out, &ctx);
+            assert_ne!(outcome, ConnOutcome::CleanClose, "cut at {cut} must be an error");
+            assert_eq!(ctx.admission.in_flight(), 0, "cut at {cut} leaked a permit");
+        }
+        assert_eq!(ctx.metrics.queue_depth.get(), 0);
+    }
+
+    #[test]
+    fn idle_aware_reader_unblocks_on_stop() {
+        struct AlwaysBlocked;
+        impl Read for AlwaysBlocked {
+            fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "poll"))
+            }
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut r = IdleAwareReader::new(AlwaysBlocked, Arc::clone(&stop));
+        let flag = Arc::clone(&stop);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            flag.store(true, Ordering::SeqCst);
+        });
+        let mut buf = [0u8; 8];
+        // blocks until the stop flag flips, then reports EOF
+        assert_eq!(r.read(&mut buf).unwrap(), 0);
+        t.join().unwrap();
+    }
+}

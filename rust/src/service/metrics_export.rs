@@ -1,0 +1,195 @@
+//! Render the live [`Registry`] as plaintext in Prometheus exposition
+//! style — the body of a `stat` response.
+//!
+//! The format is line-oriented `name{label="value"} number`, with
+//! `# HELP`/`# TYPE` comments, so any Prometheus-compatible scraper
+//! (or a human with `nc`) can read it. No timestamp is emitted — the
+//! scrape time is the sample time.
+use crate::metrics::registry::{Registry, OPS, STATUSES};
+use std::fmt::Write as _;
+
+/// Latency quantiles the exporter reports per metered operation.
+const QUANTILES: [(&str, f64); 3] = [("0.5", 0.5), ("0.99", 0.99), ("1", 1.0)];
+
+/// Render the whole registry. Infallible: writing into a `String`
+/// cannot fail, and every metric read is a relaxed atomic load.
+pub fn render(r: &Registry) -> String {
+    let mut out = String::with_capacity(4096);
+    let _ = writeln!(out, "# HELP czb_requests_total Requests received, by operation.");
+    let _ = writeln!(out, "# TYPE czb_requests_total counter");
+    for (i, op) in OPS.iter().enumerate() {
+        let _ = writeln!(out, "czb_requests_total{{op=\"{op}\"}} {}", r.requests[i].get());
+    }
+    let _ = writeln!(out, "# HELP czb_responses_total Responses sent, by status.");
+    let _ = writeln!(out, "# TYPE czb_responses_total counter");
+    for (i, st) in STATUSES.iter().enumerate() {
+        let _ = writeln!(out, "czb_responses_total{{status=\"{st}\"}} {}", r.responses[i].get());
+    }
+    let _ = writeln!(out, "# HELP czb_bytes_in_total Request body bytes received.");
+    let _ = writeln!(out, "# TYPE czb_bytes_in_total counter");
+    let _ = writeln!(out, "czb_bytes_in_total {}", r.bytes_in.get());
+    let _ = writeln!(out, "# HELP czb_bytes_out_total Response body bytes sent.");
+    let _ = writeln!(out, "# TYPE czb_bytes_out_total counter");
+    let _ = writeln!(out, "czb_bytes_out_total {}", r.bytes_out.get());
+    let _ = writeln!(out, "# HELP czb_queue_depth Admitted requests currently in flight.");
+    let _ = writeln!(out, "# TYPE czb_queue_depth gauge");
+    let _ = writeln!(out, "czb_queue_depth {}", r.queue_depth.get());
+    let _ = writeln!(out, "# HELP czb_connections Open client connections.");
+    let _ = writeln!(out, "# TYPE czb_connections gauge");
+    let _ = writeln!(out, "czb_connections {}", r.connections.get());
+
+    let _ = writeln!(
+        out,
+        "# HELP czb_request_latency_seconds End-to-end request latency (bucket upper bounds)."
+    );
+    let _ = writeln!(out, "# TYPE czb_request_latency_seconds summary");
+    for (i, op) in OPS.iter().enumerate() {
+        let Some(h) = r.latency_of(i) else { continue };
+        for (label, q) in QUANTILES {
+            if let Some(v) = h.quantile_secs(q) {
+                let _ = writeln!(
+                    out,
+                    "czb_request_latency_seconds{{op=\"{op}\",quantile=\"{label}\"}} {v:.6}"
+                );
+            }
+        }
+        let _ = writeln!(out, "czb_request_latency_seconds_count{{op=\"{op}\"}} {}", h.count());
+        let _ = writeln!(
+            out,
+            "czb_request_latency_seconds_sum{{op=\"{op}\"}} {:.6}",
+            h.sum_secs()
+        );
+    }
+
+    let _ = writeln!(out, "# HELP czb_engine_calls_total Engine sessions run, by direction.");
+    let _ = writeln!(out, "# TYPE czb_engine_calls_total counter");
+    let _ = writeln!(
+        out,
+        "czb_engine_calls_total{{dir=\"compress\"}} {}",
+        r.engine_compress_calls.get()
+    );
+    let _ = writeln!(
+        out,
+        "czb_engine_calls_total{{dir=\"decompress\"}} {}",
+        r.engine_decompress_calls.get()
+    );
+    let _ = writeln!(out, "# HELP czb_engine_raw_bytes_total Raw bytes compressed.");
+    let _ = writeln!(out, "# TYPE czb_engine_raw_bytes_total counter");
+    let _ = writeln!(out, "czb_engine_raw_bytes_total {}", r.engine_raw_bytes.get());
+    let _ = writeln!(out, "# HELP czb_engine_compressed_bytes_total Compressed bytes produced.");
+    let _ = writeln!(out, "# TYPE czb_engine_compressed_bytes_total counter");
+    let _ = writeln!(out, "czb_engine_compressed_bytes_total {}", r.engine_compressed_bytes.get());
+    let _ = writeln!(out, "# HELP czb_engine_decoded_bytes_total Bytes decoded.");
+    let _ = writeln!(out, "# TYPE czb_engine_decoded_bytes_total counter");
+    let _ = writeln!(out, "czb_engine_decoded_bytes_total {}", r.engine_decoded_bytes.get());
+    let _ = writeln!(
+        out,
+        "# HELP czb_engine_stage_seconds_total Stage wall time, summed over submissions."
+    );
+    let _ = writeln!(out, "# TYPE czb_engine_stage_seconds_total counter");
+    let _ = writeln!(
+        out,
+        "czb_engine_stage_seconds_total{{stage=\"1\"}} {:.6}",
+        r.stage1_micros.get() as f64 * 1e-6
+    );
+    let _ = writeln!(
+        out,
+        "czb_engine_stage_seconds_total{{stage=\"2\"}} {:.6}",
+        r.stage2_micros.get() as f64 * 1e-6
+    );
+
+    let tenants = r.tenants_snapshot();
+    if !tenants.is_empty() {
+        let _ = writeln!(out, "# HELP czb_tenant_requests_total Requests, by tenant.");
+        let _ = writeln!(out, "# TYPE czb_tenant_requests_total counter");
+        for (t, u) in &tenants {
+            let t = escape_label(t);
+            let _ = writeln!(out, "czb_tenant_requests_total{{tenant=\"{t}\"}} {}", u.requests);
+        }
+        let _ = writeln!(out, "# HELP czb_tenant_bytes_total Body bytes, by tenant and direction.");
+        let _ = writeln!(out, "# TYPE czb_tenant_bytes_total counter");
+        for (t, u) in &tenants {
+            let t = escape_label(t);
+            let _ = writeln!(
+                out,
+                "czb_tenant_bytes_total{{tenant=\"{t}\",dir=\"in\"}} {}",
+                u.bytes_in
+            );
+            let _ = writeln!(
+                out,
+                "czb_tenant_bytes_total{{tenant=\"{t}\",dir=\"out\"}} {}",
+                u.bytes_out
+            );
+        }
+        let _ = writeln!(out, "# HELP czb_tenant_throttled_total Quota refusals, by tenant.");
+        let _ = writeln!(out, "# TYPE czb_tenant_throttled_total counter");
+        for (t, u) in &tenants {
+            let t = escape_label(t);
+            let _ = writeln!(out, "czb_tenant_throttled_total{{tenant=\"{t}\"}} {}", u.throttled);
+        }
+    }
+    out
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Pull one metric's value back out of a rendered export — test and
+/// smoke-check helper ("did this counter move"), not a parser.
+pub fn sample(text: &str, series: &str) -> Option<f64> {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| l.strip_prefix(series).and_then(|rest| rest.trim().parse::<f64>().ok()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_covers_every_metric_family() {
+        let r = Registry::new();
+        r.requests[0].add(3);
+        r.responses[0].add(2);
+        r.bytes_in.add(100);
+        r.bytes_out.add(50);
+        r.queue_depth.set(2);
+        r.connections.set(4);
+        r.latency_compress.record_secs(0.002);
+        r.engine_compress_calls.inc();
+        r.record_tenant("sim-a", 100, 50, true);
+        let text = render(&r);
+        assert_eq!(sample(&text, "czb_requests_total{op=\"compress\"}"), Some(3.0));
+        assert_eq!(sample(&text, "czb_responses_total{status=\"ok\"}"), Some(2.0));
+        assert_eq!(sample(&text, "czb_bytes_in_total"), Some(100.0));
+        assert_eq!(sample(&text, "czb_queue_depth"), Some(2.0));
+        assert_eq!(sample(&text, "czb_connections"), Some(4.0));
+        assert_eq!(
+            sample(&text, "czb_request_latency_seconds_count{op=\"compress\"}"),
+            Some(1.0)
+        );
+        let p99 = sample(&text, "czb_request_latency_seconds{op=\"compress\",quantile=\"0.99\"}");
+        assert!(p99.unwrap() >= 0.002);
+        assert_eq!(sample(&text, "czb_tenant_requests_total{tenant=\"sim-a\"}"), Some(1.0));
+        assert_eq!(sample(&text, "czb_tenant_throttled_total{tenant=\"sim-a\"}"), Some(1.0));
+        assert_eq!(sample(&text, "czb_engine_calls_total{dir=\"compress\"}"), Some(1.0));
+    }
+
+    #[test]
+    fn empty_registry_renders_without_latency_or_tenants() {
+        let text = render(&Registry::new());
+        assert!(!text.contains("quantile"), "no samples -> no quantile lines");
+        assert!(!text.contains("czb_tenant_"), "no tenants -> no tenant lines");
+        assert_eq!(sample(&text, "czb_bytes_in_total"), Some(0.0));
+    }
+
+    #[test]
+    fn hostile_tenant_ids_are_escaped() {
+        let r = Registry::new();
+        r.record_tenant("a\"b\nc\\d", 1, 0, false);
+        let text = render(&r);
+        assert!(text.contains("tenant=\"a\\\"b\\nc\\\\d\""), "{text}");
+    }
+}

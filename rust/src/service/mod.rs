@@ -1,0 +1,391 @@
+//! `czb serve`: a long-running compression service over TCP.
+//!
+//! The paper positions the framework as a compression layer petascale
+//! simulations stream data *through*, not a batch tool they shell out
+//! to. This module is that front-end: one shared [`Engine`] (one
+//! work-stealing pool) serving any number of client connections, each
+//! speaking the length-prefixed binary protocol in [`proto`], with the
+//! production controls a shared facility needs layered on top:
+//!
+//! * **admission control** ([`admission`]) — a bounded number of
+//!   in-flight requests with a reserved high-priority lane; overflow is
+//!   refused with `busy` + retry-after, never queued out of sight;
+//! * **per-tenant quotas** ([`quota`]) — token-bucket byte budgets
+//!   keyed by the tenant id in each request header;
+//! * **graceful drain** — SIGTERM or a `shutdown` request stops
+//!   accepting work, lets in-flight requests finish, then exits;
+//! * **live metrics** ([`metrics_export`]) — every counter in
+//!   [`crate::metrics::registry`] exported by a plaintext `stat`
+//!   response.
+//!
+//! The per-connection frame loop lives in [`conn`]; [`Client`] is the
+//! matching blocking client used by `czb client`, the e2e tests and
+//! the `serve_load` bench.
+pub mod admission;
+pub mod conn;
+pub mod metrics_export;
+pub mod proto;
+pub mod quota;
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::Field3;
+use crate::metrics::registry::Registry;
+use crate::pipeline::{Engine, ShuffleMode};
+
+use admission::Admission;
+use conn::{serve_connection, ConnCtx, IdleAwareReader};
+use proto::{FrameError, Op, Priority, ResponseHeader, Status, VerifySummary};
+use quota::Quota;
+
+/// Tunables for one server instance. `Default` is a loopback
+/// development server: ephemeral port, engine-default threads,
+/// admission sized to the engine, quotas off.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:9321` (port 0 = ephemeral).
+    pub addr: String,
+    /// Engine worker threads (0 = engine default).
+    pub threads: usize,
+    /// Concurrent in-flight requests admitted on the normal lane
+    /// (0 = 2x engine threads).
+    pub admit_normal: usize,
+    /// Extra slots only high-priority requests may take.
+    pub admit_high_extra: usize,
+    /// Backpressure hint on `busy` responses, in milliseconds.
+    pub retry_after_ms: u32,
+    /// Token-bucket capacity per tenant, in bytes.
+    pub quota_capacity: u64,
+    /// Bucket refill rate in bytes/second (0 disables quotas).
+    pub quota_rate: u64,
+    /// Largest request body accepted.
+    pub max_body: u64,
+    /// Socket read timeout — the poll granularity at which idle
+    /// connections notice a drain.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            threads: 0,
+            admit_normal: 0,
+            admit_high_extra: 2,
+            retry_after_ms: 100,
+            quota_capacity: 256 << 20,
+            quota_rate: 0,
+            max_body: proto::DEFAULT_MAX_BODY,
+            read_timeout: Duration::from_millis(100),
+        }
+    }
+}
+
+/// A remote control for a running [`Server`] (cheap to clone, safe to
+/// hand to signal watchers and tests).
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Begin a graceful drain: stop admitting work, finish what's in
+    /// flight, close idle connections, make [`Server::run`] return.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// The TCP front-end: owns the listener and the shared [`ConnCtx`].
+pub struct Server {
+    listener: TcpListener,
+    ctx: ConnCtx,
+    read_timeout: Duration,
+    active: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Bind the listener and build the shared engine + registry. The
+    /// server is not serving until [`Server::run`].
+    pub fn bind(cfg: &ServeConfig) -> std::io::Result<Server> {
+        let metrics = Arc::new(Registry::new());
+        let mut b = Engine::builder().metrics(Arc::clone(&metrics));
+        if cfg.threads > 0 {
+            b = b.threads(cfg.threads);
+        }
+        let engine = Arc::new(b.build());
+        let admit_normal = if cfg.admit_normal > 0 {
+            cfg.admit_normal
+        } else {
+            engine.threads().max(1) * 2
+        };
+        let admission = Admission::new(admit_normal, cfg.admit_high_extra, cfg.retry_after_ms);
+        let quota = Arc::new(Quota::new(cfg.quota_capacity, cfg.quota_rate));
+        let ctx = ConnCtx::new(engine, metrics, admission, quota).with_max_body(cfg.max_body);
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Server { listener, ctx, read_timeout: cfg.read_timeout, active: Arc::new(AtomicUsize::new(0)) })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { stop: Arc::clone(&self.ctx.stop) }
+    }
+
+    /// The server's live metrics (shared with the engine it runs).
+    pub fn metrics(&self) -> Arc<Registry> {
+        Arc::clone(&self.ctx.metrics)
+    }
+
+    /// Accept connections until a drain is requested (via
+    /// [`ServerHandle::shutdown`], a client `shutdown` frame, or
+    /// SIGTERM when [`install_sigterm_drain`] was called), then wait
+    /// for in-flight connections to finish and return.
+    pub fn run(&self) -> std::io::Result<()> {
+        while !self.ctx.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.spawn_handler(stream),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // drain: handlers see the stop flag via IdleAwareReader
+        while self.active.load(Ordering::Acquire) > 0 {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
+    }
+
+    fn spawn_handler(&self, stream: TcpStream) {
+        // counted in the acceptor, not the handler thread: run()'s
+        // drain must never observe a gap between accept and count
+        struct Active(Arc<AtomicUsize>, Arc<Registry>);
+        impl Drop for Active {
+            fn drop(&mut self) {
+                self.1.connections.sub(1);
+                self.0.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        self.active.fetch_add(1, Ordering::AcqRel);
+        self.ctx.metrics.connections.add(1);
+        let guard = Active(Arc::clone(&self.active), Arc::clone(&self.ctx.metrics));
+        let ctx = self.ctx.clone();
+        let read_timeout = self.read_timeout;
+        std::thread::spawn(move || {
+            let _guard = guard;
+            let _ = stream.set_read_timeout(Some(read_timeout));
+            let _ = stream.set_nodelay(true);
+            let Ok(read_half) = stream.try_clone() else { return };
+            let mut reader = IdleAwareReader::new(read_half, Arc::clone(&ctx.stop));
+            let mut writer = stream;
+            let _ = serve_connection(&mut reader, &mut writer, &ctx);
+        });
+    }
+}
+
+#[cfg(unix)]
+mod sigterm {
+    use super::ServerHandle;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SEEN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        // async-signal-safe: one atomic store, nothing else
+        SEEN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGTERM: i32 = 15;
+    const SIGINT: i32 = 2;
+
+    pub fn install(handle: ServerHandle) {
+        unsafe {
+            signal(SIGTERM, on_term);
+            signal(SIGINT, on_term);
+        }
+        std::thread::spawn(move || loop {
+            if SEEN.load(Ordering::SeqCst) {
+                handle.shutdown();
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        });
+    }
+}
+
+/// Turn SIGTERM/SIGINT into a graceful drain of `handle`'s server
+/// (std-only: a libc `signal(2)` registration on unix, a no-op
+/// elsewhere). The handler only sets a flag; a watcher thread does the
+/// actual shutdown call.
+pub fn install_sigterm_drain(handle: ServerHandle) {
+    #[cfg(unix)]
+    sigterm::install(handle);
+    #[cfg(not(unix))]
+    let _ = handle;
+}
+
+/// A non-ok outcome the server chose to send: refusals (`busy`,
+/// `quota`, `shutting_down`), semantic errors, protocol rejections.
+#[derive(Clone, Debug)]
+pub struct Refusal {
+    pub status: Status,
+    pub retry_after_ms: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for Refusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} (retry after {} ms)",
+            proto::status_name(self.status),
+            self.message,
+            self.retry_after_ms
+        )
+    }
+}
+
+/// What one request came back as: the decoded payload, or the server's
+/// explicit refusal. Transport/protocol failures are the outer `Err`
+/// on each [`Client`] call.
+pub type Reply<T> = Result<T, Refusal>;
+
+/// Blocking client for the serve protocol — used by `czb client`, the
+/// e2e tests and the load bench.
+pub struct Client {
+    stream: TcpStream,
+    tenant: String,
+    priority: Priority,
+    max_body: u64,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self {
+            stream,
+            tenant: String::new(),
+            priority: Priority::Normal,
+            max_body: proto::DEFAULT_MAX_BODY,
+        })
+    }
+
+    /// Tenant id stamped on every request ("" = anonymous).
+    pub fn tenant(mut self, t: &str) -> Self {
+        self.tenant = t.to_string();
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// One raw request/response exchange. `Err` is transport or
+    /// protocol failure; refusals come back as a normal header.
+    pub fn request_raw(
+        &mut self,
+        op: Op,
+        body: &[u8],
+    ) -> Result<(ResponseHeader, Vec<u8>), String> {
+        proto::write_request(&mut self.stream, op, self.priority, &self.tenant, body)
+            .map_err(|e| format!("sending request: {e}"))?;
+        let hdr = proto::read_response_header(&mut self.stream, self.max_body).map_err(|e| {
+            match e {
+                FrameError::Eof => "server closed the connection".to_string(),
+                other => other.to_string(),
+            }
+        })?;
+        let mut resp = vec![0u8; hdr.body_len as usize];
+        self.stream
+            .read_exact(&mut resp)
+            .map_err(|e| format!("reading response body: {e}"))?;
+        Ok((hdr, resp))
+    }
+
+    fn expect_ok(
+        &mut self,
+        op: Op,
+        body: &[u8],
+    ) -> Result<Reply<Vec<u8>>, String> {
+        let (hdr, resp) = self.request_raw(op, body)?;
+        if hdr.status == Status::Ok {
+            Ok(Ok(resp))
+        } else {
+            Ok(Err(Refusal {
+                status: hdr.status,
+                retry_after_ms: hdr.retry_after_ms,
+                message: String::from_utf8_lossy(&resp).into_owned(),
+            }))
+        }
+    }
+
+    /// Compress a field remotely; `Ok(Ok(bytes))` is a finished `.czb`
+    /// stream, bit-identical to a local compress with the same params.
+    pub fn compress(
+        &mut self,
+        name: &str,
+        field: &Field3,
+        bs: u32,
+        eps: f32,
+        shuffle: ShuffleMode,
+    ) -> Result<Reply<Vec<u8>>, String> {
+        let body = proto::encode_compress_body(name, field, bs, eps, shuffle);
+        self.expect_ok(Op::Compress, &body)
+    }
+
+    /// Decompress a `.czb` stream remotely.
+    pub fn decompress(&mut self, czb: &[u8]) -> Result<Reply<(String, Field3)>, String> {
+        Ok(match self.expect_ok(Op::Decompress, czb)? {
+            Ok(body) => Ok(proto::decode_field_body(&body)?),
+            Err(r) => Err(r),
+        })
+    }
+
+    /// Checksum-walk a `.czb` stream remotely.
+    pub fn verify(&mut self, czb: &[u8]) -> Result<Reply<VerifySummary>, String> {
+        Ok(match self.expect_ok(Op::Verify, czb)? {
+            Ok(body) => Ok(proto::decode_verify_body(&body)?),
+            Err(r) => Err(r),
+        })
+    }
+
+    /// Fetch the plaintext metrics export.
+    pub fn stat(&mut self) -> Result<Reply<String>, String> {
+        Ok(match self.expect_ok(Op::Stat, b"")? {
+            Ok(body) => Ok(String::from_utf8_lossy(&body).into_owned()),
+            Err(r) => Err(r),
+        })
+    }
+
+    /// Ask the server to drain and exit.
+    pub fn shutdown(&mut self) -> Result<Reply<()>, String> {
+        Ok(match self.expect_ok(Op::Shutdown, b"")? {
+            Ok(_) => Ok(()),
+            Err(r) => Err(r),
+        })
+    }
+}

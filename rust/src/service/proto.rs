@@ -1,0 +1,698 @@
+//! The `czb serve` wire protocol: length-prefixed binary frames over a
+//! byte stream (TCP in production; any `Read`/`Write` in tests).
+//!
+//! # Frame layout (protocol version 1, all integers little-endian)
+//!
+//! Request frame — 16-byte fixed header, then tenant id, then body:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "CZRQ"
+//! 4       1     version (must be 1)
+//! 5       1     op: 1 compress, 2 decompress, 3 verify, 4 stat, 5 shutdown
+//! 6       1     priority: 0 normal, 1 high
+//! 7       1     tenant_len (0..=255)
+//! 8       8     body_len (u64)
+//! 16      t     tenant id (UTF-8, tenant_len bytes; "" = anonymous)
+//! 16+t    b     body (body_len bytes)
+//! ```
+//!
+//! Response frame — 20-byte fixed header, then body:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "CZRS"
+//! 4       1     version (1)
+//! 5       1     status: 0 ok, 1 error, 2 busy, 3 quota, 4 shutting_down,
+//!               5 bad_request
+//! 6       2     reserved (0)
+//! 8       4     retry_after_ms (busy/quota backpressure hint, else 0)
+//! 12      8     body_len (u64)
+//! 20      b     body
+//! ```
+//!
+//! # Bodies
+//!
+//! * `compress` request: [`FieldRequest`] encoding — `name_len:u16`,
+//!   name, `nx,ny,nz,bs:u32`, `eps:f32`, `shuffle:u8` (ShuffleMode id),
+//!   3 reserved bytes, then `nx·ny·nz` raw `f32` samples. Response body
+//!   is the finished `.czb` stream.
+//! * `decompress` request: a whole `.czb` stream. Response body is the
+//!   field encoding — `name_len:u16`, name, `nx,ny,nz:u32`, samples.
+//! * `verify` request: a whole `.czb` stream. Response body is 17
+//!   bytes: `clean:u8`, `total_chunks:u32`, `corrupt_chunks:u32`,
+//!   `lost_blocks:u64`.
+//! * `stat` request: empty body. Response body: plaintext metrics in
+//!   Prometheus exposition style (see [`super::metrics_export`]).
+//! * `shutdown` request: empty body. Response `ok`, after which the
+//!   server drains: in-flight requests finish, new ones get
+//!   `shutting_down`.
+//! * Any `error`/`busy`/`quota`/`shutting_down`/`bad_request` response:
+//!   body is a UTF-8 message.
+//!
+//! # Error and backpressure semantics
+//!
+//! `busy` (admission control full) and `quota` (tenant token bucket
+//! empty) carry `retry_after_ms` > 0: the request was *not* processed
+//! and the client should retry after the hint. The connection stays
+//! open — the server drains the refused request's body to keep frame
+//! framing intact. `bad_request` (bad magic/version/lengths) means the
+//! stream can no longer be trusted: the server responds once and closes
+//! the connection. `error` (e.g. a corrupt `.czb` in a decompress body)
+//! keeps the connection open — the frame itself was well-formed.
+//!
+//! # Versioning rule
+//!
+//! The version byte gates both header layouts; a server refuses any
+//! other version with `bad_request` naming the version it speaks.
+//! Within version 1, bodies may only grow by appending fields — a
+//! parser must ignore trailing bytes it does not know. Incompatible
+//! layout changes bump the version byte.
+use crate::core::Field3;
+use crate::pipeline::ShuffleMode;
+use std::io::{Read, Write};
+
+pub const REQ_MAGIC: &[u8; 4] = b"CZRQ";
+pub const RESP_MAGIC: &[u8; 4] = b"CZRS";
+pub const PROTO_VERSION: u8 = 1;
+pub const REQ_HEADER_LEN: usize = 16;
+pub const RESP_HEADER_LEN: usize = 20;
+
+/// Default cap on request/response body size (1 GiB). A declared body
+/// beyond the server's cap is refused with `bad_request` before any of
+/// it is read.
+pub const DEFAULT_MAX_BODY: u64 = 1 << 30;
+
+/// Request operation. Wire ids are `index + 1` into
+/// [`crate::metrics::registry::OPS`] order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Compress,
+    Decompress,
+    Verify,
+    Stat,
+    Shutdown,
+}
+
+impl Op {
+    pub const ALL: [Op; 5] = [Op::Compress, Op::Decompress, Op::Verify, Op::Stat, Op::Shutdown];
+
+    pub fn id(self) -> u8 {
+        self.index() as u8 + 1
+    }
+
+    /// Index into [`crate::metrics::registry::OPS`].
+    pub fn index(self) -> usize {
+        match self {
+            Op::Compress => 0,
+            Op::Decompress => 1,
+            Op::Verify => 2,
+            Op::Stat => 3,
+            Op::Shutdown => 4,
+        }
+    }
+
+    pub fn from_id(v: u8) -> Option<Self> {
+        Self::ALL.into_iter().find(|o| o.id() == v)
+    }
+}
+
+/// Response status. Wire ids index [`crate::metrics::registry::STATUSES`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    /// The request was well-formed but failed (corrupt stream, bad
+    /// dimensions, ...). Connection stays open.
+    Error,
+    /// Admission control refused the request; retry after the hint.
+    Busy,
+    /// The tenant's byte quota is exhausted; retry after the hint.
+    Quota,
+    /// The server is draining; no new work is accepted.
+    ShuttingDown,
+    /// The frame itself was malformed; the server closes the connection.
+    BadRequest,
+}
+
+impl Status {
+    pub const ALL: [Status; 6] =
+        [Status::Ok, Status::Error, Status::Busy, Status::Quota, Status::ShuttingDown, Status::BadRequest];
+
+    pub fn id(self) -> u8 {
+        self.index() as u8
+    }
+
+    /// Index into [`crate::metrics::registry::STATUSES`].
+    pub fn index(self) -> usize {
+        match self {
+            Status::Ok => 0,
+            Status::Error => 1,
+            Status::Busy => 2,
+            Status::Quota => 3,
+            Status::ShuttingDown => 4,
+            Status::BadRequest => 5,
+        }
+    }
+
+    pub fn from_id(v: u8) -> Option<Self> {
+        Self::ALL.into_iter().find(|s| s.id() == v)
+    }
+}
+
+/// Human name of a status (the registry's label for it).
+pub fn status_name(s: Status) -> &'static str {
+    crate::metrics::registry::STATUSES[s.index()]
+}
+
+/// Request priority lane (see [`super::admission`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn id(self) -> u8 {
+        match self {
+            Priority::Normal => 0,
+            Priority::High => 1,
+        }
+    }
+
+    pub fn from_id(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(Priority::Normal),
+            1 => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed request header (body not yet read — it may be streamed).
+#[derive(Clone, Debug)]
+pub struct RequestHeader {
+    pub op: Op,
+    pub priority: Priority,
+    pub tenant: String,
+    pub body_len: u64,
+}
+
+/// A parsed response header.
+#[derive(Clone, Copy, Debug)]
+pub struct ResponseHeader {
+    pub status: Status,
+    pub retry_after_ms: u32,
+    pub body_len: u64,
+}
+
+/// Why a request frame could not be parsed. `Malformed` earns one
+/// `bad_request` response before the connection closes; `Io` closes it
+/// silently (the peer is gone or the stream already desynced).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean EOF exactly at a frame boundary: the client hung up.
+    Eof,
+    Malformed(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            FrameError::Io(e) => write!(f, "i/o: {e}"),
+        }
+    }
+}
+
+fn u32_at(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+
+fn u64_at(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
+}
+
+/// Read one request header (+ tenant id) from `r`. `max_body` bounds
+/// the declared body length; an oversized frame is `Malformed` and the
+/// body has NOT been consumed — the caller must close the connection.
+pub fn read_request_header(r: &mut dyn Read, max_body: u64) -> Result<RequestHeader, FrameError> {
+    let mut hdr = [0u8; REQ_HEADER_LEN];
+    read_exact_or_eof(r, &mut hdr)?;
+    if &hdr[..4] != REQ_MAGIC {
+        return Err(FrameError::Malformed(format!("bad request magic {:02x?}", &hdr[..4])));
+    }
+    if hdr[4] != PROTO_VERSION {
+        return Err(FrameError::Malformed(format!(
+            "protocol version {} not supported (server speaks {PROTO_VERSION})",
+            hdr[4]
+        )));
+    }
+    let op = Op::from_id(hdr[5])
+        .ok_or_else(|| FrameError::Malformed(format!("unknown op {}", hdr[5])))?;
+    let priority = Priority::from_id(hdr[6])
+        .ok_or_else(|| FrameError::Malformed(format!("unknown priority {}", hdr[6])))?;
+    let tenant_len = hdr[7] as usize;
+    let body_len = u64_at(&hdr, 8);
+    if body_len > max_body {
+        return Err(FrameError::Malformed(format!(
+            "declared body of {body_len} bytes exceeds the {max_body}-byte limit"
+        )));
+    }
+    let mut tenant = vec![0u8; tenant_len];
+    r.read_exact(&mut tenant).map_err(FrameError::Io)?;
+    let tenant = String::from_utf8(tenant)
+        .map_err(|_| FrameError::Malformed("tenant id is not UTF-8".into()))?;
+    Ok(RequestHeader { op, priority, tenant, body_len })
+}
+
+/// `read_exact` that reports a zero-byte start as [`FrameError::Eof`]
+/// (client hung up between frames) and a mid-header EOF as `Malformed`.
+fn read_exact_or_eof(r: &mut dyn Read, buf: &mut [u8]) -> Result<(), FrameError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if filled == 0 {
+                    FrameError::Eof
+                } else {
+                    FrameError::Malformed(format!(
+                        "stream ended {filled} bytes into a {}-byte header",
+                        buf.len()
+                    ))
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Write one complete request frame.
+pub fn write_request(
+    w: &mut dyn Write,
+    op: Op,
+    priority: Priority,
+    tenant: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let tenant = tenant.as_bytes();
+    assert!(tenant.len() <= u8::MAX as usize, "tenant id longer than 255 bytes");
+    let mut hdr = [0u8; REQ_HEADER_LEN];
+    hdr[..4].copy_from_slice(REQ_MAGIC);
+    hdr[4] = PROTO_VERSION;
+    hdr[5] = op.id();
+    hdr[6] = priority.id();
+    hdr[7] = tenant.len() as u8;
+    hdr[8..16].copy_from_slice(&(body.len() as u64).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(tenant)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one complete response frame.
+pub fn write_response(
+    w: &mut dyn Write,
+    status: Status,
+    retry_after_ms: u32,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut hdr = [0u8; RESP_HEADER_LEN];
+    hdr[..4].copy_from_slice(RESP_MAGIC);
+    hdr[4] = PROTO_VERSION;
+    hdr[5] = status.id();
+    hdr[8..12].copy_from_slice(&retry_after_ms.to_le_bytes());
+    hdr[12..20].copy_from_slice(&(body.len() as u64).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one response header from `r`, bounding the body at `max_body`.
+pub fn read_response_header(r: &mut dyn Read, max_body: u64) -> Result<ResponseHeader, FrameError> {
+    let mut hdr = [0u8; RESP_HEADER_LEN];
+    read_exact_or_eof(r, &mut hdr)?;
+    if &hdr[..4] != RESP_MAGIC {
+        return Err(FrameError::Malformed(format!("bad response magic {:02x?}", &hdr[..4])));
+    }
+    if hdr[4] != PROTO_VERSION {
+        return Err(FrameError::Malformed(format!("unknown response version {}", hdr[4])));
+    }
+    let status = Status::from_id(hdr[5])
+        .ok_or_else(|| FrameError::Malformed(format!("unknown status {}", hdr[5])))?;
+    let retry_after_ms = u32_at(&hdr, 8);
+    let body_len = u64_at(&hdr, 12);
+    if body_len > max_body {
+        return Err(FrameError::Malformed(format!(
+            "response body of {body_len} bytes exceeds the {max_body}-byte limit"
+        )));
+    }
+    Ok(ResponseHeader { status, retry_after_ms, body_len })
+}
+
+/// A decoded `compress` request body: which field to compress, with
+/// which format-affecting parameters.
+#[derive(Clone, Debug)]
+pub struct FieldRequest {
+    pub name: String,
+    pub field: Field3,
+    pub bs: u32,
+    pub eps: f32,
+    pub shuffle: ShuffleMode,
+}
+
+/// Fixed-size prefix of a compress body before the samples:
+/// `name_len:u16` + `nx,ny,nz,bs:u32` + `eps:f32` + `shuffle:u8` + 3
+/// reserved bytes.
+const COMPRESS_PREFIX: usize = 2 + 4 * 4 + 4 + 4;
+
+/// Encode a `compress` request body.
+pub fn encode_compress_body(
+    name: &str,
+    field: &Field3,
+    bs: u32,
+    eps: f32,
+    shuffle: ShuffleMode,
+) -> Vec<u8> {
+    let name = name.as_bytes();
+    assert!(name.len() <= u16::MAX as usize, "quantity name longer than 65535 bytes");
+    let mut out = Vec::with_capacity(COMPRESS_PREFIX + name.len() + field.nbytes());
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name);
+    for d in [field.nx as u32, field.ny as u32, field.nz as u32, bs] {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    out.extend_from_slice(&eps.to_le_bytes());
+    out.push(shuffle.id());
+    out.extend_from_slice(&[0u8; 3]);
+    for v in &field.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a `compress` request body by *streaming* exactly `body_len`
+/// bytes out of `r` — the sample payload goes straight from the socket
+/// into the field buffer, never through an intermediate copy.
+pub fn decode_compress_body(r: &mut dyn Read, body_len: u64) -> Result<FieldRequest, String> {
+    let mut name_len = [0u8; 2];
+    r.read_exact(&mut name_len).map_err(|e| format!("reading compress body: {e}"))?;
+    let name_len = u16::from_le_bytes(name_len) as usize;
+    let fixed = (COMPRESS_PREFIX + name_len) as u64;
+    if body_len < fixed {
+        return Err(format!("compress body of {body_len} bytes is shorter than its {fixed}-byte prefix"));
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name).map_err(|e| format!("reading quantity name: {e}"))?;
+    let name = String::from_utf8(name).map_err(|_| "quantity name is not UTF-8".to_string())?;
+    let mut rest = [0u8; COMPRESS_PREFIX - 2];
+    r.read_exact(&mut rest).map_err(|e| format!("reading compress params: {e}"))?;
+    let nx = u32_at(&rest, 0) as usize;
+    let ny = u32_at(&rest, 4) as usize;
+    let nz = u32_at(&rest, 8) as usize;
+    let bs = u32_at(&rest, 12);
+    let eps = f32::from_le_bytes(rest[16..20].try_into().unwrap());
+    let shuffle = ShuffleMode::from_id(rest[20])
+        .ok_or_else(|| format!("unknown shuffle mode {}", rest[20]))?;
+    let nsamples = nx
+        .checked_mul(ny)
+        .and_then(|v| v.checked_mul(nz))
+        .ok_or_else(|| format!("field dimensions {nx}x{ny}x{nz} overflow"))?;
+    let declared = body_len - fixed;
+    let expected = nsamples as u64 * 4;
+    if declared != expected {
+        return Err(format!(
+            "field {nx}x{ny}x{nz} needs {expected} sample bytes, body declares {declared}"
+        ));
+    }
+    if bs == 0 || !eps.is_finite() || eps <= 0.0 {
+        return Err(format!("bad compress params: bs {bs}, eps {eps}"));
+    }
+    let mut data = vec![0f32; nsamples];
+    read_f32_into(r, &mut data)?;
+    Ok(FieldRequest { name, field: Field3::from_vec(nx, ny, nz, data), bs, eps, shuffle })
+}
+
+/// Encode a decoded field as a `decompress` response body.
+pub fn encode_field_body(name: &str, field: &Field3) -> Vec<u8> {
+    let name = name.as_bytes();
+    let mut out = Vec::with_capacity(2 + name.len() + 12 + field.nbytes());
+    out.extend_from_slice(&(name.len().min(u16::MAX as usize) as u16).to_le_bytes());
+    out.extend_from_slice(&name[..name.len().min(u16::MAX as usize)]);
+    for d in [field.nx as u32, field.ny as u32, field.nz as u32] {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    for v in &field.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a `decompress` response body.
+pub fn decode_field_body(body: &[u8]) -> Result<(String, Field3), String> {
+    if body.len() < 2 {
+        return Err("field body shorter than its name length".into());
+    }
+    let name_len = u16::from_le_bytes(body[..2].try_into().unwrap()) as usize;
+    let dims_at = 2 + name_len;
+    if body.len() < dims_at + 12 {
+        return Err("field body shorter than its dimensions".into());
+    }
+    let name = String::from_utf8(body[2..dims_at].to_vec())
+        .map_err(|_| "field name is not UTF-8".to_string())?;
+    let nx = u32_at(body, dims_at) as usize;
+    let ny = u32_at(body, dims_at + 4) as usize;
+    let nz = u32_at(body, dims_at + 8) as usize;
+    let nsamples = nx
+        .checked_mul(ny)
+        .and_then(|v| v.checked_mul(nz))
+        .ok_or_else(|| format!("field dimensions {nx}x{ny}x{nz} overflow"))?;
+    let samples = &body[dims_at + 12..];
+    if samples.len() != nsamples * 4 {
+        return Err(format!(
+            "field {nx}x{ny}x{nz} needs {} sample bytes, body carries {}",
+            nsamples * 4,
+            samples.len()
+        ));
+    }
+    let data: Vec<f32> = samples
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((name, Field3::from_vec(nx, ny, nz, data)))
+}
+
+/// A `verify` response body: the checksum walk's summary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifySummary {
+    pub clean: bool,
+    pub total_chunks: u32,
+    pub corrupt_chunks: u32,
+    pub lost_blocks: u64,
+}
+
+pub fn encode_verify_body(s: &VerifySummary) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17);
+    out.push(s.clean as u8);
+    out.extend_from_slice(&s.total_chunks.to_le_bytes());
+    out.extend_from_slice(&s.corrupt_chunks.to_le_bytes());
+    out.extend_from_slice(&s.lost_blocks.to_le_bytes());
+    out
+}
+
+pub fn decode_verify_body(body: &[u8]) -> Result<VerifySummary, String> {
+    if body.len() < 17 {
+        return Err(format!("verify body of {} bytes is shorter than 17", body.len()));
+    }
+    Ok(VerifySummary {
+        clean: body[0] != 0,
+        total_chunks: u32_at(body, 1),
+        corrupt_chunks: u32_at(body, 5),
+        lost_blocks: u64_at(body, 9),
+    })
+}
+
+/// Read exactly `out.len()` little-endian f32s from `r` into `out`,
+/// going through a bounded stack buffer (streaming: the whole payload
+/// is never held as raw bytes).
+fn read_f32_into(r: &mut dyn Read, out: &mut [f32]) -> Result<(), String> {
+    let mut buf = [0u8; 16 << 10];
+    let mut at = 0usize;
+    while at < out.len() {
+        let want = ((out.len() - at) * 4).min(buf.len());
+        r.read_exact(&mut buf[..want]).map_err(|e| format!("reading field samples: {e}"))?;
+        for c in buf[..want].chunks_exact(4) {
+            out[at] = f32::from_le_bytes(c.try_into().unwrap());
+            at += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Read and discard exactly `n` body bytes (keeps frame framing intact
+/// after a refused request).
+pub fn drain_body(r: &mut dyn Read, n: u64) -> std::io::Result<()> {
+    std::io::copy(&mut r.take(n), &mut std::io::sink()).and_then(|copied| {
+        if copied == n {
+            Ok(())
+        } else {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("stream ended {copied} bytes into a {n}-byte body"),
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_frames_roundtrip() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Compress, Priority::High, "tenant-a", b"hello").unwrap();
+        let mut r = wire.as_slice();
+        let h = read_request_header(&mut r, DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(h.op, Op::Compress);
+        assert_eq!(h.priority, Priority::High);
+        assert_eq!(h.tenant, "tenant-a");
+        assert_eq!(h.body_len, 5);
+        let mut body = vec![0u8; 5];
+        std::io::Read::read_exact(&mut r, &mut body).unwrap();
+        assert_eq!(&body, b"hello");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, Status::Busy, 250, b"try later").unwrap();
+        let mut r = wire.as_slice();
+        let h = read_response_header(&mut r, DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(h.status, Status::Busy);
+        assert_eq!(h.retry_after_ms, 250);
+        assert_eq!(h.body_len, 9);
+    }
+
+    #[test]
+    fn malformed_headers_are_rejected_cleanly() {
+        // wrong magic
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        wire[0] = b'X';
+        assert!(matches!(
+            read_request_header(&mut wire.as_slice(), DEFAULT_MAX_BODY),
+            Err(FrameError::Malformed(_))
+        ));
+        // wrong version
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        wire[4] = 9;
+        let e = read_request_header(&mut wire.as_slice(), DEFAULT_MAX_BODY).unwrap_err();
+        assert!(e.to_string().contains("version 9"), "{e}");
+        // unknown op / priority
+        for (at, v) in [(5usize, 99u8), (6, 7)] {
+            let mut wire = Vec::new();
+            write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+            wire[at] = v;
+            assert!(matches!(
+                read_request_header(&mut wire.as_slice(), DEFAULT_MAX_BODY),
+                Err(FrameError::Malformed(_))
+            ));
+        }
+        // oversized declared body
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Compress, Priority::Normal, "", b"12345678").unwrap();
+        let e = read_request_header(&mut wire.as_slice(), 4).unwrap_err();
+        assert!(e.to_string().contains("exceeds"), "{e}");
+        // clean EOF at a frame boundary vs mid-header truncation
+        assert!(matches!(
+            read_request_header(&mut [].as_slice(), DEFAULT_MAX_BODY),
+            Err(FrameError::Eof)
+        ));
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "", b"").unwrap();
+        assert!(matches!(
+            read_request_header(&mut wire[..7].to_vec().as_slice(), DEFAULT_MAX_BODY),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn compress_body_roundtrips_and_validates() {
+        let field = Field3::from_vec(2, 3, 4, (0..24).map(|i| i as f32 * 0.5).collect());
+        let body = encode_compress_body("rho", &field, 16, 1e-3, ShuffleMode::Byte4);
+        let req = decode_compress_body(&mut body.as_slice(), body.len() as u64).unwrap();
+        assert_eq!(req.name, "rho");
+        assert_eq!(req.bs, 16);
+        assert_eq!(req.shuffle, ShuffleMode::Byte4);
+        assert!((req.eps - 1e-3).abs() < 1e-9);
+        assert_eq!(req.field.data, field.data);
+        // declared body shorter than the samples require
+        let e = decode_compress_body(&mut body.as_slice(), body.len() as u64 - 4).unwrap_err();
+        assert!(e.contains("sample bytes"), "{e}");
+        // truncated stream under a correct declaration
+        let e = decode_compress_body(&mut body[..body.len() - 4].as_ref(), body.len() as u64)
+            .unwrap_err();
+        assert!(e.contains("samples"), "{e}");
+        // degenerate params
+        let bad = encode_compress_body("x", &field, 0, 1e-3, ShuffleMode::None);
+        assert!(decode_compress_body(&mut bad.as_slice(), bad.len() as u64)
+            .unwrap_err()
+            .contains("bs 0"));
+        let bad = encode_compress_body("x", &field, 16, f32::NAN, ShuffleMode::None);
+        assert!(decode_compress_body(&mut bad.as_slice(), bad.len() as u64).is_err());
+    }
+
+    #[test]
+    fn field_body_roundtrips() {
+        let field = Field3::from_vec(3, 2, 2, (0..12).map(|i| -(i as f32)).collect());
+        let body = encode_field_body("p", &field);
+        let (name, back) = decode_field_body(&body).unwrap();
+        assert_eq!(name, "p");
+        assert_eq!(back.nx, 3);
+        assert_eq!(back.data, field.data);
+        assert!(decode_field_body(&body[..5]).is_err());
+        assert!(decode_field_body(&body[..body.len() - 1]).is_err());
+        assert!(decode_field_body(b"").is_err());
+    }
+
+    #[test]
+    fn verify_body_roundtrips() {
+        let s = VerifySummary { clean: false, total_chunks: 9, corrupt_chunks: 2, lost_blocks: 64 };
+        assert_eq!(decode_verify_body(&encode_verify_body(&s)).unwrap(), s);
+        assert!(decode_verify_body(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn drain_body_consumes_exactly_n() {
+        let data = vec![1u8; 10];
+        let mut r = data.as_slice();
+        drain_body(&mut r, 7).unwrap();
+        assert_eq!(r.len(), 3);
+        let mut r = data.as_slice();
+        assert!(drain_body(&mut r, 11).is_err());
+    }
+
+    #[test]
+    fn interrupted_reads_are_retried_in_headers() {
+        use crate::io::fault::{FaultPlan, FaultReader};
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Verify, Priority::Normal, "t", b"abc").unwrap();
+        let plan = FaultPlan::new()
+            .fail_op(0, std::io::ErrorKind::Interrupted)
+            .short_read(1, 3)
+            .fail_op(2, std::io::ErrorKind::Interrupted);
+        let mut r = FaultReader::new(wire.as_slice(), plan);
+        let h = read_request_header(&mut r, DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(h.op, Op::Verify);
+        assert_eq!(h.tenant, "t");
+        assert!(r.plan().injected() >= 2, "scripted faults must have fired");
+    }
+}

@@ -1,0 +1,170 @@
+//! Per-tenant byte quotas: one token bucket per tenant id, refilled at
+//! a byte rate, consulted once per request with the declared body size.
+//!
+//! The admission layer bounds *how many* requests run at once; quotas
+//! bound *how much data* each tenant may push through over time, so one
+//! chatty simulation cannot starve its neighbours of engine bandwidth.
+//!
+//! The bucket uses a debt model: a request is admitted when the bucket
+//! holds at least `min(request_bytes, capacity)` tokens, and the full
+//! request size is then deducted — possibly driving the balance
+//! negative. That way a single request larger than the whole capacity
+//! is still serviceable (it just leaves the tenant in debt and
+//! throttled for a while), instead of being unservable forever. A
+//! refused request gets the time until the bucket covers it again as
+//! its `retry_after_ms` hint.
+//!
+//! Time is injected (microseconds since server start) so tests are
+//! deterministic; the public entry point reads a monotonic clock.
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Why a request was refused by its tenant's bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Throttled {
+    /// When the bucket will cover the refused request, in milliseconds.
+    pub retry_after_ms: u32,
+}
+
+struct Bucket {
+    tokens: f64,
+    last_micros: u64,
+}
+
+/// Token-bucket quotas keyed by tenant id. `rate_bytes_per_sec == 0`
+/// disables quotas entirely (every request admitted) — the default for
+/// a server run without `--quota-rate`.
+pub struct Quota {
+    capacity: f64,
+    rate_per_micro: f64,
+    enabled: bool,
+    start: Instant,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl Quota {
+    pub fn new(capacity_bytes: u64, rate_bytes_per_sec: u64) -> Self {
+        Self {
+            capacity: capacity_bytes.max(1) as f64,
+            rate_per_micro: rate_bytes_per_sec as f64 * 1e-6,
+            enabled: rate_bytes_per_sec > 0,
+            start: Instant::now(),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Unlimited quota (every request admitted, nothing tracked).
+    pub fn unlimited() -> Self {
+        Self::new(1, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Charge `bytes` to `tenant`'s bucket, admitting or refusing.
+    pub fn try_consume(&self, tenant: &str, bytes: u64) -> Result<(), Throttled> {
+        self.try_consume_at(tenant, bytes, self.start.elapsed().as_micros() as u64)
+    }
+
+    /// Deterministic core: `now_micros` is time since server start.
+    pub fn try_consume_at(
+        &self,
+        tenant: &str,
+        bytes: u64,
+        now_micros: u64,
+    ) -> Result<(), Throttled> {
+        if !self.enabled {
+            return Ok(());
+        }
+        let mut g = self.buckets.lock().unwrap();
+        let b = g
+            .entry(tenant.to_string())
+            .or_insert(Bucket { tokens: self.capacity, last_micros: now_micros });
+        // refill for the time elapsed since this bucket was last touched
+        let dt = now_micros.saturating_sub(b.last_micros) as f64;
+        b.tokens = (b.tokens + dt * self.rate_per_micro).min(self.capacity);
+        b.last_micros = now_micros;
+        // debt model: a request bigger than the whole capacity only needs
+        // a full bucket, then drives the balance negative
+        let need = (bytes as f64).min(self.capacity);
+        if b.tokens >= need {
+            b.tokens -= bytes as f64;
+            return Ok(());
+        }
+        let deficit = need - b.tokens;
+        let micros = if self.rate_per_micro > 0.0 { deficit / self.rate_per_micro } else { f64::MAX };
+        let ms = (micros / 1e3).ceil().clamp(1.0, u32::MAX as f64) as u32;
+        Err(Throttled { retry_after_ms: ms })
+    }
+
+    /// Current token balance for a tenant (negative = in debt); `None`
+    /// when the tenant has never been charged. Monitoring only.
+    pub fn balance(&self, tenant: &str) -> Option<f64> {
+        self.buckets.lock().unwrap().get(tenant).map(|b| b.tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_quota_admits_everything() {
+        let q = Quota::unlimited();
+        assert!(!q.enabled());
+        for _ in 0..100 {
+            q.try_consume("t", u64::MAX / 2).unwrap();
+        }
+        assert_eq!(q.balance("t"), None, "disabled quotas track nothing");
+    }
+
+    #[test]
+    fn bucket_drains_then_refills_at_rate() {
+        // 1000-byte bucket refilling 1000 B/s
+        let q = Quota::new(1000, 1000);
+        q.try_consume_at("t", 600, 0).unwrap();
+        q.try_consume_at("t", 400, 0).unwrap();
+        // empty now: a 500-byte request needs 500 tokens = 500ms
+        let t = q.try_consume_at("t", 500, 0).unwrap_err();
+        assert_eq!(t.retry_after_ms, 500);
+        // 300ms later it still can't cover 500
+        assert!(q.try_consume_at("t", 500, 300_000).is_err());
+        // but it can cover 250
+        q.try_consume_at("t", 250, 300_000).unwrap();
+        // and after a full second idle the bucket is capped at capacity
+        q.try_consume_at("t", 1000, 2_000_000).unwrap();
+    }
+
+    #[test]
+    fn oversized_requests_use_the_debt_model() {
+        let q = Quota::new(1000, 1000);
+        // 5x the capacity: admitted on a full bucket...
+        q.try_consume_at("t", 5000, 0).unwrap();
+        assert_eq!(q.balance("t"), Some(-4000.0));
+        // ...then the tenant is throttled while the debt pays down
+        let t = q.try_consume_at("t", 10, 0).unwrap_err();
+        // needs 10 - (-4000) = 4010 tokens at 1000 B/s
+        assert_eq!(t.retry_after_ms, 4010);
+        // 5 seconds later the bucket is full again
+        q.try_consume_at("t", 1000, 5_000_000).unwrap();
+    }
+
+    #[test]
+    fn tenants_have_independent_buckets() {
+        let q = Quota::new(100, 100);
+        q.try_consume_at("a", 100, 0).unwrap();
+        assert!(q.try_consume_at("a", 1, 0).is_err());
+        q.try_consume_at("b", 100, 0).unwrap();
+        assert!(q.balance("a").unwrap() <= 0.0);
+    }
+
+    #[test]
+    fn retry_hint_is_at_least_one_ms() {
+        let q = Quota::new(1000, 1_000_000_000);
+        q.try_consume_at("t", 1000, 0).unwrap();
+        let t = q.try_consume_at("t", 1, 0).unwrap_err();
+        assert!(t.retry_after_ms >= 1);
+    }
+}

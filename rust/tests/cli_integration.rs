@@ -195,3 +195,31 @@ fn cli_all_schemes_produce_valid_files() {
         ]));
     }
 }
+
+#[test]
+fn cli_unknown_flags_are_usage_errors() {
+    // a typo'd flag must exit 2 with a usage message, not run silently
+    for argv in [
+        vec!["compress", "--in", "x.h5l", "--dataset", "p", "--out", "x.czb", "--treads", "8"],
+        vec!["gen", "--size", "32", "--out", "x.h5l", "--paper"],
+        vec!["verify", "--in", "x.czb", "--deeply"],
+        vec!["info", "--in", "x.czb", "--cache", "4"],
+        vec!["serve", "--port", "9321"],
+        vec!["client", "--op", "stat", "--address", "127.0.0.1:1"],
+        vec!["codecs", "--verbose"],
+    ] {
+        let out = czb().args(&argv).output().unwrap();
+        assert_eq!(out.status.code(), Some(2), "{argv:?} must exit 2 (usage)");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("unknown flag"), "{argv:?}: {err}");
+        assert!(err.contains("USAGE"), "{argv:?} must print usage");
+    }
+    // known flags still pass flag validation (codecs takes none at all)
+    let out = czb().args(["codecs"]).output().unwrap();
+    assert!(out.status.success());
+    // usage documents the service front-end
+    let out = czb().output().unwrap();
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("serve"), "usage must document serve: {err}");
+    assert!(err.contains("shutdown frame drains"), "{err}");
+}

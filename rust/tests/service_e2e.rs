@@ -1,0 +1,271 @@
+//! End-to-end service tests: real TCP sockets against `czb serve`'s
+//! server type — concurrent clients sharing one engine, admission
+//! backpressure, tenant quotas, priority lanes, corrupt-frame
+//! isolation, and graceful drain.
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use cubismz::core::Field3;
+use cubismz::pipeline::{CompressParams, Engine, PipelineConfig, ShuffleMode};
+use cubismz::service::metrics_export::sample;
+use cubismz::service::proto::{Priority, Status};
+use cubismz::service::{Client, Refusal, ServeConfig, Server, ServerHandle};
+
+/// Start a server on an ephemeral loopback port; returns its address,
+/// handle, and the thread running the accept loop.
+fn start(cfg: ServeConfig) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let server = Server::bind(&cfg).expect("bind loopback");
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle();
+    let t = std::thread::spawn(move || server.run().expect("accept loop"));
+    (addr, handle, t)
+}
+
+fn small_cfg() -> ServeConfig {
+    ServeConfig { threads: 2, ..ServeConfig::default() }
+}
+
+fn field_for(seed: usize, n: usize) -> Field3 {
+    let data = (0..n * n * n)
+        .map(|i| (((i * 37 + seed * 101) % 251) as f32 * 0.13).sin())
+        .collect();
+    Field3::from_vec(n, n, n, data)
+}
+
+/// The params the server derives from a request: paper defaults with
+/// the request's bs/eps/shuffle — what a local compress must use for
+/// byte-identity.
+fn server_params(bs: u32, eps: f32, shuffle: ShuffleMode) -> CompressParams {
+    let mut p = CompressParams::from_config(&PipelineConfig::paper_default(eps));
+    p.bs = bs as usize;
+    p.shuffle = shuffle;
+    p
+}
+
+fn unwrap_reply<T>(r: Result<Result<T, Refusal>, String>) -> T {
+    r.expect("transport").expect("server refused")
+}
+
+/// A raw connection that has sent a request header declaring `body_len`
+/// bytes but no body yet — it holds an admission permit open until the
+/// body is sent (or the socket drops).
+fn stall_permit(addr: SocketAddr, body_len: u64) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut hdr = [0u8; 16];
+    hdr[..4].copy_from_slice(b"CZRQ");
+    hdr[4] = 1; // version
+    hdr[5] = 3; // verify
+    hdr[6] = 0; // normal priority
+    hdr[7] = 0; // anonymous tenant
+    hdr[8..16].copy_from_slice(&body_len.to_le_bytes());
+    s.write_all(&hdr).unwrap();
+    s.flush().unwrap();
+    // give the acceptor + handler time to park on the body read
+    std::thread::sleep(Duration::from_millis(150));
+    s
+}
+
+#[test]
+fn four_concurrent_clients_get_bit_identical_roundtrips() {
+    let (addr, handle, t) = start(small_cfg());
+    let local = Arc::new(Engine::builder().threads(2).build());
+    let workers: Vec<_> = (0..4)
+        .map(|i| {
+            let local = Arc::clone(&local);
+            std::thread::spawn(move || {
+                let field = field_for(i, 24);
+                let shuffle = if i % 2 == 0 { ShuffleMode::Byte4 } else { ShuffleMode::None };
+                let name = format!("q{i}");
+                let mut c = Client::connect(addr).unwrap().tenant(&format!("tenant-{i}"));
+                let czb = unwrap_reply(c.compress(&name, &field, 8, 1e-4, shuffle));
+                // byte-identical to a local compress with the same params
+                let (local_czb, _) =
+                    local.compress_vec(&field, &name, &server_params(8, 1e-4, shuffle));
+                assert_eq!(czb, local_czb, "client {i}: server stream differs from local");
+                // remote decode matches local decode bit-for-bit
+                let (rname, back) = unwrap_reply(c.decompress(&czb));
+                assert_eq!(rname, name);
+                let (lfield, _) = local.decompress_bytes(&czb).unwrap();
+                assert_eq!(back.data, lfield.data, "client {i}: decode differs");
+                // and the stream verifies clean remotely
+                let summary = unwrap_reply(c.verify(&czb));
+                assert!(summary.clean);
+                assert_eq!(summary.corrupt_chunks, 0);
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("client thread");
+    }
+    // one shared engine served everything: counters prove it
+    let mut c = Client::connect(addr).unwrap();
+    let stat = unwrap_reply(c.stat());
+    assert_eq!(sample(&stat, "czb_requests_total{op=\"compress\"}"), Some(4.0), "{stat}");
+    assert_eq!(sample(&stat, "czb_requests_total{op=\"decompress\"}"), Some(4.0));
+    assert_eq!(sample(&stat, "czb_requests_total{op=\"verify\"}"), Some(4.0));
+    // the stat's own ok response is counted after the text is rendered
+    assert_eq!(sample(&stat, "czb_responses_total{status=\"ok\"}"), Some(12.0));
+    assert!(sample(&stat, "czb_engine_raw_bytes_total").unwrap() >= (4 * 24 * 24 * 24 * 4) as f64);
+    assert!(
+        sample(&stat, "czb_request_latency_seconds_count{op=\"compress\"}").unwrap() >= 4.0
+    );
+    assert_eq!(sample(&stat, "czb_queue_depth"), Some(0.0), "all permits returned");
+    assert_eq!(sample(&stat, "czb_tenant_requests_total{tenant=\"tenant-0\"}"), Some(3.0), "{stat}");
+    handle.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn saturated_admission_yields_busy_not_a_hang() {
+    let cfg = ServeConfig {
+        threads: 1,
+        admit_normal: 1,
+        admit_high_extra: 1,
+        retry_after_ms: 77,
+        ..ServeConfig::default()
+    };
+    let (addr, handle, t) = start(cfg);
+    // park a request on the only normal slot
+    let mut parked = stall_permit(addr, 64);
+    // a normal-lane request is refused immediately with the retry hint
+    let mut c = Client::connect(addr).unwrap();
+    let refusal = c.verify(b"whatever").expect("transport").expect_err("must be refused");
+    assert_eq!(refusal.status, Status::Busy);
+    assert_eq!(refusal.retry_after_ms, 77);
+    // the reserved lane still admits a high-priority request
+    let mut hi = Client::connect(addr).unwrap().priority(Priority::High);
+    let r = hi.verify(b"also not a czb").expect("transport");
+    let refusal = r.expect_err("a garbage body is an error, not a refusal... ");
+    assert_eq!(refusal.status, Status::Error, "high lane must have served the request");
+    // release the parked permit: send the declared body, read the reply
+    parked.write_all(&[0u8; 64]).unwrap();
+    parked.flush().unwrap();
+    // the slot frees up and normal requests serve again
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        match c.verify(b"still not a czb").expect("transport") {
+            Err(r) if r.status == Status::Busy => {
+                assert!(std::time::Instant::now() < deadline, "slot never freed");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(r) => {
+                assert_eq!(r.status, Status::Error);
+                break;
+            }
+            Ok(_) => panic!("garbage cannot verify clean"),
+        }
+    }
+    handle.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn tenant_quotas_throttle_then_refill() {
+    let cfg = ServeConfig {
+        threads: 1,
+        quota_capacity: 4096,
+        // slow enough that scheduler jitter between requests cannot
+        // accidentally refill the 2048 bytes the follow-up needs
+        // (~16 bytes/ms: a 2048-byte refill takes ~125ms)
+        quota_rate: 16_384,
+        ..ServeConfig::default()
+    };
+    let (addr, handle, t) = start(cfg);
+    let mut a = Client::connect(addr).unwrap().tenant("sim-a");
+    // drain the bucket with one full-capacity request (garbage body:
+    // the quota charges on admission, not on decode success)
+    let r = a.verify(&vec![1u8; 4096]).expect("transport");
+    assert_eq!(r.expect_err("garbage").status, Status::Error);
+    // an immediate follow-up is throttled with a retry hint
+    let refusal = a.verify(&vec![1u8; 2048]).expect("transport").expect_err("throttled");
+    assert_eq!(refusal.status, Status::Quota);
+    assert!(refusal.retry_after_ms >= 1);
+    // a different tenant is unaffected
+    let mut b = Client::connect(addr).unwrap().tenant("sim-b");
+    let r = b.verify(&vec![1u8; 2048]).expect("transport");
+    assert_eq!(r.expect_err("garbage").status, Status::Error, "tenant b must be admitted");
+    // after the hinted wait the bucket covers the request again
+    std::thread::sleep(Duration::from_millis(refusal.retry_after_ms as u64 + 20));
+    let r = a.verify(&vec![1u8; 2048]).expect("transport");
+    assert_eq!(r.expect_err("garbage").status, Status::Error, "bucket must have refilled");
+    // throttling is metered per tenant
+    let stat = unwrap_reply(a.stat());
+    assert_eq!(sample(&stat, "czb_tenant_throttled_total{tenant=\"sim-a\"}"), Some(1.0));
+    assert_eq!(sample(&stat, "czb_tenant_throttled_total{tenant=\"sim-b\"}"), Some(0.0));
+    assert_eq!(sample(&stat, "czb_responses_total{status=\"quota\"}"), Some(1.0));
+    handle.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn corrupt_frame_on_one_connection_never_disturbs_siblings() {
+    let (addr, handle, t) = start(small_cfg());
+    let field = field_for(7, 24);
+    let mut good = Client::connect(addr).unwrap();
+    let czb = unwrap_reply(good.compress("q", &field, 8, 1e-4, ShuffleMode::Byte4));
+    // sibling 1: pure garbage at the frame layer
+    {
+        let mut evil = TcpStream::connect(addr).unwrap();
+        evil.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        evil.flush().unwrap();
+    } // dropped: server answers bad_request and closes
+      // sibling 2: valid magic, hostile declared length
+    {
+        let mut evil = TcpStream::connect(addr).unwrap();
+        let mut hdr = [0u8; 16];
+        hdr[..4].copy_from_slice(b"CZRQ");
+        hdr[4] = 1;
+        hdr[5] = 1;
+        hdr[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        evil.write_all(&hdr).unwrap();
+        evil.flush().unwrap();
+    }
+    // the good connection keeps serving across the sibling failures
+    let (_, back) = unwrap_reply(good.decompress(&czb));
+    assert_eq!(back.data.len(), field.data.len());
+    let summary = unwrap_reply(good.verify(&czb));
+    assert!(summary.clean);
+    // both evil frames are rejected (their handlers run async — poll)
+    let mut fresh = Client::connect(addr).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let stat = loop {
+        let stat = unwrap_reply(fresh.stat());
+        if sample(&stat, "czb_responses_total{status=\"bad_request\"}") >= Some(2.0) {
+            break stat;
+        }
+        assert!(std::time::Instant::now() < deadline, "bad frames never rejected: {stat}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(sample(&stat, "czb_queue_depth"), Some(0.0), "no permit leaked");
+    handle.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_and_stops_accepting() {
+    let (addr, handle, t) = start(small_cfg());
+    let field = field_for(3, 16);
+    let mut c = Client::connect(addr).unwrap();
+    let czb = unwrap_reply(c.compress("q", &field, 8, 1e-3, ShuffleMode::None));
+    assert!(!czb.is_empty());
+    // a client-initiated shutdown acks, then refuses new work
+    unwrap_reply(c.shutdown());
+    assert!(handle.is_shutting_down());
+    let refusal = c.compress("q", &field, 8, 1e-3, ShuffleMode::None);
+    match refusal {
+        Ok(Err(r)) => assert_eq!(r.status, Status::ShuttingDown),
+        // the drain may already have closed the connection under us —
+        // that is also a clean refusal, not a hang
+        Err(_) => {}
+        Ok(Ok(_)) => panic!("work admitted during drain"),
+    }
+    // the accept loop exits and the port closes
+    t.join().unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+        "listener must be closed after drain"
+    );
+}

@@ -11,9 +11,17 @@ skipped.
 By default the script is fail-soft: it always exits 0, so a broken trend
 check can never fail the build (what CI runs). With BENCH_TREND_STRICT=1
 in the environment — intended for local use before sending a perf-
-sensitive change — any named throughput row (a metric key containing
-"mbps", "speedup" or "per_sec") that regressed by more than 25% makes
-the script exit nonzero after printing the full diff.
+sensitive change — any metric that regressed by more than 25% makes the
+script exit nonzero after printing the full diff. Two metric families
+are direction-aware:
+
+* latency-like keys (ending in "_ms", or containing "p50"/"p99"/
+  "latency") are lower-is-better: a >25% *increase* is a regression;
+* throughput-like keys (containing "mbps", "speedup" or "per_sec") are
+  higher-is-better: a >25% *drop* is a regression.
+
+Latency wins when a key matches both families, so a name like
+"p99_latency_per_sec" is never scored backwards.
 """
 import glob
 import json
@@ -21,7 +29,8 @@ import os
 import sys
 
 STRICT = os.environ.get("BENCH_TREND_STRICT") == "1"
-# throughput-like metrics are higher-is-better; >25% drop = regression
+# >25% move in the bad direction = regression (drop for throughput,
+# rise for latency)
 REGRESSION_FRACTION = 0.25
 REGRESSIONS = []
 
@@ -31,13 +40,23 @@ def is_throughput_key(key):
     return "mbps" in k or "speedup" in k or "per_sec" in k
 
 
+def is_latency_key(key):
+    k = key.lower()
+    return k.endswith("_ms") or "p50" in k or "p99" in k or "latency" in k
+
+
 def note_regression(context, key, old, new):
     if not isinstance(old, (int, float)) or not isinstance(new, (int, float)):
         return
-    if not is_throughput_key(key) or old <= 0:
+    if old <= 0:
         return
-    if new < old * (1.0 - REGRESSION_FRACTION):
-        REGRESSIONS.append(f"{context} {key}: {old:.3g} -> {new:.3g}")
+    # latency first: it wins when a key matches both families
+    if is_latency_key(key):
+        if new > old * (1.0 + REGRESSION_FRACTION):
+            REGRESSIONS.append(f"{context} {key}: {old:.3g} -> {new:.3g} (latency up)")
+    elif is_throughput_key(key):
+        if new < old * (1.0 - REGRESSION_FRACTION):
+            REGRESSIONS.append(f"{context} {key}: {old:.3g} -> {new:.3g}")
 
 
 def load(path):
@@ -123,16 +142,16 @@ def main():
         except Exception as e:  # fail-soft by contract
             print(f"  ! diff failed: {e}")
     if REGRESSIONS:
-        print(f"throughput regressions > {int(REGRESSION_FRACTION * 100)}%:")
+        print(f"regressions > {int(REGRESSION_FRACTION * 100)}%:")
         for r in REGRESSIONS:
             print(f"  !! {r}")
         if STRICT:
             print("BENCH_TREND_STRICT=1: failing on the regressions above")
             sys.exit(1)
     if STRICT:
-        print("(strict mode: no throughput regression above the threshold)")
+        print("(strict mode: no regression above the threshold)")
     else:
-        print("(trend diff is informational only; set BENCH_TREND_STRICT=1 to fail on >25% throughput regressions)")
+        print("(trend diff is informational only; set BENCH_TREND_STRICT=1 to fail on >25% throughput/latency regressions)")
 
 
 if __name__ == "__main__":
