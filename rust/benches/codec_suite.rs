@@ -99,6 +99,28 @@ fn main() {
         ("byte4_mbps".into(), Json::Num(byte4_mbps)),
         ("bit4_mbps".into(), Json::Num(bit4_mbps)),
     ])];
+    // the same kernels with dispatch pinned to scalar — the trend diff
+    // tracks both rows, and the outputs must be identical either way
+    {
+        let prev = cubismz::simd::override_level(cubismz::simd::SimdLevel::Scalar);
+        let s = bench_budget("shuffle/byte4-scalar", budget * 0.5, 50, || {
+            shuffle::byte_shuffle(&raw, 4)
+        });
+        s.report_mbps(raw.len());
+        let byte4_sc = s.mbps(raw.len());
+        let s = bench_budget("shuffle/bit4-scalar", budget * 0.5, 50, || {
+            shuffle::bit_shuffle(&raw, 4)
+        });
+        s.report_mbps(raw.len());
+        let bit4_sc = s.mbps(raw.len());
+        assert_eq!(shuffle::byte_shuffle(&raw, 4), data, "scalar shuffle must match dispatched");
+        cubismz::simd::override_level(prev);
+        shuffle_rows.push(Json::Obj(vec![
+            ("name".into(), Json::Str("kernels-scalar".into())),
+            ("byte4_mbps".into(), Json::Num(byte4_sc)),
+            ("bit4_mbps".into(), Json::Num(bit4_sc)),
+        ]));
+    }
     for codec in [Codec::Lz4, Codec::ZlibDef] {
         let c_none = codec.compress_vec(&raw).len();
         let c_byte = codec.compress_vec(&data).len();

@@ -163,6 +163,48 @@ fn main() {
         );
     }
 
+    // scalar-vs-simd pipeline comparison: same field, same config, both
+    // dispatch modes — and the streams must stay byte-identical to the
+    // default-dispatch reference above (whole-archive bit-exactness)
+    let detected = cubismz::simd::detect();
+    let mut modes = vec![cubismz::simd::SimdLevel::Scalar];
+    if detected != cubismz::simd::SimdLevel::Scalar {
+        modes.push(detected);
+    }
+    let cmp_threads = [1usize, hw.clamp(2, 8)];
+    println!("simd comparison ({} vs scalar):", detected.name());
+    let mut simd_rows = Vec::new();
+    for &mode in &modes {
+        for &threads in &cmp_threads {
+            let mut cfg = PipelineConfig::paper_default(1e-3).with_threads(threads);
+            cfg.chunk_bytes = chunk_bytes;
+            let prev = cubismz::simd::override_level(mode);
+            let s = bench_budget(&format!("compress/{}/t={threads}", mode.name()), 2.0, 8, || {
+                compress_field(&f, "p", &cfg, &NativeEngine)
+            });
+            s.report_mbps(bytes);
+            let (stream, _) = compress_field(&f, "p", &cfg, &NativeEngine);
+            assert_eq!(
+                Some(&stream),
+                reference_stream.as_ref(),
+                "{} stream must match the default-dispatch reference",
+                mode.name()
+            );
+            let sd = bench_budget(&format!("decompress/{}/t={threads}", mode.name()), 2.0, 8, || {
+                decompress_field_mt(&stream, &NativeEngine, threads).unwrap()
+            });
+            sd.report_mbps(bytes);
+            cubismz::simd::override_level(prev);
+            simd_rows.push(Json::Obj(vec![
+                ("name".into(), Json::Str(format!("{}/t{threads}", mode.name()))),
+                ("simd".into(), Json::Str(mode.name().into())),
+                ("threads".into(), Json::Int(threads as i64)),
+                ("compress_mbps".into(), Json::Num(bytes as f64 / 1e6 / s.mean)),
+                ("decompress_mbps".into(), Json::Num(bytes as f64 / 1e6 / sd.mean)),
+            ]));
+        }
+    }
+
     let doc = Json::Obj(vec![
         ("bench".into(), Json::Str("thread_scaling".into())),
         ("field".into(), Json::Str(format!("smooth/{n}^3"))),
@@ -170,6 +212,7 @@ fn main() {
         ("hw_threads".into(), Json::Int(hw as i64)),
         ("rows".into(), Json::Arr(rows)),
         ("single_chunk_stage2".into(), Json::Arr(sc_rows)),
+        ("simd_compare".into(), Json::Arr(simd_rows)),
     ]);
     write_json("BENCH_thread_scaling.json", &doc).expect("write BENCH_thread_scaling.json");
     println!("wrote BENCH_thread_scaling.json");

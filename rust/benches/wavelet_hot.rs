@@ -1,33 +1,110 @@
 //! Bench: the L1/L3 hot path — forward/inverse 3D wavelet transform per
-//! block and per batch, native vs PJRT engine (when artifacts exist).
-//! This is the §Perf tracking bench for the transform kernel.
+//! block and per batch, scalar vs SIMD dispatch (and vs the PJRT engine
+//! when artifacts exist). This is the §Perf tracking bench for the
+//! transform kernel; it emits `BENCH_wavelet.json` with a
+//! scalar-vs-simd section per kernel and asserts the vectorized y/z
+//! passes actually pay for themselves on hosts with vector units.
+//!
+//! `WAVELET_HOT_FAST=1` shrinks the batch and budgets for CI.
 use cubismz::pipeline::{NativeEngine, WaveletEngine};
 use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
-use cubismz::util::bench::bench_budget;
+use cubismz::simd::{self, SimdLevel};
+use cubismz::util::bench::{bench_budget, write_json, Json};
 use cubismz::util::prng::Pcg32;
 use cubismz::wavelet::{max_levels, WaveletKind};
 
 fn main() {
+    let fast = std::env::var("WAVELET_HOT_FAST").is_ok();
     let bs = 32usize;
     let vol = bs * bs * bs;
-    let batch = 64usize;
+    let batch = if fast { 24usize } else { 64 };
+    let (budget, max_samples) = if fast { (0.35, 40) } else { (1.2, 200) };
     let mut rng = Pcg32::new(1);
     let mut data = vec![0f32; batch * vol];
     rng.fill_f32(&mut data, -10.0, 10.0);
     let bytes = batch * vol * 4;
-    println!("bench wavelet_hot: {batch} blocks of {bs}^3 ({} MB)", bytes / 1_000_000);
+    let detected = simd::detect();
+    println!(
+        "bench wavelet_hot: {batch} blocks of {bs}^3 ({} MB), simd {}",
+        bytes / 1_000_000,
+        detected.name()
+    );
 
+    let mut rows = Vec::new();
+    let (mut scalar_total, mut simd_total) = (0.0f64, 0.0f64);
     for kind in WaveletKind::ALL {
-        let mut buf = data.clone();
-        let s = bench_budget(&format!("native/fwd/{}", kind.name()), 1.5, 200, || {
-            NativeEngine.forward_batch(kind, &mut buf, bs, max_levels(bs));
-        });
-        s.report_mbps(bytes);
-        let s = bench_budget(&format!("native/inv/{}", kind.name()), 1.5, 200, || {
-            NativeEngine.inverse_batch(kind, &mut buf, bs, max_levels(bs));
-        });
-        s.report_mbps(bytes);
+        // dispatch must never change the transform output: run forward
+        // under both levels on identical inputs and compare bits
+        let mut a = data.clone();
+        let mut b = data.clone();
+        let prev = simd::override_level(SimdLevel::Scalar);
+        NativeEngine.forward_batch(kind, &mut a, bs, max_levels(bs));
+        simd::override_level(detected);
+        NativeEngine.forward_batch(kind, &mut b, bs, max_levels(bs));
+        simd::override_level(prev);
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{}: scalar and {} forward transforms differ",
+            kind.name(),
+            detected.name()
+        );
+
+        for fwd in [true, false] {
+            let dir = if fwd { "fwd" } else { "inv" };
+            let mut buf = data.clone();
+            let mut run = |lvl: SimdLevel, label: &str| {
+                let prev = simd::override_level(lvl);
+                let s = bench_budget(
+                    &format!("{label}/{dir}/{}", kind.name()),
+                    budget,
+                    max_samples,
+                    || {
+                        if fwd {
+                            NativeEngine.forward_batch(kind, &mut buf, bs, max_levels(bs));
+                        } else {
+                            NativeEngine.inverse_batch(kind, &mut buf, bs, max_levels(bs));
+                        }
+                    },
+                );
+                simd::override_level(prev);
+                s.report_mbps(bytes);
+                s
+            };
+            let sc = run(SimdLevel::Scalar, "scalar");
+            let sv = run(detected, "simd");
+            scalar_total += sc.min;
+            simd_total += sv.min;
+            rows.push(Json::Obj(vec![
+                ("name".into(), Json::Str(format!("{dir}/{}", kind.name()))),
+                ("scalar_mbps".into(), Json::Num(bytes as f64 / 1e6 / sc.min)),
+                ("simd_mbps".into(), Json::Num(bytes as f64 / 1e6 / sv.min)),
+                ("speedup".into(), Json::Num(sc.min / sv.min)),
+            ]));
+        }
     }
+    let total_speedup = scalar_total / simd_total;
+    println!(
+        "total fwd+inv speedup ({} vs scalar, min-time): {total_speedup:.2}x",
+        detected.name()
+    );
+    if detected != SimdLevel::Scalar {
+        assert!(
+            total_speedup >= 1.5,
+            "SIMD transform must beat scalar by >= 1.5x on a {} host: {total_speedup:.2}x",
+            detected.name()
+        );
+    }
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("wavelet".into())),
+        ("simd".into(), Json::Str(detected.name().into())),
+        ("bs".into(), Json::Int(bs as i64)),
+        ("batch".into(), Json::Int(batch as i64)),
+        ("rows".into(), Json::Arr(rows)),
+        ("total_speedup".into(), Json::Num(total_speedup)),
+    ]);
+    write_json("BENCH_wavelet.json", &doc).expect("write BENCH_wavelet.json");
+    println!("wrote BENCH_wavelet.json");
 
     match PjrtEngine::new(default_artifacts_dir()) {
         Ok(engine) => {

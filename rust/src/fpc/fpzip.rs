@@ -6,8 +6,18 @@
 //!
 //! Stream: `[u8 ver][u8 prec][u16 nx ny nz][huffman lens 33 nibbles]
 //! [u32 payload_bytes][payload]`
+//!
+//! Hot-loop vectorization (bit-exact, stream-identical — see
+//! `crate::simd`): the encoder's ordered-int mapping and the interior
+//! Lorenzo residual rows (all seven neighbors exist, so the gather is
+//! branch-free) run 8 resp. 4 lanes wide on AVX2. Integer adds are
+//! exact in any order, so the streams are byte-identical to the scalar
+//! path. The decoder is untouched: its prediction reads the mirror it
+//! is still writing (a sequential recurrence), which no lane-parallel
+//! form can preserve.
 use super::{f32_to_ordered_u32, ordered_u32_to_f32, Dims3};
 use crate::codec::huffman::{code_lengths, Decoder, Encoder};
+use crate::simd::{self, SimdLevel};
 use crate::util::{BitReader, BitWriter};
 
 const N_CLASS: usize = 40; // residual bit-length classes (zigzag of i64 spans up to ~2^36)
@@ -53,31 +63,168 @@ fn unzigzag(u: u64) -> i64 {
     ((u >> 1) as i64) ^ -((u & 1) as i64)
 }
 
+/// `mapped[i] = (f32_to_ordered_u32(data[i]) >> shift) as i64`.
+fn map_ordered(data: &[f32], shift: u32, mapped: &mut [i64], lvl: SimdLevel) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 {
+            // SAFETY: Avx2 is only dispatched when simd::detect() saw it
+            unsafe { avx2::map_ordered(data, shift, mapped) };
+            return;
+        }
+    }
+    let _ = lvl;
+    for (m, &v) in mapped.iter_mut().zip(data) {
+        *m = (f32_to_ordered_u32(v) >> shift) as i64;
+    }
+}
+
+/// Zigzagged Lorenzo residuals for every sample. Interior rows (z>0,
+/// y>0, x>0: all seven neighbors exist) take the branch-free path;
+/// boundary samples keep the flag-guarded [`lorenzo_pred`].
+fn compute_residuals(mapped: &[i64], dims: Dims3, out: &mut [u64], lvl: SimdLevel) {
+    let nx = dims.nx;
+    let nxny = dims.nx * dims.ny;
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            let row = (z * dims.ny + y) * nx;
+            if z > 0 && y > 0 {
+                out[row] = zigzag(mapped[row] - lorenzo_pred(mapped, dims, 0, y, z));
+                interior_row(mapped, out, row + 1, nx - 1, nx, nxny, lvl);
+            } else {
+                for x in 0..nx {
+                    out[row + x] = zigzag(mapped[row + x] - lorenzo_pred(mapped, dims, x, y, z));
+                }
+            }
+        }
+    }
+}
+
+/// `len` interior residuals starting at `i0` (every sample has all 7
+/// Lorenzo neighbors). Integer sums are order-independent, so the lane
+/// form is bit-exact against [`lorenzo_pred`]'s accumulation.
+fn interior_row(
+    m: &[i64],
+    out: &mut [u64],
+    i0: usize,
+    len: usize,
+    nx: usize,
+    nxny: usize,
+    lvl: SimdLevel,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 {
+            // SAFETY: as for map_ordered; i0 >= nxny + nx + 1 by construction
+            unsafe { avx2::interior_row(m, out, i0, len, nx, nxny) };
+            return;
+        }
+    }
+    let _ = lvl;
+    for i in i0..i0 + len {
+        let p = m[i - 1] + m[i - nx] + m[i - nxny] - m[i - 1 - nx] - m[i - 1 - nxny]
+            - m[i - nx - nxny]
+            + m[i - 1 - nx - nxny];
+        out[i] = zigzag(m[i] - p);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Lane forms of the encoder hot loops; see the module header for
+    //! the bit-exactness argument.
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// AVX2 must be available (dispatch-checked by the caller);
+    /// `mapped.len() == data.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn map_ordered(data: &[f32], shift: u32, mapped: &mut [i64]) {
+        let n = data.len();
+        let sh = _mm_cvtsi32_si128(shift as i32);
+        let msb = _mm256_set1_epi32(i32::MIN);
+        let mut i = 0;
+        while i + 8 <= n {
+            let b = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+            // branch-free f32_to_ordered_u32: b ^ ((b >>a 31) | 0x8000_0000)
+            let flip = _mm256_or_si256(_mm256_srai_epi32::<31>(b), msb);
+            let u = _mm256_srl_epi32(_mm256_xor_si256(b, flip), sh);
+            let lo = _mm256_cvtepu32_epi64(_mm256_castsi256_si128(u));
+            let hi = _mm256_cvtepu32_epi64(_mm256_extracti128_si256::<1>(u));
+            _mm256_storeu_si256(mapped.as_mut_ptr().add(i) as *mut __m256i, lo);
+            _mm256_storeu_si256(mapped.as_mut_ptr().add(i + 4) as *mut __m256i, hi);
+            i += 8;
+        }
+        while i < n {
+            mapped[i] = (super::f32_to_ordered_u32(data[i]) >> shift) as i64;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available (dispatch-checked by the caller);
+    /// `i0 >= 1 + nx + nxny` and `i0 + len <= m.len() == out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn interior_row(
+        m: &[i64],
+        out: &mut [u64],
+        i0: usize,
+        len: usize,
+        nx: usize,
+        nxny: usize,
+    ) {
+        // a macro, not a closure: closures would not inherit the avx2
+        // target feature on older toolchains
+        macro_rules! ld {
+            ($i:expr) => {
+                _mm256_loadu_si256(m.as_ptr().add($i) as *const __m256i)
+            };
+        }
+        let zero = _mm256_setzero_si256();
+        let mut i = i0;
+        let end = i0 + len;
+        while i + 4 <= end {
+            let mut p = _mm256_add_epi64(ld!(i - 1), ld!(i - nx));
+            p = _mm256_add_epi64(p, ld!(i - nxny));
+            p = _mm256_sub_epi64(p, ld!(i - 1 - nx));
+            p = _mm256_sub_epi64(p, ld!(i - 1 - nxny));
+            p = _mm256_sub_epi64(p, ld!(i - nx - nxny));
+            p = _mm256_add_epi64(p, ld!(i - 1 - nx - nxny));
+            let d = _mm256_sub_epi64(ld!(i), p);
+            // zigzag: (d << 1) ^ (d >>a 63); the compare IS d >>a 63
+            let zz = _mm256_xor_si256(_mm256_slli_epi64::<1>(d), _mm256_cmpgt_epi64(zero, d));
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, zz);
+            i += 4;
+        }
+        while i < end {
+            let p = m[i - 1] + m[i - nx] + m[i - nxny] - m[i - 1 - nx] - m[i - 1 - nxny]
+                - m[i - nx - nxny]
+                + m[i - 1 - nx - nxny];
+            out[i] = super::zigzag(m[i] - p);
+            i += 1;
+        }
+    }
+}
+
 /// Compress; `prec` in [1, 32] is the number of kept mapped-int bits
 /// (32 = lossless bit-for-bit).
 pub fn compress(data: &[f32], dims: Dims3, prec: u8, out: &mut Vec<u8>) {
+    compress_with(data, dims, prec, out, simd::level());
+}
+
+/// [`compress`] with an explicit dispatch level (tests pin the level
+/// without touching the process-wide setting; the stream is identical
+/// at every level).
+fn compress_with(data: &[f32], dims: Dims3, prec: u8, out: &mut Vec<u8>, lvl: SimdLevel) {
     assert_eq!(data.len(), dims.len());
     assert!((1..=32).contains(&prec));
     let shift = 32 - prec as u32;
     let n = data.len();
     // pass 1: residuals + length-class frequencies
     let mut mapped = vec![0i64; n];
-    for (i, &v) in data.iter().enumerate() {
-        mapped[i] = (f32_to_ordered_u32(v) >> shift) as i64;
-    }
-    let mut residuals = Vec::with_capacity(n);
-    {
-        let mut i = 0;
-        for z in 0..dims.nz {
-            for y in 0..dims.ny {
-                for x in 0..dims.nx {
-                    let pred = lorenzo_pred(&mapped, dims, x, y, z);
-                    residuals.push(zigzag(mapped[i] - pred));
-                    i += 1;
-                }
-            }
-        }
-    }
+    map_ordered(data, shift, &mut mapped, lvl);
+    let mut residuals = vec![0u64; n];
+    compute_residuals(&mapped, dims, &mut residuals, lvl);
     let mut freqs = vec![0u32; N_CLASS];
     for &r in &residuals {
         freqs[(64 - r.leading_zeros()) as usize] += 1;
@@ -280,6 +427,53 @@ mod tests {
             // prec 16 keeps sign+8 exp+7 mantissa bits: rel err < 2^-7
             assert!(rel < 8e-3, "prec 16 rel err {rel}");
         }
+    }
+
+    #[test]
+    fn encoder_kernels_match_scalar_oracle() {
+        let lvl = simd::detect();
+        if lvl == SimdLevel::Scalar {
+            return; // nothing to compare on this host
+        }
+        prop_cases(0xF21A, 20, |rng, _| {
+            let dims = Dims3 {
+                nx: 4 + rng.below(13) as usize,
+                ny: 3 + rng.below(6) as usize,
+                nz: 2 + rng.below(5) as usize,
+            };
+            let n = dims.len();
+            let mut data = vec![0f32; n];
+            for v in data.iter_mut() {
+                // raw bit patterns: NaNs, infs and subnormals included
+                *v = f32::from_bits(rng.next_u32());
+            }
+            for &prec in &[32u8, 17, 8] {
+                let shift = 32 - prec as u32;
+                let (mut ma, mut mb) = (vec![0i64; n], vec![0i64; n]);
+                map_ordered(&data, shift, &mut ma, SimdLevel::Scalar);
+                map_ordered(&data, shift, &mut mb, lvl);
+                assert_eq!(ma, mb, "map_ordered diverges at prec {prec}");
+                let (mut ra, mut rb) = (vec![0u64; n], vec![0u64; n]);
+                compute_residuals(&ma, dims, &mut ra, SimdLevel::Scalar);
+                compute_residuals(&mb, dims, &mut rb, lvl);
+                assert_eq!(ra, rb, "residuals diverge at prec {prec}");
+            }
+        });
+    }
+
+    #[test]
+    fn streams_identical_across_dispatch() {
+        let lvl = simd::detect();
+        prop_cases(0xF21D, 6, |rng, _| {
+            let dims = Dims3 { nx: 10, ny: 7, nz: 6 };
+            let data: Vec<f32> = gen_floats(rng, dims.len());
+            for &prec in &[32u8, 16] {
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                compress_with(&data, dims, prec, &mut a, SimdLevel::Scalar);
+                compress_with(&data, dims, prec, &mut b, lvl);
+                assert_eq!(a, b, "stream differs vs {lvl:?} at prec {prec}");
+            }
+        });
     }
 
     #[test]

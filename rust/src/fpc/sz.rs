@@ -6,6 +6,16 @@
 //!
 //! Stream: `[u8 ver][f32 abs_eb][u16 nx ny nz][u32 n_outliers]
 //! [huffman lens 1025 nibbles][u32 code_bytes][codes][outliers]`
+//!
+//! Why this codec has no SIMD lane kernels (see `crate::simd`): both
+//! sides predict from the *decoded mirror* that the same loop is still
+//! writing — sample i's prediction reads reconstructions of i-1, i-nx,
+//! i-nx*ny — so the hot loop is a sequential recurrence, and f32
+//! addition is non-associative so no reassociated lane form can be
+//! bit-identical. What we do instead: interior samples (x,y,z all > 0)
+//! skip the seven neighbor-existence branches via
+//! [`lorenzo3d_interior`], which keeps the scalar accumulation order
+//! exactly and so stays bit-identical to [`lorenzo3d`].
 use super::Dims3;
 use crate::codec::huffman::{code_lengths, Decoder, Encoder};
 use crate::util::{BitReader, BitWriter};
@@ -47,6 +57,23 @@ fn lorenzo3d(dec: &[f32], dims: Dims3, x: usize, y: usize, z: usize) -> f32 {
     p
 }
 
+/// [`lorenzo3d`] for interior samples (`x > 0 && y > 0 && z > 0`): all
+/// seven neighbors exist, so the flag tests drop out. The f32 terms are
+/// accumulated in the exact order of the flagged version — f32 addition
+/// is non-associative, so any other order could change the stream.
+#[inline]
+fn lorenzo3d_interior(dec: &[f32], nx: usize, nxny: usize, i: usize) -> f32 {
+    let mut p = 0.0f32;
+    p += dec[i - 1];
+    p += dec[i - nx];
+    p += dec[i - nxny];
+    p -= dec[i - 1 - nx];
+    p -= dec[i - 1 - nxny];
+    p -= dec[i - nx - nxny];
+    p += dec[i - 1 - nx - nxny];
+    p
+}
+
 /// Compress with absolute error bound `abs_eb` (> 0), appending to `out`.
 pub fn compress(data: &[f32], dims: Dims3, abs_eb: f32, out: &mut Vec<u8>) {
     assert_eq!(data.len(), dims.len());
@@ -58,11 +85,16 @@ pub fn compress(data: &[f32], dims: Dims3, abs_eb: f32, out: &mut Vec<u8>) {
     let mut dec = vec![0f32; n];
     let half = (QUANT / 2) as i64;
     let step = 2.0 * abs_eb;
+    let nxny = dims.nx * dims.ny;
     for z in 0..dims.nz {
         for y in 0..dims.ny {
             for x in 0..dims.nx {
                 let i = (z * dims.ny + y) * dims.nx + x;
-                let pred = lorenzo3d(&dec, dims, x, y, z);
+                let pred = if x > 0 && y > 0 && z > 0 {
+                    lorenzo3d_interior(&dec, dims.nx, nxny, i)
+                } else {
+                    lorenzo3d(&dec, dims, x, y, z)
+                };
                 let diff = data[i] - pred;
                 let q = (diff / step).round() as i64 + half;
                 if (0..QUANT as i64).contains(&q) {
@@ -173,7 +205,11 @@ pub fn decompress_into(input: &[u8], out: &mut Vec<f32>) -> Result<Dims3, String
                     dec[i] = f32::from_le_bytes(input[off..off + 4].try_into().unwrap());
                     outlier_i += 1;
                 } else {
-                    let pred = lorenzo3d(dec, dims, x, y, z);
+                    let pred = if x > 0 && y > 0 && z > 0 {
+                        lorenzo3d_interior(dec, nx, nx * ny, i)
+                    } else {
+                        lorenzo3d(dec, dims, x, y, z)
+                    };
                     dec[i] = pred + (sym as i64 - half) as f32 * step;
                 }
             }
@@ -271,6 +307,33 @@ mod tests {
         for (a, b) in data.iter().zip(&back) {
             assert!((a - b).abs() <= eb, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn interior_predictor_is_bit_identical_to_flagged() {
+        prop_cases(0x5213, 20, |rng, _| {
+            let dims = Dims3 {
+                nx: 2 + rng.below(9) as usize,
+                ny: 2 + rng.below(7) as usize,
+                nz: 2 + rng.below(5) as usize,
+            };
+            let mut dec = vec![0f32; dims.len()];
+            for v in dec.iter_mut() {
+                // raw bit patterns: NaNs, infs and subnormals included
+                *v = f32::from_bits(rng.next_u32());
+            }
+            let nxny = dims.nx * dims.ny;
+            for z in 1..dims.nz {
+                for y in 1..dims.ny {
+                    for x in 1..dims.nx {
+                        let i = (z * dims.ny + y) * dims.nx + x;
+                        let a = lorenzo3d(&dec, dims, x, y, z);
+                        let b = lorenzo3d_interior(&dec, dims.nx, nxny, i);
+                        assert_eq!(a.to_bits(), b.to_bits(), "at ({x},{y},{z})");
+                    }
+                }
+            }
+        });
     }
 
     #[test]

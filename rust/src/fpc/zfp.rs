@@ -8,7 +8,17 @@
 //!
 //! Stream: `[u8 ver][f32 tol][u16 nx ny nz]` then per cell a 1-bit
 //! zero flag, biased max-exponent byte and the bit planes.
+//!
+//! Hot-loop vectorization (bit-exact, stream-identical — see
+//! `crate::simd`): the per-plane 64-step bit gather/scatter is replaced
+//! by one word-parallel 64x64 transpose per cell
+//! (`simd::bitmat::transpose64`), and on AVX2 the lifting passes run
+//! four independent lines per register (integer lane ops wrap exactly
+//! like the scalar ops) with the negabinary map vectorized alongside.
+//! The scalar loops remain the fallback and equivalence oracle.
 use super::Dims3;
+use crate::simd::bitmat::transpose64;
+use crate::simd::{self, SimdLevel};
 use crate::util::{BitReader, BitWriter};
 
 const CELL: usize = 4;
@@ -80,17 +90,320 @@ fn inv_lift(v: &mut [i64], base: usize, stride: usize) {
     v[base + 3 * stride] = w;
 }
 
+const NEGA_MASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
+
 /// i64 two's complement -> negabinary u64 (low 2*F+G bits meaningful).
 #[inline]
 fn to_negabinary(v: i64) -> u64 {
-    const MASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
-    ((v as u64).wrapping_add(MASK)) ^ MASK
+    ((v as u64).wrapping_add(NEGA_MASK)) ^ NEGA_MASK
 }
 
 #[inline]
 fn from_negabinary(u: u64) -> i64 {
-    const MASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
-    (u ^ MASK).wrapping_sub(MASK) as i64
+    (u ^ NEGA_MASK).wrapping_sub(NEGA_MASK) as i64
+}
+
+/// All 48 lifting applications of one cell: x lines, then y, then z
+/// (zfp's forward order), four independent lines per register on AVX2.
+#[inline]
+fn fwd_lift_cell(q: &mut [i64; CELL_VOL], lvl: SimdLevel) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 {
+            // SAFETY: Avx2 is only dispatched when simd::detect() saw it
+            unsafe { avx2::fwd_lift_cell(q) };
+            return;
+        }
+    }
+    let _ = lvl;
+    for z in 0..CELL {
+        for y in 0..CELL {
+            fwd_lift(q, (z * CELL + y) * CELL, 1);
+        }
+    }
+    for z in 0..CELL {
+        for x in 0..CELL {
+            fwd_lift(q, z * CELL * CELL + x, CELL);
+        }
+    }
+    for y in 0..CELL {
+        for x in 0..CELL {
+            fwd_lift(q, y * CELL + x, CELL * CELL);
+        }
+    }
+}
+
+/// Inverse of [`fwd_lift_cell`]: z lines, then y, then x.
+#[inline]
+fn inv_lift_cell(q: &mut [i64; CELL_VOL], lvl: SimdLevel) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 {
+            // SAFETY: as for fwd_lift_cell
+            unsafe { avx2::inv_lift_cell(q) };
+            return;
+        }
+    }
+    let _ = lvl;
+    for y in 0..CELL {
+        for x in 0..CELL {
+            inv_lift(q, y * CELL + x, CELL * CELL);
+        }
+    }
+    for z in 0..CELL {
+        for x in 0..CELL {
+            inv_lift(q, z * CELL * CELL + x, CELL);
+        }
+    }
+    for z in 0..CELL {
+        for y in 0..CELL {
+            inv_lift(q, (z * CELL + y) * CELL, 1);
+        }
+    }
+}
+
+/// Sequency reorder + negabinary map: `nb[i] = negabinary(q[perm[i]])`.
+#[inline]
+fn negabinary_cell(
+    q: &[i64; CELL_VOL],
+    perm: &[usize; CELL_VOL],
+    nb: &mut [u64; CELL_VOL],
+    lvl: SimdLevel,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 {
+            let mut t = [0u64; CELL_VOL];
+            // SAFETY: as for fwd_lift_cell
+            unsafe { avx2::to_negabinary_cell(q, &mut t) };
+            for i in 0..CELL_VOL {
+                nb[i] = t[perm[i]];
+            }
+            return;
+        }
+    }
+    let _ = lvl;
+    for i in 0..CELL_VOL {
+        nb[i] = to_negabinary(q[perm[i]]);
+    }
+}
+
+/// Inverse of [`negabinary_cell`]: `q[perm[i]] = from_negabinary(nb[i])`.
+#[inline]
+fn unnegabinary_cell(
+    nb: &[u64; CELL_VOL],
+    perm: &[usize; CELL_VOL],
+    q: &mut [i64; CELL_VOL],
+    lvl: SimdLevel,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 {
+            let mut t = [0i64; CELL_VOL];
+            // SAFETY: as for fwd_lift_cell
+            unsafe { avx2::from_negabinary_cell(nb, &mut t) };
+            for i in 0..CELL_VOL {
+                q[perm[i]] = t[i];
+            }
+            return;
+        }
+    }
+    let _ = lvl;
+    for i in 0..CELL_VOL {
+        q[perm[i]] = from_negabinary(nb[i]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! 4-lane i64 cell kernels. Integer lane add/sub/shift wrap exactly
+    //! like the (release-mode) scalar ops and the per-line op order is
+    //! copied verbatim from the scalar lifts, so these are bit-exact by
+    //! construction; the fuzzed tests compare them against the scalar
+    //! oracle anyway.
+    use super::{CELL_VOL, NEGA_MASK};
+    use core::arch::x86_64::*;
+
+    #[inline(always)]
+    unsafe fn ld(p: *const i64) -> __m256i {
+        _mm256_loadu_si256(p as *const __m256i)
+    }
+
+    #[inline(always)]
+    unsafe fn st(p: *mut i64, v: __m256i) {
+        _mm256_storeu_si256(p as *mut __m256i, v)
+    }
+
+    /// Arithmetic shift right by one over four i64 lanes (AVX2 has no
+    /// vpsraq): logical shift, then restore the sign bit.
+    #[inline(always)]
+    unsafe fn sra1(v: __m256i) -> __m256i {
+        let sign = _mm256_and_si256(v, _mm256_set1_epi64x(i64::MIN));
+        _mm256_or_si256(_mm256_srli_epi64::<1>(v), sign)
+    }
+
+    /// zfp forward lift of four independent lines (lane l = line l);
+    /// the op order matches `super::fwd_lift` exactly.
+    #[inline(always)]
+    unsafe fn fwd4(
+        mut x: __m256i,
+        mut y: __m256i,
+        mut z: __m256i,
+        mut w: __m256i,
+    ) -> (__m256i, __m256i, __m256i, __m256i) {
+        x = _mm256_add_epi64(x, w);
+        x = sra1(x);
+        w = _mm256_sub_epi64(w, x);
+        z = _mm256_add_epi64(z, y);
+        z = sra1(z);
+        y = _mm256_sub_epi64(y, z);
+        x = _mm256_add_epi64(x, z);
+        x = sra1(x);
+        z = _mm256_sub_epi64(z, x);
+        w = _mm256_add_epi64(w, y);
+        w = sra1(w);
+        y = _mm256_sub_epi64(y, w);
+        w = _mm256_add_epi64(w, sra1(y));
+        y = _mm256_sub_epi64(y, sra1(w));
+        (x, y, z, w)
+    }
+
+    /// Inverse lift of four independent lines, matching `super::inv_lift`.
+    #[inline(always)]
+    unsafe fn inv4(
+        mut x: __m256i,
+        mut y: __m256i,
+        mut z: __m256i,
+        mut w: __m256i,
+    ) -> (__m256i, __m256i, __m256i, __m256i) {
+        y = _mm256_add_epi64(y, sra1(w));
+        w = _mm256_sub_epi64(w, sra1(y));
+        y = _mm256_add_epi64(y, w);
+        w = _mm256_slli_epi64::<1>(w);
+        w = _mm256_sub_epi64(w, y);
+        z = _mm256_add_epi64(z, x);
+        x = _mm256_slli_epi64::<1>(x);
+        x = _mm256_sub_epi64(x, z);
+        y = _mm256_add_epi64(y, z);
+        z = _mm256_slli_epi64::<1>(z);
+        z = _mm256_sub_epi64(z, y);
+        w = _mm256_add_epi64(w, x);
+        x = _mm256_slli_epi64::<1>(x);
+        x = _mm256_sub_epi64(x, w);
+        (x, y, z, w)
+    }
+
+    /// 4x4 i64 transpose across four registers (unpack + 128-bit
+    /// permute), used to turn the contiguous x-pass into lane form.
+    #[inline(always)]
+    unsafe fn transpose4(
+        a: __m256i,
+        b: __m256i,
+        c: __m256i,
+        d: __m256i,
+    ) -> (__m256i, __m256i, __m256i, __m256i) {
+        let t0 = _mm256_unpacklo_epi64(a, b);
+        let t1 = _mm256_unpackhi_epi64(a, b);
+        let t2 = _mm256_unpacklo_epi64(c, d);
+        let t3 = _mm256_unpackhi_epi64(c, d);
+        (
+            _mm256_permute2x128_si256::<0x20>(t0, t2),
+            _mm256_permute2x128_si256::<0x20>(t1, t3),
+            _mm256_permute2x128_si256::<0x31>(t0, t2),
+            _mm256_permute2x128_si256::<0x31>(t1, t3),
+        )
+    }
+
+    /// # Safety
+    /// AVX2 must be available (dispatch-checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fwd_lift_cell(q: &mut [i64; CELL_VOL]) {
+        // x-pass: transpose each z-slice so its four y-rows become lanes
+        for s in 0..4 {
+            let p = q.as_mut_ptr().add(16 * s);
+            let (a, b, c, d) = transpose4(ld(p), ld(p.add(4)), ld(p.add(8)), ld(p.add(12)));
+            let (a, b, c, d) = fwd4(a, b, c, d);
+            let (a, b, c, d) = transpose4(a, b, c, d);
+            st(p, a);
+            st(p.add(4), b);
+            st(p.add(8), c);
+            st(p.add(12), d);
+        }
+        // y-pass: the four y-rows of a z-slice, four x-lanes at a time
+        for s in 0..4 {
+            let p = q.as_mut_ptr().add(16 * s);
+            let (a, b, c, d) = fwd4(ld(p), ld(p.add(4)), ld(p.add(8)), ld(p.add(12)));
+            st(p, a);
+            st(p.add(4), b);
+            st(p.add(8), c);
+            st(p.add(12), d);
+        }
+        // z-pass: for each y, the four z-planes' rows sit 16 apart
+        for y in 0..4 {
+            let p = q.as_mut_ptr().add(4 * y);
+            let (a, b, c, d) = fwd4(ld(p), ld(p.add(16)), ld(p.add(32)), ld(p.add(48)));
+            st(p, a);
+            st(p.add(16), b);
+            st(p.add(32), c);
+            st(p.add(48), d);
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available (dispatch-checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn inv_lift_cell(q: &mut [i64; CELL_VOL]) {
+        for y in 0..4 {
+            let p = q.as_mut_ptr().add(4 * y);
+            let (a, b, c, d) = inv4(ld(p), ld(p.add(16)), ld(p.add(32)), ld(p.add(48)));
+            st(p, a);
+            st(p.add(16), b);
+            st(p.add(32), c);
+            st(p.add(48), d);
+        }
+        for s in 0..4 {
+            let p = q.as_mut_ptr().add(16 * s);
+            let (a, b, c, d) = inv4(ld(p), ld(p.add(4)), ld(p.add(8)), ld(p.add(12)));
+            st(p, a);
+            st(p.add(4), b);
+            st(p.add(8), c);
+            st(p.add(12), d);
+        }
+        for s in 0..4 {
+            let p = q.as_mut_ptr().add(16 * s);
+            let (a, b, c, d) = transpose4(ld(p), ld(p.add(4)), ld(p.add(8)), ld(p.add(12)));
+            let (a, b, c, d) = inv4(a, b, c, d);
+            let (a, b, c, d) = transpose4(a, b, c, d);
+            st(p, a);
+            st(p.add(4), b);
+            st(p.add(8), c);
+            st(p.add(12), d);
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available (dispatch-checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn to_negabinary_cell(q: &[i64; CELL_VOL], out: &mut [u64; CELL_VOL]) {
+        let mask = _mm256_set1_epi64x(NEGA_MASK as i64);
+        for c in 0..CELL_VOL / 4 {
+            let v = ld(q.as_ptr().add(4 * c));
+            let nb = _mm256_xor_si256(_mm256_add_epi64(v, mask), mask);
+            st(out.as_mut_ptr().add(4 * c) as *mut i64, nb);
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available (dispatch-checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn from_negabinary_cell(nb: &[u64; CELL_VOL], out: &mut [i64; CELL_VOL]) {
+        let mask = _mm256_set1_epi64x(NEGA_MASK as i64);
+        for c in 0..CELL_VOL / 4 {
+            let v = ld(nb.as_ptr().add(4 * c) as *const i64);
+            let q = _mm256_sub_epi64(_mm256_xor_si256(v, mask), mask);
+            st(out.as_mut_ptr().add(4 * c), q);
+        }
+    }
 }
 
 /// Number of bit planes used per cell.
@@ -107,18 +420,16 @@ fn plane_min(tol: f32, e_max: i32) -> i32 {
     cutoff.clamp(0, PLANES)
 }
 
-/// Encode one 4³ cell of i64 coefficients (already in negabinary) from
-/// plane `PLANES-1` down to `kmin` with zfp's group-testing scheme.
-fn encode_planes(w: &mut BitWriter, data: &[u64; CELL_VOL], kmin: i32) {
+/// Encode one 4³ cell from plane `PLANES-1` down to `kmin` with zfp's
+/// group-testing scheme. `planes` is the cell's 64x64 bit matrix already
+/// transposed ([`transpose64`]): `planes[k]` bit `i` = bit `k` of
+/// negabinary coefficient `i`.
+fn encode_planes(w: &mut BitWriter, planes: &[u64; CELL_VOL], kmin: i32) {
     // `n` = significance frontier carried across planes: positions < n are
     // emitted verbatim, the rest is unary group-tested (canonical zfp).
     let mut n = 0usize;
     for k in (kmin..PLANES).rev() {
-        // gather plane k (bit i = plane bit of coefficient i)
-        let mut x: u64 = 0;
-        for (i, &d) in data.iter().enumerate() {
-            x |= ((d >> k) & 1) << i;
-        }
+        let mut x: u64 = planes[k as usize];
         // step 1: emit the first n bits verbatim, consuming them from x
         let m = n.min(CELL_VOL);
         let mut emitted = 0;
@@ -156,6 +467,9 @@ fn encode_planes(w: &mut BitWriter, data: &[u64; CELL_VOL], kmin: i32) {
     }
 }
 
+/// Decode into negabinary coefficients: planes are collected as rows of
+/// the bit matrix and un-transposed once at the end (the inverse of the
+/// [`encode_planes`] layout — [`transpose64`] is an involution).
 fn decode_planes(r: &mut BitReader, data: &mut [u64; CELL_VOL], kmin: i32) {
     data.fill(0);
     let mut n = 0usize;
@@ -188,16 +502,22 @@ fn decode_planes(r: &mut BitReader, data: &mut [u64; CELL_VOL], kmin: i32) {
             }
         }
         n = n.max(pos);
-        for i in 0..CELL_VOL {
-            data[i] |= ((x >> i) & 1) << k;
-        }
+        data[k as usize] = x;
     }
+    transpose64(data);
 }
 
 /// Compress a 3D f32 array (dims must be multiples of 4) with absolute
 /// error tolerance `tol` (0 = near-lossless max precision), appending to
 /// `out`.
 pub fn compress(data: &[f32], dims: Dims3, tol: f32, out: &mut Vec<u8>) {
+    compress_with(data, dims, tol, out, simd::level());
+}
+
+/// [`compress`] with an explicit dispatch level (tests pin the level
+/// without touching the process-wide setting; the stream is identical
+/// at every level).
+fn compress_with(data: &[f32], dims: Dims3, tol: f32, out: &mut Vec<u8>, lvl: SimdLevel) {
     assert_eq!(data.len(), dims.len());
     assert!(
         dims.nx % CELL == 0 && dims.ny % CELL == 0 && dims.nz % CELL == 0,
@@ -238,25 +558,9 @@ pub fn compress(data: &[f32], dims: Dims3, tol: f32, out: &mut Vec<u8>) {
                 for i in 0..CELL_VOL {
                     q[i] = (cell[i] * s).round() as i64;
                 }
-                // decorrelate: x lines, y lines, z lines
-                for z in 0..CELL {
-                    for y in 0..CELL {
-                        fwd_lift(&mut q, (z * CELL + y) * CELL, 1);
-                    }
-                }
-                for z in 0..CELL {
-                    for x in 0..CELL {
-                        fwd_lift(&mut q, z * CELL * CELL + x, CELL);
-                    }
-                }
-                for y in 0..CELL {
-                    for x in 0..CELL {
-                        fwd_lift(&mut q, y * CELL + x, CELL * CELL);
-                    }
-                }
-                for i in 0..CELL_VOL {
-                    nb[i] = to_negabinary(q[perm[i]]);
-                }
+                fwd_lift_cell(&mut q, lvl);
+                negabinary_cell(&q, &perm, &mut nb, lvl);
+                transpose64(&mut nb);
                 encode_planes(&mut w, &nb, plane_min(tol, e_max));
             }
         }
@@ -274,6 +578,10 @@ pub fn decompress(input: &[u8]) -> Result<(Vec<f32>, Dims3), String> {
 /// Decompress into a caller-owned buffer (cleared and resized), so
 /// per-block decode loops reuse one allocation. Returns the dims.
 pub fn decompress_into(input: &[u8], out: &mut Vec<f32>) -> Result<Dims3, String> {
+    decompress_into_with(input, out, simd::level())
+}
+
+fn decompress_into_with(input: &[u8], out: &mut Vec<f32>, lvl: SimdLevel) -> Result<Dims3, String> {
     if input.len() < 11 {
         return Err("zfp stream too short".into());
     }
@@ -304,24 +612,8 @@ pub fn decompress_into(input: &[u8], out: &mut Vec<f32>) -> Result<Dims3, String
                 }
                 let e_max = r.read_bits(8) as i32 - 128;
                 decode_planes(&mut r, &mut nb, plane_min(tol, e_max));
-                for i in 0..CELL_VOL {
-                    q[perm[i]] = from_negabinary(nb[i]);
-                }
-                for y in 0..CELL {
-                    for x in 0..CELL {
-                        inv_lift(&mut q, y * CELL + x, CELL * CELL);
-                    }
-                }
-                for z in 0..CELL {
-                    for x in 0..CELL {
-                        inv_lift(&mut q, z * CELL * CELL + x, CELL);
-                    }
-                }
-                for z in 0..CELL {
-                    for y in 0..CELL {
-                        inv_lift(&mut q, (z * CELL + y) * CELL, 1);
-                    }
-                }
+                unnegabinary_cell(&nb, &perm, &mut q, lvl);
+                inv_lift_cell(&mut q, lvl);
                 let s = ((e_max - FRAC) as f32).exp2();
                 for z in 0..CELL {
                     for y in 0..CELL {
@@ -435,6 +727,62 @@ mod tests {
     #[test]
     fn truncated_stream_errors() {
         assert!(decompress(&[1, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn cell_kernels_match_scalar_oracle() {
+        let lvl = simd::detect();
+        if lvl == SimdLevel::Scalar {
+            return; // nothing to compare on this host
+        }
+        let perm = sequency_perm();
+        prop_cases(0x5AFE, 40, |rng, _| {
+            let mut q = [0i64; CELL_VOL];
+            for v in q.iter_mut() {
+                // bounded to +-2^31 so the transform's guarded growth
+                // cannot overflow the debug-mode scalar lifts
+                *v = rng.next_u32() as i64 - (1i64 << 31);
+            }
+            let (mut a, mut b) = (q, q);
+            fwd_lift_cell(&mut a, SimdLevel::Scalar);
+            fwd_lift_cell(&mut b, lvl);
+            assert_eq!(a, b, "fwd_lift_cell diverges under {lvl:?}");
+            let (mut na, mut nv) = ([0u64; CELL_VOL], [0u64; CELL_VOL]);
+            negabinary_cell(&a, &perm, &mut na, SimdLevel::Scalar);
+            negabinary_cell(&b, &perm, &mut nv, lvl);
+            assert_eq!(na, nv, "negabinary_cell diverges under {lvl:?}");
+            let (mut qa, mut qb) = ([0i64; CELL_VOL], [0i64; CELL_VOL]);
+            unnegabinary_cell(&na, &perm, &mut qa, SimdLevel::Scalar);
+            unnegabinary_cell(&nv, &perm, &mut qb, lvl);
+            assert_eq!(qa, qb, "unnegabinary_cell diverges under {lvl:?}");
+            inv_lift_cell(&mut qa, SimdLevel::Scalar);
+            inv_lift_cell(&mut qb, lvl);
+            assert_eq!(qa, qb, "inv_lift_cell diverges under {lvl:?}");
+        });
+    }
+
+    #[test]
+    fn streams_identical_across_dispatch() {
+        // whole-codec bit-identity: scalar and vector paths must produce
+        // the same bytes and decode each other's streams to the same bits
+        let lvl = simd::detect();
+        prop_cases(0xD15A, 6, |rng, _| {
+            let dims = Dims3::cube(16);
+            let mut data = vec![0f32; dims.len()];
+            rng.fill_f32(&mut data, -50.0, 50.0);
+            for v in data.iter_mut().take(CELL_VOL) {
+                *v = 0.0; // keep an all-zero cell in the mix
+            }
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            compress_with(&data, dims, 1e-3, &mut a, SimdLevel::Scalar);
+            compress_with(&data, dims, 1e-3, &mut b, lvl);
+            assert_eq!(a, b, "stream differs between Scalar and {lvl:?}");
+            let (mut da, mut db) = (Vec::new(), Vec::new());
+            decompress_into_with(&a, &mut da, lvl).unwrap();
+            decompress_into_with(&b, &mut db, SimdLevel::Scalar).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&da), bits(&db), "decode differs across dispatch");
+        });
     }
 
     #[test]

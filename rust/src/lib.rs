@@ -17,5 +17,6 @@ pub mod runtime;
 pub mod scaling;
 pub mod service;
 pub mod sim;
+pub mod simd;
 pub mod util;
 pub mod wavelet;

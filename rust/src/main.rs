@@ -578,6 +578,7 @@ fn cmd_info(args: &Args) -> Result<()> {
             ds.resident_bytes(),
             ds.archive_bytes()
         );
+        println!("host simd   : {} (CZB_SIMD to override)", cubismz::simd::level().name());
         return Ok(());
     }
     let bytes = std::fs::read(&input)?;
@@ -599,6 +600,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     let raw = f.nx as u64 * f.ny as u64 * f.nz as u64 * 4;
     println!("size        : {} bytes (header {hdr})", bytes.len());
     println!("CR          : {:.2}", raw as f64 / (payload + hdr as u64) as f64);
+    println!("host simd   : {} (CZB_SIMD to override)", cubismz::simd::level().name());
     Ok(())
 }
 
@@ -706,6 +708,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "off".to_string()
         },
     );
+    println!("czb serve: simd dispatch {} (CZB_SIMD to override)", cubismz::simd::level().name());
     server.run()?;
     println!("czb serve: drained");
     Ok(())

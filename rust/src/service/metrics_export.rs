@@ -15,6 +15,9 @@ const QUANTILES: [(&str, f64); 3] = [("0.5", 0.5), ("0.99", 0.99), ("1", 1.0)];
 /// cannot fail, and every metric read is a relaxed atomic load.
 pub fn render(r: &Registry) -> String {
     let mut out = String::with_capacity(4096);
+    let _ = writeln!(out, "# HELP czb_build_info Process build/dispatch facts as labels.");
+    let _ = writeln!(out, "# TYPE czb_build_info gauge");
+    let _ = writeln!(out, "czb_build_info{{simd=\"{}\"}} 1", crate::simd::level().name());
     let _ = writeln!(out, "# HELP czb_requests_total Requests received, by operation.");
     let _ = writeln!(out, "# TYPE czb_requests_total counter");
     for (i, op) in OPS.iter().enumerate() {
@@ -175,6 +178,8 @@ mod tests {
         assert_eq!(sample(&text, "czb_tenant_requests_total{tenant=\"sim-a\"}"), Some(1.0));
         assert_eq!(sample(&text, "czb_tenant_throttled_total{tenant=\"sim-a\"}"), Some(1.0));
         assert_eq!(sample(&text, "czb_engine_calls_total{dir=\"compress\"}"), Some(1.0));
+        let simd = format!("czb_build_info{{simd=\"{}\"}}", crate::simd::level().name());
+        assert_eq!(sample(&text, &simd), Some(1.0));
     }
 
     #[test]

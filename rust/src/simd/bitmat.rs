@@ -1,0 +1,92 @@
+//! Word-parallel 64x64 bit-matrix transpose.
+//!
+//! The zfp cell coder views a 4^3 block as 64 values x 64 bit planes;
+//! encoding gathers one bit from every value per plane (64 dependent
+//! shift/mask ops per plane in the naive form). Transposing the whole
+//! 64x64 bit matrix first — six rounds of masked delta-swaps, the same
+//! technique `codec::shuffle::transpose8` uses at byte width — makes
+//! every plane a plain word read. The orientation is LSB-first:
+//! `out[r]` bit `c` == `in[c]` bit `r`, exactly the plane layout
+//! `fpc::zfp` encodes, and the transform is an involution (decode runs
+//! the same function).
+
+/// Transpose a 64x64 bit matrix in place (LSB-first orientation:
+/// after the call, word `r` holds old bit `r` of every word, word
+/// index == bit index).
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m: u64 = 0x0000_0000_ffff_ffff;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn naive(a: &[u64; 64]) -> [u64; 64] {
+        let mut out = [0u64; 64];
+        for (r, o) in out.iter_mut().enumerate() {
+            for c in 0..64 {
+                *o |= ((a[c] >> r) & 1) << c;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_bit_gather() {
+        let mut rng = Pcg32::new(0xb17);
+        for _ in 0..200 {
+            let mut a = [0u64; 64];
+            for v in a.iter_mut() {
+                *v = rng.next_u64();
+            }
+            let want = naive(&a);
+            let mut got = a;
+            transpose64(&mut got);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn single_bit_orientation() {
+        // a lone bit r in word c must land as bit c of word r
+        for c in [0usize, 1, 7, 31, 32, 63] {
+            for r in [0usize, 1, 8, 30, 33, 63] {
+                let mut a = [0u64; 64];
+                a[c] = 1u64 << r;
+                transpose64(&mut a);
+                for (w, &v) in a.iter().enumerate() {
+                    let want = if w == r { 1u64 << c } else { 0 };
+                    assert_eq!(v, want, "bit ({r},{c}) landed wrong");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn is_an_involution() {
+        let mut rng = Pcg32::new(0x1e5);
+        for _ in 0..50 {
+            let mut a = [0u64; 64];
+            for v in a.iter_mut() {
+                *v = rng.next_u64();
+            }
+            let orig = a;
+            transpose64(&mut a);
+            transpose64(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+}

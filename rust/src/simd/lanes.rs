@@ -1,0 +1,224 @@
+//! Lane-width abstraction for the f32 lifting kernels.
+//!
+//! `F32Lanes` models "one value per independent wavelet line": the
+//! generic 1D lifting code in `wavelet::lift1d` is written once over
+//! this trait and instantiated at `f32` (the scalar oracle — `LANES ==
+//! 1`) and at the arch vector types. Only plain IEEE add/sub/mul are
+//! exposed, so a kernel written against the trait *cannot* introduce
+//! FMA or reassociation — the bit-exactness contract is enforced by
+//! construction (see `crate::simd`).
+
+use std::ops::{Add, Mul, Sub};
+
+/// A pack of `LANES` f32 values supporting exactly the operations the
+/// lifting schemes need: splat, unaligned load/store, `+`, `-`, `*`.
+pub trait F32Lanes: Copy + Add<Output = Self> + Sub<Output = Self> + Mul<Output = Self> {
+    const LANES: usize;
+
+    fn splat(v: f32) -> Self;
+
+    /// # Safety
+    /// `p` must be valid for reads of `LANES` consecutive `f32`s.
+    unsafe fn load(p: *const f32) -> Self;
+
+    /// # Safety
+    /// `p` must be valid for writes of `LANES` consecutive `f32`s.
+    unsafe fn store(self, p: *mut f32);
+}
+
+impl F32Lanes for f32 {
+    const LANES: usize = 1;
+
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        v
+    }
+
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        *p
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        *p = self;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::F32x8;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::F32Lanes;
+    use core::arch::x86_64::*;
+    use std::ops::{Add, Mul, Sub};
+
+    /// Eight independent lines, one per AVX lane. The wrapped ops are
+    /// `vaddps`/`vsubps`/`vmulps` — lanewise IEEE single ops, bitwise
+    /// equal to their scalar counterparts for every input pattern.
+    #[derive(Clone, Copy)]
+    pub struct F32x8(pub(crate) __m256);
+
+    impl Add for F32x8 {
+        type Output = Self;
+        #[inline(always)]
+        fn add(self, rhs: Self) -> Self {
+            // SAFETY: only constructed on the AVX2 dispatch path
+            F32x8(unsafe { _mm256_add_ps(self.0, rhs.0) })
+        }
+    }
+
+    impl Sub for F32x8 {
+        type Output = Self;
+        #[inline(always)]
+        fn sub(self, rhs: Self) -> Self {
+            // SAFETY: as for Add
+            F32x8(unsafe { _mm256_sub_ps(self.0, rhs.0) })
+        }
+    }
+
+    impl Mul for F32x8 {
+        type Output = Self;
+        #[inline(always)]
+        fn mul(self, rhs: Self) -> Self {
+            // SAFETY: as for Add
+            F32x8(unsafe { _mm256_mul_ps(self.0, rhs.0) })
+        }
+    }
+
+    impl F32Lanes for F32x8 {
+        const LANES: usize = 8;
+
+        #[inline(always)]
+        fn splat(v: f32) -> Self {
+            // SAFETY: as for Add
+            F32x8(unsafe { _mm256_set1_ps(v) })
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x8(_mm256_loadu_ps(p))
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub use arm::F32x4;
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::F32Lanes;
+    use core::arch::aarch64::*;
+    use std::ops::{Add, Mul, Sub};
+
+    /// Four independent lines, one per NEON lane. NEON is baseline on
+    /// aarch64, so no runtime detection guards construction.
+    // newer toolchains make baseline-feature intrinsics safe, turning
+    // these unsafe blocks redundant — keep them for older compilers
+    #[allow(unused_unsafe)]
+    #[derive(Clone, Copy)]
+    pub struct F32x4(pub(crate) float32x4_t);
+
+    #[allow(unused_unsafe)]
+    impl Add for F32x4 {
+        type Output = Self;
+        #[inline(always)]
+        fn add(self, rhs: Self) -> Self {
+            // SAFETY: NEON is baseline on aarch64
+            F32x4(unsafe { vaddq_f32(self.0, rhs.0) })
+        }
+    }
+
+    #[allow(unused_unsafe)]
+    impl Sub for F32x4 {
+        type Output = Self;
+        #[inline(always)]
+        fn sub(self, rhs: Self) -> Self {
+            // SAFETY: NEON is baseline on aarch64
+            F32x4(unsafe { vsubq_f32(self.0, rhs.0) })
+        }
+    }
+
+    #[allow(unused_unsafe)]
+    impl Mul for F32x4 {
+        type Output = Self;
+        #[inline(always)]
+        fn mul(self, rhs: Self) -> Self {
+            // SAFETY: NEON is baseline on aarch64
+            F32x4(unsafe { vmulq_f32(self.0, rhs.0) })
+        }
+    }
+
+    #[allow(unused_unsafe)]
+    impl F32Lanes for F32x4 {
+        const LANES: usize = 4;
+
+        #[inline(always)]
+        fn splat(v: f32) -> Self {
+            // SAFETY: NEON is baseline on aarch64
+            F32x4(unsafe { vdupq_n_f32(v) })
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            F32x4(vld1q_f32(p))
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            vst1q_f32(p, self.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_cases;
+
+    #[test]
+    fn scalar_lanes_are_the_identity_wrapper() {
+        let a = <f32 as F32Lanes>::splat(1.5);
+        let b = <f32 as F32Lanes>::splat(-2.0);
+        assert_eq!((a + b * a).to_bits(), (1.5f32 + (-2.0f32) * 1.5f32).to_bits());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx_lanes_match_scalar_ops_bit_for_bit() {
+        if crate::simd::detect() != crate::simd::SimdLevel::Avx2 {
+            return; // nothing to check on this host
+        }
+        prop_cases(0x1a9e5, 50, |rng, _| {
+            let mut a = [0f32; 8];
+            let mut b = [0f32; 8];
+            for i in 0..8 {
+                // raw bit patterns: NaNs, infs, subnormals included
+                a[i] = f32::from_bits(rng.next_u32());
+                b[i] = f32::from_bits(rng.next_u32());
+            }
+            let mut add = [0f32; 8];
+            let mut sub = [0f32; 8];
+            let mut mul = [0f32; 8];
+            // SAFETY: detect() confirmed AVX2 above
+            unsafe {
+                let va = F32x8::load(a.as_ptr());
+                let vb = F32x8::load(b.as_ptr());
+                (va + vb).store(add.as_mut_ptr());
+                (va - vb).store(sub.as_mut_ptr());
+                (va * vb).store(mul.as_mut_ptr());
+            }
+            for i in 0..8 {
+                assert_eq!(add[i].to_bits(), (a[i] + b[i]).to_bits());
+                assert_eq!(sub[i].to_bits(), (a[i] - b[i]).to_bits());
+                assert_eq!(mul[i].to_bits(), (a[i] * b[i]).to_bits());
+            }
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! Runtime-dispatched SIMD kernels for the stage-1 hot loops.
+//!
+//! # Dispatch model
+//!
+//! One process-wide dispatch level is resolved lazily on first use
+//! ([`level`]) and cached in an atomic: the best the host supports
+//! (`is_x86_feature_detected!("avx2")` on x86_64; NEON is baseline on
+//! aarch64), clamped by the `CZB_SIMD` environment variable
+//! (`auto|avx2|neon|scalar`). Requesting a level the host cannot run
+//! falls back to scalar — it never faults ([`resolve`] is pure and
+//! unit-tested for exactly this). Hot paths read the level once per
+//! call (or per block batch) and branch to an arch-gated kernel; every
+//! `#[target_feature]` kernel is only reachable through that check, so
+//! the unsafe contract is "dispatch said the feature exists".
+//!
+//! The active level is observable: `czb info` prints a `host simd`
+//! line, `czb serve` logs it at startup, and the metrics export
+//! carries `czb_build_info{simd="..."}`.
+//!
+//! # Bit-exactness contract
+//!
+//! Vector kernels are required to be **bit-identical** to the scalar
+//! kernels, which stay in the tree verbatim as the equivalence oracle
+//! (and as the fallback). For the integer kernels (zfp lifting,
+//! negabinary, shuffles, fpzip residuals) this is automatic: lane ops
+//! wrap exactly like release-mode scalar ops. For the f32 wavelet
+//! lifting it is inherited from the `wavelet::lift1d` contract: plain
+//! IEEE-754 single ops in a fixed order, **no FMA** (`mul_add` would
+//! change results and break parity with the Pallas kernel) and no
+//! reassociation. The vector formulation therefore never vectorizes
+//! *within* a line — it runs the same op sequence over `LANES`
+//! independent lines at once (one line per lane), so each element sees
+//! exactly the scalar op tree. `vaddps`/`vmulps` per lane are the same
+//! IEEE operations as scalar `addss`/`mulss`, including NaN and
+//! subnormal behavior, so equality holds for every input bit pattern
+//! (the property tests throw random NaN/subnormal bits at it).
+//!
+//! # Adding a vector kernel
+//!
+//! 1. Keep (or factor out) the scalar loop — it is the oracle and the
+//!    fallback, not dead code.
+//! 2. Write the arch kernel in a `#[cfg(target_arch = ...)]` block,
+//!    `#[target_feature(enable = "avx2")]` on x86_64, with a
+//!    `# Safety` note tying it to the dispatch check. Prefer a
+//!    lane-per-independent-item layout over intra-item shuffling when
+//!    f32 order matters.
+//! 3. Dispatch on a [`SimdLevel`] parameter threaded from the public
+//!    entry point (taking `level()` there), so tests can force both
+//!    paths without touching the process-wide state.
+//! 4. Add a fuzzed equivalence test (random lengths for tails, random
+//!    bit patterns for floats) comparing against the scalar oracle,
+//!    plus — if it feeds an archive format — a cross-level
+//!    byte-identity test on whole streams.
+//!
+//! Follow-ups tracked in ROADMAP.md: AVX-512 (wider bit-plane and
+//! lift kernels), a portable `std::simd` backend once stable, and an
+//! 8x8 in-register transpose to vectorize the contiguous x-pass too.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub mod bitmat;
+pub mod lanes;
+
+/// The dispatch level for the process: which kernel family stage-1
+/// hot loops run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels (the equivalence oracle).
+    Scalar,
+    /// 256-bit AVX2 kernels (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON kernels (aarch64 baseline).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            SimdLevel::Scalar => 0,
+            SimdLevel::Avx2 => 1,
+            SimdLevel::Neon => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> SimdLevel {
+        match v {
+            1 => SimdLevel::Avx2,
+            2 => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// What the host can actually run, ignoring any override.
+pub fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdLevel::Scalar
+}
+
+/// Clamp a `CZB_SIMD` request against what the host supports. A level
+/// the host cannot run degrades to scalar — never a fault; anything
+/// unrecognized (including "auto") means "best available".
+pub fn resolve(requested: &str, detected: SimdLevel) -> SimdLevel {
+    match requested.trim().to_ascii_lowercase().as_str() {
+        "scalar" | "off" | "none" => SimdLevel::Scalar,
+        "avx2" => {
+            if detected == SimdLevel::Avx2 {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+        "neon" => {
+            if detected == SimdLevel::Neon {
+                SimdLevel::Neon
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+        _ => detected,
+    }
+}
+
+const LEVEL_UNSET: u8 = 0xff;
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// The process-wide dispatch level: `detect()` clamped by `CZB_SIMD`,
+/// resolved once and cached.
+pub fn level() -> SimdLevel {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != LEVEL_UNSET {
+        return SimdLevel::from_u8(v);
+    }
+    let l = match std::env::var("CZB_SIMD") {
+        Ok(req) => resolve(&req, detect()),
+        Err(_) => detect(),
+    };
+    LEVEL.store(l.to_u8(), Ordering::Relaxed);
+    l
+}
+
+/// Force the process-wide level (benches and the whole-archive
+/// identity tests; kernel-level tests should pass a level explicitly
+/// instead). Returns the previous level so callers can restore it.
+pub fn override_level(l: SimdLevel) -> SimdLevel {
+    let prev = level();
+    LEVEL.store(l.to_u8(), Ordering::Relaxed);
+    prev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_clamps_unavailable_levels_to_scalar() {
+        // the "CZB_SIMD=avx2 on a non-AVX2 host" contract: degrade, never fault
+        assert_eq!(resolve("avx2", SimdLevel::Scalar), SimdLevel::Scalar);
+        assert_eq!(resolve("neon", SimdLevel::Scalar), SimdLevel::Scalar);
+        assert_eq!(resolve("avx2", SimdLevel::Neon), SimdLevel::Scalar);
+        assert_eq!(resolve("neon", SimdLevel::Avx2), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn resolve_honors_requests_the_host_supports() {
+        assert_eq!(resolve("avx2", SimdLevel::Avx2), SimdLevel::Avx2);
+        assert_eq!(resolve("neon", SimdLevel::Neon), SimdLevel::Neon);
+        assert_eq!(resolve("scalar", SimdLevel::Avx2), SimdLevel::Scalar);
+        assert_eq!(resolve(" SCALAR ", SimdLevel::Avx2), SimdLevel::Scalar);
+        assert_eq!(resolve("off", SimdLevel::Neon), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn resolve_treats_auto_and_garbage_as_best_available() {
+        for req in ["auto", "", "bogus", "AVX512"] {
+            assert_eq!(resolve(req, SimdLevel::Avx2), SimdLevel::Avx2);
+            assert_eq!(resolve(req, SimdLevel::Scalar), SimdLevel::Scalar);
+        }
+    }
+
+    #[test]
+    fn level_roundtrips_through_u8() {
+        for l in [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Neon] {
+            assert_eq!(SimdLevel::from_u8(l.to_u8()), l);
+        }
+    }
+}

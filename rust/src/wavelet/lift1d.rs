@@ -4,7 +4,17 @@
 //! into the input slice; inverse restores the interleaved samples.
 //! All arithmetic is plain f32 (no FMA) so the Pallas kernel, which lowers
 //! to elementwise HLO under interpret=True, produces matching results.
+//!
+//! The kernels are written once over [`F32Lanes`] and instantiated at
+//! `f32` (the public scalar entry points — and the equivalence oracle
+//! for the vector path) and at the arch vector types, where each lane
+//! carries one *independent* line (`wavelet::transform3d` tiles the
+//! strided y/z passes that way). Because the trait exposes only plain
+//! `+`/`-`/`*`, the no-FMA/fixed-order contract above holds for every
+//! instantiation: per element, the vector path executes the exact
+//! scalar op tree and is bit-identical to it.
 use super::WaveletKind;
+use crate::simd::lanes::F32Lanes;
 
 #[inline(always)]
 fn clamp(i: isize, h: usize) -> usize {
@@ -16,28 +26,31 @@ fn clamp(i: isize, h: usize) -> usize {
 /// boundaries one-sided cubic Lagrange stencils keep full order ("wavelets
 /// on the interval", Cohen–Daubechies–Vial-style boundary adaptation).
 #[inline(always)]
-fn pred4(e: &[f32], k: usize, h: usize) -> f32 {
+fn pred4<V: F32Lanes>(e: &[V], k: usize, h: usize) -> V {
     if h == 2 {
         // only two evens: linear predict / extrapolate
         return if k == 0 {
-            0.5 * (e[0] + e[1])
+            V::splat(0.5) * (e[0] + e[1])
         } else {
-            1.5 * e[1] - 0.5 * e[0]
+            V::splat(1.5) * e[1] - V::splat(0.5) * e[0]
         };
     }
     if k == 0 {
         // cubic through e[0..4] evaluated at sample position 1
-        0.3125 * e[0] + 0.9375 * e[1] - 0.3125 * e[2] + 0.0625 * e[3]
+        V::splat(0.3125) * e[0] + V::splat(0.9375) * e[1] - V::splat(0.3125) * e[2]
+            + V::splat(0.0625) * e[3]
     } else if k + 2 == h {
         // cubic through e[h-4..h] evaluated at position 5
-        0.0625 * e[h - 4] - 0.3125 * e[h - 3] + 0.9375 * e[h - 2] + 0.3125 * e[h - 1]
+        V::splat(0.0625) * e[h - 4] - V::splat(0.3125) * e[h - 3] + V::splat(0.9375) * e[h - 2]
+            + V::splat(0.3125) * e[h - 1]
     } else if k + 1 == h {
         // linear extrapolation beyond the last even sample: higher-order
         // one-sided stencils here have |w|-sum ~6 and amplify fp noise
         // multiplicatively across passes/levels (numerically unstable)
-        1.5 * e[h - 1] - 0.5 * e[h - 2]
+        V::splat(1.5) * e[h - 1] - V::splat(0.5) * e[h - 2]
     } else {
-        -0.0625 * e[k - 1] + 0.5625 * e[k] + 0.5625 * e[k + 1] - 0.0625 * e[k + 2]
+        V::splat(-0.0625) * e[k - 1] + V::splat(0.5625) * e[k] + V::splat(0.5625) * e[k + 1]
+            - V::splat(0.0625) * e[k + 2]
     }
 }
 
@@ -45,21 +58,23 @@ fn pred4(e: &[f32], k: usize, h: usize) -> f32 {
 /// Interior: (s[k+1]-s[k-1])/4 (annihilates quadratics); boundaries use
 /// one-sided quadratic stencils of the same order.
 #[inline(always)]
-fn pred_avg3(s: &[f32], k: usize, h: usize) -> f32 {
+fn pred_avg3<V: F32Lanes>(s: &[V], k: usize, h: usize) -> V {
     if h == 2 {
-        return 0.5 * (s[1] - s[0]);
+        return V::splat(0.5) * (s[1] - s[0]);
     }
     if k == 0 {
-        -0.75 * s[0] + 1.0 * s[1] - 0.25 * s[2]
+        V::splat(-0.75) * s[0] + V::splat(1.0) * s[1] - V::splat(0.25) * s[2]
     } else if k + 1 == h {
-        0.75 * s[h - 1] - 1.0 * s[h - 2] + 0.25 * s[h - 3]
+        V::splat(0.75) * s[h - 1] - V::splat(1.0) * s[h - 2] + V::splat(0.25) * s[h - 3]
     } else {
-        0.25 * (s[k + 1] - s[k - 1])
+        V::splat(0.25) * (s[k + 1] - s[k - 1])
     }
 }
 
-/// Forward 1D lifting step. `line.len()` = m (even, >= 4); `tmp` >= m.
-pub fn forward_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
+/// Forward 1D lifting step over `V::LANES` independent lines.
+/// `line.len()` = m (even, >= 4); `tmp` >= m.
+#[inline(always)]
+pub(crate) fn forward_1d_v<V: F32Lanes>(kind: WaveletKind, line: &mut [V], tmp: &mut [V]) {
     let m = line.len();
     debug_assert!(m >= 4 && m % 2 == 0);
     let h = m / 2;
@@ -83,12 +98,12 @@ pub fn forward_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
             }
             for k in 0..h {
                 let dm = d[clamp(k as isize - 1, h)];
-                s[k] += 0.25 * (dm + d[k]);
+                s[k] = s[k] + V::splat(0.25) * (dm + d[k]);
             }
         }
         WaveletKind::Avg3 => {
             for k in 0..h {
-                s[k] = 0.5 * (line[2 * k] + line[2 * k + 1]);
+                s[k] = V::splat(0.5) * (line[2 * k] + line[2 * k + 1]);
             }
             for k in 0..h {
                 d[k] = (line[2 * k + 1] - line[2 * k]) - pred_avg3(s, k, h);
@@ -98,8 +113,10 @@ pub fn forward_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
     line[..m].copy_from_slice(&tmp[..m]);
 }
 
-/// Inverse 1D lifting step: `line` holds `[s | d]`, restores samples.
-pub fn inverse_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
+/// Inverse 1D lifting step over `V::LANES` independent lines: `line`
+/// holds `[s | d]`, restores samples.
+#[inline(always)]
+pub(crate) fn inverse_1d_v<V: F32Lanes>(kind: WaveletKind, line: &mut [V], tmp: &mut [V]) {
     let m = line.len();
     debug_assert!(m >= 4 && m % 2 == 0);
     let h = m / 2;
@@ -119,7 +136,7 @@ pub fn inverse_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
                 let (s, d) = line[..m].split_at(h);
                 for k in 0..h {
                     let dm = d[clamp(k as isize - 1, h)];
-                    tmp[k] = s[k] - 0.25 * (dm + d[k]);
+                    tmp[k] = s[k] - V::splat(0.25) * (dm + d[k]);
                 }
             }
             for k in 0..h {
@@ -133,12 +150,22 @@ pub fn inverse_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
             let (s, d) = line[..m].split_at(h);
             for k in 0..h {
                 let diff = d[k] + pred_avg3(s, k, h);
-                tmp[2 * k] = s[k] - 0.5 * diff;
-                tmp[2 * k + 1] = s[k] + 0.5 * diff;
+                tmp[2 * k] = s[k] - V::splat(0.5) * diff;
+                tmp[2 * k + 1] = s[k] + V::splat(0.5) * diff;
             }
         }
     }
     line[..m].copy_from_slice(&tmp[..m]);
+}
+
+/// Forward 1D lifting step. `line.len()` = m (even, >= 4); `tmp` >= m.
+pub fn forward_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
+    forward_1d_v::<f32>(kind, line, tmp);
+}
+
+/// Inverse 1D lifting step: `line` holds `[s | d]`, restores samples.
+pub fn inverse_1d(kind: WaveletKind, line: &mut [f32], tmp: &mut [f32]) {
+    inverse_1d_v::<f32>(kind, line, tmp);
 }
 
 #[cfg(test)]
@@ -267,5 +294,62 @@ mod tests {
                 assert_eq!(line[k], 0.0, "{kind:?}");
             }
         }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn vector_lift_is_bit_identical_to_scalar_per_lane() {
+        // direct kernel-level oracle check: 8 lanes of random bit
+        // patterns (NaN/subnormals included) through the generic kernel
+        // must equal 8 scalar runs, bit for bit
+        use crate::simd::lanes::F32x8;
+        if crate::simd::detect() != crate::simd::SimdLevel::Avx2 {
+            return;
+        }
+        prop_cases(0x1f32, 30, |rng, _| {
+            let m = [4usize, 8, 16, 32][rng.below(4) as usize];
+            let mut lanes = vec![[0f32; 8]; m];
+            for row in lanes.iter_mut() {
+                for v in row.iter_mut() {
+                    *v = if rng.below(6) == 0 {
+                        f32::from_bits(rng.next_u32())
+                    } else {
+                        rng.next_f32() * 200.0 - 100.0
+                    };
+                }
+            }
+            for kind in WaveletKind::ALL {
+                for fwd in [true, false] {
+                    // SAFETY: detect() confirmed AVX2 above
+                    let mut vline: Vec<F32x8> =
+                        lanes.iter().map(|r| unsafe { F32x8::load(r.as_ptr()) }).collect();
+                    let mut vtmp = vec![F32x8::splat(0.0); m];
+                    if fwd {
+                        forward_1d_v(kind, &mut vline, &mut vtmp);
+                    } else {
+                        inverse_1d_v(kind, &mut vline, &mut vtmp);
+                    }
+                    for lane in 0..8 {
+                        let mut sline: Vec<f32> = lanes.iter().map(|r| r[lane]).collect();
+                        let mut stmp = vec![0f32; m];
+                        if fwd {
+                            forward_1d(kind, &mut sline, &mut stmp);
+                        } else {
+                            inverse_1d(kind, &mut sline, &mut stmp);
+                        }
+                        for k in 0..m {
+                            let mut out = [0f32; 8];
+                            // SAFETY: out is 8 f32s
+                            unsafe { vline[k].store(out.as_mut_ptr()) };
+                            assert_eq!(
+                                out[lane].to_bits(),
+                                sline[k].to_bits(),
+                                "{kind:?} fwd={fwd} m={m} k={k} lane={lane}"
+                            );
+                        }
+                    }
+                }
+            }
+        });
     }
 }

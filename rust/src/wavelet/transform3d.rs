@@ -5,7 +5,12 @@
 //! coefficients into the first m/2 entries and details into the last m/2.
 //! The Pallas kernel implements the identical schedule.
 use super::lift1d::{forward_1d, inverse_1d};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use super::lift1d::{forward_1d_v, inverse_1d_v};
 use super::WaveletKind;
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::simd::lanes::F32Lanes;
+use crate::simd::{self, SimdLevel};
 
 /// Number of levels taken by default: halve until the coarse cube is 4³.
 pub fn max_levels(bs: usize) -> usize {
@@ -100,27 +105,171 @@ fn for_each_line(
     }
 }
 
+/// Largest cube side the stack tiles in [`tiled_axis_pass`] serve.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const MAX_TILE_SIDE: usize = 128;
+
+/// Strided y/z lifting pass vectorized across `V::LANES` adjacent-x
+/// lines: lane `l` of tile element `e` is `data[base + l + e*stride]`,
+/// so each lane carries one independent line and the per-element op
+/// sequence is exactly the scalar `forward_1d`/`inverse_1d` — output
+/// is bit-identical to the scalar gather/scatter walk (no FMA, no
+/// reassociation; see `crate::simd`). Replaces m one-float strided
+/// gathers per line with m/LANES vector tiles per LANES lines.
+///
+/// # Safety
+/// Caller guarantees the arch feature behind `V` is available on this
+/// host, `data` is a full bs³ block, `axis` is 1 or 2, and
+/// `V::LANES <= m <= MAX_TILE_SIDE` with m a power of two (so
+/// `V::LANES` divides m). Bounds: the largest index touched is
+/// `(m-1)*(1 + stride + s2) <= bs³ - 1`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn tiled_axis_pass<V: F32Lanes>(
+    kind: WaveletKind,
+    fwd: bool,
+    data: &mut [f32],
+    bs: usize,
+    m: usize,
+    axis: usize,
+) {
+    debug_assert!(axis == 1 || axis == 2);
+    debug_assert!(m >= V::LANES && m % V::LANES == 0 && m <= MAX_TILE_SIDE);
+    debug_assert_eq!(data.len(), bs * bs * bs);
+    let (stride, s2) = if axis == 1 { (bs, bs * bs) } else { (bs * bs, bs) };
+    let mut line = [V::splat(0.0); MAX_TILE_SIDE];
+    let mut tmp = [V::splat(0.0); MAX_TILE_SIDE];
+    for j in 0..m {
+        let mut x = 0;
+        while x < m {
+            let base = x + j * s2;
+            for (e, v) in line[..m].iter_mut().enumerate() {
+                *v = V::load(data.as_ptr().add(base + e * stride));
+            }
+            if fwd {
+                forward_1d_v(kind, &mut line[..m], &mut tmp[..m]);
+            } else {
+                inverse_1d_v(kind, &mut line[..m], &mut tmp[..m]);
+            }
+            for (e, v) in line[..m].iter().enumerate() {
+                v.store(data.as_mut_ptr().add(base + e * stride));
+            }
+            x += V::LANES;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tiled_axis_pass_avx2(
+    kind: WaveletKind,
+    fwd: bool,
+    data: &mut [f32],
+    bs: usize,
+    m: usize,
+    axis: usize,
+) {
+    tiled_axis_pass::<crate::simd::lanes::F32x8>(kind, fwd, data, bs, m, axis);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn tiled_axis_pass_neon(
+    kind: WaveletKind,
+    fwd: bool,
+    data: &mut [f32],
+    bs: usize,
+    m: usize,
+    axis: usize,
+) {
+    tiled_axis_pass::<crate::simd::lanes::F32x4>(kind, fwd, data, bs, m, axis);
+}
+
+/// One lifting pass along `axis` at cube side `m`: tiled vector path
+/// for the strided y/z axes when dispatched, scalar line walk
+/// otherwise (x lines are contiguous and transform in place already —
+/// vectorizing them needs an 8x8 in-register transpose, a tracked
+/// follow-up). `m < LANES` levels (the coarse 4³ tail) stay scalar.
+fn axis_pass(
+    kind: WaveletKind,
+    fwd: bool,
+    data: &mut [f32],
+    bs: usize,
+    m: usize,
+    axis: usize,
+    scratch: &mut Scratch,
+    lvl: SimdLevel,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if lvl == SimdLevel::Avx2 && axis != 0 && (8..=MAX_TILE_SIDE).contains(&m) {
+            // SAFETY: Avx2 is only dispatched on hosts where
+            // simd::detect() saw the feature; bounds per tiled_axis_pass
+            unsafe { tiled_axis_pass_avx2(kind, fwd, data, bs, m, axis) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if lvl == SimdLevel::Neon && axis != 0 && (4..=MAX_TILE_SIDE).contains(&m) {
+            // SAFETY: NEON is baseline on aarch64; bounds per tiled_axis_pass
+            unsafe { tiled_axis_pass_neon(kind, fwd, data, bs, m, axis) };
+            return;
+        }
+    }
+    let _ = lvl;
+    if fwd {
+        for_each_line(data, bs, m, axis, scratch, |line, tmp| forward_1d(kind, line, tmp));
+    } else {
+        for_each_line(data, bs, m, axis, scratch, |line, tmp| inverse_1d(kind, line, tmp));
+    }
+}
+
 /// In-place forward 3D transform of a bs³ block with `levels` levels.
 pub fn forward_3d(kind: WaveletKind, data: &mut [f32], bs: usize, levels: usize, scratch: &mut Scratch) {
+    forward_3d_with(kind, data, bs, levels, scratch, simd::level());
+}
+
+/// In-place inverse 3D transform (reverse level and axis order).
+pub fn inverse_3d(kind: WaveletKind, data: &mut [f32], bs: usize, levels: usize, scratch: &mut Scratch) {
+    inverse_3d_with(kind, data, bs, levels, scratch, simd::level());
+}
+
+/// [`forward_3d`] at an explicit dispatch level (equivalence tests
+/// force both paths without touching the process-wide state).
+fn forward_3d_with(
+    kind: WaveletKind,
+    data: &mut [f32],
+    bs: usize,
+    levels: usize,
+    scratch: &mut Scratch,
+    lvl: SimdLevel,
+) {
     debug_assert_eq!(data.len(), bs * bs * bs);
     debug_assert!(levels <= max_levels(bs));
     let mut m = bs;
     for _ in 0..levels {
         for axis in 0..3 {
-            for_each_line(data, bs, m, axis, scratch, |line, tmp| forward_1d(kind, line, tmp));
+            axis_pass(kind, true, data, bs, m, axis, scratch, lvl);
         }
         m /= 2;
     }
 }
 
-/// In-place inverse 3D transform (reverse level and axis order).
-pub fn inverse_3d(kind: WaveletKind, data: &mut [f32], bs: usize, levels: usize, scratch: &mut Scratch) {
+/// [`inverse_3d`] at an explicit dispatch level.
+fn inverse_3d_with(
+    kind: WaveletKind,
+    data: &mut [f32],
+    bs: usize,
+    levels: usize,
+    scratch: &mut Scratch,
+    lvl: SimdLevel,
+) {
     debug_assert_eq!(data.len(), bs * bs * bs);
     let mut m = bs >> levels;
     for _ in 0..levels {
         m *= 2;
         for axis in (0..3).rev() {
-            for_each_line(data, bs, m, axis, scratch, |line, tmp| inverse_1d(kind, line, tmp));
+            axis_pass(kind, false, data, bs, m, axis, scratch, lvl);
         }
     }
 }
@@ -296,6 +445,42 @@ mod tests {
         let mut via_batch = x.clone();
         forward_batch(WaveletKind::Lift4, &mut via_batch, bs, max_levels(bs));
         assert_eq!(via_batch, exact);
+    }
+
+    #[test]
+    fn tiled_simd_passes_are_bit_identical_to_scalar() {
+        // fuzzed oracle check at the 3D level: full multi-level
+        // transforms (covering the m=4 scalar tail and every axis)
+        // under the vector dispatch must equal the scalar walk bit for
+        // bit, including NaN/inf/subnormal input patterns
+        let lvl = crate::simd::detect();
+        if lvl == SimdLevel::Scalar {
+            return; // no vector path to compare on this host
+        }
+        prop_cases(0x51D0, 10, |rng, _| {
+            let bs = [8usize, 16, 32, 64][rng.below(4) as usize];
+            let mut x = vec![0.0f32; bs * bs * bs];
+            rng.fill_f32(&mut x, -100.0, 100.0);
+            for v in x.iter_mut() {
+                if rng.below(8) == 0 {
+                    *v = f32::from_bits(rng.next_u32());
+                }
+            }
+            for kind in WaveletKind::ALL {
+                let levels = max_levels(bs);
+                let mut a = x.clone();
+                let mut b = x.clone();
+                let mut s = Scratch::new(bs);
+                forward_3d_with(kind, &mut a, bs, levels, &mut s, SimdLevel::Scalar);
+                forward_3d_with(kind, &mut b, bs, levels, &mut s, lvl);
+                let same = a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits());
+                assert!(same, "{kind:?} bs={bs}: forward diverged from scalar oracle");
+                inverse_3d_with(kind, &mut a, bs, levels, &mut s, lvl);
+                inverse_3d_with(kind, &mut b, bs, levels, &mut s, SimdLevel::Scalar);
+                let same = a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits());
+                assert!(same, "{kind:?} bs={bs}: inverse diverged from scalar oracle");
+            }
+        });
     }
 
     #[test]

@@ -77,6 +77,34 @@ fn full_cli_flow() {
 }
 
 #[test]
+fn cli_simd_env_never_changes_output_or_faults() {
+    // every CZB_SIMD value — including levels this host may not have and
+    // outright garbage — must run fine (unavailable levels clamp to
+    // scalar, never fault) and produce byte-identical archives
+    let h5 = tmp("cli_simd.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(),
+    ]));
+    let mut reference: Option<Vec<u8>> = None;
+    for mode in ["auto", "scalar", "avx2", "neon", "bogus"] {
+        let out_file = tmp(&format!("cli_simd_{mode}.czb"));
+        run_ok(czb().env("CZB_SIMD", mode).args([
+            "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+            out_file.to_str().unwrap(), "--eps", "1e-3", "--threads", "4",
+        ]));
+        let bytes = std::fs::read(&out_file).unwrap();
+        match &reference {
+            None => reference = Some(bytes),
+            Some(r) => assert_eq!(r, &bytes, "CZB_SIMD={mode} changed the archive"),
+        }
+        let info = run_ok(czb().env("CZB_SIMD", mode).args([
+            "info", "--in", out_file.to_str().unwrap(),
+        ]));
+        assert!(info.contains("host simd"), "{info}");
+    }
+}
+
+#[test]
 fn cli_dataset_flow() {
     let h5 = tmp("cli_ds.h5l");
     run_ok(czb().args([

@@ -174,6 +174,52 @@ fn zbits_and_shuffle_improve_ratio_without_breaking_bounds() {
 }
 
 #[test]
+fn simd_dispatch_never_changes_the_stream() {
+    // the fuzzed per-kernel equivalence tests live next to each kernel;
+    // this is the whole-archive claim: compressing under forced-scalar
+    // and under the host's best vector level, at several thread counts,
+    // must produce byte-identical .czb streams, and either mode must
+    // decode the other's stream bit-for-bit
+    let detected = cubismz::simd::detect();
+    let sim = CloudSim::new(CloudConfig::paper(64));
+    let f = sim.field(Qoi::Pressure, step_to_time(5000));
+    let mut cfg = PipelineConfig::paper_default(1e-3);
+    cfg.chunk_bytes = 256 << 10; // multiple chunks even at 64^3
+    let mut reference: Option<Vec<u8>> = None;
+    for lvl in [cubismz::simd::SimdLevel::Scalar, detected] {
+        for threads in [1usize, 2, 4, 8] {
+            let cfgn = cfg.with_threads(threads);
+            let prev = cubismz::simd::override_level(lvl);
+            let (bytes, _) = compress_field(&f, "p", &cfgn, &NativeEngine);
+            cubismz::simd::override_level(prev);
+            match &reference {
+                None => reference = Some(bytes),
+                Some(r) => assert_eq!(
+                    r, &bytes,
+                    "stream differs under {} dispatch at {threads} threads",
+                    lvl.name()
+                ),
+            }
+        }
+    }
+    let stream = reference.unwrap();
+    let mut decoded: Option<Vec<f32>> = None;
+    for lvl in [cubismz::simd::SimdLevel::Scalar, detected] {
+        let prev = cubismz::simd::override_level(lvl);
+        let (back, _) = decompress_field_mt(&stream, &NativeEngine, 4).unwrap();
+        cubismz::simd::override_level(prev);
+        match &decoded {
+            None => decoded = Some(back.data),
+            Some(r) => assert!(
+                r.iter().zip(&back.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "decode differs under {} dispatch",
+                lvl.name()
+            ),
+        }
+    }
+}
+
+#[test]
 fn thread_count_never_changes_the_stream() {
     // the dynamic span-queue schedule fixes chunk boundaries by block-id
     // arithmetic: compressing with any thread count — through the legacy

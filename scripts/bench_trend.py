@@ -78,11 +78,15 @@ def fmt_delta(old, new):
 
 
 def row_key(row):
-    """Stable identity for a row across runs (threads/eps/... if present)."""
-    for k in ("threads", "eps", "cache_chunks", "name", "field"):
-        if k in row:
-            return (k, row[k])
-    return None
+    """Stable identity for a row across runs: the composite of every
+    identity-like field present, so rows that share e.g. a thread count
+    but differ in simd mode never collide."""
+    key = tuple(
+        (k, row[k])
+        for k in ("threads", "eps", "cache_chunks", "name", "field", "simd")
+        if k in row
+    )
+    return key or None
 
 
 def diff_rows(label, old_rows, new_rows, indent="  "):
@@ -90,18 +94,20 @@ def diff_rows(label, old_rows, new_rows, indent="  "):
     for new in new_rows:
         key = row_key(new)
         old = old_by_key.get(key)
+        label_str = ",".join(f"{k}={v}" for k, v in (key or ()))
         if old is None:
-            print(f"{indent}{key}: (new row)")
+            print(f"{indent}{label_str}: (new row)")
             continue
+        key_fields = {k for k, _ in key}
         parts = []
         for k, v in new.items():
-            if k == key[0]:
+            if k in key_fields:
                 continue
             d = fmt_delta(old.get(k), v)
             if d is not None:
                 parts.append(f"{k} {d}")
-                note_regression(f"{label} {key[0]}={key[1]}", k, old.get(k), v)
-        print(f"{indent}{key[0]}={key[1]}: " + ("; ".join(parts) if parts else "(no numeric fields)"))
+                note_regression(f"{label} {label_str}", k, old.get(k), v)
+        print(f"{indent}{label_str}: " + ("; ".join(parts) if parts else "(no numeric fields)"))
 
 
 def main():
