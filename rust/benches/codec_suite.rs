@@ -9,12 +9,19 @@
 //! decompression thread-scaling rows (zlib-best path) that
 //! `scripts/bench_trend.py` diffs across CI runs.
 //!
+//! Also sweeps every error-bound contract × honoring stage-1 codec pair
+//! on a smooth probe field and emits `BENCH_quality.json` — achieved
+//! PSNR and CR per (bound, codec) row — so CI trends quality alongside
+//! throughput.
+//!
 //! `CODEC_SUITE_FAST=1` shrinks the payload and budgets for CI smoke use.
 #[cfg(reference_codecs)]
 use cubismz::codec::reference;
 use cubismz::codec::{shuffle, stage2, Codec};
 use cubismz::core::Field3;
-use cubismz::pipeline::{compress_field, decompress_field_mt, NativeEngine, PipelineConfig};
+use cubismz::pipeline::{
+    compress_field, decompress_field_mt, stage1, Bound, NativeEngine, PipelineConfig, Stage1,
+};
 use cubismz::util::bench::{bench_budget, write_json, Json};
 use cubismz::util::prng::Pcg32;
 
@@ -183,6 +190,64 @@ fn main() {
     ]);
     write_json("BENCH_stage2.json", &doc).expect("write BENCH_stage2.json");
     println!("wrote BENCH_stage2.json");
+
+    // error-bound contract sweep: every (bound, honoring stage-1 codec)
+    // pair on the same smooth probe field. The row metrics are achieved
+    // quality (PSNR, max relative error) and CR — the quality
+    // counterpart of the throughput table above.
+    let qn = if fast { 32usize } else { 64 };
+    let mut rng = Pcg32::new(0xB0DD);
+    let qf = Field3::from_vec(qn, qn, qn, cubismz::util::prop::gen_smooth_field(&mut rng, qn));
+    let bounds =
+        [Bound::Rel(1e-2), Bound::Rel(1e-3), Bound::Abs(1e-3), Bound::Psnr(60.0), Bound::Lossless];
+    println!("error-bound quality sweep: {qn}^3 probe field");
+    let mut quality_rows = Vec::new();
+    for bound in &bounds {
+        for codec in stage1::REGISTRY {
+            if !codec.honors(bound.kind()) {
+                continue;
+            }
+            // knob placeholders; apply_bound resolves them per field
+            let template = match codec.id() {
+                0 => Stage1::Copy,
+                2 => Stage1::Zfp { tol_rel: 0.0 },
+                3 => Stage1::Sz { eb_rel: 0.0 },
+                4 => Stage1::Fpzip { prec: 32 },
+                _ => continue, // wavelet honors nothing; unknown future ids
+            };
+            let mut cfg = PipelineConfig::paper_default(0.0);
+            cfg.stage1 = template;
+            cfg.bound = *bound;
+            let (stream, st) = compress_field(&qf, "p", &cfg, &NativeEngine);
+            let q = st.quality;
+            println!(
+                "  {:20} {:>7}: CR {:.2}  psnr {:.1} dB  max-rel {:.3e}",
+                bound.describe(),
+                codec.name(),
+                q.ratio,
+                q.psnr_db,
+                q.max_rel_err
+            );
+            quality_rows.push(Json::Obj(vec![
+                ("bound".into(), Json::Str(bound.describe())),
+                ("codec".into(), Json::Str(codec.name().into())),
+                ("cr".into(), Json::Num(q.ratio)),
+                // exact roundtrips fold to +inf; cap so the JSON value
+                // stays a number the trend diff can score
+                ("psnr_db".into(), Json::Num(q.psnr_db.min(300.0))),
+                ("max_rel_err".into(), Json::Num(q.max_rel_err)),
+                ("max_abs_err".into(), Json::Num(q.max_abs_err)),
+                ("compressed_bytes".into(), Json::Int(stream.len() as i64)),
+            ]));
+        }
+    }
+    let qdoc = Json::Obj(vec![
+        ("bench".into(), Json::Str("quality".into())),
+        ("field".into(), Json::Str(format!("smooth-{qn}^3"))),
+        ("rows".into(), Json::Arr(quality_rows)),
+    ]);
+    write_json("BENCH_quality.json", &qdoc).expect("write BENCH_quality.json");
+    println!("wrote BENCH_quality.json");
 
     // reference baselines (need the flate2/zstd crates: --cfg reference_codecs)
     #[cfg(reference_codecs)]

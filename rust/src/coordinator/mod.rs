@@ -8,8 +8,8 @@ use crate::core::Field3;
 use crate::io::{h5lite, parallel};
 use crate::metrics::{compression_ratio, psnr};
 use crate::pipeline::{
-    compress_field, decompress_field_mt, verify_stream, CompressParams, CompressStats, Dataset,
-    DatasetOptions, DecodeReport, Engine, PipelineConfig, WaveletEngine,
+    compress_field, decompress_field_mt, verify_stream, AchievedQuality, Bound, CompressParams,
+    CompressStats, Dataset, DatasetOptions, DecodeReport, Engine, PipelineConfig, WaveletEngine,
 };
 use crate::util::error::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -96,11 +96,31 @@ pub struct VerifyEntry {
     /// (near-infinite when the codec is healthy), not fidelity to the
     /// simulation.
     pub psnr_db: Option<f64>,
+    /// Error-bound contract recorded in the stream's own header
+    /// ([`Bound::None`] on v≤4 streams, which predate contracts).
+    pub bound: Bound,
+    /// Achieved-quality summary folded from the stream's recorded
+    /// per-chunk column; `None` on v≤4 streams.
+    pub achieved: Option<AchievedQuality>,
 }
 
 impl VerifyEntry {
     pub fn is_clean(&self) -> bool {
         matches!(&self.outcome, Ok(r) if r.is_clean())
+    }
+
+    /// `Some(reason)` when the recorded achieved quality breaks the
+    /// recorded contract (what `czb verify --bounds` turns into exit 3).
+    /// A contract with no recorded quality is itself a violation — it
+    /// can only arise from a tampered or truncated-and-rebuilt stream.
+    pub fn bound_violation(&self) -> Option<String> {
+        match (&self.bound, &self.achieved) {
+            (Bound::None, _) => None,
+            (b, Some(q)) => b.check(q).err(),
+            (b, None) => {
+                Some(format!("stream declares `{}` but records no quality", b.describe()))
+            }
+        }
     }
 }
 
@@ -123,6 +143,15 @@ impl VerifyReport {
     pub fn corrupt(&self) -> Vec<&str> {
         self.entries.iter().filter(|e| !e.is_clean()).map(|e| e.name.as_str()).collect()
     }
+
+    /// Quantities whose recorded quality violates their recorded
+    /// contract, with the reason.
+    pub fn bound_violations(&self) -> Vec<(&str, String)> {
+        self.entries
+            .iter()
+            .filter_map(|e| e.bound_violation().map(|v| (e.name.as_str(), v)))
+            .collect()
+    }
 }
 
 /// Deep-verify one section: full decode, then CR and the idempotence
@@ -133,11 +162,14 @@ fn deep_metrics(
 ) -> std::result::Result<(Option<f64>, Option<f64>), String> {
     let (field, file) = engine.decompress_bytes(section)?;
     let cr = compression_ratio(field.nbytes(), section.len());
+    // re-encode with the archive's own parameters; the knob already
+    // encodes whatever contract produced it, so no bound is re-applied
     let params = CompressParams {
         bs: file.bs as usize,
         stage1: file.stage1,
         stage2: file.stage2,
         shuffle: file.shuffle,
+        bound: Bound::None,
     };
     let (again_bytes, _) = engine.compress_vec(&field, &file.name, &params);
     let (again, _) = engine.decompress_bytes(&again_bytes)?;
@@ -150,9 +182,13 @@ fn deep_metrics(
 /// request, which receives its stream over a socket rather than from
 /// a path.
 pub fn verify_czb_bytes(bytes: &[u8], deep: bool, engine: &Engine) -> VerifyEntry {
-    let name = crate::pipeline::CzbFile::parse_header(bytes)
-        .map(|(f, _)| f.name)
-        .unwrap_or_else(|_| "?".to_string());
+    let (name, bound, achieved) = match crate::pipeline::CzbFile::parse_header(bytes) {
+        Ok((f, _)) => {
+            let q = f.achieved_quality();
+            (f.name, f.bound, q)
+        }
+        Err(_) => ("?".to_string(), Bound::None, None),
+    };
     let mut outcome = verify_stream(bytes);
     let (mut cr, mut db) = (None, None);
     if deep && matches!(&outcome, Ok(r) if r.is_clean()) {
@@ -161,7 +197,7 @@ pub fn verify_czb_bytes(bytes: &[u8], deep: bool, engine: &Engine) -> VerifyEntr
             Err(e) => outcome = Err(format!("deep decode: {e}")),
         }
     }
-    VerifyEntry { name, outcome, compression_ratio: cr, psnr_db: db }
+    VerifyEntry { name, outcome, compression_ratio: cr, psnr_db: db, bound, achieved }
 }
 
 /// Verify the integrity of a `.czb` or `.czs` file (sniffed by magic)
@@ -196,6 +232,18 @@ pub fn verify_file(input: &Path, deep: bool, engine: &Engine) -> Result<VerifyRe
             // inner streams have no finer-grained checksums to fall
             // back on)
             let mut outcome = archive.section_at(idx).and_then(verify_stream);
+            // the section's own header is the authority on its contract
+            // (the trailer copy is derived from it at write time)
+            let (bound, achieved) = match archive
+                .section_at(idx)
+                .and_then(|s| crate::pipeline::CzbFile::parse_header(s).map(|(f, _)| f))
+            {
+                Ok(f) => {
+                    let q = f.achieved_quality();
+                    (f.bound, q)
+                }
+                Err(_) => (Bound::None, None),
+            };
             let (mut cr, mut db) = (None, None);
             if deep && matches!(&outcome, Ok(r) if r.is_clean()) {
                 match archive.section_at(idx).and_then(|s| deep_metrics(engine, s)) {
@@ -203,7 +251,14 @@ pub fn verify_file(input: &Path, deep: bool, engine: &Engine) -> Result<VerifyRe
                     Err(e) => outcome = Err(format!("deep decode: {e}")),
                 }
             }
-            entries.push(VerifyEntry { name, outcome, compression_ratio: cr, psnr_db: db });
+            entries.push(VerifyEntry {
+                name,
+                outcome,
+                compression_ratio: cr,
+                psnr_db: db,
+                bound,
+                achieved,
+            });
         }
     } else if &head == crate::pipeline::format::MAGIC {
         let bytes =

@@ -9,8 +9,9 @@ use cubismz::coordinator;
 use cubismz::core::FieldStats;
 use cubismz::io::h5lite;
 use cubismz::pipeline::{
-    CoeffCodec, CompressParams, CzbFile, DatasetOptions, Engine, NativeEngine, PipelineConfig,
-    ShuffleMode, Stage1, WaveletEngine, DEFAULT_DATASET_CACHE_CHUNKS,
+    AchievedQuality, Bound, BoundKind, CoeffCodec, CompressParams, CzbFile, DatasetOptions,
+    Engine, NativeEngine, PipelineConfig, ShuffleMode, Stage1, WaveletEngine,
+    DEFAULT_DATASET_CACHE_CHUNKS,
 };
 use cubismz::runtime::{default_artifacts_dir, PjrtEngine};
 use cubismz::service;
@@ -90,6 +91,10 @@ fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
         "scheme",
         "wavelet",
         "eps",
+        "abs-err",
+        "rel-err",
+        "psnr",
+        "lossless",
         "prec",
         "zbits",
         "coeff",
@@ -108,7 +113,26 @@ fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
         "recompress" => (&["in", "out"], true),
         "compress-dataset" => (&["in", "out", "qoi"], true),
         "decompress-dataset" => (&["in", "out", "cache-chunks"], true),
-        "verify" => (&["in", "deep"], true),
+        "verify" => (&["in", "deep", "bounds"], true),
+        "tune" => (
+            &[
+                "size",
+                "step",
+                "qoi",
+                "abs-err",
+                "rel-err",
+                "psnr",
+                "lossless",
+                "stage2",
+                "shuffle",
+                "bs",
+                "chunk-bytes",
+                "frame-bytes",
+                "threads",
+                "engine",
+            ],
+            false,
+        ),
         "codecs" => (&[], false),
         "info" => (&["in", "cache-chunks"], false),
         "psnr" => (&["ref", "dataset", "in", "engine"], false),
@@ -126,7 +150,10 @@ fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
             false,
         ),
         "client" => (
-            &["addr", "op", "in", "out", "dataset", "eps", "bs", "shuffle", "tenant", "priority"],
+            &[
+                "addr", "op", "in", "out", "dataset", "eps", "abs-err", "rel-err", "psnr",
+                "lossless", "bs", "shuffle", "tenant", "priority",
+            ],
             false,
         ),
         _ => return None,
@@ -167,9 +194,49 @@ fn shuffle_of(args: &Args) -> Result<ShuffleMode> {
     }
 }
 
+/// The error-bound contract flags shared by the scheme commands and
+/// `czb tune`: `--abs-err`/`--rel-err`/`--psnr` (valued, validated) and
+/// `--lossless`, mutually exclusive. Absent = [`Bound::None`].
+fn bound_of(args: &Args) -> Result<Bound> {
+    let mut found: Vec<Bound> = Vec::new();
+    if args.flag("lossless") {
+        found.push(Bound::Lossless);
+    }
+    for (flag, kind) in
+        [("abs-err", BoundKind::Abs), ("rel-err", BoundKind::Rel), ("psnr", BoundKind::Psnr)]
+    {
+        if let Some(v) = args.get(flag) {
+            let value: f64 =
+                v.parse().map_err(|_| anyhow!("bad value for --{flag}: {v}"))?;
+            found.push(Bound::new(kind, value).map_err(|e| anyhow!("--{flag}: {e}"))?);
+        }
+    }
+    match found.as_slice() {
+        [] => Ok(Bound::None),
+        [one] => Ok(*one),
+        _ => Err(anyhow!("--abs-err, --rel-err, --psnr and --lossless are mutually exclusive")),
+    }
+}
+
 fn config_of(args: &Args) -> Result<PipelineConfig> {
     let bs: usize = args.num("bs", 32)?;
     let eps: f32 = args.num("eps", 1e-3f32)?;
+    if !eps.is_finite() || eps < 0.0 {
+        return Err(anyhow!("--eps must be finite and >= 0, got {eps}"));
+    }
+    let bound = bound_of(args)?;
+    if bound != Bound::None && args.get("eps").is_some() {
+        return Err(anyhow!(
+            "--eps (raw codec knob) conflicts with an error-bound flag; \
+             state the contract alone and the knob is derived from it"
+        ));
+    }
+    if args.get("eps").is_some() {
+        eprintln!(
+            "note: --eps sets the raw per-codec knob; prefer --abs-err/--rel-err/--psnr \
+             for a recorded, verifiable contract (see docs/QUALITY.md)"
+        );
+    }
     let wavelet = match args.get("wavelet").unwrap_or("w3a") {
         "w4" => WaveletKind::Interp4,
         "w4l" => WaveletKind::Lift4,
@@ -197,12 +264,34 @@ fn config_of(args: &Args) -> Result<PipelineConfig> {
         "copy" => Stage1::Copy,
         s => return Err(anyhow!("unknown scheme {s}")),
     };
+    // contract → scheme resolution: an explicit --scheme must honor the
+    // stated bound kind (hard error otherwise); a defaulted scheme is
+    // auto-selected for the contract. The codec maps the bound onto its
+    // native knob against the field range at compression time.
+    let stage1 = if bound == Bound::None {
+        stage1
+    } else if args.get("scheme").is_some() {
+        let codec = cubismz::pipeline::stage1::codec_for(&stage1);
+        if !codec.honors(bound.kind()) {
+            return Err(anyhow!(
+                "stage-1 codec '{}' cannot honor a {} bound (see `czb codecs` for what each \
+                 codec guarantees)",
+                codec.name(),
+                bound.kind().name()
+            ));
+        }
+        stage1
+    } else {
+        cubismz::pipeline::stage1::default_scheme_for(&bound)
+            .expect("every non-None bound kind has a default scheme")
+    };
     let stage2_name = args.get("stage2").unwrap_or("zlib");
     // alias-aware, case-insensitive lookup through the stage-2 registry:
     // every name `czb info` or `czb codecs` prints parses back here
     let stage2 =
         Codec::from_name(stage2_name).ok_or_else(|| anyhow!("unknown stage2 codec {stage2_name}"))?;
     let mut cfg = PipelineConfig::new(bs, stage1, stage2);
+    cfg.bound = bound;
     cfg.shuffle = shuffle_of(args)?;
     cfg.nthreads = threads_of(args, 1)?;
     cfg.chunk_bytes = args.num("chunk-bytes", 4usize << 20)?;
@@ -569,6 +658,16 @@ fn cmd_info(args: &Args) -> Result<()> {
                 e.len,
                 raw as f64 / e.len.max(1) as f64,
             );
+            // per-quantity quality metadata straight from the v3 trailer
+            // — no section bytes are touched
+            if let Some(aq) = &e.quality {
+                println!(
+                    "            bound {}  achieved max-rel {:.3e}  psnr {:.1} dB",
+                    e.bound.describe(),
+                    aq.max_rel_err,
+                    aq.psnr_db
+                );
+            }
             raw_total += raw;
             comp_total += e.len;
         }
@@ -595,6 +694,19 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("format      : v{} (legacy unframed)", f.version);
     }
     println!("range       : [{}, {}]", f.global_min, f.global_max);
+    println!("bound       : {}", f.bound.describe());
+    if let Some(q) = f.achieved_quality() {
+        println!(
+            "achieved    : max-abs {:.3e}  max-rel {:.3e}  psnr {:.1} dB ({})",
+            q.max_abs_err,
+            q.max_rel_err,
+            q.psnr_db,
+            match f.bound.check(&q) {
+                Ok(()) => "within contract".to_string(),
+                Err(e) => format!("VIOLATED: {e}"),
+            },
+        );
+    }
     println!("blocks      : {}  chunks: {}", f.nblocks, f.chunks.len());
     let payload: u64 = f.chunks.iter().map(|c| c.csize as u64).sum();
     let raw = f.nx as u64 * f.ny as u64 * f.nz as u64 * 4;
@@ -611,6 +723,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_verify(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     let deep = args.flag("deep");
+    let bounds = args.flag("bounds");
     let mut cfg = config_of(args)?;
     cfg.nthreads = threads_of(args, 0)?;
     let engine = session_of(args, &cfg)?;
@@ -642,22 +755,60 @@ fn cmd_verify(args: &Args) -> Result<()> {
             }
             Err(why) => println!("  {:>8}: CORRUPT ({why})", e.name),
         }
+        if let Some(q) = &e.achieved {
+            match e.bound_violation() {
+                None => println!(
+                    "           contract {}  achieved max-rel {:.3e}  psnr {:.1} dB",
+                    e.bound.describe(),
+                    q.max_rel_err,
+                    q.psnr_db
+                ),
+                Some(why) => println!("           BOUND VIOLATED: {why}"),
+            }
+        } else if let Some(why) = e.bound_violation() {
+            println!("           BOUND VIOLATED: {why}");
+        }
     }
+    let violations = report.bound_violations();
+    let violated = bounds && !violations.is_empty();
     println!(
         "{}: {} ({} quantities, {}{:.3}s)",
         input.display(),
-        if report.is_clean() { "clean" } else { "CORRUPT" },
+        if !report.is_clean() {
+            "CORRUPT"
+        } else if violated {
+            "BOUND VIOLATED"
+        } else {
+            "clean"
+        },
         report.entries.len(),
         if deep { "deep, " } else { "" },
         t.elapsed().as_secs_f64(),
     );
-    if !report.is_clean() {
+    if !report.is_clean() || violated {
         std::process::exit(3);
     }
     Ok(())
 }
 
 fn cmd_codecs() -> Result<()> {
+    println!("registered stage-1 codecs (--scheme; `honors` lists the error-bound kinds the");
+    println!("encoder guarantees — --abs-err/--rel-err/--psnr/--lossless map onto the knob):");
+    for c in cubismz::pipeline::stage1::REGISTRY {
+        let honored: Vec<&str> = BoundKind::ALL
+            .iter()
+            .filter(|k| c.honors(**k))
+            .map(|k| k.name())
+            .collect();
+        println!(
+            "  {:>9}  id {}  knob {:<12}  honors: {}",
+            c.name(),
+            c.id(),
+            c.knob(),
+            honored.join(", "),
+        );
+    }
+    println!();
     println!("registered stage-2 codecs (--stage2 accepts any name or alias, case-insensitive):");
     for c in cubismz::codec::stage2::REGISTRY {
         let aliases = c.aliases().join(", ");
@@ -668,6 +819,152 @@ fn cmd_codecs() -> Result<()> {
             format!("{:?}", c.effort()),
             if aliases.is_empty() { "-".to_string() } else { aliases },
         );
+    }
+    Ok(())
+}
+
+/// The knob ladder `czb tune` probes per codec, as multiples of the
+/// contract's mapped knob. Factor 1.0 is the plain conservative mapping
+/// — always within the bound by the honors contract — so the tuned
+/// pick can never be worse than the untuned default; larger factors
+/// exploit the slack between a codec's guaranteed worst case and its
+/// measured error on the probe field.
+const TUNE_LADDER: [f64; 5] = [1.0, 1.5, 2.0, 4.0, 8.0];
+
+/// Loosen `bound` by `factor` in knob space (`None` when the kind has no
+/// knob to scale or the loosened value would leave the valid range).
+fn loosened_bound(bound: &Bound, factor: f64) -> Option<Bound> {
+    match *bound {
+        Bound::None => None,
+        Bound::Lossless => (factor == 1.0).then_some(Bound::Lossless),
+        Bound::Abs(a) => Some(Bound::Abs(a * factor)),
+        Bound::Rel(r) => Some(Bound::Rel(r * factor)),
+        Bound::Psnr(p) => {
+            // the rel knob is 10^(-p/20): scaling it by `factor` lowers
+            // the stated PSNR by 20*log10(factor) dB
+            let q = p - 20.0 * factor.log10();
+            (q > 0.0).then_some(Bound::Psnr(q))
+        }
+    }
+}
+
+/// Stage-1 parameter template per registry codec for the tuner; knob
+/// values are placeholders that `apply_bound` resolves.
+fn tune_template(id: u8) -> Option<Stage1> {
+    match id {
+        0 => Some(Stage1::Copy),
+        2 => Some(Stage1::Zfp { tol_rel: 0.0 }),
+        3 => Some(Stage1::Sz { eb_rel: 0.0 }),
+        4 => Some(Stage1::Fpzip { prec: 32 }),
+        // the wavelet scheme declares no bound guarantees; anything else
+        // is a future codec the tuner doesn't know a template for
+        _ => None,
+    }
+}
+
+/// `czb tune`: sweep the stage-1 codec registry × a knob ladder against
+/// a synthetic probe field per quantity, measure the *achieved* quality
+/// of every candidate, and report the max-CR configuration that still
+/// meets the stated contract.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let bound = bound_of(args)?;
+    if bound == Bound::None {
+        return Err(anyhow!(
+            "czb tune needs a contract: --abs-err T | --rel-err T | --psnr DB | --lossless"
+        ));
+    }
+    let n: usize = args.num("size", 64)?;
+    let step: usize = args.num("step", 5000)?;
+    let bs: usize = args.num("bs", 32)?;
+    let stage2_name = args.get("stage2").unwrap_or("zlib");
+    let stage2 = Codec::from_name(stage2_name)
+        .ok_or_else(|| anyhow!("unknown stage2 codec {stage2_name}"))?;
+    let shuffle = shuffle_of(args)?;
+    let engine = Engine::builder()
+        .threads(threads_of(args, 0)?)
+        .chunk_bytes(args.num("chunk-bytes", 4usize << 20)?)
+        .frame_bytes(args.num("frame-bytes", cubismz::pipeline::DEFAULT_FRAME_BYTES)?)
+        .wavelet_engine(engine_of(args)?)
+        .build();
+    let sim = CloudSim::new(CloudConfig::paper(n));
+    let t0 = step_to_time(step);
+    let only: Option<Vec<&str>> =
+        args.get("qoi").map(|s| s.split(',').map(str::trim).collect());
+    if let Some(o) = &only {
+        for name in o {
+            if Qoi::from_name(name).is_none() {
+                return Err(anyhow!("unknown qoi {name}"));
+            }
+        }
+    }
+    println!(
+        "tuning for {} on a {n}^3 step-{step} probe field (bs {bs}, stage2 {}, shuffle {:?}):",
+        bound.describe(),
+        stage2.name(),
+        shuffle,
+    );
+    let mut missed_all = Vec::new();
+    for qoi in Qoi::ALL {
+        if let Some(o) = &only {
+            if !o.contains(&qoi.name()) {
+                continue;
+            }
+        }
+        let field = sim.field(qoi, t0);
+        // best = (codec name, resolved stage-1 params, achieved)
+        let mut best: Option<(&'static str, Stage1, AchievedQuality)> = None;
+        let mut probes = 0usize;
+        for codec in cubismz::pipeline::stage1::REGISTRY {
+            if !codec.honors(bound.kind()) {
+                continue;
+            }
+            let Some(template) = tune_template(codec.id()) else { continue };
+            for factor in TUNE_LADDER {
+                let Some(probe) = loosened_bound(&bound, factor) else { continue };
+                let params = CompressParams::new(bs, template, stage2)
+                    .with_shuffle(shuffle)
+                    .with_bound(probe);
+                let (bytes, stats) = engine.compress_vec(&field, qoi.name(), &params);
+                probes += 1;
+                // judge the MEASURED quality against the ORIGINAL
+                // contract: a loosened knob only wins if the probe field
+                // stays inside the user's bound
+                if bound.check(&stats.quality).is_err() {
+                    continue;
+                }
+                let keep = match &best {
+                    None => true,
+                    Some((.., q)) => stats.quality.ratio > q.ratio,
+                };
+                if keep {
+                    let (resolved, _) =
+                        CzbFile::parse_header(&bytes).map_err(|e| anyhow!(e))?;
+                    best = Some((codec.name(), resolved.stage1, stats.quality));
+                }
+            }
+        }
+        match best {
+            Some((name, resolved, q)) => println!(
+                "  {:>8}: --scheme {name}  {:?}  CR {:.2}  max-rel {:.3e}  psnr {:.1} dB  \
+                 ({probes} probes)",
+                qoi.name(),
+                resolved,
+                q.ratio,
+                q.max_rel_err,
+                q.psnr_db,
+            ),
+            None => {
+                println!(
+                    "  {:>8}: no registered codec met {} ({probes} probes)",
+                    qoi.name(),
+                    bound.describe()
+                );
+                missed_all.push(qoi.name());
+            }
+        }
+    }
+    if !missed_all.is_empty() {
+        return Err(anyhow!("no configuration met the bound for: {}", missed_all.join(",")));
     }
     Ok(())
 }
@@ -756,10 +1053,21 @@ fn cmd_client(args: &Args) -> Result<()> {
             let field = h5lite::read(&input, dataset).map_err(|e| anyhow!(e))?.to_field();
             let bs: u32 = args.num("bs", 32u32)?;
             let eps: f32 = args.num("eps", 1e-3f32)?;
+            if !eps.is_finite() || eps < 0.0 {
+                return Err(anyhow!("--eps must be finite and >= 0, got {eps}"));
+            }
             let shuffle = shuffle_of(args)?;
+            let bound = bound_of(args)?;
+            if bound != Bound::None && args.get("eps").is_some() {
+                return Err(anyhow!(
+                    "--eps (raw codec knob) conflicts with an error-bound flag; \
+                     state the contract alone and the knob is derived from it"
+                ));
+            }
             let t = std::time::Instant::now();
-            let czb =
-                client_reply(client.compress(dataset, &field, bs, eps, shuffle))?;
+            let czb = client_reply(
+                client.compress_bounded(dataset, &field, bs, eps, shuffle, bound),
+            )?;
             std::fs::write(&out, &czb)?;
             println!(
                 "{dataset}: {} -> {} bytes via {addr}  CR {:.2}  ({:.3}s)",
@@ -812,7 +1120,13 @@ fn usage() -> ! {
 USAGE: czb <command> [flags]
   gen         --size N --step S --out f.h5l [--bubbles K] [--production] [--qoi p|rho|E|a2]
   compress    --in f.h5l --dataset NAME --out f.czb [--scheme wavelet|zfp|sz|fpzip|copy]
-              [--wavelet w4|w4l|w3a] [--eps 1e-3] [--prec 24] [--zbits N] [--coeff none|fpzip|sz|spdp]
+              [--abs-err T | --rel-err T | --psnr DB | --lossless]
+              (an error-bound contract: the stage-1 knob is derived from it, and the
+               contract + achieved quality are recorded in the stream for verify --bounds;
+               with no --scheme the codec is auto-picked, an explicit --scheme must
+               honor the bound kind — see `czb codecs`)
+              [--wavelet w4|w4l|w3a] [--eps 1e-3 (legacy raw knob; excludes bound flags)]
+              [--prec 24] [--zbits N] [--coeff none|fpzip|sz|spdp]
               [--stage2 zlib|zlib-def|zlib-best|lz4|zstd|lzma|none (case-insensitive, see codecs)]
               [--shuffle [none|byte4|bit4]] [--bs 32] [--chunk-bytes N] [--frame-bytes N (0 = default 256Ki)]
               [--threads N (0 = all cores)] [--engine native|pjrt]
@@ -831,12 +1145,22 @@ USAGE: czb <command> [flags]
   decompress-dataset  --in f.czs --out f.h5l [--threads N] [--engine native|pjrt]
                       [--cache-chunks N (shared decoded-chunk cache size, default 32)]
                       (lazy section reads; quantities decode concurrently on one pool)
-  verify      --in f.czb|f.czs [--deep] [--threads N] [--engine native|pjrt]
+  verify      --in f.czb|f.czs [--deep] [--bounds] [--threads N] [--engine native|pjrt]
               (walk every checksum — v4 header digest, per-chunk CRC32C, czs section
                digests — without decoding; --deep fully decodes each quantity and
-               reports CR + idempotence PSNR)
-              exit codes: 0 clean, 3 corrupt content, 1 unreadable file, 2 usage
-  codecs      (list the registered stage-2 codecs, ids, efforts and aliases)
+               reports CR + idempotence PSNR; --bounds additionally checks every
+               recorded error-bound contract against the achieved quality and exits 3
+               on any violation)
+              exit codes: 0 clean, 3 corrupt content or violated bound, 1 unreadable
+              file, 2 usage
+  tune        --abs-err T | --rel-err T | --psnr DB | --lossless
+              [--size 64] [--step 5000] [--qoi p,rho] [--stage2 zlib] [--bs 32]
+              [--shuffle MODE] [--threads N] [--engine native|pjrt]
+              (sweep the stage-1 codec registry and a knob ladder on a synthetic probe
+               field per quantity; print the max-CR configuration whose measured
+               quality still meets the contract)
+  codecs      (list the registered stage-1 codecs with their native knob and honored
+               bound kinds, plus the stage-2 codecs, ids, efforts and aliases)
   info        --in f.czb | f.czs  [--cache-chunks N]  (czs archives open lazily)
   psnr        --ref f.h5l --dataset NAME --in f.czb
   serve       [--addr 127.0.0.1:9321] [--threads N (0 = all cores)]
@@ -851,6 +1175,7 @@ USAGE: czb <command> [flags]
   client      --op compress|decompress|verify|stat|shutdown [--addr HOST:PORT]
               [--tenant ID] [--priority normal|high]
               (compress:   --in f.h5l --dataset NAME --out f.czb [--eps 1e-3]
+                           [--abs-err T | --rel-err T | --psnr DB | --lossless]
                            [--bs 32] [--shuffle [none|byte4|bit4]])
               (decompress: --in f.czb --out f.h5l)   (verify: --in f.czb)
               exit codes: 0 ok, 3 verify found corruption, 4 server refused
@@ -894,6 +1219,7 @@ fn main() {
         "compress-dataset" => cmd_compress_dataset(&args),
         "decompress-dataset" => cmd_decompress_dataset(&args),
         "verify" => cmd_verify(&args),
+        "tune" => cmd_tune(&args),
         "codecs" => cmd_codecs(),
         "info" => cmd_info(&args),
         "psnr" => cmd_psnr(&args),

@@ -151,6 +151,53 @@ pub struct TenantUsage {
     pub throttled: u64,
 }
 
+/// Number of finite buckets in a [`PsnrHist`].
+pub const PSNR_BUCKETS: usize = 16;
+/// Width of each finite [`PsnrHist`] bucket in dB.
+pub const PSNR_BUCKET_DB: f64 = 10.0;
+/// Infinite PSNR (bit-exact compression) contributes this capped value
+/// to [`PsnrHist::sum_db`] so the mean stays finite.
+pub const PSNR_CAP_DB: f64 = 300.0;
+
+/// Distribution of the quality one tenant's compress requests actually
+/// achieved, in PSNR dB. Fixed 10 dB buckets: bucket *i* counts samples
+/// in `[10·i, 10·(i+1))`; `overflow` catches ≥ 160 dB and the infinite
+/// PSNR of a bit-exact stream. Plain (non-atomic) fields — mutated
+/// under the registry's tenant mutex, once per compress request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PsnrHist {
+    pub buckets: [u64; PSNR_BUCKETS],
+    pub overflow: u64,
+    pub count: u64,
+    /// Sum of recorded dB (infinities capped at [`PSNR_CAP_DB`]).
+    pub sum_db: f64,
+}
+
+impl PsnrHist {
+    pub fn record(&mut self, db: f64) {
+        // NaN cannot happen on the measurement path; clamp defensively
+        // so a rogue value can never poison the whole histogram
+        let v = if db.is_nan() { 0.0 } else { db.max(0.0) };
+        let bucket = (v / PSNR_BUCKET_DB) as usize;
+        if bucket < PSNR_BUCKETS {
+            self.buckets[bucket] += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.count += 1;
+        self.sum_db += v.min(PSNR_CAP_DB);
+    }
+
+    /// Mean achieved PSNR in dB (0 when nothing was recorded).
+    pub fn mean_db(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_db / self.count as f64
+        }
+    }
+}
+
 /// Request operations the service meters, in wire order.
 pub const OPS: [&str; 5] = ["compress", "decompress", "verify", "stat", "shutdown"];
 /// Response statuses the service meters, in wire order.
@@ -189,6 +236,9 @@ pub struct Registry {
     pub stage1_micros: Counter,
     pub stage2_micros: Counter,
     tenants: Mutex<HashMap<String, TenantUsage>>,
+    /// Achieved-PSNR distribution per tenant, fed by successful
+    /// compress requests.
+    tenant_psnr: Mutex<HashMap<String, PsnrHist>>,
 }
 
 impl Registry {
@@ -207,6 +257,22 @@ impl Registry {
         if throttled {
             u.throttled += 1;
         }
+    }
+
+    /// Record the PSNR one successful compress achieved for `tenant`
+    /// ("" meters as the anonymous tenant).
+    pub fn record_tenant_psnr(&self, tenant: &str, psnr_db: f64) {
+        let mut g = self.tenant_psnr.lock().unwrap();
+        g.entry(tenant.to_string()).or_default().record(psnr_db);
+    }
+
+    /// Per-tenant achieved-PSNR histograms, sorted by tenant id for a
+    /// stable export order.
+    pub fn tenant_psnr_snapshot(&self) -> Vec<(String, PsnrHist)> {
+        let g = self.tenant_psnr.lock().unwrap();
+        let mut v: Vec<(String, PsnrHist)> = g.iter().map(|(k, u)| (k.clone(), *u)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// Per-tenant usage, sorted by tenant id for a stable export order.
@@ -295,6 +361,33 @@ mod tests {
         assert_eq!(snap[0].1.bytes_out, 52);
         assert_eq!(snap[0].1.throttled, 0);
         assert_eq!(snap[1].1.throttled, 1);
+    }
+
+    #[test]
+    fn tenant_psnr_histogram_buckets_and_caps() {
+        let r = Registry::new();
+        r.record_tenant_psnr("a", 57.3); // bucket [50, 60)
+        r.record_tenant_psnr("a", 57.9);
+        r.record_tenant_psnr("a", f64::INFINITY); // lossless -> overflow, capped sum
+        r.record_tenant_psnr("a", -3.0); // clamps into bucket 0
+        r.record_tenant_psnr("b", 200.0); // beyond the finite range
+        let snap = r.tenant_psnr_snapshot();
+        assert_eq!(snap.len(), 2);
+        let (ref name, h) = snap[0];
+        assert_eq!(name, "a");
+        assert_eq!(h.count, 4);
+        assert_eq!(h.buckets[5], 2);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.overflow, 1);
+        let expect = 57.3 + 57.9 + PSNR_CAP_DB + 0.0;
+        assert!((h.sum_db - expect).abs() < 1e-9, "{}", h.sum_db);
+        assert!((h.mean_db() - expect / 4.0).abs() < 1e-9);
+        assert_eq!(snap[1].1.overflow, 1);
+        // NaN is clamped, never poisons the sum
+        r.record_tenant_psnr("a", f64::NAN);
+        let snap = r.tenant_psnr_snapshot();
+        assert!(snap[0].1.sum_db.is_finite());
+        assert_eq!(snap[0].1.buckets[0], 2);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 //! block ranges in parallel, and each sealed chunk's sub-frames compress
 //! in parallel.
 use super::format::{ChunkEntry, CoeffCodec, CzbFile, ShuffleMode, Stage1, FORMAT_VERSION};
+use super::quality::{block_quality, AchievedQuality, Bound, ChunkQuality};
 use super::stage1::{codec_for, Stage1Codec, Stage1Scratch};
 use crate::cluster::{self, Execute, ScopedExec, SpanQueue};
 use crate::codec::stage2::{
@@ -76,6 +77,13 @@ impl WaveletEngine for NativeEngine {
 pub struct PipelineConfig {
     pub bs: usize,
     pub stage1: Stage1,
+    /// Error-bound contract. When not [`Bound::None`], the stage-1
+    /// knob is resolved from it per field (via
+    /// [`super::stage1::Stage1Codec::apply_bound`] against the field
+    /// range) and the contract is recorded in the `.czb` v5 header.
+    /// The configured codec must honor the bound's kind — callers
+    /// validate the pairing before compressing.
+    pub bound: Bound,
     pub stage2: Codec,
     pub shuffle: ShuffleMode,
     /// Private per-thread buffer capacity before stage 2 runs (paper: 4 MB).
@@ -103,6 +111,7 @@ impl PipelineConfig {
         Self {
             bs,
             stage1,
+            bound: Bound::None,
             stage2,
             shuffle: ShuffleMode::None,
             chunk_bytes: 4 << 20,
@@ -132,6 +141,11 @@ impl PipelineConfig {
         self.nthreads = n.max(1);
         self
     }
+
+    pub fn with_bound(mut self, b: Bound) -> Self {
+        self.bound = b;
+        self
+    }
 }
 
 /// Result of compressing one field.
@@ -147,6 +161,9 @@ pub struct CompressStats {
     pub t_stage1: f64,
     /// Wall-clock seconds spent in stage 2 (shuffle + lossless codec).
     pub t_stage2: f64,
+    /// Quality the stream actually achieved, folded from the measured
+    /// per-chunk column that the `.czb` v5 header records.
+    pub quality: AchievedQuality,
 }
 
 impl CompressStats {
@@ -203,6 +220,9 @@ struct ThreadChunk {
     nblocks: u32,
     rawsize: u32,
     payload: Vec<u8>,
+    /// Measured achieved error of this chunk's blocks (decode-after-
+    /// encode), folded in block order.
+    quality: ChunkQuality,
 }
 
 /// Apply the chunk preconditioner, returning the stage-2 input (either
@@ -236,6 +256,7 @@ fn seal_chunk(
     stage2: &dyn Stage2Codec,
     frame_raw: usize,
     shuf: &mut Vec<u8>,
+    quality: ChunkQuality,
     chunks: &mut Vec<ThreadChunk>,
 ) {
     if nblocks == 0 {
@@ -245,7 +266,7 @@ fn seal_chunk(
     let to_compress = preconditioned(raw, shuffle_mode, shuf);
     let mut payload = Vec::new();
     compress_framed(stage2, to_compress, frame_raw, &mut payload);
-    chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload });
+    chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload, quality });
     raw.clear();
 }
 
@@ -272,6 +293,20 @@ pub(crate) fn compress_field_core(
 ) -> CompressedStream {
     let stats = FieldStats::compute(&field.data);
     let range = stats.range() as f32;
+    // resolve the contract onto the native knob now that the field
+    // range is known; the resolved knob is what the header serializes.
+    // honors() is validated where configs are built (CLI, engine,
+    // service), so a failure here is a caller bug.
+    let cfg = {
+        let mut c = *cfg;
+        if !matches!(c.bound, Bound::None) {
+            c.stage1 = codec_for(&c.stage1)
+                .apply_bound(&c.stage1, &c.bound, range)
+                .expect("configured stage-1 codec honors the bound (validated at config time)");
+        }
+        c
+    };
+    let cfg = &cfg;
     let eps_abs = eps_abs_of(&cfg.stage1, range);
     let grid = BlockGrid::new(field, cfg.bs);
     let nblocks = grid.nblocks();
@@ -311,6 +346,7 @@ pub(crate) fn compress_field_core(
         });
         offset += c.payload.len() as u64;
     }
+    let chunk_quality: Vec<ChunkQuality> = merged.iter().map(|c| c.quality).collect();
     let czb = CzbFile {
         name: name.to_string(),
         nx: field.nx as u32,
@@ -327,7 +363,13 @@ pub(crate) fn compress_field_core(
         nblocks: nblocks as u32,
         chunks,
         chunk_crcs: merged.iter().map(|c| crate::util::crc32c::crc32c(&c.payload)).collect(),
+        bound: cfg.bound,
+        chunk_quality,
     };
+    // fold the recorded column exactly the way a reader of this header
+    // will, so `stats.quality` and `parse_header(..).achieved_quality()`
+    // agree bit-for-bit
+    let quality = czb.achieved_quality().expect("current writer version records quality");
     let stats = CompressStats {
         raw_bytes: field.nbytes(),
         compressed_bytes: offset as usize,
@@ -336,6 +378,7 @@ pub(crate) fn compress_field_core(
         stats,
         t_stage1: t1_total,
         t_stage2: t2_total,
+        quality,
     };
     CompressedStream { czb, payloads: merged.into_iter().map(|c| c.payload).collect(), stats }
 }
@@ -379,9 +422,16 @@ fn worker(
     let frame_raw = frame_raw_of(cfg);
     let pre_transform = codec.pre_transform(&cfg.stage1);
     let batch = if pre_transform.is_some() { cfg.batch.max(1) } else { 1 };
+    // achieved-quality measurement: decode every encoded block back and
+    // compare against the original samples. Copy is bit-exact, so its
+    // column is zero without the decode.
+    let measure = !matches!(cfg.stage1, Stage1::Copy);
     // worker-owned scratch, allocated once; the per-block loop below
     // performs no further heap allocation
     let mut batch_buf = vec![0f32; batch * vol];
+    let mut orig_buf =
+        if measure && pre_transform.is_some() { vec![0f32; batch * vol] } else { Vec::new() };
+    let mut dec_buf = if measure { vec![0f32; vol] } else { Vec::new() };
     let mut raw: Vec<u8> = Vec::with_capacity(cfg.chunk_bytes + vol * 4 + 64);
     let mut shuf: Vec<u8> = Vec::new();
     let mut scratch = Stage1Scratch::default();
@@ -393,6 +443,7 @@ fn worker(
         let (lo, hi) = (span.start, span.end);
         let mut chunk_first = lo as u32;
         let mut chunk_count = 0u32;
+        let mut chunk_q = ChunkQuality::ZERO;
         let mut id = lo;
         while id < hi {
             let n = batch.min(hi - id);
@@ -402,9 +453,15 @@ fn worker(
                 batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
             }
             if let Some(kind) = pre_transform {
+                // the forward transform overwrites the batch in place:
+                // keep the original samples for the error measurement
+                if measure {
+                    orig_buf[..n * vol].copy_from_slice(&batch_buf[..n * vol]);
+                }
                 engine.forward_batch(kind, &mut batch_buf[..n * vol], bs, levels);
             }
             for j in 0..n {
+                let pstart = raw.len();
                 encode_block_payload(
                     codec,
                     &cfg.stage1,
@@ -414,6 +471,24 @@ fn worker(
                     &mut raw,
                     &mut scratch,
                 );
+                if measure {
+                    codec
+                        .decode_block(
+                            &cfg.stage1,
+                            &raw[pstart + 4..],
+                            bs,
+                            engine,
+                            &mut scratch,
+                            &mut dec_buf,
+                        )
+                        .expect("self-decode of a just-encoded block");
+                    let orig = if pre_transform.is_some() {
+                        &orig_buf[j * vol..(j + 1) * vol]
+                    } else {
+                        &batch_buf[j * vol..(j + 1) * vol]
+                    };
+                    chunk_q.merge(&block_quality(orig, &dec_buf));
+                }
                 chunk_count += 1;
                 if raw.len() >= cfg.chunk_bytes {
                     t1 += t.elapsed().as_secs_f64();
@@ -426,11 +501,13 @@ fn worker(
                         stage2,
                         frame_raw,
                         &mut shuf,
+                        chunk_q,
                         &mut chunks,
                     );
                     t2 += t2s.elapsed().as_secs_f64();
                     chunk_first = (id + j + 1) as u32;
                     chunk_count = 0;
+                    chunk_q = ChunkQuality::ZERO;
                     // restart the stage-1 clock: the seal already accounted
                     // for the elapsed stage-1 time (the seed double-counted
                     // it at batch end)
@@ -450,6 +527,7 @@ fn worker(
             stage2,
             frame_raw,
             &mut shuf,
+            chunk_q,
             &mut chunks,
         );
         t2 += t2s.elapsed().as_secs_f64();
@@ -481,6 +559,7 @@ fn compress_wide(
     let frame_raw = frame_raw_of(cfg);
     let pre_transform = codec.pre_transform(&cfg.stage1);
     let batch = if pre_transform.is_some() { cfg.batch.max(1) } else { 1 };
+    let measure = !matches!(cfg.stage1, Stage1::Copy);
     let nblocks = grid.nblocks();
     let span = blocks_per_span(bs, cfg.chunk_bytes);
     let mut chunks: Vec<ThreadChunk> = Vec::new();
@@ -491,12 +570,20 @@ fn compress_wide(
         let hi = (lo + span).min(nblocks);
         let t = std::time::Instant::now();
         // stage 1: encode the span's blocks in parallel sub-ranges; the
-        // per-block bytes are position-independent, so merging the parts
-        // in block order reproduces the serial stream exactly
+        // per-block bytes (and per-block quality records) are
+        // position-independent, so merging the parts in block order
+        // reproduces the serial stream exactly
         let queue = SpanQueue::new(hi - lo, batch);
         let m = nthreads.min(hi - lo).max(1);
-        let parts: Vec<Vec<(usize, Vec<u8>, Vec<u32>)>> = cluster::run_on(exec, m, |_| {
+        type WidePart = (usize, Vec<u8>, Vec<u32>, Vec<ChunkQuality>);
+        let parts: Vec<Vec<WidePart>> = cluster::run_on(exec, m, |_| {
             let mut batch_buf = vec![0f32; batch * vol];
+            let mut orig_buf = if measure && pre_transform.is_some() {
+                vec![0f32; batch * vol]
+            } else {
+                Vec::new()
+            };
+            let mut dec_buf = if measure { vec![0f32; vol] } else { Vec::new() };
             let mut scratch = Stage1Scratch::default();
             let mut scratch_block = Block::zeros(bs);
             let mut mine = Vec::new();
@@ -504,6 +591,7 @@ fn compress_wide(
                 let (slo, shi) = (lo + sub.start, lo + sub.end);
                 let mut bytes = Vec::new();
                 let mut sizes = Vec::with_capacity(shi - slo);
+                let mut quals = Vec::with_capacity(if measure { shi - slo } else { 0 });
                 let mut id = slo;
                 while id < shi {
                     let n = batch.min(shi - id);
@@ -512,6 +600,9 @@ fn compress_wide(
                         batch_buf[j * vol..(j + 1) * vol].copy_from_slice(&scratch_block.data);
                     }
                     if let Some(kind) = pre_transform {
+                        if measure {
+                            orig_buf[..n * vol].copy_from_slice(&batch_buf[..n * vol]);
+                        }
                         engine.forward_batch(kind, &mut batch_buf[..n * vol], bs, levels);
                     }
                     for j in 0..n {
@@ -526,33 +617,58 @@ fn compress_wide(
                             &mut scratch,
                         );
                         sizes.push((bytes.len() - before) as u32);
+                        if measure {
+                            codec
+                                .decode_block(
+                                    &cfg.stage1,
+                                    &bytes[before + 4..],
+                                    bs,
+                                    engine,
+                                    &mut scratch,
+                                    &mut dec_buf,
+                                )
+                                .expect("self-decode of a just-encoded block");
+                            let orig = if pre_transform.is_some() {
+                                &orig_buf[j * vol..(j + 1) * vol]
+                            } else {
+                                &batch_buf[j * vol..(j + 1) * vol]
+                            };
+                            quals.push(block_quality(orig, &dec_buf));
+                        }
                     }
                     id += n;
                 }
-                mine.push((slo, bytes, sizes));
+                mine.push((slo, bytes, sizes, quals));
             }
             mine
         });
-        let mut parts: Vec<(usize, Vec<u8>, Vec<u32>)> = parts.into_iter().flatten().collect();
+        let mut parts: Vec<WidePart> = parts.into_iter().flatten().collect();
         parts.sort_by_key(|p| p.0);
         let mut raw: Vec<u8> = Vec::new();
         let mut sizes: Vec<u32> = Vec::with_capacity(hi - lo);
-        for (_, bytes, s) in &parts {
+        let mut quals: Vec<ChunkQuality> = Vec::new();
+        for (_, bytes, s, q) in &parts {
             raw.extend_from_slice(bytes);
             sizes.extend_from_slice(s);
+            quals.extend_from_slice(q);
         }
         t1 += t.elapsed().as_secs_f64();
 
         // seal walk: replicate the span worker's boundary rule exactly —
-        // seal when the bytes since the last seal reach chunk_bytes
+        // seal when the bytes since the last seal reach chunk_bytes,
+        // folding the per-block quality records in the same block order
         let t2s = std::time::Instant::now();
         let mut chunk_first = lo;
         let mut chunk_count = 0u32;
+        let mut chunk_q = ChunkQuality::ZERO;
         let mut start_byte = 0usize;
         let mut cum = 0usize;
         for (j, &sz) in sizes.iter().enumerate() {
             cum += sz as usize;
             chunk_count += 1;
+            if measure {
+                chunk_q.merge(&quals[j]);
+            }
             if cum - start_byte >= cfg.chunk_bytes {
                 seal_chunk_wide(
                     exec,
@@ -564,11 +680,13 @@ fn compress_wide(
                     frame_raw,
                     nthreads,
                     &mut shuf,
+                    chunk_q,
                     &mut chunks,
                 );
                 start_byte = cum;
                 chunk_first = lo + j + 1;
                 chunk_count = 0;
+                chunk_q = ChunkQuality::ZERO;
             }
         }
         seal_chunk_wide(
@@ -581,6 +699,7 @@ fn compress_wide(
             frame_raw,
             nthreads,
             &mut shuf,
+            chunk_q,
             &mut chunks,
         );
         t2 += t2s.elapsed().as_secs_f64();
@@ -602,6 +721,7 @@ fn seal_chunk_wide(
     frame_raw: usize,
     nthreads: usize,
     shuf: &mut Vec<u8>,
+    quality: ChunkQuality,
     chunks: &mut Vec<ThreadChunk>,
 ) {
     if nblocks == 0 {
@@ -636,7 +756,7 @@ fn seal_chunk_wide(
         // single shared container writer
         assemble_framed(&frames, &mut payload);
     }
-    chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload });
+    chunks.push(ThreadChunk { first_block, nblocks, rawsize, payload, quality });
 }
 
 #[cfg(test)]

@@ -40,6 +40,7 @@ use super::compressor::{CompressStats, WaveletEngine};
 use super::decompressor::BlockReader;
 use super::engine::{CompressParams, Engine};
 use super::format::{CzbFile, ERR_TRUNCATED_HEADER};
+use super::quality::{AchievedQuality, Bound, ACHIEVED_WIRE_LEN, BOUND_WIRE_LEN};
 use crate::core::Field3;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -57,26 +58,39 @@ pub const DEFAULT_DATASET_CACHE_CHUNKS: usize = 32;
 pub const CZS_MAGIC: &[u8; 4] = b"CZS1";
 /// Trailer magic, the last four bytes of every archive.
 pub const CZS_TRAILER_MAGIC: &[u8; 4] = b"CZSE";
-/// Container version the writer emits. v2 (current) adds a CRC32C per
-/// trailer entry, covering the quantity's whole `.czb` section; v1
-/// archives (no digest column) still open, with `crc: None`.
-pub const CZS_VERSION: u8 = 2;
+/// Container version the writer emits. v2 adds a CRC32C per trailer
+/// entry, covering the quantity's whole `.czb` section; v3 (current)
+/// appends per-quantity quality metadata — the error-bound contract the
+/// section was compressed under and the achieved-quality summary folded
+/// from its recorded per-chunk column — so `czb info` on a many-GB
+/// archive reports every quantity's contract without touching a single
+/// section. v1/v2 archives still open, with `crc: None` /
+/// `bound: Bound::None, quality: None`.
+pub const CZS_VERSION: u8 = 3;
 const HEADER_LEN: usize = 8;
 const TRAILER_TAIL: usize = 12; // u32 count | u32 table_bytes | magic
 /// Transient-error retry budget for positioned file reads.
 const READ_RETRIES: u32 = 8;
 
 /// One quantity's location inside a `.czs` archive.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantityEntry {
     pub name: String,
     /// Byte offset of the quantity's `.czb` section.
     pub offset: u64,
     /// Length of the section in bytes.
     pub len: u64,
-    /// CRC32C of the whole section (v2 trailers); `None` on v1
+    /// CRC32C of the whole section (v≥2 trailers); `None` on v1
     /// archives, which carry no digests.
     pub crc: Option<u32>,
+    /// Error-bound contract the section was compressed under (v≥3
+    /// trailers; [`Bound::None`] on older archives and unbounded
+    /// sections).
+    pub bound: Bound,
+    /// Achieved-quality summary folded from the section's recorded
+    /// per-chunk column (v≥3 trailers); `None` on older archives and on
+    /// repackaged sections whose `.czb` predates v5.
+    pub quality: Option<AchievedQuality>,
 }
 
 /// Streaming `.czs` writer: sections go out as they are compressed, the
@@ -121,7 +135,7 @@ impl<W: Write> DatasetWriter<W> {
         let crc = counter.crc.finish();
         match result {
             Ok(stats) => {
-                self.push_entry(name, offset, len, crc);
+                self.push_entry(name, offset, len, crc, params.bound, Some(stats.quality));
                 Ok(stats)
             }
             Err(e) => {
@@ -142,15 +156,27 @@ impl<W: Write> DatasetWriter<W> {
     /// here instead.
     pub fn write_section(&mut self, name: &str, czb: &[u8]) -> std::io::Result<()> {
         self.check_name(name)?;
-        if let Err(e) = CzbFile::parse_header(czb) {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("section {name} is not a valid .czb stream: {e}"),
-            ));
-        }
+        let file = match CzbFile::parse_header(czb) {
+            Ok((file, _)) => file,
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("section {name} is not a valid .czb stream: {e}"),
+                ))
+            }
+        };
         let offset = self.pos;
         self.sink.write_all(czb)?;
-        self.push_entry(name, offset, czb.len() as u64, crate::util::crc32c::crc32c(czb));
+        // trailer metadata comes from the section's own header, so
+        // repackaged legacy (v≤4) streams record bound None / no quality
+        self.push_entry(
+            name,
+            offset,
+            czb.len() as u64,
+            crate::util::crc32c::crc32c(czb),
+            file.bound,
+            file.achieved_quality(),
+        );
         Ok(())
     }
 
@@ -170,9 +196,24 @@ impl<W: Write> DatasetWriter<W> {
         Ok(())
     }
 
-    fn push_entry(&mut self, name: &str, offset: u64, len: u64, crc: u32) {
+    fn push_entry(
+        &mut self,
+        name: &str,
+        offset: u64,
+        len: u64,
+        crc: u32,
+        bound: Bound,
+        quality: Option<AchievedQuality>,
+    ) {
         self.pos += len;
-        self.entries.push(QuantityEntry { name: name.to_string(), offset, len, crc: Some(crc) });
+        self.entries.push(QuantityEntry {
+            name: name.to_string(),
+            offset,
+            len,
+            crc: Some(crc),
+            bound,
+            quality,
+        });
     }
 
     /// Quantities written so far.
@@ -190,6 +231,20 @@ impl<W: Write> DatasetWriter<W> {
             table.extend_from_slice(&e.len.to_le_bytes());
             let crc = e.crc.expect("writer entries always carry a digest");
             table.extend_from_slice(&crc.to_le_bytes());
+            // v3 quality metadata: the contract, then a presence byte and
+            // a fixed-size achieved summary (zeroed when absent, keeping
+            // the entries fixed-width per version)
+            table.extend_from_slice(&e.bound.encode());
+            match &e.quality {
+                Some(q) => {
+                    table.push(1);
+                    table.extend_from_slice(&q.encode());
+                }
+                None => {
+                    table.push(0);
+                    table.extend_from_slice(&[0u8; ACHIEVED_WIRE_LEN]);
+                }
+            }
         }
         self.sink.write_all(&table)?;
         self.sink.write_all(&(self.entries.len() as u32).to_le_bytes())?;
@@ -383,7 +438,7 @@ impl SectionSource {
     }
 }
 
-/// Validate the 8-byte archive header and return its version (1 or 2 —
+/// Validate the 8-byte archive header and return its version (1..=3 —
 /// the version decides the trailer entry layout).
 fn check_archive_header(head: &[u8]) -> Result<u8, String> {
     if &head[..4] != CZS_MAGIC {
@@ -417,8 +472,15 @@ fn parse_entry_table(
     version: u8,
 ) -> Result<Vec<QuantityEntry>, String> {
     // v1 entries: u8 name_len | name | u64 offset | u64 len; v2 appends
-    // a u32 section CRC
-    let fixed = if version >= 2 { 20 } else { 16 };
+    // a u32 section CRC; v3 appends the bound contract, a presence byte
+    // and the fixed-width achieved-quality summary
+    let fixed = if version >= 3 {
+        20 + BOUND_WIRE_LEN + 1 + ACHIEVED_WIRE_LEN
+    } else if version >= 2 {
+        20
+    } else {
+        16
+    };
     // every entry serializes to >= 1 + fixed bytes, so a count the
     // table cannot hold is corrupt — reject it before sizing any
     // allocation by it
@@ -454,6 +516,37 @@ fn parse_entry_table(
         } else {
             None
         };
+        let (bound, quality) = if version >= 3 {
+            let bound =
+                Bound::decode(table[pos..pos + BOUND_WIRE_LEN].try_into().unwrap())
+                    .map_err(|e| format!("czs entry {name}: {e}"))?;
+            pos += BOUND_WIRE_LEN;
+            let present = table[pos];
+            pos += 1;
+            let qbytes: &[u8; ACHIEVED_WIRE_LEN] =
+                table[pos..pos + ACHIEVED_WIRE_LEN].try_into().unwrap();
+            pos += ACHIEVED_WIRE_LEN;
+            let quality = match present {
+                0 => {
+                    // absent quality must leave its slot zeroed, so a
+                    // flipped presence byte cannot hide stale data
+                    if qbytes.iter().any(|&b| b != 0) {
+                        return Err(format!(
+                            "czs entry {name}: nonzero quality bytes marked absent"
+                        ));
+                    }
+                    None
+                }
+                1 => Some(
+                    AchievedQuality::decode(qbytes)
+                        .map_err(|e| format!("czs entry {name}: {e}"))?,
+                ),
+                p => return Err(format!("czs entry {name}: bad quality presence byte {p}")),
+            };
+            (bound, quality)
+        } else {
+            (Bound::None, None)
+        };
         let end = offset
             .checked_add(len)
             .ok_or_else(|| "czs section overflow".to_string())?;
@@ -463,7 +556,7 @@ fn parse_entry_table(
         if !seen.insert(name) {
             return Err(format!("duplicate czs quantity name {name}"));
         }
-        entries.push(QuantityEntry { name: name.to_string(), offset, len, crc });
+        entries.push(QuantityEntry { name: name.to_string(), offset, len, crc, bound, quality });
     }
     if pos != table.len() {
         return Err("czs trailer table has trailing garbage".into());
@@ -1125,8 +1218,9 @@ mod tests {
         w.write_quantity(&engine, &f, "qa", &params).unwrap();
         w.write_quantity(&engine, &f, "qb", &params).unwrap();
         let bytes = w.finish().unwrap();
-        // table layout: 2 entries x (1 + 2 + 16 + 4) = 46 bytes before the tail
-        let table_start = bytes.len() - TRAILER_TAIL - 46;
+        // table layout: 2 entries x (1 + 2 + 16 + 4 + 9 + 1 + 32) = 130
+        // bytes before the tail
+        let table_start = bytes.len() - TRAILER_TAIL - 130;
         // corrupt the first name to invalid UTF-8
         let mut bad = bytes.clone();
         bad[table_start + 1] = 0xFF;
@@ -1135,7 +1229,7 @@ mod tests {
         assert!(err.contains("UTF-8"), "{err}");
         // rename the second entry to alias the first
         let mut dup = bytes.clone();
-        let second_name = table_start + 23 + 1;
+        let second_name = table_start + 65 + 1;
         dup[second_name..second_name + 2].copy_from_slice(b"qa");
         let err = Dataset::from_bytes(dup).unwrap_err();
         assert!(err.contains("duplicate"), "{err}");
@@ -1222,8 +1316,9 @@ mod tests {
         let mut w = DatasetWriter::new(Vec::new()).unwrap();
         w.write_quantity(&engine, &f, "p", &params).unwrap();
         let bytes = w.finish().unwrap();
-        // entry layout: u8 len | name | u64 offset | u64 len | u32 crc
-        let table_start = bytes.len() - TRAILER_TAIL - (1 + 1 + 16 + 4);
+        // entry layout: u8 len | name | u64 offset | u64 len | u32 crc |
+        // 9B bound | u8 presence | 32B quality
+        let table_start = bytes.len() - TRAILER_TAIL - (1 + 1 + 16 + 4 + 9 + 1 + 32);
         let len_pos = table_start + 1 + 1 + 8;
         let mut bad = bytes.clone();
         bad[len_pos..len_pos + 8].copy_from_slice(&u64::MAX.to_le_bytes());
@@ -1271,6 +1366,90 @@ mod tests {
         future.extend_from_slice(&vec![0u8; 32]);
         let err = Dataset::from_bytes(future).unwrap_err();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v3_trailers_record_bound_and_achieved_quality() {
+        use crate::codec::Codec;
+        use crate::pipeline::format::Stage1;
+        let engine = Engine::builder().threads(2).chunk_bytes(16 << 10).build();
+        let bounded = CompressParams::new(32, Stage1::Sz { eb_rel: 0.0 }, Codec::ZlibDef)
+            .with_bound(Bound::Rel(1e-3));
+        let unbounded = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 55);
+        let mut w = DatasetWriter::new(Vec::new()).unwrap();
+        let stats = w.write_quantity(&engine, &f, "p", &bounded).unwrap();
+        w.write_quantity(&engine, &f, "rho", &unbounded).unwrap();
+        let ds = Dataset::from_bytes(w.finish().unwrap()).unwrap();
+        // the bounded quantity records its contract and achieved summary,
+        // matching the section's own header bit for bit
+        let e = &ds.entries()[0];
+        assert_eq!(e.bound, Bound::Rel(1e-3));
+        let q = e.quality.expect("v3 writer records achieved quality");
+        assert_eq!(q, stats.quality);
+        let (hdr, _) = CzbFile::parse_header(ds.section("p").unwrap()).unwrap();
+        assert_eq!(q, hdr.achieved_quality().unwrap());
+        e.bound.check(&q).expect("contract must hold");
+        // the unbounded quantity still carries its measured quality,
+        // under the default (vacuous) contract
+        let e = &ds.entries()[1];
+        assert_eq!(e.bound, Bound::None);
+        assert!(e.quality.is_some());
+        // a flipped presence byte cannot smuggle stale quality bytes:
+        // zero the flag on the bounded entry and reparse
+        let bytes = {
+            let mut w = DatasetWriter::new(Vec::new()).unwrap();
+            w.write_quantity(&engine, &f, "p", &bounded).unwrap();
+            w.finish().unwrap()
+        };
+        let table_start = bytes.len() - TRAILER_TAIL - (1 + 1 + 16 + 4 + 9 + 1 + 32);
+        let presence = table_start + 1 + 1 + 16 + 4 + 9;
+        assert_eq!(bytes[presence], 1);
+        let mut bad = bytes.clone();
+        bad[presence] = 0;
+        let err = Dataset::from_bytes(bad).unwrap_err();
+        assert!(err.contains("marked absent"), "{err}");
+        // and an out-of-range presence value is rejected outright
+        let mut bad = bytes;
+        bad[presence] = 7;
+        let err = Dataset::from_bytes(bad).unwrap_err();
+        assert!(err.contains("presence"), "{err}");
+    }
+
+    #[test]
+    fn v2_archives_still_parse_without_quality() {
+        // hand-build the czs v2 layout: 20-byte fixed entries ending at
+        // the CRC column — what every archive written before v3 looks
+        // like on disk. It must parse with no bound and no quality.
+        let engine = Engine::builder().threads(1).build();
+        let params = CompressParams::paper_default(1e-3);
+        let f = smooth_field(32, 43);
+        let (czb, _) = engine.compress_vec(&f, "p", &params);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CZS_MAGIC);
+        bytes.push(2);
+        bytes.extend_from_slice(&[0u8; 3]);
+        let offset = bytes.len() as u64;
+        bytes.extend_from_slice(&czb);
+        let mut table = Vec::new();
+        table.push(1u8);
+        table.extend_from_slice(b"p");
+        table.extend_from_slice(&offset.to_le_bytes());
+        table.extend_from_slice(&(czb.len() as u64).to_le_bytes());
+        table.extend_from_slice(&crate::util::crc32c::crc32c(&czb).to_le_bytes());
+        let table_len = table.len() as u32;
+        bytes.extend_from_slice(&table);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&table_len.to_le_bytes());
+        bytes.extend_from_slice(CZS_TRAILER_MAGIC);
+        let ds = Dataset::from_bytes(bytes).unwrap();
+        let e = &ds.entries()[0];
+        assert!(e.crc.is_some());
+        assert_eq!(e.bound, Bound::None);
+        assert_eq!(e.quality, None);
+        let (back, _) = ds.read_quantity("p", &engine).unwrap();
+        let (expected, _) = engine.decompress_bytes(&czb).unwrap();
+        assert!(bits_equal(&back.data, &expected.data));
     }
 
     #[test]

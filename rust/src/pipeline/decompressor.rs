@@ -1566,9 +1566,14 @@ mod tests {
         let (bytes, _) = compress_field(&f, "p", &cfg, &NativeEngine);
         let (file, _) = CzbFile::parse_header(&bytes).unwrap();
         // rawsize sits 12 bytes into chunk 0's 24-byte index entry; the
-        // v4 header ends with nchunks CRCs plus the header digest
+        // v5 header ends with nchunks CRCs, the bound + per-chunk
+        // quality column, and the header digest
         let hsize = CzbFile::header_size(file.name.len(), file.chunks.len());
-        let entry0 = hsize - file.chunks.len() * 24 - file.chunks.len() * 4 - 4;
+        let entry0 = hsize
+            - file.chunks.len() * 24
+            - file.chunks.len() * 4
+            - (9 + file.chunks.len() * 12)
+            - 4;
         let mut bad = bytes.clone();
         bad[entry0 + 12..entry0 + 16].copy_from_slice(&u32::MAX.to_le_bytes());
         // re-seal the header digest so the plausibility bound (not the

@@ -44,6 +44,7 @@ use super::decompressor::{
     SectionJob,
 };
 use super::format::{CzbFile, ShuffleMode, Stage1};
+use super::quality::Bound;
 use crate::cluster::WorkerPool;
 use crate::codec::Codec;
 use crate::core::Field3;
@@ -61,11 +62,18 @@ pub struct CompressParams {
     pub stage1: Stage1,
     pub stage2: Codec,
     pub shuffle: ShuffleMode,
+    /// Error-bound contract ([`Bound::None`] by default). When set, the
+    /// stage-1 knob is resolved from it per field and the contract plus
+    /// the achieved per-chunk quality are recorded in the `.czb` v5
+    /// header. The stage-1 codec must honor the bound's kind
+    /// ([`super::stage1::Stage1Codec::honors`]) — callers validate the
+    /// pairing when building the params.
+    pub bound: Bound,
 }
 
 impl CompressParams {
     pub fn new(bs: usize, stage1: Stage1, stage2: Codec) -> Self {
-        Self { bs, stage1, stage2, shuffle: ShuffleMode::None }
+        Self { bs, stage1, stage2, shuffle: ShuffleMode::None, bound: Bound::None }
     }
 
     /// The paper's production scheme: W³ai + shuffle + ZLIB.
@@ -78,9 +86,20 @@ impl CompressParams {
         self
     }
 
+    pub fn with_bound(mut self, b: Bound) -> Self {
+        self.bound = b;
+        self
+    }
+
     /// The format-affecting subset of a legacy [`PipelineConfig`].
     pub fn from_config(cfg: &PipelineConfig) -> Self {
-        Self { bs: cfg.bs, stage1: cfg.stage1, stage2: cfg.stage2, shuffle: cfg.shuffle }
+        Self {
+            bs: cfg.bs,
+            stage1: cfg.stage1,
+            stage2: cfg.stage2,
+            shuffle: cfg.shuffle,
+            bound: cfg.bound,
+        }
     }
 }
 
@@ -223,6 +242,7 @@ impl Engine {
     pub fn config_for(&self, params: &CompressParams) -> PipelineConfig {
         let mut cfg = PipelineConfig::new(params.bs, params.stage1, params.stage2);
         cfg.shuffle = params.shuffle;
+        cfg.bound = params.bound;
         cfg.chunk_bytes = self.chunk_bytes;
         cfg.frame_bytes = self.frame_bytes;
         cfg.batch = self.batch;
@@ -802,6 +822,43 @@ mod tests {
         // failed decodes are not counted as decompressions
         assert!(engine.decompress_bytes(b"junk").is_err());
         assert_eq!(reg.engine_decompress_calls.get(), 1);
+    }
+
+    #[test]
+    fn bound_contract_is_recorded_and_respected() {
+        use crate::pipeline::quality::Bound;
+        let engine = Engine::builder().threads(3).chunk_bytes(32 << 10).build();
+        let f = smooth_field(64, 33);
+        // sz honors Rel: the resolved knob must keep the recorded
+        // achieved error inside the stated contract
+        let params = CompressParams::new(32, Stage1::Sz { eb_rel: 0.0 }, Codec::ZlibDef)
+            .with_shuffle(ShuffleMode::Byte4)
+            .with_bound(Bound::Rel(1e-3));
+        let (bytes, stats) = engine.compress_vec(&f, "p", &params);
+        let (file, _) = CzbFile::parse_header(&bytes).unwrap();
+        assert_eq!(file.bound, Bound::Rel(1e-3));
+        assert_eq!(file.chunk_quality.len(), file.chunks.len());
+        let achieved = file.achieved_quality().expect("v5 records quality");
+        file.bound.check(&achieved).expect("contract must hold");
+        assert!(achieved.max_rel_err > 0.0, "sz at 1e-3 is genuinely lossy");
+        assert_eq!(stats.quality, achieved, "stats and header agree");
+        // the stream still roundtrips and is byte-identical across
+        // thread counts
+        let (back, _) = engine.decompress_bytes(&bytes).unwrap();
+        assert_eq!(back.data.len(), f.data.len());
+        let single = Engine::builder().threads(1).chunk_bytes(32 << 10).build();
+        let (bytes1, _) = single.compress_vec(&f, "p", &params);
+        assert_eq!(bytes, bytes1);
+        // a lossless contract on fpzip measures exactly zero error
+        let params = CompressParams::new(32, Stage1::Fpzip { prec: 32 }, Codec::ZlibDef)
+            .with_bound(Bound::Lossless);
+        let (bytes, stats) = engine.compress_vec(&f, "p", &params);
+        let (file, _) = CzbFile::parse_header(&bytes).unwrap();
+        let achieved = file.achieved_quality().unwrap();
+        assert_eq!(achieved.max_abs_err, 0.0);
+        assert_eq!(achieved.psnr_db, f64::INFINITY);
+        file.bound.check(&achieved).unwrap();
+        assert_eq!(stats.quality.max_abs_err, 0.0);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! ## `.czb` — one compressed quantity
 //!
-//! Layout (little endian, version 4):
+//! Layout (little endian, version 5):
 //! ```text
 //! magic "CZB1" | u8 version | u8 name_len | name bytes
 //! u32 nx ny nz | u32 bs
@@ -14,6 +14,8 @@
 //! u32 nblocks | u32 nchunks
 //! nchunks x { u64 offset | u32 csize | u32 rawsize | u32 first_block | u32 nblocks }
 //! nchunks x u32 chunk_crc32c        (version >= 4 only)
+//! bound: u8 kind | f64 value        (version >= 5 only)
+//! nchunks x { f32 max_abs_err | f64 sum_sq_err }   (version >= 5 only)
 //! u32 header_crc32c                 (version >= 4 only)
 //! chunk payloads...
 //! ```
@@ -42,8 +44,7 @@
 //!   accept it as unframed.
 //! * **v3** — adds the `u32 frame_raw` header field and framed chunk
 //!   payloads.
-//! * **v4** — adds end-to-end integrity checksums (current writer
-//!   version, [`FORMAT_VERSION`]): one CRC32C
+//! * **v4** — adds end-to-end integrity checksums: one CRC32C
 //!   ([`crate::util::crc32c`]) per compressed chunk payload, serialized
 //!   after the chunk index, followed by a whole-header CRC32C over every
 //!   preceding header byte (magic through the chunk-CRC list). The
@@ -52,11 +53,22 @@
 //!   payload is inflated (and by `czb verify` without decoding). The
 //!   CRCs are pure functions of the payload bytes, so v4 streams remain
 //!   byte-identical across thread counts.
+//! * **v5** — adds the error-bound contract (current writer version,
+//!   [`FORMAT_VERSION`]): the [`Bound`] the stream was compressed under
+//!   (`u8` kind + `f64` value; kind 0 = no contract) and one
+//!   [`ChunkQuality`] record per chunk (`f32` max pointwise error +
+//!   `f64` sum of squared error), measured at compression time by
+//!   decoding every encoded block. Both sit between the v4 chunk-CRC
+//!   column and the whole-header digest, which now covers them too. The
+//!   measurements are deterministic folds in block order, so v5 streams
+//!   remain byte-identical across thread counts and SIMD levels.
 //!
-//! Readers accept v1..=v4; `frame_raw == 0` on a parsed file means
+//! Readers accept v1..=v5; `frame_raw == 0` on a parsed file means
 //! "unframed legacy payloads" and is what v≤2 files report. Files below
 //! v4 carry no checksums ([`CzbFile::chunk_crcs`] parses empty) and
-//! decode bit-exactly with every integrity check skipped.
+//! decode bit-exactly with every integrity check skipped; files below
+//! v5 carry no contract ([`CzbFile::bound`] parses as [`Bound::None`]
+//! and [`CzbFile::chunk_quality`] empty).
 //!
 //! Within a chunk's *raw* stream every block is prefixed with its `u32`
 //! encoded size, so the decompressor can walk to any block after a single
@@ -98,6 +110,7 @@
 //! coordinator's file entry point builds archives at a temp path and
 //! renames on success so a mid-archive failure never leaves a
 //! trailer-less partial archive behind.
+use super::quality::{AchievedQuality, Bound, ChunkQuality, BOUND_WIRE_LEN, CHUNK_QUALITY_WIRE_LEN};
 use crate::codec::Codec;
 use crate::wavelet::WaveletKind;
 
@@ -196,18 +209,56 @@ impl Stage1 {
     }
 
     fn decode(b: &[u8; 12]) -> Result<Self, String> {
+        // every byte a variant does not use must be zero (what every
+        // writer emits), and tolerance parameters must be finite and
+        // non-negative — a crafted header cannot smuggle NaN/negative
+        // eps into the thresholding paths
+        let zero = |range: std::ops::Range<usize>| -> Result<(), String> {
+            if b[range.clone()].iter().any(|&v| v != 0) {
+                Err(format!("stage1 blob has nonzero unused bytes in {range:?}"))
+            } else {
+                Ok(())
+            }
+        };
         let param = f32::from_le_bytes(b[4..8].try_into().unwrap());
+        let tol = |name: &str| -> Result<f32, String> {
+            if !param.is_finite() || param < 0.0 {
+                Err(format!("stage1 {name} must be finite and >= 0, got {param}"))
+            } else {
+                Ok(param)
+            }
+        };
         Ok(match b[0] {
-            0 => Stage1::Copy,
-            1 => Stage1::Wavelet {
-                kind: WaveletKind::from_id(b[1]).ok_or("bad wavelet id")?,
-                eps_rel: param,
-                zbits: b[2],
-                coeff: CoeffCodec::from_id(b[3]).ok_or("bad coeff codec id")?,
-            },
-            2 => Stage1::Zfp { tol_rel: param },
-            3 => Stage1::Sz { eb_rel: param },
-            4 => Stage1::Fpzip { prec: b[1] },
+            0 => {
+                zero(1..12)?;
+                Stage1::Copy
+            }
+            1 => {
+                zero(8..12)?;
+                Stage1::Wavelet {
+                    kind: WaveletKind::from_id(b[1]).ok_or("bad wavelet id")?,
+                    eps_rel: tol("eps_rel")?,
+                    zbits: b[2],
+                    coeff: CoeffCodec::from_id(b[3]).ok_or("bad coeff codec id")?,
+                }
+            }
+            2 => {
+                zero(1..4)?;
+                zero(8..12)?;
+                Stage1::Zfp { tol_rel: tol("tol_rel")? }
+            }
+            3 => {
+                zero(1..4)?;
+                zero(8..12)?;
+                Stage1::Sz { eb_rel: tol("eb_rel")? }
+            }
+            4 => {
+                zero(2..12)?;
+                if !(1..=32).contains(&b[1]) {
+                    return Err(format!("fpzip prec must be 1..=32, got {}", b[1]));
+                }
+                Stage1::Fpzip { prec: b[1] }
+            }
             v => return Err(format!("bad stage1 id {v}")),
         })
     }
@@ -284,13 +335,21 @@ pub struct CzbFile {
     /// v≤3 files (the layouts carry no checksums); serialized and
     /// required (`len == chunks.len()`) for v≥4.
     pub chunk_crcs: Vec<u32>,
+    /// The error-bound contract the stream was compressed under.
+    /// [`Bound::None`] for v≤4 files (the layouts carry no contract).
+    pub bound: Bound,
+    /// One measured [`ChunkQuality`] per chunk, parallel to `chunks`.
+    /// Empty for v≤4 files; serialized and required
+    /// (`len == chunks.len()`) for v≥5.
+    pub chunk_quality: Vec<ChunkQuality>,
 }
 
 pub const MAGIC: &[u8; 4] = b"CZB1";
 
 /// Current writer version (framed stage-2 chunk payloads + CRC32C
-/// integrity checksums).
-pub const FORMAT_VERSION: u8 = 4;
+/// integrity checksums + error-bound contract with recorded per-chunk
+/// achieved quality).
+pub const FORMAT_VERSION: u8 = 5;
 
 /// Exact error [`CzbFile::parse_header`] returns when the buffer is
 /// merely too short. Callers feeding a growing header *prefix* (the
@@ -310,11 +369,45 @@ impl CzbFile {
         let frame_field = if version >= 3 { 4 } else { 0 };
         // v4: one u32 CRC per chunk plus the whole-header digest
         let crc_fields = if version >= 4 { nchunks * 4 + 4 } else { 0 };
+        // v5: the bound contract plus one quality record per chunk
+        let quality_fields =
+            if version >= 5 { BOUND_WIRE_LEN + nchunks * CHUNK_QUALITY_WIRE_LEN } else { 0 };
         4 + 1 + 1 + name_len + 16 + 12 + 2 + frame_field + 8 + 8 + nchunks * 24 + crc_fields
+            + quality_fields
     }
 
     pub fn global_range(&self) -> f32 {
         (self.global_max - self.global_min).max(f32::MIN_POSITIVE)
+    }
+
+    /// Total serialized stream length implied by the index: header plus
+    /// the chunk payloads laid back-to-back.
+    pub fn total_bytes(&self) -> u64 {
+        match self.chunks.last() {
+            Some(c) => c.offset + c.csize as u64,
+            None => Self::header_size_for(self.version, self.name.len(), 0) as u64,
+        }
+    }
+
+    /// The achieved quality this header records, folded from the v5
+    /// per-chunk column. `None` for v≤4 files — nothing was recorded.
+    /// PSNR is computed over the samples the compressor measured
+    /// (`nblocks * bs³`; edge blocks are padded and measured too), the
+    /// ratio over the true field bytes (`nx*ny*nz*4`).
+    pub fn achieved_quality(&self) -> Option<AchievedQuality> {
+        if self.version < 5 {
+            return None;
+        }
+        let bs = self.bs as u64;
+        let nsamples = self.nblocks as u64 * bs * bs * bs;
+        let raw = self.nx as u64 * self.ny as u64 * self.nz as u64 * 4;
+        Some(AchievedQuality::fold(
+            &self.chunk_quality,
+            self.global_range() as f64,
+            nsamples,
+            raw,
+            self.total_bytes(),
+        ))
     }
 
     /// Length of a chunk's stage-2 *uncompressed* stream: the raw block
@@ -373,6 +466,21 @@ impl CzbFile {
             for crc in &self.chunk_crcs {
                 out.extend_from_slice(&crc.to_le_bytes());
             }
+        }
+        if self.version >= 5 {
+            assert_eq!(
+                self.chunk_quality.len(),
+                self.chunks.len(),
+                "v5 headers need one quality record per chunk entry"
+            );
+            out.extend_from_slice(&self.bound.encode());
+            for q in &self.chunk_quality {
+                out.extend_from_slice(&q.encode());
+            }
+        }
+        if self.version >= 4 {
+            // the digest comes last and covers everything before it,
+            // including the v5 contract fields
             let digest = crate::util::crc32c::crc32c(&out[start..]);
             out.extend_from_slice(&digest.to_le_bytes());
         }
@@ -442,14 +550,33 @@ impl CzbFile {
         }
         let mut chunk_crcs = Vec::new();
         if version >= 4 {
-            need(nchunks * 4 + 4, pos)?;
+            need(nchunks * 4, pos)?;
             chunk_crcs.reserve_exact(nchunks);
             for _ in 0..nchunks {
                 chunk_crcs.push(rd_u32(pos));
                 pos += 4;
             }
+        }
+        let mut bound = Bound::None;
+        let mut chunk_quality = Vec::new();
+        if version >= 5 {
+            need(BOUND_WIRE_LEN + nchunks * CHUNK_QUALITY_WIRE_LEN, pos)?;
+            bound = Bound::decode(buf[pos..pos + BOUND_WIRE_LEN].try_into().unwrap())?;
+            pos += BOUND_WIRE_LEN;
+            chunk_quality.reserve_exact(nchunks);
+            for _ in 0..nchunks {
+                chunk_quality.push(ChunkQuality::decode(
+                    buf[pos..pos + CHUNK_QUALITY_WIRE_LEN].try_into().unwrap(),
+                )?);
+                pos += CHUNK_QUALITY_WIRE_LEN;
+            }
+        }
+        if version >= 4 {
             // whole-header digest: every byte from the magic up to (not
-            // including) the digest itself
+            // including) the digest itself; every truncation check above
+            // precedes this, so a growing prefix still reads as
+            // ERR_TRUNCATED_HEADER rather than a digest mismatch
+            need(4, pos)?;
             let stored = rd_u32(pos);
             let computed = crate::util::crc32c::crc32c(&buf[..pos]);
             if stored != computed {
@@ -476,6 +603,8 @@ impl CzbFile {
                 nblocks,
                 chunks,
                 chunk_crcs,
+                bound,
+                chunk_quality,
             },
             pos,
         ))
@@ -511,6 +640,11 @@ mod tests {
                 ChunkEntry { offset: 100, csize: 50, rawsize: 200, first_block: 300, nblocks: 212 },
             ],
             chunk_crcs: vec![0xDEAD_BEEF, 0x0BAD_F00D],
+            bound: Bound::Rel(1e-3),
+            chunk_quality: vec![
+                ChunkQuality { max_abs_err: 0.5, sum_sq_err: 12.25 },
+                ChunkQuality { max_abs_err: 0.75, sum_sq_err: 8.5 },
+            ],
         }
     }
 
@@ -530,6 +664,8 @@ mod tests {
         assert_eq!(g.frame_raw, f.frame_raw);
         assert_eq!(g.chunks, f.chunks);
         assert_eq!(g.chunk_crcs, f.chunk_crcs);
+        assert_eq!(g.bound, f.bound);
+        assert_eq!(g.chunk_quality, f.chunk_quality);
         assert_eq!((g.nx, g.ny, g.nz, g.bs), (f.nx, f.ny, f.nz, f.bs));
     }
 
@@ -547,10 +683,16 @@ mod tests {
                 buf.len(),
                 CzbFile::header_size_for(version, f.name.len(), f.chunks.len())
             );
-            // the legacy header lacks v3's frame_raw field and v4's CRC
-            // fields (one per chunk + the header digest)
+            // the legacy header lacks v3's frame_raw field, v4's CRC
+            // fields (one per chunk + the header digest), and v5's
+            // contract fields (bound + one quality record per chunk)
             assert_eq!(
-                buf.len() + 4 + f.chunks.len() * 4 + 4,
+                buf.len()
+                    + 4
+                    + f.chunks.len() * 4
+                    + 4
+                    + BOUND_WIRE_LEN
+                    + f.chunks.len() * CHUNK_QUALITY_WIRE_LEN,
                 CzbFile::header_size(f.name.len(), f.chunks.len())
             );
             let (g, consumed) = CzbFile::parse_header(&buf).unwrap();
@@ -558,9 +700,30 @@ mod tests {
             assert_eq!(g.version, version);
             assert_eq!(g.frame_raw, 0, "v{version} must parse as unframed");
             assert!(g.chunk_crcs.is_empty(), "v{version} carries no checksums");
+            assert_eq!(g.bound, Bound::None, "v{version} carries no contract");
+            assert!(g.chunk_quality.is_empty());
+            assert_eq!(g.achieved_quality(), None);
             assert_eq!(g.chunks, f.chunks);
             assert_eq!(g.stage1, f.stage1);
         }
+    }
+
+    #[test]
+    fn v4_headers_still_write_and_parse_without_quality() {
+        let mut f = sample();
+        f.version = 4;
+        f.bound = Bound::None;
+        f.chunk_quality.clear();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        assert_eq!(buf.len(), CzbFile::header_size_for(4, f.name.len(), f.chunks.len()));
+        let (g, consumed) = CzbFile::parse_header(&buf).unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(g.version, 4);
+        assert_eq!(g.chunk_crcs, f.chunk_crcs);
+        assert_eq!(g.bound, Bound::None);
+        assert!(g.chunk_quality.is_empty());
+        assert_eq!(g.achieved_quality(), None);
     }
 
     #[test]
@@ -687,5 +850,91 @@ mod tests {
         let mut prefixed = vec![0xEEu8; 11];
         f.write_header(&mut prefixed);
         assert_eq!(&prefixed[11..], &buf[..]);
+    }
+
+    #[test]
+    fn v5_headers_record_bound_and_achieved_quality() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_header(&mut buf);
+        let (g, _) = CzbFile::parse_header(&buf).unwrap();
+        let q = g.achieved_quality().expect("v5 records quality");
+        assert_eq!(q.max_abs_err, 0.75);
+        let range = g.global_range() as f64;
+        assert!((q.max_rel_err - 0.75 / range).abs() < 1e-12);
+        assert!(q.psnr_db.is_finite());
+        assert!(q.ratio > 1.0);
+        // the sample's recorded errors far exceed its Rel(1e-3) contract
+        assert!(g.bound.check(&q).is_err());
+    }
+
+    #[test]
+    fn stage1_decode_rejects_hostile_params() {
+        // NaN / infinite / negative tolerances must not reach the
+        // thresholding paths
+        for id in [1u8, 2, 3] {
+            for v in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1e-3] {
+                let mut b = [0u8; 12];
+                b[0] = id;
+                if id == 1 {
+                    b[1] = WaveletKind::Avg3.id();
+                }
+                b[4..8].copy_from_slice(&v.to_le_bytes());
+                assert!(Stage1::decode(&b).is_err(), "id {id} param {v} accepted");
+            }
+        }
+        // fpzip prec outside 1..=32
+        for prec in [0u8, 33, 255] {
+            let mut b = [0u8; 12];
+            b[0] = 4;
+            b[1] = prec;
+            assert!(Stage1::decode(&b).is_err(), "prec {prec} accepted");
+        }
+        // unused bytes must be zero (what every writer emits)
+        let mut b = Stage1::Copy.encode();
+        b[5] = 1;
+        assert!(Stage1::decode(&b).is_err());
+        let mut b = Stage1::Zfp { tol_rel: 1e-3 }.encode();
+        b[9] = 1;
+        assert!(Stage1::decode(&b).is_err());
+    }
+
+    #[test]
+    fn stage1_fuzz_random_blobs_roundtrip_or_reject() {
+        // random 12-byte blobs: decode never panics, anything it accepts
+        // re-encodes to the identical blob (canonical wire form), and
+        // every encoded valid value decodes back to itself
+        let mut rng = crate::util::prng::Pcg32::new(0xF0221);
+        let mut accepted = 0u32;
+        for _ in 0..20_000 {
+            let mut b = [0u8; 12];
+            for byte in &mut b {
+                *byte = (rng.next_u32() & 0xFF) as u8;
+            }
+            if let Ok(s) = Stage1::decode(&b) {
+                accepted += 1;
+                assert_eq!(s.encode(), b, "accepted blob must be canonical: {b:?} -> {s:?}");
+            }
+        }
+        // the valid space is tiny relative to 2^96: random blobs should
+        // almost never pass (nonzero padding bytes reject them)
+        assert!(accepted < 100, "{accepted} random blobs accepted");
+        // and genuine values roundtrip
+        let valid = [
+            Stage1::Copy,
+            Stage1::Wavelet {
+                kind: WaveletKind::Avg3,
+                eps_rel: 0.0,
+                zbits: 8,
+                coeff: CoeffCodec::Sz,
+            },
+            Stage1::Zfp { tol_rel: 1e-6 },
+            Stage1::Sz { eb_rel: 0.25 },
+            Stage1::Fpzip { prec: 1 },
+            Stage1::Fpzip { prec: 32 },
+        ];
+        for s in valid {
+            assert_eq!(Stage1::decode(&s.encode()).unwrap(), s, "{s:?}");
+        }
     }
 }

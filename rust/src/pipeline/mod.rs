@@ -121,6 +121,7 @@ pub mod dataset;
 pub mod decompressor;
 pub mod engine;
 pub mod format;
+pub mod quality;
 pub mod stage1;
 
 pub use chunk_cache::{ChunkCache, StreamId};
@@ -138,4 +139,7 @@ pub use decompressor::{
 };
 pub use engine::{CompressParams, Engine, EngineBuilder};
 pub use format::{CoeffCodec, CzbFile, ShuffleMode, Stage1, FORMAT_VERSION};
+pub use quality::{
+    AchievedQuality, Bound, BoundKind, ChunkQuality, ACHIEVED_WIRE_LEN, BOUND_WIRE_LEN,
+};
 pub use stage1::{Stage1Codec, Stage1Scratch};

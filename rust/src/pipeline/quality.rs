@@ -1,0 +1,483 @@
+//! Error-bound contracts: the cross-cutting quality layer.
+//!
+//! The stage-1 codecs each expose a *native* knob (`eps_rel`, `tol_rel`,
+//! `eb_rel`, `prec`) whose meaning is codec-specific. This module turns
+//! quality into a first-class [`Bound`] contract the user states once
+//! (`--abs-err`/`--rel-err`/`--psnr`/`--lossless`) and every layer
+//! threads through unchanged:
+//!
+//! * each [`super::stage1::Stage1Codec`] declares which [`BoundKind`]s it
+//!   can honor and maps a bound to its native knob
+//!   (`Stage1Codec::apply_bound`), keeping the existing knob fields as
+//!   the wire encoding;
+//! * compression *measures* the error it actually introduced — every
+//!   encoded block is decoded back and compared against the original —
+//!   and records one [`ChunkQuality`] per chunk in the `.czb` v5 header
+//!   (plus the contract itself), in deterministic block order so v5
+//!   streams stay byte-identical across thread counts and SIMD levels;
+//! * readers fold the recorded column into an [`AchievedQuality`]
+//!   (max abs/rel error, PSNR, compression ratio) and
+//!   [`Bound::check`] compares it against the stored contract — what
+//!   `czb verify --bounds` exits 3 on.
+//!
+//! The contract semantics are **pointwise and strict**: a codec may only
+//! claim to honor a kind if its encoder guarantees the bound on every
+//! sample (sz and zfp verify at encode time; copy and fpzip `prec=32`
+//! are exact). The wavelet path's ε-threshold is *not* a pointwise bound
+//! (level superposition can exceed it ~40-60x), so it honors only
+//! [`Bound::None`].
+//!
+//! PSNR contracts reduce to relative ones: `rmse <= max_abs_err`, so a
+//! pointwise bound of `range * 10^(-psnr/20)` guarantees
+//! `20*log10(range/rmse) >= psnr`.
+
+/// The kind of a [`Bound`], without its value — what codecs declare they
+/// can honor and what travels in `czb codecs` listings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundKind {
+    /// No contract: the native knob is used as given.
+    None,
+    /// Bit-exact roundtrip.
+    Lossless,
+    /// Pointwise absolute error.
+    Abs,
+    /// Pointwise error relative to the global field range.
+    Rel,
+    /// Minimum peak signal-to-noise ratio in dB.
+    Psnr,
+}
+
+impl BoundKind {
+    pub const ALL: [BoundKind; 5] =
+        [BoundKind::None, BoundKind::Lossless, BoundKind::Abs, BoundKind::Rel, BoundKind::Psnr];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BoundKind::None => "none",
+            BoundKind::Lossless => "lossless",
+            BoundKind::Abs => "abs-err",
+            BoundKind::Rel => "rel-err",
+            BoundKind::Psnr => "psnr",
+        }
+    }
+}
+
+/// An error-bound contract. `Abs`/`Rel`/`Psnr` values must be finite and
+/// positive (enforced on every construction path: CLI flags, wire
+/// decode, service frames).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Bound {
+    /// No contract (the default; what every v≤4 archive reads as).
+    None,
+    /// Bit-exact roundtrip required.
+    Lossless,
+    /// Pointwise absolute error `<= value`.
+    Abs(f64),
+    /// Pointwise error relative to the global range `<= value`.
+    Rel(f64),
+    /// Achieved PSNR `>= value` dB.
+    Psnr(f64),
+}
+
+/// Serialized size of a [`Bound`]: `u8` kind id + `f64` LE value.
+pub const BOUND_WIRE_LEN: usize = 9;
+
+impl Bound {
+    pub fn kind(&self) -> BoundKind {
+        match self {
+            Bound::None => BoundKind::None,
+            Bound::Lossless => BoundKind::Lossless,
+            Bound::Abs(_) => BoundKind::Abs,
+            Bound::Rel(_) => BoundKind::Rel,
+            Bound::Psnr(_) => BoundKind::Psnr,
+        }
+    }
+
+    /// Construct a valued bound, rejecting non-finite or non-positive
+    /// tolerances — the single validation point all frontends share.
+    pub fn new(kind: BoundKind, value: f64) -> Result<Self, String> {
+        match kind {
+            BoundKind::None => Ok(Bound::None),
+            BoundKind::Lossless => Ok(Bound::Lossless),
+            _ if !value.is_finite() || value <= 0.0 => {
+                Err(format!("{} bound must be finite and > 0, got {value}", kind.name()))
+            }
+            BoundKind::Abs => Ok(Bound::Abs(value)),
+            BoundKind::Rel => Ok(Bound::Rel(value)),
+            BoundKind::Psnr => Ok(Bound::Psnr(value)),
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        match *self {
+            Bound::Abs(v) | Bound::Rel(v) | Bound::Psnr(v) => v,
+            Bound::None | Bound::Lossless => 0.0,
+        }
+    }
+
+    /// Wire encoding: kind id byte + f64 LE value (0.0 for the valueless
+    /// kinds).
+    pub fn encode(&self) -> [u8; BOUND_WIRE_LEN] {
+        let mut out = [0u8; BOUND_WIRE_LEN];
+        out[0] = match self.kind() {
+            BoundKind::None => 0,
+            BoundKind::Lossless => 1,
+            BoundKind::Abs => 2,
+            BoundKind::Rel => 3,
+            BoundKind::Psnr => 4,
+        };
+        out[1..9].copy_from_slice(&self.value().to_le_bytes());
+        out
+    }
+
+    pub fn decode(b: &[u8; BOUND_WIRE_LEN]) -> Result<Self, String> {
+        let value = f64::from_le_bytes(b[1..9].try_into().unwrap());
+        let kind = match b[0] {
+            0 => BoundKind::None,
+            1 => BoundKind::Lossless,
+            2 => BoundKind::Abs,
+            3 => BoundKind::Rel,
+            4 => BoundKind::Psnr,
+            v => return Err(format!("bad bound kind id {v}")),
+        };
+        if matches!(kind, BoundKind::None | BoundKind::Lossless) && value != 0.0 {
+            return Err(format!("{} bound carries a nonzero value", kind.name()));
+        }
+        Bound::new(kind, value)
+    }
+
+    /// Check a measured quality record against this contract.
+    pub fn check(&self, q: &AchievedQuality) -> Result<(), String> {
+        match *self {
+            Bound::None => Ok(()),
+            Bound::Lossless => {
+                if q.max_abs_err == 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("lossless contract violated: max abs err {:e}", q.max_abs_err))
+                }
+            }
+            Bound::Abs(a) => {
+                if q.max_abs_err <= a {
+                    Ok(())
+                } else {
+                    Err(format!("abs-err contract {a:e} violated: achieved {:e}", q.max_abs_err))
+                }
+            }
+            Bound::Rel(r) => {
+                if q.max_rel_err <= r {
+                    Ok(())
+                } else {
+                    Err(format!("rel-err contract {r:e} violated: achieved {:e}", q.max_rel_err))
+                }
+            }
+            Bound::Psnr(p) => {
+                if q.psnr_db >= p {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "psnr contract {p:.1} dB violated: achieved {:.1} dB",
+                        q.psnr_db
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Human rendering for CLI reports: "rel-err <= 1e-3", "psnr >= 60 dB".
+    pub fn describe(&self) -> String {
+        match *self {
+            Bound::None => "none".into(),
+            Bound::Lossless => "lossless".into(),
+            Bound::Abs(a) => format!("abs-err <= {a:e}"),
+            Bound::Rel(r) => format!("rel-err <= {r:e}"),
+            Bound::Psnr(p) => format!("psnr >= {p} dB"),
+        }
+    }
+}
+
+/// Per-chunk achieved error, measured at compression time (decode every
+/// encoded block, compare against the original samples) and serialized
+/// in the `.czb` v5 header. Pure function of the chunk's blocks in block
+/// order, so the column is identical across thread counts and SIMD
+/// levels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkQuality {
+    /// Largest pointwise `|orig - decoded|` in the chunk (`inf` if any
+    /// sample decoded to a different NaN/∞ pattern).
+    pub max_abs_err: f32,
+    /// Sum over the chunk's samples of squared error, in f64 and block
+    /// order (deterministic fold).
+    pub sum_sq_err: f64,
+}
+
+/// Serialized size of one [`ChunkQuality`]: `f32` + `f64`, LE.
+pub const CHUNK_QUALITY_WIRE_LEN: usize = 12;
+
+impl ChunkQuality {
+    pub const ZERO: ChunkQuality = ChunkQuality { max_abs_err: 0.0, sum_sq_err: 0.0 };
+
+    pub fn encode(&self) -> [u8; CHUNK_QUALITY_WIRE_LEN] {
+        let mut out = [0u8; CHUNK_QUALITY_WIRE_LEN];
+        out[0..4].copy_from_slice(&self.max_abs_err.to_le_bytes());
+        out[4..12].copy_from_slice(&self.sum_sq_err.to_le_bytes());
+        out
+    }
+
+    pub fn decode(b: &[u8; CHUNK_QUALITY_WIRE_LEN]) -> Result<Self, String> {
+        let max_abs_err = f32::from_le_bytes(b[0..4].try_into().unwrap());
+        let sum_sq_err = f64::from_le_bytes(b[4..12].try_into().unwrap());
+        if max_abs_err.is_nan() || max_abs_err < 0.0 {
+            return Err(format!("bad chunk quality: max_abs_err {max_abs_err}"));
+        }
+        if sum_sq_err.is_nan() || sum_sq_err < 0.0 {
+            return Err(format!("bad chunk quality: sum_sq_err {sum_sq_err}"));
+        }
+        Ok(Self { max_abs_err, sum_sq_err })
+    }
+
+    /// Fold another record in (block order on the caller).
+    pub fn merge(&mut self, other: &ChunkQuality) {
+        self.max_abs_err = self.max_abs_err.max(other.max_abs_err);
+        self.sum_sq_err += other.sum_sq_err;
+    }
+}
+
+/// Pointwise error of one decoded block against its original samples.
+/// Bit-identical samples count as zero error (so NaN-preserving lossless
+/// paths measure clean); a sample whose bits changed *to or from* a
+/// non-finite value counts as infinite error.
+pub fn block_quality(orig: &[f32], decoded: &[f32]) -> ChunkQuality {
+    debug_assert_eq!(orig.len(), decoded.len());
+    let mut q = ChunkQuality::ZERO;
+    for (&a, &b) in orig.iter().zip(decoded) {
+        if a.to_bits() == b.to_bits() {
+            continue;
+        }
+        let d = (a - b).abs();
+        if d.is_finite() {
+            q.max_abs_err = q.max_abs_err.max(d);
+            q.sum_sq_err += (d as f64) * (d as f64);
+        } else {
+            q.max_abs_err = f32::INFINITY;
+            q.sum_sq_err = f64::INFINITY;
+        }
+    }
+    q
+}
+
+/// The quality a stream actually achieved, folded from its recorded
+/// per-chunk column. What `czb info` prints and [`Bound::check`] judges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AchievedQuality {
+    /// Largest pointwise absolute error over every measured sample.
+    pub max_abs_err: f64,
+    /// `max_abs_err / range` (the global field range).
+    pub max_rel_err: f64,
+    /// `20*log10(range/rmse)` over the measured samples; `inf` when the
+    /// roundtrip was exact.
+    pub psnr_db: f64,
+    /// Raw field bytes / compressed stream bytes.
+    pub ratio: f64,
+}
+
+/// Serialized size of an [`AchievedQuality`]: four `f64`s, LE.
+pub const ACHIEVED_WIRE_LEN: usize = 32;
+
+impl AchievedQuality {
+    /// Wire encoding for the `.czs` v3 per-quantity trailer metadata.
+    pub fn encode(&self) -> [u8; ACHIEVED_WIRE_LEN] {
+        let mut out = [0u8; ACHIEVED_WIRE_LEN];
+        out[0..8].copy_from_slice(&self.max_abs_err.to_le_bytes());
+        out[8..16].copy_from_slice(&self.max_rel_err.to_le_bytes());
+        out[16..24].copy_from_slice(&self.psnr_db.to_le_bytes());
+        out[24..32].copy_from_slice(&self.ratio.to_le_bytes());
+        out
+    }
+
+    pub fn decode(b: &[u8; ACHIEVED_WIRE_LEN]) -> Result<Self, String> {
+        let rd = |lo: usize| f64::from_le_bytes(b[lo..lo + 8].try_into().unwrap());
+        let (max_abs_err, max_rel_err, psnr_db, ratio) = (rd(0), rd(8), rd(16), rd(24));
+        // errors are non-negative by construction; PSNR may be any
+        // non-NaN value including ±inf (exact roundtrips record +inf)
+        if max_abs_err.is_nan() || max_abs_err < 0.0 || max_rel_err.is_nan() || max_rel_err < 0.0 {
+            return Err(format!("bad achieved quality: errors {max_abs_err} / {max_rel_err}"));
+        }
+        if psnr_db.is_nan() {
+            return Err("bad achieved quality: NaN psnr".into());
+        }
+        if !ratio.is_finite() || ratio < 0.0 {
+            return Err(format!("bad achieved quality: ratio {ratio}"));
+        }
+        Ok(Self { max_abs_err, max_rel_err, psnr_db, ratio })
+    }
+
+    /// Fold a per-chunk column. `range` is the global field range,
+    /// `nsamples` the number of samples the column measured (blocks ×
+    /// bs³ — edge blocks are padded, and the padding is measured too).
+    pub fn fold(
+        chunks: &[ChunkQuality],
+        range: f64,
+        nsamples: u64,
+        raw_bytes: u64,
+        compressed_bytes: u64,
+    ) -> Self {
+        let mut total = ChunkQuality::ZERO;
+        for c in chunks {
+            total.merge(c);
+        }
+        let range = range.max(f64::MIN_POSITIVE);
+        let max_abs_err = total.max_abs_err as f64;
+        let psnr_db = if nsamples == 0 || total.sum_sq_err == 0.0 {
+            f64::INFINITY
+        } else {
+            let rmse = (total.sum_sq_err / nsamples as f64).sqrt();
+            20.0 * (range / rmse).log10()
+        };
+        AchievedQuality {
+            max_abs_err,
+            max_rel_err: max_abs_err / range,
+            psnr_db,
+            ratio: raw_bytes as f64 / (compressed_bytes.max(1)) as f64,
+        }
+    }
+}
+
+/// Shrink a mapped relative knob slightly below the contract so f32
+/// knob arithmetic (`knob as f32 * range as f32`) can never round the
+/// codec's threshold *above* the stated bound. The margin is far larger
+/// than two f32 ulps and far smaller than any meaningful tolerance.
+pub fn conservative_knob(rel: f64) -> f32 {
+    (rel * (1.0 - 1e-5)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_wire_roundtrip_and_validation() {
+        for b in [
+            Bound::None,
+            Bound::Lossless,
+            Bound::Abs(1.5e-3),
+            Bound::Rel(1e-4),
+            Bound::Psnr(60.0),
+        ] {
+            let enc = b.encode();
+            assert_eq!(Bound::decode(&enc).unwrap(), b);
+        }
+        // bad kind id
+        let mut bad = Bound::None.encode();
+        bad[0] = 9;
+        assert!(Bound::decode(&bad).is_err());
+        // non-finite / non-positive values
+        for v in [f64::NAN, f64::INFINITY, -1.0, 0.0] {
+            let mut b = Bound::Rel(1.0).encode();
+            b[1..9].copy_from_slice(&v.to_le_bytes());
+            assert!(Bound::decode(&b).is_err(), "rel {v} must be rejected");
+            assert!(Bound::new(BoundKind::Abs, v).is_err());
+            assert!(Bound::new(BoundKind::Psnr, v).is_err());
+        }
+        // valueless kinds must carry a zero value on the wire
+        let mut b = Bound::Lossless.encode();
+        b[1] = 1;
+        assert!(Bound::decode(&b).is_err());
+    }
+
+    #[test]
+    fn chunk_quality_wire_roundtrip_and_validation() {
+        for q in [
+            ChunkQuality::ZERO,
+            ChunkQuality { max_abs_err: 1.25e-3, sum_sq_err: 4.5 },
+            ChunkQuality { max_abs_err: f32::INFINITY, sum_sq_err: f64::INFINITY },
+        ] {
+            assert_eq!(ChunkQuality::decode(&q.encode()).unwrap(), q);
+        }
+        let mut bad = ChunkQuality::ZERO.encode();
+        bad[0..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(ChunkQuality::decode(&bad).is_err());
+        let mut bad = ChunkQuality::ZERO.encode();
+        bad[0..4].copy_from_slice(&(-1.0f32).to_le_bytes());
+        assert!(ChunkQuality::decode(&bad).is_err());
+        let mut bad = ChunkQuality::ZERO.encode();
+        bad[4..12].copy_from_slice(&(-4.0f64).to_le_bytes());
+        assert!(ChunkQuality::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn block_quality_measures_pointwise_error() {
+        let orig = [1.0f32, 2.0, -3.0, 0.5];
+        let same = orig;
+        assert_eq!(block_quality(&orig, &same), ChunkQuality::ZERO);
+        let close = [1.25f32, 2.0, -3.5, 0.5];
+        let q = block_quality(&orig, &close);
+        assert_eq!(q.max_abs_err, 0.5);
+        assert!((q.sum_sq_err - (0.0625 + 0.25)).abs() < 1e-12);
+        // identical NaN bits are zero error; a NaN appearing is infinite
+        let nan_in = [f32::NAN, 1.0];
+        assert_eq!(block_quality(&nan_in, &nan_in), ChunkQuality::ZERO);
+        let q = block_quality(&[1.0, 2.0], &[f32::NAN, 2.0]);
+        assert_eq!(q.max_abs_err, f32::INFINITY);
+    }
+
+    #[test]
+    fn achieved_quality_folds_and_checks() {
+        let chunks = [
+            ChunkQuality { max_abs_err: 1e-3, sum_sq_err: 1e-6 },
+            ChunkQuality { max_abs_err: 2e-3, sum_sq_err: 3e-6 },
+        ];
+        let q = AchievedQuality::fold(&chunks, 2.0, 1000, 4000, 400);
+        assert_eq!(q.max_abs_err, 2e-3_f32 as f64);
+        assert!((q.max_rel_err - q.max_abs_err / 2.0).abs() < 1e-15);
+        assert!((q.ratio - 10.0).abs() < 1e-12);
+        let rmse = (4e-6f64 / 1000.0).sqrt();
+        assert!((q.psnr_db - 20.0 * (2.0f64 / rmse).log10()).abs() < 1e-9);
+
+        assert!(Bound::None.check(&q).is_ok());
+        assert!(Bound::Abs(2e-3_f32 as f64).check(&q).is_ok());
+        assert!(Bound::Abs(1e-3).check(&q).is_err());
+        assert!(Bound::Rel(1.1e-3).check(&q).is_ok());
+        assert!(Bound::Rel(0.9e-3).check(&q).is_err());
+        assert!(Bound::Psnr(q.psnr_db - 1.0).check(&q).is_ok());
+        assert!(Bound::Psnr(q.psnr_db + 1.0).check(&q).is_err());
+        assert!(Bound::Lossless.check(&q).is_err());
+
+        // exact roundtrip: infinite PSNR, lossless holds
+        let q0 = AchievedQuality::fold(&[ChunkQuality::ZERO], 1.0, 10, 40, 40);
+        assert_eq!(q0.psnr_db, f64::INFINITY);
+        assert!(Bound::Lossless.check(&q0).is_ok());
+        assert!(Bound::Psnr(200.0).check(&q0).is_ok());
+    }
+
+    #[test]
+    fn achieved_quality_wire_roundtrip_and_validation() {
+        for q in [
+            AchievedQuality { max_abs_err: 0.0, max_rel_err: 0.0, psnr_db: f64::INFINITY, ratio: 4.0 },
+            AchievedQuality { max_abs_err: 2e-3, max_rel_err: 1e-3, psnr_db: 61.5, ratio: 38.2 },
+            AchievedQuality { max_abs_err: 5.0, max_rel_err: 2.5, psnr_db: -3.0, ratio: 1.0 },
+        ] {
+            assert_eq!(AchievedQuality::decode(&q.encode()).unwrap(), q);
+        }
+        let good = AchievedQuality { max_abs_err: 1.0, max_rel_err: 0.5, psnr_db: 6.0, ratio: 2.0 };
+        for (lo, v) in [(0usize, -1.0f64), (0, f64::NAN), (8, -0.5), (16, f64::NAN), (24, f64::NAN), (24, f64::INFINITY)] {
+            let mut b = good.encode();
+            b[lo..lo + 8].copy_from_slice(&v.to_le_bytes());
+            assert!(AchievedQuality::decode(&b).is_err(), "field at {lo} = {v} accepted");
+        }
+    }
+
+    #[test]
+    fn conservative_knob_stays_below_contract_after_f32_rounding() {
+        for rel in [1e-1f64, 1e-3, 1e-6, 0.5] {
+            for range in [1e-30f32, 1.0, 3.7e4, 1e30] {
+                let knob = conservative_knob(rel);
+                let eps_abs = knob * range;
+                assert!(
+                    (eps_abs as f64) <= rel * range as f64,
+                    "rel {rel} range {range}: eps_abs {eps_abs} overshoots"
+                );
+            }
+        }
+    }
+}

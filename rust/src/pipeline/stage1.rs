@@ -14,6 +14,7 @@
 //! a dispatch refactor, not a format change.
 use super::compressor::WaveletEngine;
 use super::format::{CoeffCodec, Stage1};
+use super::quality::{conservative_knob, Bound, BoundKind};
 use crate::fpc::{self, Dims3};
 use crate::wavelet::{self, WaveletKind};
 
@@ -54,6 +55,29 @@ pub trait Stage1Codec: Sync {
         0.0
     }
 
+    /// Human name of the scheme's native quality knob (what
+    /// `czb codecs` lists next to the honored bound kinds).
+    fn knob(&self) -> &'static str;
+
+    /// Whether this codec's encoder *guarantees* the given bound kind
+    /// pointwise. Declaring a kind here is a strictness contract: the
+    /// recorded achieved quality of any stream compressed under a
+    /// honored bound must pass [`Bound::check`]. Every codec honors
+    /// [`BoundKind::None`].
+    fn honors(&self, kind: BoundKind) -> bool;
+
+    /// Map a bound onto this codec's native knob, keeping the
+    /// template's non-knob fields (e.g. the wavelet kind). `range` is
+    /// the global field range the relative knobs are scaled by. Errors
+    /// iff `!self.honors(bound.kind())` — callers validate the pairing
+    /// up front and treat an error here as a bug.
+    fn apply_bound(&self, template: &Stage1, bound: &Bound, range: f32) -> Result<Stage1, String> {
+        if let Bound::None = bound {
+            return Ok(*template);
+        }
+        Err(format!("stage-1 codec '{}' cannot honor a {} bound", self.name(), bound.kind().name()))
+    }
+
     /// Wavelet kind to batch-transform blocks with *before*
     /// [`Stage1Codec::encode_block`] runs, if the scheme consumes
     /// transformed coefficients rather than raw samples.
@@ -87,6 +111,18 @@ pub trait Stage1Codec: Sync {
     ) -> Result<(), String>;
 }
 
+/// The pointwise-relative knob a valued bound reduces to: `Abs` is
+/// divided by the range, `Psnr` converts via `rmse <= max_abs_err`
+/// (a pointwise bound of `range * 10^(-psnr/20)` guarantees the PSNR).
+fn rel_knob_of(bound: &Bound, range: f32) -> Option<f64> {
+    match *bound {
+        Bound::Abs(a) => Some(a / range.max(f32::MIN_POSITIVE) as f64),
+        Bound::Rel(r) => Some(r),
+        Bound::Psnr(p) => Some(10f64.powf(-p / 20.0)),
+        Bound::None | Bound::Lossless => None,
+    }
+}
+
 /// Direct-copy scheme (no lossy stage).
 pub struct CopyCodec;
 
@@ -96,6 +132,16 @@ impl Stage1Codec for CopyCodec {
     }
     fn name(&self) -> &'static str {
         "copy"
+    }
+    fn knob(&self) -> &'static str {
+        "(none)"
+    }
+    fn honors(&self, _kind: BoundKind) -> bool {
+        // bit-exact: every contract holds trivially
+        true
+    }
+    fn apply_bound(&self, _template: &Stage1, _bound: &Bound, _range: f32) -> Result<Stage1, String> {
+        Ok(Stage1::Copy)
     }
 
     fn encode_block(
@@ -141,6 +187,15 @@ impl Stage1Codec for WaveletCodec {
     }
     fn name(&self) -> &'static str {
         "wavelet"
+    }
+    fn knob(&self) -> &'static str {
+        "eps-rel"
+    }
+    fn honors(&self, kind: BoundKind) -> bool {
+        // the ε-threshold is applied per detail coefficient; inverse
+        // levels superpose, so the pointwise error can exceed eps_abs by
+        // well over an order of magnitude — no pointwise contract holds
+        matches!(kind, BoundKind::None)
     }
 
     fn eps_abs(&self, params: &Stage1, range: f32) -> f32 {
@@ -294,6 +349,21 @@ impl Stage1Codec for ZfpCodec {
     fn name(&self) -> &'static str {
         "zfp"
     }
+    fn knob(&self) -> &'static str {
+        "tol-rel"
+    }
+    fn honors(&self, kind: BoundKind) -> bool {
+        // the plane cutoff guarantees maxerr <= tol pointwise; tol = 0
+        // is only *near*-lossless, so Lossless is not honored
+        matches!(kind, BoundKind::None | BoundKind::Abs | BoundKind::Rel | BoundKind::Psnr)
+    }
+    fn apply_bound(&self, template: &Stage1, bound: &Bound, range: f32) -> Result<Stage1, String> {
+        match rel_knob_of(bound, range) {
+            Some(rel) => Ok(Stage1::Zfp { tol_rel: conservative_knob(rel) }),
+            None if *bound == Bound::None => Ok(*template),
+            None => Err(format!("stage-1 codec 'zfp' cannot honor a {} bound", bound.kind().name())),
+        }
+    }
 
     fn eps_abs(&self, params: &Stage1, range: f32) -> f32 {
         match *params {
@@ -342,6 +412,22 @@ impl Stage1Codec for SzCodec {
     fn name(&self) -> &'static str {
         "sz"
     }
+    fn knob(&self) -> &'static str {
+        "eb-rel"
+    }
+    fn honors(&self, kind: BoundKind) -> bool {
+        // encode-time verification with an outlier escape keeps every
+        // sample within abs_eb; the bound must stay > 0, so Lossless is
+        // not honored
+        matches!(kind, BoundKind::None | BoundKind::Abs | BoundKind::Rel | BoundKind::Psnr)
+    }
+    fn apply_bound(&self, template: &Stage1, bound: &Bound, range: f32) -> Result<Stage1, String> {
+        match rel_knob_of(bound, range) {
+            Some(rel) => Ok(Stage1::Sz { eb_rel: conservative_knob(rel) }),
+            None if *bound == Bound::None => Ok(*template),
+            None => Err(format!("stage-1 codec 'sz' cannot honor a {} bound", bound.kind().name())),
+        }
+    }
 
     fn eps_abs(&self, params: &Stage1, range: f32) -> f32 {
         match *params {
@@ -389,6 +475,24 @@ impl Stage1Codec for FpzipCodec {
     }
     fn name(&self) -> &'static str {
         "fpzip"
+    }
+    fn knob(&self) -> &'static str {
+        "prec"
+    }
+    fn honors(&self, kind: BoundKind) -> bool {
+        // prec < 32 truncates mantissas with no pointwise guarantee;
+        // prec = 32 is bit-exact — only the exact kinds are honorable
+        matches!(kind, BoundKind::None | BoundKind::Lossless)
+    }
+    fn apply_bound(&self, template: &Stage1, bound: &Bound, _range: f32) -> Result<Stage1, String> {
+        match bound {
+            Bound::None => Ok(*template),
+            Bound::Lossless => Ok(Stage1::Fpzip { prec: 32 }),
+            _ => Err(format!(
+                "stage-1 codec 'fpzip' cannot honor a {} bound",
+                bound.kind().name()
+            )),
+        }
     }
 
     fn encode_block(
@@ -445,6 +549,21 @@ pub fn by_name(name: &str) -> Option<&'static dyn Stage1Codec> {
 /// The codec serving a parsed [`Stage1`] parameter value.
 pub fn codec_for(params: &Stage1) -> &'static dyn Stage1Codec {
     by_id(params.id()).expect("every Stage1 variant has a registered codec")
+}
+
+/// The scheme auto-selected when the user stated a contract but no
+/// explicit `--scheme`: sz for the valued pointwise kinds (strict bound,
+/// best default CR), fpzip at full precision for `Lossless`. `None`
+/// means "keep the caller's default scheme" (no contract). The knob
+/// value in the returned template is a placeholder —
+/// [`Stage1Codec::apply_bound`] resolves it against the field range at
+/// compression time.
+pub fn default_scheme_for(bound: &Bound) -> Option<Stage1> {
+    match bound.kind() {
+        BoundKind::None => None,
+        BoundKind::Lossless => Some(Stage1::Fpzip { prec: 32 }),
+        BoundKind::Abs | BoundKind::Rel | BoundKind::Psnr => Some(Stage1::Sz { eb_rel: 0.0 }),
+    }
 }
 
 #[cfg(test)]
@@ -504,6 +623,94 @@ mod tests {
         assert_eq!(codec_for(&w).pre_transform(&w), Some(WaveletKind::Interp4));
         for v in [Stage1::Copy, Stage1::Zfp { tol_rel: 0.1 }, Stage1::Sz { eb_rel: 0.1 }] {
             assert_eq!(codec_for(&v).pre_transform(&v), None, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn honors_declarations_match_codec_strictness() {
+        // copy is exact: everything holds
+        for k in BoundKind::ALL {
+            assert!(CopyCodec.honors(k), "{k:?}");
+        }
+        // wavelet thresholding is not a pointwise bound
+        assert!(WaveletCodec.honors(BoundKind::None));
+        for k in [BoundKind::Lossless, BoundKind::Abs, BoundKind::Rel, BoundKind::Psnr] {
+            assert!(!WaveletCodec.honors(k), "{k:?}");
+        }
+        // zfp/sz: strict pointwise, never lossless
+        for c in [&ZfpCodec as &dyn Stage1Codec, &SzCodec] {
+            for k in [BoundKind::None, BoundKind::Abs, BoundKind::Rel, BoundKind::Psnr] {
+                assert!(c.honors(k), "{} {k:?}", c.name());
+            }
+            assert!(!c.honors(BoundKind::Lossless), "{}", c.name());
+        }
+        // fpzip: exact kinds only
+        assert!(FpzipCodec.honors(BoundKind::Lossless));
+        assert!(FpzipCodec.honors(BoundKind::None));
+        for k in [BoundKind::Abs, BoundKind::Rel, BoundKind::Psnr] {
+            assert!(!FpzipCodec.honors(k), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn apply_bound_maps_to_native_knobs() {
+        let range = 10.0f32;
+        let tpl = Stage1::Sz { eb_rel: 0.5 };
+        // Rel maps (conservatively shrunk) onto the relative knob
+        match SzCodec.apply_bound(&tpl, &Bound::Rel(1e-3), range).unwrap() {
+            Stage1::Sz { eb_rel } => {
+                assert!(eb_rel > 0.0 && (eb_rel as f64) <= 1e-3, "eb_rel {eb_rel}");
+                assert!((eb_rel as f64) > 1e-3 * 0.999);
+            }
+            s => panic!("{s:?}"),
+        }
+        // Abs divides by the range
+        match ZfpCodec.apply_bound(&Stage1::Zfp { tol_rel: 1.0 }, &Bound::Abs(0.05), range).unwrap()
+        {
+            Stage1::Zfp { tol_rel } => {
+                assert!((tol_rel as f64) <= 0.005 && (tol_rel as f64) > 0.00499);
+            }
+            s => panic!("{s:?}"),
+        }
+        // Psnr reduces to 10^(-p/20)
+        match SzCodec.apply_bound(&tpl, &Bound::Psnr(60.0), range).unwrap() {
+            Stage1::Sz { eb_rel } => {
+                assert!((eb_rel as f64) <= 1e-3 && (eb_rel as f64) > 0.999e-3);
+            }
+            s => panic!("{s:?}"),
+        }
+        // None keeps the template's knob
+        assert_eq!(SzCodec.apply_bound(&tpl, &Bound::None, range).unwrap(), tpl);
+        // Lossless resolves fpzip to full precision
+        assert_eq!(
+            FpzipCodec
+                .apply_bound(&Stage1::Fpzip { prec: 16 }, &Bound::Lossless, range)
+                .unwrap(),
+            Stage1::Fpzip { prec: 32 }
+        );
+        // un-honored pairings error
+        assert!(SzCodec.apply_bound(&tpl, &Bound::Lossless, range).is_err());
+        assert!(FpzipCodec.apply_bound(&Stage1::Fpzip { prec: 16 }, &Bound::Rel(1e-3), range).is_err());
+        let w = Stage1::Wavelet {
+            kind: WaveletKind::Avg3,
+            eps_rel: 1e-3,
+            zbits: 0,
+            coeff: CoeffCodec::None,
+        };
+        assert!(WaveletCodec.apply_bound(&w, &Bound::Rel(1e-3), range).is_err());
+        assert_eq!(WaveletCodec.apply_bound(&w, &Bound::None, range).unwrap(), w);
+        // copy honors everything at zero error
+        assert_eq!(CopyCodec.apply_bound(&Stage1::Copy, &Bound::Abs(1e-9), range).unwrap(), Stage1::Copy);
+    }
+
+    #[test]
+    fn default_scheme_for_bound_kinds() {
+        assert_eq!(default_scheme_for(&Bound::None), None);
+        assert_eq!(default_scheme_for(&Bound::Lossless), Some(Stage1::Fpzip { prec: 32 }));
+        for b in [Bound::Abs(1e-3), Bound::Rel(1e-3), Bound::Psnr(60.0)] {
+            let s = default_scheme_for(&b).unwrap();
+            assert_eq!(s.name(), "sz");
+            assert!(codec_for(&s).honors(b.kind()), "{b:?}");
         }
     }
 

@@ -31,7 +31,8 @@ use std::time::Instant;
 
 use crate::coordinator::verify_czb_bytes;
 use crate::metrics::registry::Registry;
-use crate::pipeline::{CompressParams, Engine, PipelineConfig};
+use crate::pipeline::stage1::default_scheme_for;
+use crate::pipeline::{Bound, CompressParams, Engine, PipelineConfig};
 
 use super::admission::Admission;
 use super::metrics_export;
@@ -202,9 +203,20 @@ fn handle_work<R: Read, W: Write>(
                         CompressParams::from_config(&PipelineConfig::paper_default(req.eps));
                     params.bs = req.bs as usize;
                     params.shuffle = req.shuffle;
+                    if req.bound != Bound::None {
+                        // a request-side contract overrides the default
+                        // scheme with the codec that can honor it; the
+                        // knob is derived from the bound per field
+                        params.stage1 = default_scheme_for(&req.bound)
+                            .expect("every non-None bound kind has a default scheme");
+                        params.bound = req.bound;
+                    }
                     let mut out = Vec::new();
                     match ctx.engine.compress(&req.field, &req.name, &params, &mut out) {
-                        Ok(_) => respond_timed(w, ctx, hdr, t0, &out)?,
+                        Ok(st) => {
+                            ctx.metrics.record_tenant_psnr(&hdr.tenant, st.quality.psnr_db);
+                            respond_timed(w, ctx, hdr, t0, &out)?
+                        }
                         Err(e) => {
                             respond(w, ctx, hdr, Status::Error, 0, e.to_string().as_bytes(), false)?
                         }
@@ -411,6 +423,70 @@ mod tests {
         let tenants = ctx.metrics.tenants_snapshot();
         assert_eq!(tenants.len(), 1);
         assert_eq!(tenants[0].1.requests, 3);
+    }
+
+    #[test]
+    fn bounded_compress_honors_the_contract_and_meters_psnr() {
+        let ctx = test_ctx();
+        let field = test_field();
+        let bound = Bound::Rel(1e-3);
+        let mut wire = Vec::new();
+        let body = proto::encode_compress_body_bound(
+            "rho",
+            &field,
+            8,
+            1e-4,
+            ShuffleMode::Byte4,
+            bound,
+        );
+        write_request(&mut wire, Op::Compress, Priority::Normal, "t-psnr", &body).unwrap();
+        write_request(&mut wire, Op::Stat, Priority::Normal, "t-psnr", b"").unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::CleanClose
+        );
+        let mut resp = out.as_slice();
+        let (st, _, czb) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok, "{}", String::from_utf8_lossy(&czb));
+        // the returned stream records the contract and met it
+        let (file, _) = crate::pipeline::CzbFile::parse_header(&czb).unwrap();
+        assert_eq!(file.bound, bound);
+        let q = file.achieved_quality().expect("v5 stream records quality");
+        assert!(bound.check(&q).is_ok(), "{:?}", bound.check(&q));
+        // the tenant's achieved PSNR landed in the histogram export
+        let (st, _, stat_body) = read_response(&mut resp);
+        assert_eq!(st, Status::Ok);
+        let text = String::from_utf8(stat_body).unwrap();
+        assert!(
+            text.contains("czb_tenant_achieved_psnr_db_count{tenant=\"t-psnr\"} 1"),
+            "{text}"
+        );
+        let snap = ctx.metrics.tenant_psnr_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert!((snap[0].1.mean_db() - q.psnr_db).abs() < 1e-9);
+        // a malformed trailing bound is a compress-body parse error:
+        // error response, then the connection closes (stream desynced)
+        let mut bad = proto::encode_compress_body_bound(
+            "rho",
+            &field,
+            8,
+            1e-4,
+            ShuffleMode::None,
+            Bound::Abs(1e-3),
+        );
+        let at = bad.len() - 9;
+        bad[at] = 77;
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Compress, Priority::Normal, "t-psnr", &bad).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(
+            serve_connection(&mut wire.as_slice(), &mut out, &ctx),
+            ConnOutcome::ProtocolError
+        );
+        let (st, _, _) = read_response(&mut out.as_slice());
+        assert_eq!(st, Status::Error);
+        assert_eq!(ctx.admission.in_flight(), 0);
     }
 
     #[test]

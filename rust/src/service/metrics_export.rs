@@ -5,7 +5,7 @@
 //! `# HELP`/`# TYPE` comments, so any Prometheus-compatible scraper
 //! (or a human with `nc`) can read it. No timestamp is emitted — the
 //! scrape time is the sample time.
-use crate::metrics::registry::{Registry, OPS, STATUSES};
+use crate::metrics::registry::{Registry, OPS, PSNR_BUCKETS, PSNR_BUCKET_DB, STATUSES};
 use std::fmt::Write as _;
 
 /// Latency quantiles the exporter reports per metered operation.
@@ -131,6 +131,39 @@ pub fn render(r: &Registry) -> String {
             let _ = writeln!(out, "czb_tenant_throttled_total{{tenant=\"{t}\"}} {}", u.throttled);
         }
     }
+
+    let psnr = r.tenant_psnr_snapshot();
+    if !psnr.is_empty() {
+        let _ = writeln!(
+            out,
+            "# HELP czb_tenant_achieved_psnr_db Achieved compression PSNR per tenant \
+             (lossless streams land in the +Inf bucket)."
+        );
+        let _ = writeln!(out, "# TYPE czb_tenant_achieved_psnr_db histogram");
+        for (t, h) in &psnr {
+            let t = escape_label(t);
+            // cumulative counts, Prometheus histogram convention
+            let mut cum = 0u64;
+            for (i, b) in h.buckets.iter().enumerate() {
+                cum += b;
+                let _ = writeln!(
+                    out,
+                    "czb_tenant_achieved_psnr_db_bucket{{tenant=\"{t}\",le=\"{}\"}} {cum}",
+                    PSNR_BUCKET_DB * (i + 1) as f64
+                );
+            }
+            debug_assert_eq!(cum + h.overflow, h.count);
+            let _ = writeln!(
+                out,
+                "czb_tenant_achieved_psnr_db_bucket{{tenant=\"{t}\",le=\"+Inf\"}} {}",
+                h.count
+            );
+            let _ = writeln!(out, "czb_tenant_achieved_psnr_db_count{{tenant=\"{t}\"}} {}", h.count);
+            let _ =
+                writeln!(out, "czb_tenant_achieved_psnr_db_sum{{tenant=\"{t}\"}} {:.3}", h.sum_db);
+        }
+        const _: () = assert!(PSNR_BUCKETS == 16, "le labels track the bucket layout");
+    }
     out
 }
 
@@ -188,6 +221,43 @@ mod tests {
         assert!(!text.contains("quantile"), "no samples -> no quantile lines");
         assert!(!text.contains("czb_tenant_"), "no tenants -> no tenant lines");
         assert_eq!(sample(&text, "czb_bytes_in_total"), Some(0.0));
+    }
+
+    #[test]
+    fn tenant_psnr_histogram_renders_cumulative_buckets() {
+        let r = Registry::new();
+        r.record_tenant_psnr("sim-a", 57.0); // le="60"
+        r.record_tenant_psnr("sim-a", 95.0); // le="100"
+        r.record_tenant_psnr("sim-a", f64::INFINITY); // +Inf only
+        let text = render(&r);
+        assert_eq!(
+            sample(&text, "czb_tenant_achieved_psnr_db_bucket{tenant=\"sim-a\",le=\"50\"}"),
+            Some(0.0)
+        );
+        assert_eq!(
+            sample(&text, "czb_tenant_achieved_psnr_db_bucket{tenant=\"sim-a\",le=\"60\"}"),
+            Some(1.0)
+        );
+        assert_eq!(
+            sample(&text, "czb_tenant_achieved_psnr_db_bucket{tenant=\"sim-a\",le=\"100\"}"),
+            Some(2.0),
+            "buckets must be cumulative"
+        );
+        assert_eq!(
+            sample(&text, "czb_tenant_achieved_psnr_db_bucket{tenant=\"sim-a\",le=\"160\"}"),
+            Some(2.0)
+        );
+        assert_eq!(
+            sample(&text, "czb_tenant_achieved_psnr_db_bucket{tenant=\"sim-a\",le=\"+Inf\"}"),
+            Some(3.0)
+        );
+        assert_eq!(
+            sample(&text, "czb_tenant_achieved_psnr_db_count{tenant=\"sim-a\"}"),
+            Some(3.0)
+        );
+        let sum =
+            sample(&text, "czb_tenant_achieved_psnr_db_sum{tenant=\"sim-a\"}").unwrap();
+        assert!((sum - (57.0 + 95.0 + 300.0)).abs() < 1e-6, "{sum}");
     }
 
     #[test]

@@ -35,7 +35,7 @@ use std::time::Duration;
 
 use crate::core::Field3;
 use crate::metrics::registry::Registry;
-use crate::pipeline::{Engine, ShuffleMode};
+use crate::pipeline::{Bound, Engine, ShuffleMode};
 
 use admission::Admission;
 use conn::{serve_connection, ConnCtx, IdleAwareReader};
@@ -353,7 +353,23 @@ impl Client {
         eps: f32,
         shuffle: ShuffleMode,
     ) -> Result<Reply<Vec<u8>>, String> {
-        let body = proto::encode_compress_body(name, field, bs, eps, shuffle);
+        self.compress_bounded(name, field, bs, eps, shuffle, Bound::None)
+    }
+
+    /// [`Client::compress`] under an error-bound contract: the server
+    /// picks the stage-1 codec for the bound's kind, derives its knob,
+    /// and the returned `.czb` records the contract plus the achieved
+    /// quality (checkable with `czb verify --bounds`).
+    pub fn compress_bounded(
+        &mut self,
+        name: &str,
+        field: &Field3,
+        bs: u32,
+        eps: f32,
+        shuffle: ShuffleMode,
+        bound: Bound,
+    ) -> Result<Reply<Vec<u8>>, String> {
+        let body = proto::encode_compress_body_bound(name, field, bs, eps, shuffle, bound);
         self.expect_ok(Op::Compress, &body)
     }
 

@@ -35,8 +35,12 @@
 //!
 //! * `compress` request: [`FieldRequest`] encoding — `name_len:u16`,
 //!   name, `nx,ny,nz,bs:u32`, `eps:f32`, `shuffle:u8` (ShuffleMode id),
-//!   3 reserved bytes, then `nx·ny·nz` raw `f32` samples. Response body
-//!   is the finished `.czb` stream.
+//!   3 reserved bytes, then `nx·ny·nz` raw `f32` samples, then an
+//!   *optional* appended error-bound contract: `kind:u8` + `value:f64`
+//!   (the 9-byte [`Bound`] wire encoding). A body without the trailing 9
+//!   bytes means no contract — exactly what pre-bound clients send, per
+//!   the append-only versioning rule below. Response body is the
+//!   finished `.czb` stream (v5: contract + achieved quality recorded).
 //! * `decompress` request: a whole `.czb` stream. Response body is the
 //!   field encoding — `name_len:u16`, name, `nx,ny,nz:u32`, samples.
 //! * `verify` request: a whole `.czb` stream. Response body is 17
@@ -69,7 +73,7 @@
 //! parser must ignore trailing bytes it does not know. Incompatible
 //! layout changes bump the version byte.
 use crate::core::Field3;
-use crate::pipeline::ShuffleMode;
+use crate::pipeline::{Bound, ShuffleMode, BOUND_WIRE_LEN};
 use std::io::{Read, Write};
 
 pub const REQ_MAGIC: &[u8; 4] = b"CZRQ";
@@ -364,6 +368,9 @@ pub struct FieldRequest {
     pub bs: u32,
     pub eps: f32,
     pub shuffle: ShuffleMode,
+    /// Error-bound contract the client asked for ([`Bound::None`] when
+    /// the body carried no trailing bound field).
+    pub bound: Bound,
 }
 
 /// Fixed-size prefix of a compress body before the samples:
@@ -371,7 +378,8 @@ pub struct FieldRequest {
 /// reserved bytes.
 const COMPRESS_PREFIX: usize = 2 + 4 * 4 + 4 + 4;
 
-/// Encode a `compress` request body.
+/// Encode a `compress` request body with no error-bound contract (the
+/// legacy body layout pre-bound clients send).
 pub fn encode_compress_body(
     name: &str,
     field: &Field3,
@@ -379,9 +387,22 @@ pub fn encode_compress_body(
     eps: f32,
     shuffle: ShuffleMode,
 ) -> Vec<u8> {
+    encode_compress_body_bound(name, field, bs, eps, shuffle, Bound::None)
+}
+
+/// Encode a `compress` request body; a non-`None` `bound` is appended
+/// as the trailing 9-byte contract field.
+pub fn encode_compress_body_bound(
+    name: &str,
+    field: &Field3,
+    bs: u32,
+    eps: f32,
+    shuffle: ShuffleMode,
+    bound: Bound,
+) -> Vec<u8> {
     let name = name.as_bytes();
     assert!(name.len() <= u16::MAX as usize, "quantity name longer than 65535 bytes");
-    let mut out = Vec::with_capacity(COMPRESS_PREFIX + name.len() + field.nbytes());
+    let mut out = Vec::with_capacity(COMPRESS_PREFIX + name.len() + field.nbytes() + BOUND_WIRE_LEN);
     out.extend_from_slice(&(name.len() as u16).to_le_bytes());
     out.extend_from_slice(name);
     for d in [field.nx as u32, field.ny as u32, field.nz as u32, bs] {
@@ -392,6 +413,9 @@ pub fn encode_compress_body(
     out.extend_from_slice(&[0u8; 3]);
     for v in &field.data {
         out.extend_from_slice(&v.to_le_bytes());
+    }
+    if bound != Bound::None {
+        out.extend_from_slice(&bound.encode());
     }
     out
 }
@@ -425,7 +449,10 @@ pub fn decode_compress_body(r: &mut dyn Read, body_len: u64) -> Result<FieldRequ
         .ok_or_else(|| format!("field dimensions {nx}x{ny}x{nz} overflow"))?;
     let declared = body_len - fixed;
     let expected = nsamples as u64 * 4;
-    if declared != expected {
+    // exactly the samples (no contract) or the samples plus the 9-byte
+    // trailing bound field — anything else desyncs the stream
+    let has_bound = declared == expected + BOUND_WIRE_LEN as u64;
+    if declared != expected && !has_bound {
         return Err(format!(
             "field {nx}x{ny}x{nz} needs {expected} sample bytes, body declares {declared}"
         ));
@@ -435,7 +462,14 @@ pub fn decode_compress_body(r: &mut dyn Read, body_len: u64) -> Result<FieldRequ
     }
     let mut data = vec![0f32; nsamples];
     read_f32_into(r, &mut data)?;
-    Ok(FieldRequest { name, field: Field3::from_vec(nx, ny, nz, data), bs, eps, shuffle })
+    let bound = if has_bound {
+        let mut b = [0u8; BOUND_WIRE_LEN];
+        r.read_exact(&mut b).map_err(|e| format!("reading bound field: {e}"))?;
+        Bound::decode(&b)?
+    } else {
+        Bound::None
+    };
+    Ok(FieldRequest { name, field: Field3::from_vec(nx, ny, nz, data), bs, eps, shuffle, bound })
 }
 
 /// Encode a decoded field as a `decompress` response body.
@@ -647,6 +681,31 @@ mod tests {
             .unwrap_err()
             .contains("bs 0"));
         let bad = encode_compress_body("x", &field, 16, f32::NAN, ShuffleMode::None);
+        assert!(decode_compress_body(&mut bad.as_slice(), bad.len() as u64).is_err());
+    }
+
+    #[test]
+    fn compress_body_carries_an_optional_bound() {
+        let field = Field3::from_vec(2, 2, 2, (0..8).map(|i| i as f32).collect());
+        // legacy body: no trailing bound field -> Bound::None
+        let body = encode_compress_body("p", &field, 8, 1e-3, ShuffleMode::None);
+        let req = decode_compress_body(&mut body.as_slice(), body.len() as u64).unwrap();
+        assert_eq!(req.bound, Bound::None);
+        // bounded body: 9 extra bytes after the samples
+        let body =
+            encode_compress_body_bound("p", &field, 8, 1e-3, ShuffleMode::None, Bound::Rel(1e-3));
+        let req = decode_compress_body(&mut body.as_slice(), body.len() as u64).unwrap();
+        assert_eq!(req.bound, Bound::Rel(1e-3));
+        assert_eq!(req.field.data, field.data, "samples unaffected by the trailing field");
+        // a corrupt trailing bound is a parse error, not a silent None
+        let mut bad = body.clone();
+        let at = bad.len() - BOUND_WIRE_LEN;
+        bad[at] = 99; // unknown kind id
+        assert!(decode_compress_body(&mut bad.as_slice(), bad.len() as u64).is_err());
+        // a non-finite bound value is rejected at the wire
+        let mut bad = body;
+        let at = bad.len() - 8;
+        bad[at..].copy_from_slice(&f64::NAN.to_le_bytes());
         assert!(decode_compress_body(&mut bad.as_slice(), bad.len() as u64).is_err());
     }
 

@@ -225,6 +225,200 @@ fn cli_all_schemes_produce_valid_files() {
 }
 
 #[test]
+fn cli_bound_contract_flow() {
+    // compress under a relative error-bound contract: the scheme is
+    // auto-picked, the contract + achieved quality land in the stream,
+    // and verify --bounds signs off on it
+    let h5 = tmp("cli_bound.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(), "--qoi", "p",
+    ]));
+    let f = tmp("cli_bound.czb");
+    let out = run_ok(czb().args([
+        "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+        f.to_str().unwrap(), "--rel-err", "1e-3",
+    ]));
+    assert!(out.contains("CR"), "{out}");
+
+    let info = run_ok(czb().args(["info", "--in", f.to_str().unwrap()]));
+    assert!(info.contains("bound       : rel-err <= 1e-3"), "{info}");
+    assert!(info.contains("within contract"), "{info}");
+
+    let st = czb().args(["verify", "--in", f.to_str().unwrap(), "--bounds"]).output().unwrap();
+    assert_eq!(st.status.code(), Some(0), "{}", String::from_utf8_lossy(&st.stdout));
+    let vout = String::from_utf8_lossy(&st.stdout);
+    assert!(vout.contains("contract rel-err <= 1e-3"), "{vout}");
+
+    // the decoded field must actually honor the bound end to end
+    let back = tmp("cli_bound.h5l.out");
+    run_ok(czb().args([
+        "decompress", "--in", f.to_str().unwrap(), "--out", back.to_str().unwrap(),
+    ]));
+
+    // an explicit scheme that cannot honor the bound is a hard error
+    let st = czb()
+        .args([
+            "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+            tmp("cli_bound_bad.czb").to_str().unwrap(), "--rel-err", "1e-3",
+            "--scheme", "wavelet",
+        ])
+        .output()
+        .unwrap();
+    assert!(!st.status.success());
+    let err = String::from_utf8_lossy(&st.stderr);
+    assert!(err.contains("cannot honor"), "{err}");
+
+    // a lossless contract round-trips bit-exactly through fpzip
+    let fl = tmp("cli_bound_lossless.czb");
+    run_ok(czb().args([
+        "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+        fl.to_str().unwrap(), "--lossless",
+    ]));
+    let info = run_ok(czb().args(["info", "--in", fl.to_str().unwrap()]));
+    assert!(info.contains("bound       : lossless"), "{info}");
+    let st = czb().args(["verify", "--in", fl.to_str().unwrap(), "--bounds"]).output().unwrap();
+    assert_eq!(st.status.code(), Some(0));
+}
+
+#[test]
+fn cli_rejects_bad_tolerances() {
+    let h5 = tmp("cli_badtol.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(), "--qoi", "p",
+    ]));
+    let out_file = tmp("cli_badtol.czb");
+    let _ = std::fs::remove_file(&out_file); // stale runs must not fake a pass
+    // negative, NaN and non-numeric tolerances must all be rejected up
+    // front — for the legacy knob and for every contract flag
+    for bad in [
+        vec!["--eps", "-1"],
+        vec!["--eps", "NaN"],
+        vec!["--abs-err", "-1e-3"],
+        vec!["--rel-err", "0"],
+        vec!["--rel-err", "inf"],
+        vec!["--psnr", "-40"],
+        vec!["--psnr", "nan"],
+        // a contract and the raw knob together are ambiguous
+        vec!["--eps", "1e-3", "--rel-err", "1e-3"],
+        // contracts are mutually exclusive
+        vec!["--abs-err", "1e-3", "--rel-err", "1e-3"],
+    ] {
+        let mut cmd = czb();
+        cmd.args([
+            "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+            out_file.to_str().unwrap(),
+        ]);
+        for b in &bad {
+            cmd.arg(b);
+        }
+        let st = cmd.output().unwrap();
+        assert!(!st.status.success(), "{bad:?} must be rejected");
+        assert!(!out_file.exists(), "{bad:?} must not write output");
+    }
+}
+
+#[test]
+fn cli_verify_bounds_exit_codes() {
+    // the three verify --bounds outcomes: 0 = contract met, 3 = contract
+    // violated (integrity still intact), 1 = unreadable input
+    let h5 = tmp("cli_vb.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(), "--qoi", "p",
+    ]));
+    let f = tmp("cli_vb.czb");
+    run_ok(czb().args([
+        "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+        f.to_str().unwrap(), "--rel-err", "1e-2",
+    ]));
+    let st = czb().args(["verify", "--in", f.to_str().unwrap(), "--bounds"]).output().unwrap();
+    assert_eq!(st.status.code(), Some(0));
+
+    // forge a violation: tighten the recorded contract far below what the
+    // stream achieved, then re-seal the header digest so integrity checks
+    // still pass — only the bound check can catch it
+    let mut bytes = std::fs::read(&f).unwrap();
+    let (file, hsize) = cubismz::pipeline::CzbFile::parse_header(&bytes).unwrap();
+    assert_eq!(file.bound, cubismz::pipeline::Bound::Rel(1e-2));
+    let bound_off = hsize - 4 - file.chunks.len() * 12 - 9;
+    bytes[bound_off + 1..bound_off + 9].copy_from_slice(&1e-12f64.to_le_bytes());
+    let digest = cubismz::util::crc32c::crc32c(&bytes[..hsize - 4]);
+    bytes[hsize - 4..hsize].copy_from_slice(&digest.to_le_bytes());
+    let forged = tmp("cli_vb_violated.czb");
+    std::fs::write(&forged, &bytes).unwrap();
+
+    // plain verify: integrity is fine, exit 0
+    let st = czb().args(["verify", "--in", forged.to_str().unwrap()]).output().unwrap();
+    assert_eq!(st.status.code(), Some(0), "{}", String::from_utf8_lossy(&st.stdout));
+    // --bounds: the achieved quality exceeds the (forged) contract, exit 3
+    let st =
+        czb().args(["verify", "--in", forged.to_str().unwrap(), "--bounds"]).output().unwrap();
+    assert_eq!(st.status.code(), Some(3), "{}", String::from_utf8_lossy(&st.stdout));
+    let out = String::from_utf8_lossy(&st.stdout);
+    assert!(out.contains("BOUND VIOLATED"), "{out}");
+
+    // unreadable input is exit 1, same as plain verify
+    let garbage = tmp("cli_vb_garbage.czb");
+    std::fs::write(&garbage, b"not a czb stream at all").unwrap();
+    let st =
+        czb().args(["verify", "--in", garbage.to_str().unwrap(), "--bounds"]).output().unwrap();
+    assert_eq!(st.status.code(), Some(1));
+}
+
+#[test]
+fn cli_tune_beats_or_matches_the_default_mapping() {
+    // tune must report a configuration per quantity, and its pick can
+    // never compress worse than the untuned default mapping (the ladder
+    // always includes factor 1.0 = the plain conservative mapping)
+    let st = czb()
+        .args(["tune", "--rel-err", "1e-3", "--size", "32", "--qoi", "p", "--threads", "2"])
+        .output()
+        .unwrap();
+    let out = String::from_utf8_lossy(&st.stdout).into_owned();
+    assert!(st.status.success(), "{out}\n{}", String::from_utf8_lossy(&st.stderr));
+    assert!(out.contains("--scheme"), "{out}");
+    let tuned_cr: f64 = out
+        .lines()
+        .find(|l| l.contains("--scheme"))
+        .and_then(|l| l.split("CR ").nth(1))
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap()
+        .parse()
+        .unwrap();
+
+    // untuned default for the same contract on the same probe field
+    let h5 = tmp("cli_tune.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(), "--qoi", "p",
+    ]));
+    let f = tmp("cli_tune.czb");
+    let out = run_ok(czb().args([
+        "compress", "--in", h5.to_str().unwrap(), "--dataset", "p", "--out",
+        f.to_str().unwrap(), "--rel-err", "1e-3", "--threads", "2",
+    ]));
+    let default_cr: f64 = out
+        .lines()
+        .find(|l| l.contains("CR"))
+        .and_then(|l| l.split("CR ").nth(1))
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(
+        tuned_cr >= default_cr * 0.999,
+        "tuned CR {tuned_cr} worse than default {default_cr}"
+    );
+
+    // a tune without a contract is an error
+    let st = czb().args(["tune", "--size", "32"]).output().unwrap();
+    assert!(!st.status.success());
+
+    // codecs lists the stage-1 registry with honored bound kinds
+    let out = run_ok(czb().args(["codecs"]));
+    assert!(out.contains("stage-1"), "{out}");
+    assert!(out.contains("honors"), "{out}");
+}
+
+#[test]
 fn cli_unknown_flags_are_usage_errors() {
     // a typo'd flag must exit 2 with a usage message, not run silently
     for argv in [

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use cubismz::core::Field3;
-use cubismz::pipeline::{CompressParams, Engine, PipelineConfig, ShuffleMode};
+use cubismz::pipeline::{Bound, CompressParams, CzbFile, Engine, PipelineConfig, ShuffleMode};
 use cubismz::service::metrics_export::sample;
 use cubismz::service::proto::{Priority, Status};
 use cubismz::service::{Client, Refusal, ServeConfig, Server, ServerHandle};
@@ -113,6 +113,35 @@ fn four_concurrent_clients_get_bit_identical_roundtrips() {
     );
     assert_eq!(sample(&stat, "czb_queue_depth"), Some(0.0), "all permits returned");
     assert_eq!(sample(&stat, "czb_tenant_requests_total{tenant=\"tenant-0\"}"), Some(3.0), "{stat}");
+    handle.shutdown();
+    t.join().unwrap();
+}
+
+#[test]
+fn bounded_compress_over_tcp_records_contract_and_psnr() {
+    let (addr, handle, t) = start(small_cfg());
+    let field = field_for(11, 24);
+    let bound = Bound::Rel(1e-3);
+    let mut c = Client::connect(addr).unwrap().tenant("sim-q");
+    let czb = unwrap_reply(c.compress_bounded("p", &field, 8, 1e-4, ShuffleMode::Byte4, bound));
+    // the returned stream carries the contract and the measured quality
+    let (file, _) = CzbFile::parse_header(&czb).unwrap();
+    assert_eq!(file.bound, bound);
+    let q = file.achieved_quality().expect("v5 stream records quality");
+    assert!(bound.check(&q).is_ok(), "{:?}", bound.check(&q));
+    // and it still verifies clean remotely
+    let summary = unwrap_reply(c.verify(&czb));
+    assert!(summary.clean);
+    // the tenant's achieved PSNR shows up in the live metrics
+    let stat = unwrap_reply(c.stat());
+    assert_eq!(
+        sample(&stat, "czb_tenant_achieved_psnr_db_count{tenant=\"sim-q\"}"),
+        Some(1.0),
+        "{stat}"
+    );
+    assert!(
+        sample(&stat, "czb_tenant_achieved_psnr_db_sum{tenant=\"sim-q\"}").unwrap() > 0.0
+    );
     handle.shutdown();
     t.join().unwrap();
 }

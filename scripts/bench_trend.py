@@ -15,12 +15,13 @@ sensitive change — any metric that regressed by more than 25% makes the
 script exit nonzero after printing the full diff. Two metric families
 are direction-aware:
 
-* latency-like keys (ending in "_ms", or containing "p50"/"p99"/
-  "latency") are lower-is-better: a >25% *increase* is a regression;
-* throughput-like keys (containing "mbps", "speedup" or "per_sec") are
-  higher-is-better: a >25% *drop* is a regression.
+* lower-is-better keys (ending in "_ms" or "_err", or containing
+  "p50"/"p99"/"latency"): a >25% *increase* is a regression;
+* higher-is-better keys (containing "mbps", "speedup", "per_sec",
+  "psnr", or a compression-ratio key "cr"/"ratio"): a >25% *drop* is a
+  regression — BENCH_quality.json rows trend achieved quality this way.
 
-Latency wins when a key matches both families, so a name like
+Lower-is-better wins when a key matches both families, so a name like
 "p99_latency_per_sec" is never scored backwards.
 """
 import glob
@@ -36,13 +37,28 @@ REGRESSIONS = []
 
 
 def is_throughput_key(key):
+    """Higher-is-better: throughput, and quality metrics (PSNR, CR)."""
     k = key.lower()
-    return "mbps" in k or "speedup" in k or "per_sec" in k
+    return (
+        "mbps" in k
+        or "speedup" in k
+        or "per_sec" in k
+        or "psnr" in k
+        or k == "cr"
+        or "ratio" in k
+    )
 
 
 def is_latency_key(key):
+    """Lower-is-better: latency, and achieved-error metrics."""
     k = key.lower()
-    return k.endswith("_ms") or "p50" in k or "p99" in k or "latency" in k
+    return (
+        k.endswith("_ms")
+        or k.endswith("_err")
+        or "p50" in k
+        or "p99" in k
+        or "latency" in k
+    )
 
 
 def note_regression(context, key, old, new):
@@ -83,7 +99,7 @@ def row_key(row):
     but differ in simd mode never collide."""
     key = tuple(
         (k, row[k])
-        for k in ("threads", "eps", "cache_chunks", "name", "field", "simd")
+        for k in ("threads", "eps", "cache_chunks", "name", "field", "simd", "bound", "codec")
         if k in row
     )
     return key or None
