@@ -1,0 +1,442 @@
+//! The `.czm` shard manifest: the small, CRC32C'd index that stitches
+//! per-shard `.czs` archives into one logical dataset. On-disk layout
+//! and version history live in `docs/FORMATS.md` alongside `.czb` and
+//! `.czs`; this module is the reference reader/writer.
+//!
+//! Design points, mirroring the `.czs` trailer parser
+//! (`crate::pipeline::dataset`):
+//!
+//! * **Everything is covered by one CRC32C** over the whole manifest
+//!   body, so a flipped bit anywhere — header, shard table, quantity
+//!   table — fails [`Manifest::decode`] instead of mis-routing a read.
+//! * **Strict parsing.** Truncation, trailing garbage, non-UTF-8 or
+//!   duplicate names, out-of-range shard indices, zero dims and counts
+//!   larger than the table could hold are all hard errors.
+//! * **Shard paths are plain relative filenames**, resolved against the
+//!   manifest's own directory: a manifest plus its shards is a
+//!   relocatable directory, and a hostile manifest cannot point reads
+//!   at `/etc` or climb out with `..`.
+//! * **Dims are recorded per quantity** so a reader can zero-fill a
+//!   quantity whose shard file is lost entirely (salvage semantics) and
+//!   `czb info` can describe the dataset without opening any shard.
+use crate::util::crc32c::crc32c;
+use std::path::{Component, Path};
+
+/// Magic bytes a `.czm` manifest starts with.
+pub const CZM_MAGIC: &[u8; 4] = b"CZM1";
+/// Magic bytes a `.czm` manifest ends with.
+pub const CZM_TRAILER_MAGIC: &[u8; 4] = b"CZME";
+/// Manifest version the writer emits (v1 is the first).
+pub const CZM_VERSION: u8 = 1;
+
+/// magic | version | 3 reserved | u32 nshards | u32 nquantities
+const HEADER_LEN: usize = 16;
+/// u32 CRC32C over everything before it | trailer magic
+const TRAILER_LEN: usize = 8;
+/// Smallest possible shard entry: u16 path_len, 1-byte path, u64
+/// file_len, u32 file_crc.
+const MIN_SHARD_ENTRY: usize = 2 + 1 + 8 + 4;
+/// Smallest possible quantity entry: u8 name_len, 1-byte name, u32
+/// shard, u32 nx/ny/nz.
+const MIN_QUANTITY_ENTRY: usize = 1 + 1 + 4 + 12;
+
+/// One shard file of a sharded dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Shard filename, relative to the manifest's directory (plain
+    /// relative path: no absolute paths, no `..`).
+    pub path: String,
+    /// Exact byte length of the shard `.czs` file.
+    pub file_len: u64,
+    /// CRC32C of the whole shard file.
+    pub file_crc: u32,
+}
+
+/// One quantity of the logical dataset: which shard owns it and its
+/// dims (kept here so a lost shard's quantities can still be described
+/// and zero-filled).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestQuantity {
+    pub name: String,
+    /// Index into [`Manifest::shards`] of the owning shard.
+    pub shard: usize,
+    pub nx: u32,
+    pub ny: u32,
+    pub nz: u32,
+}
+
+impl ManifestQuantity {
+    /// Raw field size in bytes (`nx*ny*nz` f32 samples).
+    pub fn raw_bytes(&self) -> u64 {
+        self.nx as u64 * self.ny as u64 * self.nz as u64 * 4
+    }
+}
+
+/// A parsed (or to-be-written) `.czm` manifest. Quantity order is the
+/// dataset's logical order — what an unsharded archive of the same
+/// input would contain — independent of how quantities were packed
+/// into shards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub shards: Vec<ShardEntry>,
+    pub quantities: Vec<ManifestQuantity>,
+}
+
+/// A shard path must be a plain relative filename (possibly in a
+/// subdirectory) so manifests are relocatable and cannot escape their
+/// own directory.
+fn validate_shard_path(p: &str) -> Result<(), String> {
+    if p.is_empty() {
+        return Err("empty shard path".into());
+    }
+    let path = Path::new(p);
+    if path.is_absolute() {
+        return Err(format!("shard path {p:?} is absolute"));
+    }
+    for c in path.components() {
+        match c {
+            Component::Normal(_) => {}
+            _ => return Err(format!("shard path {p:?} must be a plain relative path")),
+        }
+    }
+    Ok(())
+}
+
+fn take<'a>(body: &'a [u8], pos: &mut usize, n: usize, what: &str) -> Result<&'a [u8], String> {
+    let end = pos
+        .checked_add(n)
+        .filter(|&e| e <= body.len())
+        .ok_or_else(|| format!("czm manifest truncated reading {what}"))?;
+    let s = &body[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+impl Manifest {
+    /// Check the invariants [`Manifest::decode`] enforces, on the
+    /// writer side: a manifest that would not read back must never be
+    /// written.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards.is_empty() {
+            return Err("manifest has no shards".into());
+        }
+        if self.quantities.is_empty() {
+            return Err("manifest has no quantities".into());
+        }
+        if self.shards.len() > u32::MAX as usize || self.quantities.len() > u32::MAX as usize {
+            return Err("manifest table too large".into());
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            validate_shard_path(&s.path).map_err(|e| format!("shard {i}: {e}"))?;
+            if s.path.len() > u16::MAX as usize {
+                return Err(format!("shard {i} path longer than {} bytes", u16::MAX));
+            }
+            if self.shards[..i].iter().any(|p| p.path == s.path) {
+                return Err(format!("duplicate shard path {:?}", s.path));
+            }
+            if !self.quantities.iter().any(|q| q.shard == i) {
+                return Err(format!("shard {i} ({:?}) carries no quantities", s.path));
+            }
+        }
+        for (i, q) in self.quantities.iter().enumerate() {
+            if q.name.is_empty() || q.name.len() > 255 {
+                return Err(format!("quantity {i} name length {} not in 1..=255", q.name.len()));
+            }
+            if self.quantities[..i].iter().any(|p| p.name == q.name) {
+                return Err(format!("duplicate quantity {:?}", q.name));
+            }
+            if q.shard >= self.shards.len() {
+                return Err(format!(
+                    "quantity {:?} names shard {} of {}",
+                    q.name,
+                    q.shard,
+                    self.shards.len()
+                ));
+            }
+            if q.nx == 0 || q.ny == 0 || q.nz == 0 {
+                return Err(format!("quantity {:?} has zero dims", q.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `.czm` v1 wire layout (see `docs/FORMATS.md`).
+    /// Pure serializer — pair with [`Manifest::validate`] (the file
+    /// writer does) so crafted-invalid bytes stay constructible in
+    /// tests.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(CZM_MAGIC);
+        out.push(CZM_VERSION);
+        out.extend_from_slice(&[0u8; 3]);
+        out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.quantities.len() as u32).to_le_bytes());
+        for s in &self.shards {
+            out.extend_from_slice(&(s.path.len() as u16).to_le_bytes());
+            out.extend_from_slice(s.path.as_bytes());
+            out.extend_from_slice(&s.file_len.to_le_bytes());
+            out.extend_from_slice(&s.file_crc.to_le_bytes());
+        }
+        for q in &self.quantities {
+            out.push(q.name.len() as u8);
+            out.extend_from_slice(q.name.as_bytes());
+            out.extend_from_slice(&(q.shard as u32).to_le_bytes());
+            out.extend_from_slice(&q.nx.to_le_bytes());
+            out.extend_from_slice(&q.ny.to_le_bytes());
+            out.extend_from_slice(&q.nz.to_le_bytes());
+        }
+        let crc = crc32c(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(CZM_TRAILER_MAGIC);
+        out
+    }
+
+    /// Strict parse of a `.czm` manifest. Any damage — truncation, a
+    /// flipped bit anywhere (the CRC covers every preceding byte),
+    /// trailing garbage, duplicate or malformed names/paths, dangling
+    /// shard indices — is a hard error, never a best-effort read.
+    pub fn decode(bytes: &[u8]) -> Result<Manifest, String> {
+        if bytes.len() < HEADER_LEN + TRAILER_LEN {
+            return Err(format!("czm manifest too short ({} bytes)", bytes.len()));
+        }
+        if &bytes[..4] != CZM_MAGIC {
+            return Err("bad czm magic".into());
+        }
+        let version = bytes[4];
+        if version != CZM_VERSION {
+            return Err(format!(
+                "unsupported czm version {version} (this reader speaks {CZM_VERSION})"
+            ));
+        }
+        if &bytes[bytes.len() - 4..] != CZM_TRAILER_MAGIC {
+            return Err("bad czm trailer magic".into());
+        }
+        let stored =
+            u32::from_le_bytes(bytes[bytes.len() - 8..bytes.len() - 4].try_into().unwrap());
+        let computed = crc32c(&bytes[..bytes.len() - 8]);
+        if stored != computed {
+            return Err(format!(
+                "czm manifest CRC32C mismatch (stored {stored:08x}, computed {computed:08x})"
+            ));
+        }
+        let nshards = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let nquantities = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let body = &bytes[HEADER_LEN..bytes.len() - TRAILER_LEN];
+        if nshards == 0 {
+            return Err("czm manifest declares no shards".into());
+        }
+        if nquantities == 0 {
+            return Err("czm manifest declares no quantities".into());
+        }
+        // count sanity before any allocation sized by it
+        if nshards > body.len() / MIN_SHARD_ENTRY {
+            return Err(format!("czm shard count {nshards} larger than the table could hold"));
+        }
+        if nquantities > body.len() / MIN_QUANTITY_ENTRY {
+            return Err(format!(
+                "czm quantity count {nquantities} larger than the table could hold"
+            ));
+        }
+        let mut pos = 0usize;
+        let mut shards: Vec<ShardEntry> = Vec::with_capacity(nshards);
+        for i in 0..nshards {
+            let plen = u16::from_le_bytes(
+                take(body, &mut pos, 2, "shard path length")?.try_into().unwrap(),
+            ) as usize;
+            let raw = take(body, &mut pos, plen, "shard path")?;
+            let path = std::str::from_utf8(raw)
+                .map_err(|_| format!("shard {i} path is not UTF-8"))?
+                .to_string();
+            validate_shard_path(&path).map_err(|e| format!("shard {i}: {e}"))?;
+            if shards.iter().any(|s| s.path == path) {
+                return Err(format!("duplicate shard path {path:?}"));
+            }
+            let file_len =
+                u64::from_le_bytes(take(body, &mut pos, 8, "shard length")?.try_into().unwrap());
+            let file_crc =
+                u32::from_le_bytes(take(body, &mut pos, 4, "shard CRC")?.try_into().unwrap());
+            shards.push(ShardEntry { path, file_len, file_crc });
+        }
+        let mut quantities: Vec<ManifestQuantity> = Vec::with_capacity(nquantities);
+        for i in 0..nquantities {
+            let nlen = take(body, &mut pos, 1, "quantity name length")?[0] as usize;
+            if nlen == 0 {
+                return Err(format!("quantity {i} has an empty name"));
+            }
+            let raw = take(body, &mut pos, nlen, "quantity name")?;
+            let name = std::str::from_utf8(raw)
+                .map_err(|_| format!("quantity {i} name is not UTF-8"))?
+                .to_string();
+            if quantities.iter().any(|q| q.name == name) {
+                return Err(format!("duplicate quantity {name:?}"));
+            }
+            let shard =
+                u32::from_le_bytes(take(body, &mut pos, 4, "quantity shard")?.try_into().unwrap())
+                    as usize;
+            if shard >= nshards {
+                return Err(format!("quantity {name:?} names shard {shard} of {nshards}"));
+            }
+            let nx = u32::from_le_bytes(take(body, &mut pos, 4, "nx")?.try_into().unwrap());
+            let ny = u32::from_le_bytes(take(body, &mut pos, 4, "ny")?.try_into().unwrap());
+            let nz = u32::from_le_bytes(take(body, &mut pos, 4, "nz")?.try_into().unwrap());
+            if nx == 0 || ny == 0 || nz == 0 {
+                return Err(format!("quantity {name:?} has zero dims"));
+            }
+            quantities.push(ManifestQuantity { name, shard, nx, ny, nz });
+        }
+        if pos != body.len() {
+            return Err("czm manifest has trailing garbage".into());
+        }
+        // a shard no quantity references is a writer bug or tampering
+        for i in 0..nshards {
+            if !quantities.iter().any(|q| q.shard == i) {
+                return Err(format!("shard {i} ({:?}) carries no quantities", shards[i].path));
+            }
+        }
+        Ok(Manifest { shards, quantities })
+    }
+
+    /// Read and parse a manifest file.
+    pub fn open(path: &Path) -> Result<Manifest, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Manifest::decode(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Validate and write the manifest via a unique sibling temp file +
+    /// rename, like the `.czs` writer: a failure never leaves a partial
+    /// manifest at `path`, and a re-run never clobbers a good one with
+    /// a broken one.
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        static TMP_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        self.validate()?;
+        let bytes = self.encode();
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| std::ffi::OsString::from("manifest.czm"));
+        tmp_name.push(format!(
+            ".{}.{}.tmp",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let tmp_path = path.with_file_name(tmp_name);
+        std::fs::write(&tmp_path, &bytes)
+            .map_err(|e| format!("writing {}: {e}", tmp_path.display()))?;
+        std::fs::rename(&tmp_path, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp_path);
+            format!("moving {} into place: {e}", path.display())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            shards: vec![
+                ShardEntry { path: "step.shard0.czs".into(), file_len: 123, file_crc: 0xDEAD },
+                ShardEntry { path: "step.shard1.czs".into(), file_len: 456, file_crc: 0xBEEF },
+            ],
+            quantities: vec![
+                ManifestQuantity { name: "p".into(), shard: 0, nx: 64, ny: 64, nz: 64 },
+                ManifestQuantity { name: "rho".into(), shard: 1, nx: 64, ny: 64, nz: 64 },
+                ManifestQuantity { name: "E".into(), shard: 0, nx: 32, ny: 16, nz: 8 },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrips() {
+        let m = sample();
+        assert_eq!(Manifest::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn every_truncation_fails() {
+        let bytes = sample().encode();
+        for n in 0..bytes.len() {
+            assert!(Manifest::decode(&bytes[..n]).is_err(), "prefix of {n} bytes parsed");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_fails() {
+        let bytes = sample().encode();
+        for i in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0x40;
+            assert!(Manifest::decode(&b).is_err(), "flip at byte {i} parsed");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_fails() {
+        // garbage between the tables and the trailer, with the CRC and
+        // trailer recomputed to match — structure, not the checksum,
+        // must reject it
+        let mut m = sample().encode();
+        m.truncate(m.len() - TRAILER_LEN);
+        m.extend_from_slice(b"JUNK");
+        let crc = crc32c(&m);
+        m.extend_from_slice(&crc.to_le_bytes());
+        m.extend_from_slice(CZM_TRAILER_MAGIC);
+        let e = Manifest::decode(&m).unwrap_err();
+        assert!(e.contains("trailing garbage"), "{e}");
+    }
+
+    #[test]
+    fn structural_invariants_reject() {
+        // duplicate shard path
+        let mut m = sample();
+        m.shards[1].path = m.shards[0].path.clone();
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("duplicate shard"));
+        // duplicate quantity name
+        let mut m = sample();
+        m.quantities[1].name = "p".into();
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("duplicate quantity"));
+        // dangling shard index
+        let mut m = sample();
+        m.quantities[2].shard = 9;
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("names shard"));
+        // absolute shard path
+        let mut m = sample();
+        m.shards[0].path = "/etc/passwd".into();
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("absolute"));
+        // path traversal
+        let mut m = sample();
+        m.shards[0].path = "../outside.czs".into();
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("relative"));
+        // zero dims
+        let mut m = sample();
+        m.quantities[0].nx = 0;
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("zero dims"));
+        // a shard no quantity references
+        let mut m = sample();
+        for q in &mut m.quantities {
+            q.shard = 0;
+        }
+        assert!(Manifest::decode(&m.encode()).unwrap_err().contains("carries no quantities"));
+        // validate() agrees with decode() on the writer side
+        let mut m = sample();
+        m.quantities[1].name = "p".into();
+        assert!(m.validate().is_err());
+        assert!(sample().validate().is_ok());
+    }
+
+    #[test]
+    fn version_and_magic_gates() {
+        let mut b = sample().encode();
+        b[4] = 2; // future version
+        // recompute the CRC so the version byte is what rejects it
+        let tail = b.len() - TRAILER_LEN;
+        let crc = crc32c(&b[..tail]);
+        b[tail..tail + 4].copy_from_slice(&crc.to_le_bytes());
+        assert!(Manifest::decode(&b).unwrap_err().contains("version"));
+        let mut b = sample().encode();
+        b[0] = b'X';
+        assert!(Manifest::decode(&b).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! One logical dataset over N shard `.czs` files, stitched by a `.czm`
+//! manifest: random access routes each quantity to its owning shard's
+//! lazy [`Dataset`] (its `SectionSource` + shared `ChunkCache`
+//! machinery, untouched), and whole-dataset decode degrades per shard —
+//! a lost or corrupt shard zero-fills its quantities and shows up in
+//! the aggregated reports instead of failing the dataset.
+use super::manifest::{Manifest, ManifestQuantity};
+use crate::core::Field3;
+use crate::pipeline::{
+    BlockReader, CzbFile, Dataset, DatasetOptions, DecodeReport, Engine, WaveletEngine,
+};
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+/// A sharded dataset handle: the parsed manifest plus one lazily opened
+/// [`Dataset`] per shard. Opening the manifest touches no shard file;
+/// each shard opens (trailer read only) on first access, and a shard
+/// that fails to open caches its error — every quantity it owns fails
+/// the same way while the other shards stay fully readable.
+pub struct ShardedDataset {
+    manifest: Manifest,
+    dir: PathBuf,
+    opts: DatasetOptions,
+    shards: Vec<OnceLock<Result<Dataset, String>>>,
+}
+
+/// One quantity's outcome from [`ShardedDataset::decompress_salvage`],
+/// in the manifest's logical order.
+pub struct ShardedDecode {
+    pub name: String,
+    /// Index of the owning shard.
+    pub shard: usize,
+    /// The decoded field; zero-filled (at the manifest's recorded dims)
+    /// when the shard was lost or the section undecodable.
+    pub field: Field3,
+    /// `Ok` — the section was salvage-decoded (the report lists any
+    /// corrupt chunks). `Err` — the shard or section was unreadable and
+    /// `field` is all zeros.
+    pub report: Result<DecodeReport, String>,
+}
+
+impl ShardedDecode {
+    /// Fully intact: decoded with no chunk lost.
+    pub fn is_clean(&self) -> bool {
+        matches!(&self.report, Ok(r) if r.is_clean())
+    }
+}
+
+impl ShardedDataset {
+    /// Open a manifest with default options. No shard file is touched.
+    pub fn open(path: &Path) -> Result<Self, String> {
+        Self::open_with(path, DatasetOptions::new())
+    }
+
+    /// Open a manifest; `opts` (e.g. the chunk-cache size) applies to
+    /// every shard archive as it lazily opens.
+    pub fn open_with(path: &Path, opts: DatasetOptions) -> Result<Self, String> {
+        let manifest = Manifest::open(path)?;
+        let dir = path.parent().map(|p| p.to_path_buf()).unwrap_or_default();
+        let shards = (0..manifest.shards.len()).map(|_| OnceLock::new()).collect();
+        Ok(Self { manifest, dir, opts, shards })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The logical quantity list, in dataset order.
+    pub fn quantities(&self) -> &[ManifestQuantity] {
+        &self.manifest.quantities
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.quantities.iter().map(|q| q.name.as_str()).collect()
+    }
+
+    /// Absolute path of shard `idx` (manifest-relative resolution).
+    pub fn shard_path(&self, idx: usize) -> PathBuf {
+        self.dir.join(&self.manifest.shards[idx].path)
+    }
+
+    /// The shard's archive handle, opened lazily on first touch. An
+    /// open failure is cached: a missing shard fails consistently
+    /// without re-stat'ing the filesystem on every access.
+    pub fn shard(&self, idx: usize) -> Result<&Dataset, String> {
+        self.shards[idx]
+            .get_or_init(|| self.opts.open(&self.shard_path(idx)))
+            .as_ref()
+            .map_err(|e| format!("shard {idx} ({}): {e}", self.manifest.shards[idx].path))
+    }
+
+    fn quantity(&self, name: &str) -> Result<&ManifestQuantity, String> {
+        self.manifest
+            .quantities
+            .iter()
+            .find(|q| q.name == name)
+            .ok_or_else(|| format!("no quantity {name} in manifest"))
+    }
+
+    /// Decode one quantity through its owning shard's session-pool path
+    /// — other shards are not touched (or even opened).
+    pub fn read_quantity(&self, name: &str, engine: &Engine) -> Result<(Field3, CzbFile), String> {
+        let q = self.quantity(name)?;
+        self.shard(q.shard)?.read_quantity(name, engine)
+    }
+
+    /// Random block access into one quantity via the owning shard's
+    /// chunk-cached [`BlockReader`] — readers into the same shard share
+    /// that shard's archive-wide cache, exactly as on an unsharded
+    /// archive.
+    pub fn block_reader<'a>(
+        &'a self,
+        name: &str,
+        wavelet_engine: &'a dyn WaveletEngine,
+    ) -> Result<BlockReader<'a>, String> {
+        let q = self.quantity(name)?;
+        self.shard(q.shard)?.block_reader(name, wavelet_engine)
+    }
+
+    /// Quantity indices grouped by owning shard, shard order.
+    fn by_shard(&self) -> Vec<(usize, Vec<usize>)> {
+        let mut groups: Vec<(usize, Vec<usize>)> =
+            (0..self.manifest.shards.len()).map(|s| (s, Vec::new())).collect();
+        for (qi, q) in self.manifest.quantities.iter().enumerate() {
+            groups[q.shard].1.push(qi);
+        }
+        groups
+    }
+
+    /// Strict whole-dataset decode: every quantity, in logical order,
+    /// each shard's group decoded concurrently on the session pool.
+    /// Bit-identical to decoding the same input from an unsharded
+    /// archive at every thread count; any failure anywhere is an error
+    /// (use [`ShardedDataset::decompress_salvage`] to degrade instead).
+    pub fn decompress(&self, engine: &Engine) -> Result<Vec<(String, Field3, CzbFile)>, String> {
+        let mut out: Vec<Option<(String, Field3, CzbFile)>> =
+            self.manifest.quantities.iter().map(|_| None).collect();
+        for (sidx, qidxs) in self.by_shard() {
+            let ds = self.shard(sidx)?;
+            let names: Vec<&str> =
+                qidxs.iter().map(|&qi| self.manifest.quantities[qi].name.as_str()).collect();
+            let decoded = engine.decompress_dataset(ds, Some(&names))?;
+            for (&qi, item) in qidxs.iter().zip(decoded) {
+                out[qi] = Some(item);
+            }
+        }
+        Ok(out.into_iter().map(|o| o.expect("every manifest quantity decoded")).collect())
+    }
+
+    /// Salvage whole-dataset decode with per-shard fault isolation:
+    ///
+    /// * a shard that opens cleanly salvage-decodes its quantities
+    ///   (corrupt chunks zero-filled and listed in the `DecodeReport`);
+    /// * a quantity whose section is unreadable — or missing from its
+    ///   shard — comes back zero-filled at the manifest's recorded dims
+    ///   with the error in `report`;
+    /// * a wholly lost shard degrades the same way without affecting
+    ///   any other shard.
+    ///
+    /// On clean data the decoded fields are bit-identical to
+    /// [`ShardedDataset::decompress`]. The outer `Err` is manifest-level
+    /// only (it currently never fires once the handle is open).
+    pub fn decompress_salvage(&self, engine: &Engine) -> Result<Vec<ShardedDecode>, String> {
+        let zero = |qi: usize, e: String| {
+            let q = &self.manifest.quantities[qi];
+            ShardedDecode {
+                name: q.name.clone(),
+                shard: q.shard,
+                field: Field3::zeros(q.nx as usize, q.ny as usize, q.nz as usize),
+                report: Err(e),
+            }
+        };
+        let mut out: Vec<Option<ShardedDecode>> =
+            self.manifest.quantities.iter().map(|_| None).collect();
+        for (sidx, qidxs) in self.by_shard() {
+            let ds = match self.shard(sidx) {
+                Ok(ds) => ds,
+                Err(e) => {
+                    for &qi in &qidxs {
+                        out[qi] = Some(zero(qi, e.clone()));
+                    }
+                    continue;
+                }
+            };
+            // quantities the shard doesn't actually carry (tampering, a
+            // stale manifest) fail individually, not the whole group
+            let mut present: Vec<usize> = Vec::new();
+            for &qi in &qidxs {
+                let name = self.manifest.quantities[qi].name.as_str();
+                if ds.entries().iter().any(|e| e.name == name) {
+                    present.push(qi);
+                } else {
+                    out[qi] = Some(zero(qi, format!("shard {sidx} carries no section {name}")));
+                }
+            }
+            let names: Vec<&str> =
+                present.iter().map(|&qi| self.manifest.quantities[qi].name.as_str()).collect();
+            match engine.decompress_dataset_salvage(ds, Some(&names)) {
+                Ok(results) => {
+                    for (&qi, (name, r)) in present.iter().zip(results) {
+                        out[qi] = Some(match r {
+                            Ok((field, _file, rep)) => ShardedDecode {
+                                name,
+                                shard: sidx,
+                                field,
+                                report: Ok(rep),
+                            },
+                            Err(e) => zero(qi, e),
+                        });
+                    }
+                }
+                Err(e) => {
+                    for &qi in &present {
+                        out[qi] = Some(zero(qi, e.clone()));
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().map(|o| o.expect("every manifest quantity accounted for")).collect())
+    }
+}
+
+// compile-time guarantee: sharded handles stay shareable across the
+// same concurrent readers a plain Dataset supports
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ShardedDataset>();
+};

@@ -1,0 +1,99 @@
+//! Spawned shard workers: `czb serve` as the worker runtime. Each
+//! worker is one local `czb serve` process bound to an ephemeral
+//! 127.0.0.1 port — the same binary, protocol, admission control and
+//! metrics as a production service endpoint (`docs/PROTOCOL.md`,
+//! `docs/OPERATIONS.md`), so the spawned-local and remote-endpoint
+//! paths of `czb shard-compress` exercise identical code.
+use crate::anyhow;
+use crate::service::Client;
+use crate::util::error::{Context, Result};
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::process::{Child, ChildStdout, Command, Stdio};
+
+/// One spawned `czb serve` worker process. Dropping the handle kills
+/// the process; [`SpawnedWorker::stop`] drains it gracefully first.
+pub struct SpawnedWorker {
+    child: Child,
+    addr: String,
+    /// Kept open for the worker's lifetime: dropping the pipe would
+    /// turn the worker's own progress prints into a broken-pipe panic.
+    _stdout: Option<BufReader<ChildStdout>>,
+}
+
+impl SpawnedWorker {
+    /// The `host:port` the worker announced on startup.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Graceful stop: ask the worker to drain (the protocol `shutdown`
+    /// frame), then reap it. Errors are ignored — a worker that already
+    /// died is exactly as stopped as one that drained.
+    pub fn stop(&mut self) {
+        if let Ok(mut c) = Client::connect(self.addr.as_str()) {
+            let _ = c.shutdown();
+        }
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for SpawnedWorker {
+    fn drop(&mut self) {
+        // no-op after a graceful stop (the child is already reaped);
+        // the hard kill only fires on error/panic paths
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_one(exe: &Path, threads: usize) -> Result<SpawnedWorker> {
+    let mut child = Command::new(exe)
+        .args(["serve", "--addr", "127.0.0.1:0", "--threads", &threads.to_string()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .with_context(|| format!("spawning {} serve", exe.display()))?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    // `czb serve` prints "listening on <addr>" once the ephemeral port
+    // is bound; EOF before that means the worker failed to start (its
+    // stderr is inherited, so the cause is already on our stderr)
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading worker startup output")?;
+        if n == 0 {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(anyhow!("worker exited before announcing its listen address"));
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            if let Some(tok) = rest.split_whitespace().next() {
+                break tok.to_string();
+            }
+        }
+    };
+    Ok(SpawnedWorker { child, addr, _stdout: Some(reader) })
+}
+
+/// Spawn `count` local `czb serve` workers (the `czb` binary at `exe`),
+/// each on an ephemeral port with `threads` engine threads (0 = all
+/// cores, the serve default). Either every worker is up and announced,
+/// or all are killed and the first failure is returned.
+pub fn spawn_workers(exe: &Path, count: usize, threads: usize) -> Result<Vec<SpawnedWorker>> {
+    if count == 0 {
+        return Err(anyhow!("need at least one worker"));
+    }
+    let mut workers: Vec<SpawnedWorker> = Vec::with_capacity(count);
+    for i in 0..count {
+        match spawn_one(exe, threads) {
+            Ok(w) => workers.push(w),
+            Err(e) => {
+                // Drop kills the already-spawned ones
+                drop(workers);
+                return Err(anyhow!("spawning worker {i}: {e}"));
+            }
+        }
+    }
+    Ok(workers)
+}

@@ -9,6 +9,7 @@ pub mod cluster;
 pub mod codec;
 pub mod coordinator;
 pub mod core;
+pub mod distrib;
 pub mod fpc;
 pub mod io;
 pub mod metrics;

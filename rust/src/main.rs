@@ -7,6 +7,7 @@ use cubismz::codec::Codec;
 use cubismz::util::error::Result;
 use cubismz::coordinator;
 use cubismz::core::FieldStats;
+use cubismz::distrib;
 use cubismz::io::h5lite;
 use cubismz::pipeline::{
     AchievedQuality, Bound, BoundKind, CoeffCodec, CompressParams, CzbFile, DatasetOptions,
@@ -113,6 +114,26 @@ fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
         "recompress" => (&["in", "out"], true),
         "compress-dataset" => (&["in", "out", "qoi"], true),
         "decompress-dataset" => (&["in", "out", "cache-chunks"], true),
+        "shard-compress" => (
+            &[
+                "in",
+                "out",
+                "qoi",
+                "shards",
+                "endpoints",
+                "worker-threads",
+                "bs",
+                "eps",
+                "shuffle",
+                "abs-err",
+                "rel-err",
+                "psnr",
+                "lossless",
+            ],
+            false,
+        ),
+        "shard-decompress" => (&["in", "out", "cache-chunks", "threads", "engine"], false),
+        "shard-verify" => (&["in", "deep", "threads", "engine"], false),
         "verify" => (&["in", "deep", "bounds"], true),
         "tune" => (
             &[
@@ -134,6 +155,7 @@ fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
             false,
         ),
         "codecs" => (&[], false),
+        "help" => (&[], false),
         "info" => (&["in", "cache-chunks"], false),
         "psnr" => (&["ref", "dataset", "in", "engine"], false),
         "serve" => (
@@ -626,17 +648,35 @@ fn cmd_recompress(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("in")?);
     // sniff the magic without pulling the file in: .czs archives open
-    // lazily (trailer + header-prefix reads only), .czb files still
-    // load fully below
-    let is_czs = {
+    // lazily (trailer + header-prefix reads only), .czm manifests are
+    // tiny, .czb files still load fully below
+    let head = {
         use std::io::Read;
         let mut head = [0u8; 4];
-        std::fs::File::open(&input)?
-            .read_exact(&mut head)
-            .map(|_| &head == cubismz::pipeline::dataset::CZS_MAGIC)
-            .unwrap_or(false)
+        // too-short files just fail the magic comparisons below
+        let _ = std::fs::File::open(&input)?.read_exact(&mut head);
+        head
     };
-    if is_czs {
+    if &head == distrib::CZM_MAGIC {
+        let m = distrib::Manifest::open(&input).map_err(|e| anyhow!(e))?;
+        let dir = input.parent().map(|p| p.to_path_buf()).unwrap_or_default();
+        println!("file        : {} (czm shard manifest v{})", input.display(), distrib::CZM_VERSION);
+        println!("shards      : {}", m.shards.len());
+        for (i, s) in m.shards.iter().enumerate() {
+            let state = if dir.join(&s.path).is_file() { "present" } else { "MISSING" };
+            println!(
+                "  shard {i}: {}  {} bytes  crc {:08x}  [{state}]",
+                s.path, s.file_len, s.file_crc
+            );
+        }
+        println!("quantities  : {}", m.quantities.len());
+        for q in &m.quantities {
+            println!("  {:>8}: {}x{}x{}  shard {}", q.name, q.nx, q.ny, q.nz, q.shard);
+        }
+        println!("(shard-verify walks the shard files; shard-decompress gathers them)");
+        return Ok(());
+    }
+    if &head == cubismz::pipeline::dataset::CZS_MAGIC {
         let ds = dataset_options_of(args)?.open(&input).map_err(|e| anyhow!(e))?;
         println!("file        : {} (czs dataset archive)", input.display());
         println!("quantities  : {}", ds.entries().len());
@@ -1114,9 +1154,207 @@ fn cmd_client(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn usage() -> ! {
-    eprintln!(
-        "czb — CubismZ-RS parallel compression tool
+/// `czb shard-compress`: distribute a dataset's quantities across N
+/// workers (spawned local `czb serve` processes or running endpoints)
+/// into per-shard `.czs` files plus a `.czm` manifest.
+fn cmd_shard_compress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let bs: u32 = args.num("bs", 32u32)?;
+    let eps: f32 = args.num("eps", 1e-3f32)?;
+    if !eps.is_finite() || eps < 0.0 {
+        return Err(anyhow!("--eps must be finite and >= 0, got {eps}"));
+    }
+    let shuffle = shuffle_of(args)?;
+    let bound = bound_of(args)?;
+    if bound != Bound::None && args.get("eps").is_some() {
+        return Err(anyhow!(
+            "--eps (raw codec knob) conflicts with an error-bound flag; \
+             state the contract alone and the knob is derived from it"
+        ));
+    }
+    let workers = match args.get("endpoints") {
+        Some(list) => {
+            if args.get("shards").is_some() {
+                return Err(anyhow!(
+                    "--shards conflicts with --endpoints (one shard per endpoint)"
+                ));
+            }
+            let endpoints: Vec<String> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect();
+            if endpoints.is_empty() {
+                return Err(anyhow!("--endpoints is empty"));
+            }
+            distrib::WorkerSet::Endpoints(endpoints)
+        }
+        None => distrib::WorkerSet::Spawn {
+            exe: std::env::current_exe()?,
+            count: args.num("shards", 2usize)?,
+            threads: args.num("worker-threads", 0usize)?,
+        },
+    };
+    let opts = distrib::ShardOptions { bs, eps, shuffle, bound };
+    let t = std::time::Instant::now();
+    let stats = distrib::shard_compress(&input, args.get("qoi"), &out, &workers, &opts)?;
+    let (mut raw, mut comp) = (0u64, 0u64);
+    for (i, st) in stats.iter().enumerate() {
+        println!(
+            "  shard {i}: {}  [{}]  {} -> {} bytes  CR {:.2}  via {}",
+            st.path,
+            st.quantities.join(","),
+            st.raw_bytes,
+            st.compressed_bytes,
+            st.ratio(),
+            st.endpoint,
+        );
+        raw += st.raw_bytes;
+        comp += st.compressed_bytes;
+    }
+    println!(
+        "{} shards -> {}  CR {:.2}  ({:.3}s)",
+        stats.len(),
+        out.display(),
+        raw as f64 / comp.max(1) as f64,
+        t.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}
+
+/// `czb shard-decompress`: gather every shard of a `.czm` manifest back
+/// into one h5lite container with per-shard fault isolation — a lost or
+/// corrupt shard zero-fills its quantities (exit 3) while the rest
+/// decode intact, mirroring `czb decompress --salvage`.
+fn cmd_shard_decompress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let out = PathBuf::from(args.req("out")?);
+    let engine = Engine::builder()
+        .threads(threads_of(args, 0)?)
+        .wavelet_engine(engine_of(args)?)
+        .build();
+    let opts = dataset_options_of(args)?;
+    let t = std::time::Instant::now();
+    let decodes = distrib::shard_decompress(&input, &out, &engine, &opts)?;
+    let mut damaged = false;
+    for d in &decodes {
+        match &d.report {
+            Ok(rep) if rep.is_clean() => {
+                println!("  {:>8}: clean ({} chunks, shard {})", d.name, rep.total_chunks, d.shard);
+            }
+            Ok(rep) => {
+                damaged = true;
+                println!(
+                    "  {:>8}: salvaged {}/{} chunks ({} blocks zero-filled, shard {})",
+                    d.name,
+                    rep.salvaged_chunks(),
+                    rep.total_chunks,
+                    rep.lost_blocks,
+                    d.shard,
+                );
+                for (idx, why) in &rep.corrupt_chunks {
+                    println!("           chunk {idx}: {why}");
+                }
+            }
+            Err(e) => {
+                damaged = true;
+                println!("  {:>8}: LOST (zero-filled, shard {}): {e}", d.name, d.shard);
+            }
+        }
+    }
+    println!(
+        "{} -> {} ({} quantities, {:.3}s, {} threads)",
+        input.display(),
+        out.display(),
+        decodes.len(),
+        t.elapsed().as_secs_f64(),
+        engine.threads(),
+    );
+    if damaged {
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
+/// `czb shard-verify`: check a sharded dataset without writing anything
+/// — manifest CRC, per-shard file length + whole-file CRC32C, each
+/// shard's own checksum walk (`--deep` fully decodes), and
+/// manifest<->shard consistency. Exit 0 clean, 3 anything wrong.
+fn cmd_shard_verify(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("in")?);
+    let deep = args.flag("deep");
+    let engine = Engine::builder()
+        .threads(threads_of(args, 0)?)
+        .wavelet_engine(engine_of(args)?)
+        .build();
+    let t = std::time::Instant::now();
+    let report = distrib::shard_verify(&input, deep, &engine)?;
+    for e in &report.entries {
+        match &e.file {
+            Ok(()) => println!("  shard {}: file ok", e.path),
+            Err(why) => println!("  shard {}: FILE BAD ({why})", e.path),
+        }
+        if let Some(r) = &e.sections {
+            for s in &r.entries {
+                match &s.outcome {
+                    Ok(rep) if rep.is_clean() => {
+                        println!("    {:>8}: ok ({} chunks)", s.name, rep.total_chunks);
+                    }
+                    Ok(rep) => println!(
+                        "    {:>8}: CORRUPT ({}/{} chunks bad)",
+                        s.name,
+                        rep.corrupt_chunks.len(),
+                        rep.total_chunks
+                    ),
+                    Err(why) => println!("    {:>8}: CORRUPT ({why})", s.name),
+                }
+            }
+        }
+        for m in &e.mapping {
+            println!("    MANIFEST MISMATCH: {m}");
+        }
+    }
+    println!(
+        "{}: {} ({} shards, {}{:.3}s)",
+        input.display(),
+        if report.is_clean() { "clean" } else { "CORRUPT" },
+        report.entries.len(),
+        if deep { "deep, " } else { "" },
+        t.elapsed().as_secs_f64(),
+    );
+    if !report.is_clean() {
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
+/// Every registered subcommand, in dispatch order. The flag registry,
+/// the dispatch match and the usage text are all checked against this
+/// list (unit test below plus tests/cli_integration.rs), so a new
+/// subcommand cannot ship half-wired.
+const COMMANDS: &[&str] = &[
+    "gen",
+    "compress",
+    "decompress",
+    "recompress",
+    "compress-dataset",
+    "decompress-dataset",
+    "shard-compress",
+    "shard-decompress",
+    "shard-verify",
+    "verify",
+    "tune",
+    "codecs",
+    "info",
+    "psnr",
+    "serve",
+    "client",
+    "help",
+];
+
+const USAGE_BODY: &str = "czb — CubismZ-RS parallel compression tool
 USAGE: czb <command> [flags]
   gen         --size N --step S --out f.h5l [--bubbles K] [--production] [--qoi p|rho|E|a2]
   compress    --in f.h5l --dataset NAME --out f.czb [--scheme wavelet|zfp|sz|fpzip|copy]
@@ -1145,6 +1383,25 @@ USAGE: czb <command> [flags]
   decompress-dataset  --in f.czs --out f.h5l [--threads N] [--engine native|pjrt]
                       [--cache-chunks N (shared decoded-chunk cache size, default 32)]
                       (lazy section reads; quantities decode concurrently on one pool)
+  shard-compress      --in f.h5l --out f.czm [--qoi p,rho] [--shards N (default 2)]
+                      [--worker-threads N (per spawned worker, 0 = all cores)]
+                      [--endpoints HOST:PORT,HOST:PORT (use running `czb serve` workers
+                       instead of spawning local ones; one shard per endpoint)]
+                      [--bs 32] [--eps 1e-3] [--shuffle [none|byte4|bit4]]
+                      [--abs-err T | --rel-err T | --psnr DB | --lossless]
+                      (distribute quantities across N workers over the service protocol
+                       into <stem>.shard<i>.czs files plus a .czm manifest; sections are
+                       bit-identical to compress-dataset --stage2 zlib-def; see
+                       docs/FORMATS.md for the manifest layout)
+  shard-decompress    --in f.czm --out f.h5l [--threads N] [--engine native|pjrt]
+                      [--cache-chunks N]
+                      (gather every shard back into one container with per-shard fault
+                       isolation: a lost or corrupt shard zero-fills its quantities and
+                       exits 3 while the rest decode intact)
+  shard-verify        --in f.czm [--deep] [--threads N] [--engine native|pjrt]
+                      (manifest CRC, per-shard file length + whole-file CRC32C, each
+                       shard's full checksum walk — --deep fully decodes — and
+                       manifest<->shard consistency; exit 0 clean, 3 corrupt/missing)
   verify      --in f.czb|f.czs [--deep] [--bounds] [--threads N] [--engine native|pjrt]
               (walk every checksum — v4 header digest, per-chunk CRC32C, czs section
                digests — without decoding; --deep fully decodes each quantity and
@@ -1161,7 +1418,8 @@ USAGE: czb <command> [flags]
                quality still meets the contract)
   codecs      (list the registered stage-1 codecs with their native knob and honored
                bound kinds, plus the stage-2 codecs, ids, efforts and aliases)
-  info        --in f.czb | f.czs  [--cache-chunks N]  (czs archives open lazily)
+  info        --in f.czb | f.czs | f.czm  [--cache-chunks N]  (czs archives open lazily;
+               czm manifests list shards, quantities and shard-file presence)
   psnr        --ref f.h5l --dataset NAME --in f.czb
   serve       [--addr 127.0.0.1:9321] [--threads N (0 = all cores)]
               [--admit N (in-flight requests, 0 = 2x threads)] [--admit-high N (extra
@@ -1180,9 +1438,18 @@ USAGE: czb <command> [flags]
               (decompress: --in f.czb --out f.h5l)   (verify: --in f.czb)
               exit codes: 0 ok, 3 verify found corruption, 4 server refused
               (busy/quota/draining/error), 1 transport failure, 2 usage
+  help        (print this usage on stdout and exit 0)
 
-Unknown flags after a subcommand are a usage error (exit 2)."
-    );
+Unknown flags after a subcommand are a usage error (exit 2).";
+
+/// The full usage text: the body plus a machine-checkable `commands:`
+/// line enumerating every registered subcommand.
+fn usage_text() -> String {
+    format!("{USAGE_BODY}\ncommands: {}\n", COMMANDS.join(" "))
+}
+
+fn usage() -> ! {
+    eprint!("{}", usage_text());
     std::process::exit(2);
 }
 
@@ -1218,9 +1485,16 @@ fn main() {
         "recompress" => cmd_recompress(&args),
         "compress-dataset" => cmd_compress_dataset(&args),
         "decompress-dataset" => cmd_decompress_dataset(&args),
+        "shard-compress" => cmd_shard_compress(&args),
+        "shard-decompress" => cmd_shard_decompress(&args),
+        "shard-verify" => cmd_shard_verify(&args),
         "verify" => cmd_verify(&args),
         "tune" => cmd_tune(&args),
         "codecs" => cmd_codecs(),
+        "help" => {
+            print!("{}", usage_text());
+            Ok(())
+        }
         "info" => cmd_info(&args),
         "psnr" => cmd_psnr(&args),
         "serve" => cmd_serve(&args),
@@ -1231,5 +1505,31 @@ fn main() {
     if let Err(e) = r {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_command_is_fully_wired() {
+        for cmd in COMMANDS {
+            assert!(allowed_flags(cmd).is_some(), "{cmd} is not in the flag registry");
+            assert!(USAGE_BODY.contains(cmd), "{cmd} is not documented in the usage text");
+        }
+        assert!(allowed_flags("no-such-command").is_none());
+        // the machine-checkable commands line really enumerates them all
+        let text = usage_text();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("commands: "))
+            .expect("usage_text carries a commands: line");
+        for cmd in COMMANDS {
+            assert!(
+                line.split_whitespace().any(|w| w == *cmd),
+                "{cmd} missing from the commands: line"
+            );
+        }
     }
 }

@@ -2,12 +2,16 @@
 //! step, holding every compressed quantity (the paper's multi-QoI CFD
 //! workflow dumps ~7 per step).
 //!
-//! Layout (see the format overview in [`super::format`]): an 8-byte
-//! header, each quantity as a complete `.czb` section, and a trailer
-//! index written last — so a [`DatasetWriter`] streams to any
-//! `io::Write` without seeking, and a reader can map an archive of any
-//! size from three small reads (header, fixed-size trailer tail, entry
-//! table).
+//! The byte-level layout and v1–v3 version history live in
+//! `docs/FORMATS.md`; this module is the reference implementation. The
+//! shape that drives the architecture: an 8-byte header, each quantity
+//! as a complete `.czb` section, and a trailer index written last — so
+//! a [`DatasetWriter`] streams to any `io::Write` without seeking, and
+//! a reader can map an archive of any size from three small reads
+//! (header, fixed-size trailer tail, entry table). The trailer is
+//! validated strictly (UTF-8 unique names, in-range sections), and
+//! [`DatasetWriter::write_section`] validates repackaged sections up
+//! front instead of deferring the failure to read time.
 //!
 //! # Streaming opens
 //!
@@ -58,14 +62,9 @@ pub const DEFAULT_DATASET_CACHE_CHUNKS: usize = 32;
 pub const CZS_MAGIC: &[u8; 4] = b"CZS1";
 /// Trailer magic, the last four bytes of every archive.
 pub const CZS_TRAILER_MAGIC: &[u8; 4] = b"CZSE";
-/// Container version the writer emits. v2 adds a CRC32C per trailer
-/// entry, covering the quantity's whole `.czb` section; v3 (current)
-/// appends per-quantity quality metadata — the error-bound contract the
-/// section was compressed under and the achieved-quality summary folded
-/// from its recorded per-chunk column — so `czb info` on a many-GB
-/// archive reports every quantity's contract without touching a single
-/// section. v1/v2 archives still open, with `crc: None` /
-/// `bound: Bound::None, quality: None`.
+/// Container version the writer emits (history in `docs/FORMATS.md`).
+/// Readers accept v1..=v3; fields older trailers predate parse to
+/// `crc: None` / `bound: Bound::None, quality: None`.
 pub const CZS_VERSION: u8 = 3;
 const HEADER_LEN: usize = 8;
 const TRAILER_TAIL: usize = 12; // u32 count | u32 table_bytes | magic

@@ -1,115 +1,34 @@
-//! `.czb` compressed-quantity and `.czs` dataset-container formats.
+//! `.czb` compressed-quantity format: the on-disk header and chunk
+//! payloads for one compressed 3D field.
 //!
-//! ## `.czb` — one compressed quantity
+//! The byte-level layout and full v1–v5 version history live in
+//! `docs/FORMATS.md` (the single reference for every on-disk format);
+//! this module is the reference implementation. Notes a reader of the
+//! *code* needs:
 //!
-//! Layout (little endian, version 5):
-//! ```text
-//! magic "CZB1" | u8 version | u8 name_len | name bytes
-//! u32 nx ny nz | u32 bs
-//! stage1: u8 id | u8 wavelet | u8 zbits | u8 coeff_codec
-//!         f32 param | f32 coeff_param
-//! u8 stage2 codec id | u8 shuffle mode
-//! u32 frame_raw                      (version >= 3 only)
-//! f32 global_min | f32 global_max
-//! u32 nblocks | u32 nchunks
-//! nchunks x { u64 offset | u32 csize | u32 rawsize | u32 first_block | u32 nblocks }
-//! nchunks x u32 chunk_crc32c        (version >= 4 only)
-//! bound: u8 kind | f64 value        (version >= 5 only)
-//! nchunks x { f32 max_abs_err | f64 sum_sq_err }   (version >= 5 only)
-//! u32 header_crc32c                 (version >= 4 only)
-//! chunk payloads...
-//! ```
-//!
-//! ### Framed chunk payloads (version 3)
-//!
-//! Each chunk's stage-2 payload is a *framed container*
-//! ([`crate::codec::stage2`]): the (shuffled) raw stream is cut into
-//! sub-frames of `frame_raw` bytes each (last one shorter), every frame
-//! compressed as an independent stage-2 stream, preceded by a frame
-//! table:
-//! ```text
-//! u32 nframes | nframes x u32 frame_csize | compressed frames ...
-//! ```
-//! Frame boundaries are pure arithmetic on the stream length, so the
-//! serialized archive stays byte-identical across thread counts while
-//! one chunk's frames compress and decompress concurrently (the paper's
-//! "independent deflate blocks", realized for every registered codec).
-//!
-//! ### Version history
-//!
-//! * **v1** — the original layout above without `frame_raw`; each chunk
-//!   payload is one monolithic stage-2 stream.
-//! * **v2** — identical layout to v1; the version byte was reserved for a
-//!   forward-compat experiment and no writer ever shipped it. Readers
-//!   accept it as unframed.
-//! * **v3** — adds the `u32 frame_raw` header field and framed chunk
-//!   payloads.
-//! * **v4** — adds end-to-end integrity checksums: one CRC32C
-//!   ([`crate::util::crc32c`]) per compressed chunk payload, serialized
-//!   after the chunk index, followed by a whole-header CRC32C over every
-//!   preceding header byte (magic through the chunk-CRC list). The
-//!   header digest is verified by [`CzbFile::parse_header`]; the
-//!   per-chunk digests are verified by the decoder right before each
-//!   payload is inflated (and by `czb verify` without decoding). The
-//!   CRCs are pure functions of the payload bytes, so v4 streams remain
-//!   byte-identical across thread counts.
-//! * **v5** — adds the error-bound contract (current writer version,
-//!   [`FORMAT_VERSION`]): the [`Bound`] the stream was compressed under
-//!   (`u8` kind + `f64` value; kind 0 = no contract) and one
-//!   [`ChunkQuality`] record per chunk (`f32` max pointwise error +
-//!   `f64` sum of squared error), measured at compression time by
-//!   decoding every encoded block. Both sit between the v4 chunk-CRC
-//!   column and the whole-header digest, which now covers them too. The
-//!   measurements are deterministic folds in block order, so v5 streams
-//!   remain byte-identical across thread counts and SIMD levels.
-//!
-//! Readers accept v1..=v5; `frame_raw == 0` on a parsed file means
-//! "unframed legacy payloads" and is what v≤2 files report. Files below
-//! v4 carry no checksums ([`CzbFile::chunk_crcs`] parses empty) and
-//! decode bit-exactly with every integrity check skipped; files below
-//! v5 carry no contract ([`CzbFile::bound`] parses as [`Bound::None`]
-//! and [`CzbFile::chunk_quality`] empty).
-//!
-//! Within a chunk's *raw* stream every block is prefixed with its `u32`
-//! encoded size, so the decompressor can walk to any block after a single
-//! stage-2 inflate of the chunk.
-//!
-//! ## `.czs` — one simulation step, many quantities
-//!
-//! A `.czs` archive (see [`super::dataset`]) bundles the ~7 quantities a
-//! CFD step dumps into one file: an 8-byte header, the quantities as
-//! complete back-to-back `.czb` sections, and a trailer index written
-//! last so the archive streams to any `io::Write` without seeking:
-//! ```text
-//! magic "CZS1" | u8 version | 3 reserved bytes
-//! section 0: a complete .czb stream (header + chunk payloads)
-//! section 1: ...
-//! trailer: nquantities x { u8 name_len | name | u64 offset | u64 len }
-//!          u32 nquantities | u32 table_bytes | magic "CZSE"
-//! ```
-//! Because the trailer tail has a fixed 12-byte size, a reader maps an
-//! archive of any size from three small reads — the 8-byte header, the
-//! tail, and the entry table the tail locates — which is exactly what
-//! the file-backed `SectionSource` behind `Dataset::open` does: section
-//! payloads are *never* read at open time; each section's bytes are
-//! fetched with a positioned read the first time a decode touches that
-//! quantity, so the archive-resident footprint is bounded by the
-//! sections actually used. Every section is then an independent `.czb`:
-//! whole-quantity decode, cross-quantity parallel decode
-//! (`Engine::decompress_dataset`) and random block access (`BlockReader`
-//! over the section slice) all work without touching — or reading —
-//! the other quantities.
-//!
-//! The trailer is validated strictly. Entry names must be valid UTF-8
-//! (a lossy decode could alias two corrupt names to the same
-//! replacement-character string and silently resolve a lookup to the
-//! wrong quantity) and unique, and every section must lie between the
-//! header and the entry table. On the write side, repackaged sections
-//! must start with a parseable `.czb` header (`write_section` validates
-//! up front instead of deferring the failure to read time), and the
-//! coordinator's file entry point builds archives at a temp path and
-//! renames on success so a mid-archive failure never leaves a
-//! trailer-less partial archive behind.
+//! * **Version gates.** Readers accept v1..=v5; writers emit
+//!   [`FORMAT_VERSION`]. Fields a version predates parse to their
+//!   neutral value: `frame_raw == 0` means "unframed legacy payloads"
+//!   (v≤2), [`CzbFile::chunk_crcs`] parses empty below v4 (every
+//!   integrity check skipped), [`CzbFile::bound`] parses as
+//!   [`Bound::None`] and [`CzbFile::chunk_quality`] empty below v5.
+//! * **Integrity (v4+).** One CRC32C ([`crate::util::crc32c`]) per
+//!   compressed chunk payload plus a whole-header CRC32C. The header
+//!   digest is verified by [`CzbFile::parse_header`]; the per-chunk
+//!   digests are verified by the decoder right before each payload is
+//!   inflated (and by `czb verify` without decoding).
+//! * **Framed payloads (v3+).** Each chunk's stage-2 payload is a
+//!   framed container ([`crate::codec::stage2`]): sub-frames of
+//!   `frame_raw` bytes, each an independent stage-2 stream. Frame
+//!   boundaries are pure arithmetic on the stream length, so archives
+//!   stay byte-identical across thread counts while one chunk's frames
+//!   (de)compress concurrently.
+//! * **Determinism.** CRC columns, the bound record and the v5
+//!   [`ChunkQuality`] column are deterministic folds in block order —
+//!   serialized bytes never depend on scheduling or SIMD level.
+//! * **Block walk.** Within a chunk's *raw* stream every block is
+//!   prefixed with its `u32` encoded size, so the decompressor can walk
+//!   to any block after a single stage-2 inflate of the chunk.
 use super::quality::{AchievedQuality, Bound, ChunkQuality, BOUND_WIRE_LEN, CHUNK_QUALITY_WIRE_LEN};
 use crate::codec::Codec;
 use crate::wavelet::WaveletKind;
@@ -321,7 +240,7 @@ pub struct CzbFile {
     pub stage2: Codec,
     pub shuffle: ShuffleMode,
     /// Header version this file was parsed from / will serialize as
-    /// (1..=[`FORMAT_VERSION`]; see the version history above).
+    /// (1..=[`FORMAT_VERSION`]; history in `docs/FORMATS.md`).
     pub version: u8,
     /// Raw bytes per stage-2 sub-frame. `0` means unframed legacy chunk
     /// payloads (always the case for v≤2 files); `> 0` means every chunk

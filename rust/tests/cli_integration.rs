@@ -445,3 +445,148 @@ fn cli_unknown_flags_are_usage_errors() {
     assert!(err.contains("serve"), "usage must document serve: {err}");
     assert!(err.contains("shutdown frame drains"), "{err}");
 }
+
+#[test]
+fn cli_help_enumerates_every_subcommand() {
+    // `czb help` exits 0 and prints the usage on stdout, ending in a
+    // machine-checkable `commands:` line. Every command on that line
+    // must be documented in the usage body AND be a real registered
+    // command — probed by sending it a bogus flag, which a registered
+    // command rejects as a *flag* error (exit 2, "unknown flag"), never
+    // as an unknown command. This pins usage text to the dispatch table
+    // so a new subcommand can't ship undocumented.
+    let out = czb().args(["help"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("commands: "))
+        .expect("usage must carry a commands: line");
+    let commands: Vec<&str> =
+        line.trim_start_matches("commands: ").split_whitespace().collect();
+    // the full surface, not a subset: all the flows plus the shard ops
+    for must in
+        ["compress", "decompress", "verify", "tune", "serve", "client", "shard-compress",
+         "shard-decompress", "shard-verify", "help", "info", "codecs"]
+    {
+        assert!(commands.contains(&must), "commands line is missing {must}: {line}");
+    }
+    let body = text.split("commands: ").next().unwrap();
+    for cmd in &commands {
+        assert!(body.contains(*cmd), "usage body does not document {cmd}");
+        let probe = czb().args([*cmd, "--bogus-flag-zz"]).output().unwrap();
+        assert_eq!(probe.status.code(), Some(2), "{cmd} flag probe");
+        let err = String::from_utf8_lossy(&probe.stderr);
+        assert!(err.contains("unknown flag"), "{cmd}: {err}");
+        assert!(!err.contains("unknown command"), "{cmd} is listed but not registered: {err}");
+    }
+}
+
+#[test]
+fn cli_shard_roundtrip_over_spawned_workers() {
+    let h5 = tmp("cli_shard.h5l");
+    run_ok(czb().args([
+        "gen", "--size", "32", "--step", "5000", "--out", h5.to_str().unwrap(),
+    ]));
+
+    // reference: offline single-archive flow with the server's pipeline
+    // (workers compress with stage2 zlib-def — proven equivalent by the
+    // service protocol contract)
+    let czs = tmp("cli_shard_ref.czs");
+    run_ok(czb().args([
+        "compress-dataset", "--in", h5.to_str().unwrap(), "--out", czs.to_str().unwrap(),
+        "--stage2", "zlib-def", "--threads", "2",
+    ]));
+    let ref_h5 = tmp("cli_shard_ref.h5l");
+    run_ok(czb().args([
+        "decompress-dataset", "--in", czs.to_str().unwrap(), "--out",
+        ref_h5.to_str().unwrap(), "--threads", "2",
+    ]));
+    let reference = std::fs::read(&ref_h5).unwrap();
+
+    // scatter across 2 spawned czb-serve workers
+    let czm = tmp("cli_shard.czm");
+    let out = run_ok(czb().args([
+        "shard-compress", "--in", h5.to_str().unwrap(), "--out", czm.to_str().unwrap(),
+        "--shards", "2", "--worker-threads", "2",
+    ]));
+    assert!(out.contains("2 shards"), "{out}");
+    assert!(czm.exists());
+
+    // manifest-aware info: shards listed and present
+    let info = run_ok(czb().args(["info", "--in", czm.to_str().unwrap()]));
+    assert!(info.contains("czm shard manifest"), "{info}");
+    assert!(info.contains("quantities  : 4"), "{info}");
+    assert!(info.contains("present"), "{info}");
+    assert!(!info.contains("MISSING"), "{info}");
+
+    // shard-verify signs off
+    let st = czb().args(["shard-verify", "--in", czm.to_str().unwrap()]).output().unwrap();
+    assert_eq!(
+        st.status.code(),
+        Some(0),
+        "{}{}",
+        String::from_utf8_lossy(&st.stdout),
+        String::from_utf8_lossy(&st.stderr)
+    );
+
+    // gather at every tested thread count: the .h5l coming back must be
+    // byte-identical to the unsharded reference flow
+    for threads in ["1", "2", "4", "8"] {
+        let back = tmp(&format!("cli_shard_back_{threads}.h5l"));
+        run_ok(czb().args([
+            "shard-decompress", "--in", czm.to_str().unwrap(), "--out",
+            back.to_str().unwrap(), "--threads", threads,
+        ]));
+        assert_eq!(
+            std::fs::read(&back).unwrap(),
+            reference,
+            "sharded gather differs from the unsharded flow at {threads} threads"
+        );
+    }
+
+    // kill one shard: the gather degrades to salvage (exit 3) with the
+    // other shard's quantities still bit-identical and the lost ones
+    // zero-filled — never a hard failure
+    let shard1 = tmp("cli_shard.shard1.czs");
+    assert!(shard1.exists(), "expected shard file next to the manifest");
+    std::fs::remove_file(&shard1).unwrap();
+    let damaged = tmp("cli_shard_damaged.h5l");
+    let st = czb()
+        .args([
+            "shard-decompress", "--in", czm.to_str().unwrap(), "--out",
+            damaged.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(st.status.code(), Some(3), "{}", String::from_utf8_lossy(&st.stdout));
+    let stdout = String::from_utf8_lossy(&st.stdout);
+    assert!(stdout.contains("LOST"), "{stdout}");
+    let all = cubismz::io::h5lite::read_all(&damaged).unwrap();
+    let refall = cubismz::io::h5lite::read_all(&ref_h5).unwrap();
+    assert_eq!(all.len(), refall.len());
+    let (mut intact, mut zeroed) = (0usize, 0usize);
+    for (d, r) in all.iter().zip(&refall) {
+        assert_eq!(d.name, r.name, "quantity order must follow the manifest");
+        if d.data.iter().all(|v| v.to_bits() == 0) {
+            zeroed += 1;
+        } else {
+            assert!(
+                d.data.iter().zip(&r.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{} neither intact nor zero-filled",
+                d.name
+            );
+            intact += 1;
+        }
+    }
+    assert!(intact > 0, "surviving shard's quantities must decode intact");
+    assert!(zeroed > 0, "lost shard's quantities must zero-fill");
+
+    // and the verifier now flags the dataset
+    let st = czb().args(["shard-verify", "--in", czm.to_str().unwrap()]).output().unwrap();
+    assert_eq!(st.status.code(), Some(3), "{}", String::from_utf8_lossy(&st.stdout));
+
+    // info survives the missing shard and says so
+    let info = run_ok(czb().args(["info", "--in", czm.to_str().unwrap()]));
+    assert!(info.contains("MISSING"), "{info}");
+}

@@ -1,0 +1,176 @@
+//! Integration: sharded datasets (`.czm` + per-shard `.czs`) — cross-
+//! shard access bit-identical to the unsharded archive at several
+//! thread counts, missing-shard salvage isolation, and shard-verify
+//! outcomes. Shards are built directly (no service sockets); the
+//! spawned-worker path is covered in tests/cli_integration.rs.
+use cubismz::core::block::{Block, BlockGrid};
+use cubismz::distrib::{shard_verify, Manifest, ManifestQuantity, ShardEntry, ShardedDataset};
+use cubismz::pipeline::{CompressParams, Dataset, Engine, NativeEngine};
+use cubismz::sim::{step_to_time, CloudConfig, CloudSim, Qoi};
+use cubismz::util::crc32c::crc32c;
+use std::path::PathBuf;
+
+const N: usize = 32;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("cubismz_shard_tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+/// Build a 2-shard dataset (shard 0: p,E — shard 1: rho,a2) plus the
+/// equivalent unsharded archive from the same fields and params.
+/// Returns (manifest path, unsharded archive path).
+fn build(tag: &str) -> (PathBuf, PathBuf) {
+    let sim = CloudSim::new(CloudConfig::paper(N));
+    let t = step_to_time(5000);
+    let engine = Engine::builder().threads(4).build();
+    let params = CompressParams::paper_default(1e-3);
+
+    let plain = tmp(&format!("{tag}.czs"));
+    let mut w = Dataset::create(&plain).unwrap();
+    for qoi in Qoi::ALL {
+        w.write_quantity(&engine, &sim.field(qoi, t), qoi.name(), &params).unwrap();
+    }
+    w.finish().unwrap();
+
+    // interleaved ownership (qi % 2) so logical order differs from
+    // shard-file order — the reassembly must follow the manifest
+    let mut shards = Vec::new();
+    for i in 0..2usize {
+        let path = tmp(&format!("{tag}.shard{i}.czs"));
+        let mut w = Dataset::create(&path).unwrap();
+        for (qi, qoi) in Qoi::ALL.iter().enumerate() {
+            if qi % 2 == i {
+                w.write_quantity(&engine, &sim.field(*qoi, t), qoi.name(), &params).unwrap();
+            }
+        }
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        shards.push(ShardEntry {
+            path: path.file_name().unwrap().to_string_lossy().into_owned(),
+            file_len: bytes.len() as u64,
+            file_crc: crc32c(&bytes),
+        });
+    }
+    let quantities = Qoi::ALL
+        .iter()
+        .enumerate()
+        .map(|(qi, q)| ManifestQuantity {
+            name: q.name().to_string(),
+            shard: qi % 2,
+            nx: N as u32,
+            ny: N as u32,
+            nz: N as u32,
+        })
+        .collect();
+    let mpath = tmp(&format!("{tag}.czm"));
+    Manifest { shards, quantities }.write(&mpath).unwrap();
+    (mpath, plain)
+}
+
+#[test]
+fn cross_shard_access_is_bit_identical_to_unsharded() {
+    let (mpath, plain) = build("identity");
+    for threads in [1usize, 2, 4, 8] {
+        let engine = Engine::builder().threads(threads).build();
+        let plain_ds = Dataset::open(&plain).unwrap();
+        let sharded = ShardedDataset::open(&mpath).unwrap();
+        assert_eq!(sharded.names(), plain_ds.names(), "logical order follows the manifest");
+
+        // whole-dataset decode, quantity by quantity bit-identical
+        let decoded = sharded.decompress(&engine).unwrap();
+        assert_eq!(decoded.len(), Qoi::ALL.len());
+        for ((name, field, file), want) in decoded.iter().zip(Qoi::ALL) {
+            assert_eq!(name, want.name());
+            let (reference, rfile) = plain_ds.read_quantity(name, &engine).unwrap();
+            assert_eq!(file.name, rfile.name);
+            assert_eq!(field.data.len(), reference.data.len());
+            assert!(
+                field.data.iter().zip(&reference.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name} differs at {threads} threads"
+            );
+        }
+
+        // random block access routes through the owning shard's cache
+        // and agrees with the whole-field decode bit-for-bit
+        let (full, file) = sharded.read_quantity("rho", &engine).unwrap();
+        let bs = file.bs as usize;
+        let grid = BlockGrid::new(&full, bs);
+        let weng = NativeEngine;
+        let mut reader = sharded.block_reader("rho", &weng).unwrap();
+        let mut blk = vec![0f32; bs * bs * bs];
+        let mut expected = Block::zeros(bs);
+        for id in [0u32, file.nblocks / 2, file.nblocks - 1] {
+            reader.read_block(id, &mut blk).unwrap();
+            grid.extract(&full, id as usize, &mut expected);
+            assert!(
+                blk.iter().zip(&expected.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "block {id} differs at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn missing_shard_salvages_with_siblings_intact() {
+    let (mpath, plain) = build("salvage");
+    let engine = Engine::builder().threads(2).build();
+    std::fs::remove_file(ShardedDataset::open(&mpath).unwrap().shard_path(1)).unwrap();
+
+    // strict decode refuses a lost shard outright
+    let sharded = ShardedDataset::open(&mpath).unwrap();
+    assert!(sharded.decompress(&engine).is_err());
+
+    // salvage isolates the loss: shard 1's quantities come back zeroed
+    // at the manifest dims, shard 0's stay bit-identical
+    let decodes = sharded.decompress_salvage(&engine).unwrap();
+    assert_eq!(decodes.len(), Qoi::ALL.len());
+    let plain_ds = Dataset::open(&plain).unwrap();
+    for d in &decodes {
+        if d.shard == 1 {
+            assert!(d.report.is_err(), "{} should be reported lost", d.name);
+            assert_eq!((d.field.nx, d.field.ny, d.field.nz), (N, N, N));
+            assert!(d.field.data.iter().all(|v| v.to_bits() == 0), "{} not zeroed", d.name);
+        } else {
+            assert!(d.is_clean(), "{} should decode clean", d.name);
+            let (reference, _) = plain_ds.read_quantity(&d.name, &engine).unwrap();
+            assert!(
+                d.field.data.iter().zip(&reference.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{} differs from unsharded decode",
+                d.name
+            );
+        }
+    }
+
+    // single-quantity access: lost shard errors, sibling still serves
+    assert!(sharded.read_quantity("rho", &engine).is_err());
+    assert!(sharded.read_quantity("p", &engine).is_ok());
+}
+
+#[test]
+fn shard_verify_reports_clean_then_corrupt() {
+    let (mpath, _plain) = build("verify");
+    let engine = Engine::builder().threads(2).build();
+    let report = shard_verify(&mpath, false, &engine).unwrap();
+    assert!(report.is_clean());
+    assert_eq!(report.entries.len(), 2);
+
+    // flip one payload byte in shard 0: the manifest's whole-file CRC
+    // must flag it while the sibling shard stays clean
+    let spath = ShardedDataset::open(&mpath).unwrap().shard_path(0);
+    let mut bytes = std::fs::read(&spath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&spath, &bytes).unwrap();
+    let report = shard_verify(&mpath, false, &engine).unwrap();
+    assert!(!report.is_clean());
+    assert!(report.entries[0].file.is_err(), "file CRC must catch the flip");
+    assert!(report.entries[1].is_clean(), "sibling shard must stay clean");
+
+    // a wholly missing shard is also a file-level failure, not a panic
+    std::fs::remove_file(&spath).unwrap();
+    let report = shard_verify(&mpath, false, &engine).unwrap();
+    assert!(report.entries[0].file.is_err());
+    assert!(report.entries[1].is_clean());
+}

@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Docs reference checker (CI leg).
+
+Two invariants, both directions:
+  1. Every `docs/<name>.md` referenced from Rust sources, tests,
+     README.md or another doc actually exists.
+  2. Every file under docs/ is referenced from at least one Rust
+     source/test or README.md -- orphaned docs rot.
+
+No dependencies; run from anywhere inside the repo.
+"""
+import re
+import sys
+from pathlib import Path
+
+REF = re.compile(r"docs/([A-Za-z0-9_.-]+\.md)")
+
+
+def repo_root() -> Path:
+    p = Path(__file__).resolve().parent.parent
+    if not (p / "docs").is_dir():
+        sys.exit(f"check_docs: cannot locate repo root from {p}")
+    return p
+
+
+def refs_in(path: Path) -> set[str]:
+    return set(REF.findall(path.read_text(encoding="utf-8", errors="replace")))
+
+
+def main() -> int:
+    root = repo_root()
+    docs = {p.name for p in (root / "docs").glob("*.md")}
+
+    source_files = sorted((root / "rust").rglob("*.rs")) + [root / "README.md"]
+    doc_files = sorted((root / "docs").glob("*.md"))
+
+    errors = []
+    referenced_from_source: set[str] = set()
+    for f in source_files + doc_files:
+        for name in refs_in(f):
+            if name not in docs:
+                errors.append(f"{f.relative_to(root)}: references docs/{name}, which does not exist")
+            if f in source_files:
+                referenced_from_source.add(name)
+
+    for name in sorted(docs - referenced_from_source):
+        errors.append(f"docs/{name}: not referenced from any Rust source or README.md")
+
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: ok ({len(docs)} docs, {len(source_files)} source files scanned)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
